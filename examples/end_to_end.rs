@@ -1,0 +1,184 @@
+//! END-TO-END DRIVER — exercises the full three-layer system on a real
+//! small workload, proving all layers compose:
+//!
+//! 1. **Data**: a MovieLens-calibrated sparse workload (L3 substrate).
+//! 2. **Neighbourhoods**: simLSH Top-K on the L3 path, cross-checked bit
+//!    for bit against the **L1 Pallas hash kernel** executed through PJRT.
+//! 3. **Training**: biased MF through the **AOT `mf_sgd_step` graph**
+//!    (gather → PJRT execute → scatter), CULSH-MF on the native path;
+//!    RMSE evaluated through the **`rmse_chunk_step` graph** and verified
+//!    against native evaluation.
+//! 4. **Serving**: batched PREDICT/TOPN/RATE requests against the TCP
+//!    server, reporting latency percentiles and throughput.
+//!
+//! The headline numbers land in EXPERIMENTS.md §End-to-end.
+//!
+//! Run with: `make artifacts && cargo run --release --example end_to_end`
+
+use lshmf::coordinator::server::handle_line;
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
+use lshmf::data::synth::{generate, SynthConfig};
+use lshmf::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::mf::pjrt_trainer::{pjrt_rmse, train_pjrt_sgd_logged, PjrtSgdConfig};
+use lshmf::rng::Rng;
+use lshmf::runtime::Runtime;
+use std::sync::Mutex;
+use std::time::Instant;
+
+fn main() {
+    let mut rng = Rng::seeded(2024);
+
+    // ---------------------------------------------------------- 1. data
+    let ds = generate(&SynthConfig::movielens_like().scaled(0.03), &mut rng);
+    println!(
+        "[1/4] workload: {} — {}x{} with {} train / {} test ratings",
+        ds.name,
+        ds.nrows(),
+        ds.ncols(),
+        ds.nnz(),
+        ds.test.len()
+    );
+
+    let dir = Runtime::default_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let mut rt = Runtime::open(&dir).expect("open PJRT runtime");
+
+    // ------------------------------------------- 2. L1 hash kernel parity
+    let lsh = SimLsh::new(2, 20, 8, 2);
+    let t0 = Instant::now();
+    let hash_state = OnlineHashState::build(lsh.clone(), &ds.train_csc);
+    let (topk, _) = hash_state.topk(16, &mut rng);
+    let lsh_secs = t0.elapsed().as_secs_f64();
+
+    // cross-check: hash a dense tile through the Pallas kernel artifact
+    let (hn, hm, hg) = (rt.manifest.hash_n, rt.manifest.hash_m, rt.manifest.hash_g);
+    let mut tile = vec![0f32; hn * hm];
+    for j in 0..hn.min(ds.ncols()) {
+        for (i, r) in ds.train_csc.col(j) {
+            if i < hm {
+                tile[j * hm + i] = lsh.weight(r);
+            }
+        }
+    }
+    // Φ from the same deterministic row codes the rust hasher uses
+    let mut phi = vec![0f32; hm * hg];
+    for (i, chunk) in phi.chunks_mut(hg).enumerate() {
+        let code = lsh.row_code(i, 0, 0);
+        for (g, slot) in chunk.iter_mut().enumerate() {
+            *slot = if (code >> g) & 1 == 1 { 1.0 } else { -1.0 };
+        }
+    }
+    let out = rt
+        .run_f32("simlsh_hash_block", &[(&tile, &[hn, hm]), (&phi, &[hm, hg])])
+        .expect("hash kernel");
+    let mut mismatches = 0;
+    let checked = hn.min(ds.ncols());
+    for j in 0..checked {
+        // native accumulator over the same truncated row range
+        for g in 0..hg {
+            let acc: f32 = (0..hm).map(|i| tile[j * hm + i] * phi[i * hg + g]).sum();
+            let want = if acc >= 0.0 { 1.0 } else { 0.0 };
+            if out[0][j * hg + g] != want {
+                mismatches += 1;
+            }
+        }
+    }
+    println!(
+        "[2/4] simLSH: {}×16 table in {lsh_secs:.2}s; Pallas hash kernel parity: {}/{} bits exact",
+        topk.n(),
+        checked * hg - mismatches,
+        checked * hg
+    );
+    assert_eq!(mismatches, 0, "L1 kernel disagrees with L3 hasher");
+
+    // --------------------------------------- 3. training across the stack
+    let pjrt_cfg = PjrtSgdConfig {
+        epochs: 6,
+        alpha: 0.04,
+        beta: 0.05,
+        lambda_u: 0.01,
+        lambda_v: 0.01,
+        lambda_b: 0.01,
+        eval: ds.test.clone(),
+        ..Default::default()
+    };
+    let t1 = Instant::now();
+    let (mf_model, pjrt_log) =
+        train_pjrt_sgd_logged(&mut rt, &ds.train, &pjrt_cfg, &mut rng).expect("pjrt train");
+    let pjrt_secs = t1.elapsed().as_secs_f64();
+    // verify the PJRT evaluation path against native evaluation
+    let rmse_native = mf_model.rmse(&ds.test);
+    let rmse_pjrt = pjrt_rmse(&mut rt, &mf_model, &ds.test).expect("pjrt rmse");
+    println!(
+        "[3/4] PJRT-batched MF: rmse {:.4} in {pjrt_secs:.1}s ({} epochs); \
+         eval parity native {rmse_native:.5} vs pjrt {rmse_pjrt:.5}",
+        pjrt_log.final_rmse(),
+        pjrt_cfg.epochs
+    );
+    assert!((rmse_native - rmse_pjrt).abs() < 1e-3, "evaluation paths disagree");
+
+    let culsh_cfg = CulshConfig {
+        f: 32,
+        k: 16,
+        epochs: 25,
+        beta: 0.02,
+        lambda_u: 0.01,
+        lambda_v: 0.01,
+        lambda_b: 0.01,
+        eval: ds.test.clone(),
+        ..Default::default()
+    };
+    let t2 = Instant::now();
+    let (culsh_model, culsh_log) =
+        train_culsh_logged(&ds.train, topk, &culsh_cfg, &mut rng);
+    println!(
+        "      CULSH-MF (native hot path): rmse {:.4} in {:.1}s",
+        culsh_log.final_rmse(),
+        t2.elapsed().as_secs_f64()
+    );
+
+    // ------------------------------------------------------- 4. serving
+    let orch = StreamOrchestrator::new(
+        culsh_model,
+        hash_state,
+        ds.train.to_triples(),
+        StreamConfig { batch_size: 256, ..Default::default() },
+        culsh_cfg,
+        rng.split(5),
+        Registry::new(),
+    );
+    let engine = Mutex::new(Engine::new(orch, (ds.min_value, ds.max_value), Registry::new()));
+
+    let n_requests = 2000;
+    let mut latencies = Vec::with_capacity(n_requests);
+    let t3 = Instant::now();
+    for k in 0..n_requests {
+        let line = match k % 20 {
+            0 => format!("TOPN {} 10", k % ds.nrows()),
+            1..=3 => format!("RATE {} {} 4.0", k % ds.nrows(), (k * 7) % ds.ncols()),
+            _ => format!("PREDICT {} {}", k % ds.nrows(), (k * 13) % ds.ncols()),
+        };
+        let q0 = Instant::now();
+        let reply = handle_line(&engine, &line).expect("reply");
+        latencies.push(q0.elapsed());
+        assert!(!reply.starts_with("ERR"), "{line} -> {reply}");
+    }
+    let wall = t3.elapsed().as_secs_f64();
+    latencies.sort_unstable();
+    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    println!(
+        "[4/4] served {n_requests} mixed requests in {wall:.2}s \
+         ({:.0} req/s) | latency p50 {:?} p95 {:?} p99 {:?}",
+        n_requests as f64 / wall,
+        pct(0.50),
+        pct(0.95),
+        pct(0.99)
+    );
+    println!("\nall layers compose: L1 kernel parity ✔  L2 graph training ✔  L3 serving ✔");
+}

@@ -1,0 +1,61 @@
+//! Recommender scenario: train CULSH-MF, stand up the serving [`Engine`],
+//! and issue the requests a recommendation frontend would: per-user top-N,
+//! point predictions, and live rating ingestion (which flows through the
+//! Algorithm-4 online path — no retraining).
+//!
+//! Run with: `cargo run --release --example recommender`
+
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
+use lshmf::data::synth::{generate, SynthConfig};
+use lshmf::lsh::{OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seeded(7);
+    let ds = generate(&SynthConfig::movielens_like().scaled(0.02), &mut rng);
+    println!("catalog: {} users × {} items", ds.nrows(), ds.ncols());
+
+    let lsh = SimLsh::new(2, 20, 8, 2);
+    let hash_state = OnlineHashState::build(lsh, &ds.train_csc);
+    let (topk, _) = hash_state.topk(16, &mut rng);
+    let cfg = CulshConfig { f: 32, k: 16, epochs: 30, beta: 0.02, ..Default::default() };
+    let (model, _) = train_culsh_logged(&ds.train, topk, &cfg, &mut rng);
+
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        ds.train.to_triples(),
+        StreamConfig { batch_size: 64, ..Default::default() },
+        cfg,
+        rng.split(1),
+        Registry::new(),
+    );
+    let mut engine = Engine::new(orch, (ds.min_value, ds.max_value), Registry::new());
+
+    // A few users' top-5 recommendations.
+    for user in [0usize, 17, 42] {
+        let recs = engine.top_n(user, 5);
+        let pretty: Vec<String> = recs.iter().map(|(j, s)| format!("item{j}@{s:.2}")).collect();
+        println!("user {user:>4} → {}", pretty.join("  "));
+    }
+
+    // Point predictions.
+    for (u, i) in [(0usize, 3usize), (17, 100), (42, 7)] {
+        println!("predict(user {u}, item {i}) = {:.3}", engine.predict(u, i).unwrap());
+    }
+
+    // A burst of live ratings — including a brand-new user — then fresh
+    // recommendations for them without any retraining.
+    let new_user = ds.nrows() as u32;
+    for item in [0u32, 5, 9, 13, 21] {
+        engine.rate(new_user, item, 5.0);
+    }
+    engine.flush();
+    let recs = engine.top_n(new_user as usize, 5);
+    let pretty: Vec<String> = recs.iter().map(|(j, s)| format!("item{j}@{s:.2}")).collect();
+    println!("NEW user {new_user} (5 ratings, online-learned) → {}", pretty.join("  "));
+    println!("--- engine stats ---\n{}", engine.stats());
+}

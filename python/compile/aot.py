@@ -1,0 +1,109 @@
+"""AOT exporter: lower every L2 graph to HLO text + a manifest.
+
+HLO *text* is the interchange format (NOT serialized HloModuleProto):
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out DIR] [--skip-neural]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model, neural
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shapes_of(example_args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in example_args
+    ]
+
+
+def export_all(out_dir, skip_neural=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "batch": model.BATCH,
+        "f": model.F,
+        "k": model.K,
+        "hash_n": model.HASH_N,
+        "hash_m": model.HASH_M,
+        "hash_g": model.HASH_G,
+        "neural": {
+            "n_users": neural.N_USERS,
+            "n_items": neural.N_ITEMS,
+            "embed": neural.EMBED,
+            "batch": neural.BATCH,
+            "eval_batch": neural.EVAL_BATCH,
+        },
+        "graphs": {},
+    }
+
+    for name, fn in model.GRAPHS.items():
+        args = model.example_args(name)
+        text = to_hlo_text(fn, args)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["graphs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": shapes_of(args),
+        }
+        print(f"exported {name}: {len(text)} chars")
+
+    if not skip_neural:
+        for kind in ("gmf", "mlp", "neumf"):
+            step_args = neural.example_step_args(kind)
+            text = to_hlo_text(neural.make_step_fn(kind), step_args)
+            path = os.path.join(out_dir, f"{kind}_step.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["graphs"][f"{kind}_step"] = {
+                "file": f"{kind}_step.hlo.txt",
+                "inputs": shapes_of(step_args),
+                "params": [
+                    {"name": n, "shape": list(s)} for n, s in neural.flat_spec(kind)
+                ],
+            }
+            score_args = neural.example_score_args(kind)
+            text = to_hlo_text(neural.make_score_fn(kind), score_args)
+            path = os.path.join(out_dir, f"{kind}_score.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["graphs"][f"{kind}_score"] = {
+                "file": f"{kind}_score.hlo.txt",
+                "inputs": shapes_of(score_args),
+            }
+            print(f"exported {kind} step+score")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest written to {out_dir}/manifest.json")
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--skip-neural", action="store_true")
+    args = parser.parse_args()
+    export_all(args.out, skip_neural=args.skip_neural)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""Pallas L1 kernel: fused CULSH-MF batch step (Algorithm 3 as a tile).
+
+One grid step consumes a [TB, F] factor tile plus the [TB, K] gathered
+neighbourhood state (W/C rows, explicit residuals, explicit mask) and
+produces every Eq. (5) update in a single VMEM pass. This is the TPU
+restatement of the paper's warp-shuffle trick: the F-dot-product and both
+K-reductions happen on the VPU while the tile is resident, and — like the
+paper's R^K/N^K complement adjustment — explicit and implicit slots are
+handled by one masked lane-wise expression, so the per-lane load is
+uniform regardless of how many neighbours are rated.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_B = 256
+
+# scalars layout:
+# [mu, gamma, gamma_wc, lambda_b, lambda_u, lambda_v, lambda_w, lambda_c]
+N_SCALARS = 8
+
+
+def _culsh_kernel(
+    scal_ref,
+    r_ref,
+    bi_ref,
+    bj_ref,
+    u_ref,
+    v_ref,
+    w_ref,
+    c_ref,
+    resid_ref,
+    mask_ref,
+    bi_out,
+    bj_out,
+    u_out,
+    v_out,
+    w_out,
+    c_out,
+    e_out,
+):
+    mu = scal_ref[0]
+    gamma = scal_ref[1]
+    gamma_wc = scal_ref[2]
+    lambda_b = scal_ref[3]
+    lambda_u = scal_ref[4]
+    lambda_v = scal_ref[5]
+    lambda_w = scal_ref[6]
+    lambda_c = scal_ref[7]
+
+    u = u_ref[...]
+    v = v_ref[...]
+    w = w_ref[...]
+    c = c_ref[...]
+    bi = bi_ref[...]
+    bj = bj_ref[...]
+    resid = resid_ref[...]
+    mask = mask_ref[...]
+
+    n_r = jnp.sum(mask, axis=-1)
+    n_n = jnp.sum(1.0 - mask, axis=-1)
+    scale_r = jnp.where(n_r > 0, jax.lax.rsqrt(jnp.maximum(n_r, 1.0)), 0.0)
+    scale_n = jnp.where(n_n > 0, jax.lax.rsqrt(jnp.maximum(n_n, 1.0)), 0.0)
+
+    pred = (
+        mu
+        + bi
+        + bj
+        + jnp.sum(u * v, axis=-1)
+        + scale_r * jnp.sum(mask * resid * w, axis=-1)
+        + scale_n * jnp.sum((1.0 - mask) * c, axis=-1)
+    )
+    e = r_ref[...] - pred
+
+    bi_out[...] = bi + gamma * (e - lambda_b * bi)
+    bj_out[...] = bj + gamma * (e - lambda_b * bj)
+    u_out[...] = u + gamma * (e[:, None] * v - lambda_u * u)
+    v_out[...] = v + gamma * (e[:, None] * u - lambda_v * v)  # pre-update u
+    w_out[...] = w + gamma_wc * (mask * ((e * scale_r)[:, None] * resid) - lambda_w * mask * w)
+    c_out[...] = c + gamma_wc * ((1.0 - mask) * (e * scale_n)[:, None] - lambda_c * (1.0 - mask) * c)
+    e_out[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def culsh_sgd_batch(
+    scalars, r, bi, bj, u, v, w, c, resid, mask, *, tile_b=DEFAULT_TILE_B, interpret=True
+):
+    """Fused CULSH-MF batch step.
+
+    Args:
+      scalars: [8] f32 (see N_SCALARS layout above).
+      r, bi, bj: [B]. u, v: [B, F]. w, c, resid, mask: [B, K].
+
+    Returns (bi', bj', u', v', w', c', e).
+    """
+    b, f = u.shape
+    _, k = w.shape
+    assert b % tile_b == 0, f"B={b} not a multiple of tile_b={tile_b}"
+    grid = (b // tile_b,)
+    vec = lambda: pl.BlockSpec((tile_b,), lambda i: (i,))
+    fmat = lambda: pl.BlockSpec((tile_b, f), lambda i: (i, 0))
+    kmat = lambda: pl.BlockSpec((tile_b, k), lambda i: (i, 0))
+    scal = pl.BlockSpec((N_SCALARS,), lambda i: (0,))
+    return pl.pallas_call(
+        _culsh_kernel,
+        grid=grid,
+        in_specs=[scal, vec(), vec(), vec(), fmat(), fmat(), kmat(), kmat(), kmat(), kmat()],
+        out_specs=[vec(), vec(), fmat(), fmat(), kmat(), kmat(), vec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, f), jnp.float32),
+            jax.ShapeDtypeStruct((b, f), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, r, bi, bj, u, v, w, c, resid, mask)
+
+
+def vmem_bytes(tile_b=DEFAULT_TILE_B, f=32, k=32):
+    """VMEM working set per grid step (f32): in+out tiles."""
+    per_sample = 2 * (2 * f + 4 * k) + 2 * 3 + 1 + 2  # u,v,w,c,resid,mask + biases/r/e
+    return 4 * tile_b * per_sample

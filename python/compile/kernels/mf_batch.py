@@ -1,0 +1,135 @@
+"""Pallas L1 kernels: fused MF batch prediction / SGD step / RMSE chunk.
+
+The paper's Algorithm 2 fuses, per rating, the dot product (via warp
+shuffles), the error, and the register-resident factor updates. The batch
+analogue fuses the same chain over a [B, F] tile: one pass over VMEM
+computes the predictions, errors, and all parameter updates without ever
+materializing intermediates in HBM.
+
+The rust coordinator gathers conflict-free batches (no row or column is
+repeated within a batch — the same invariant the paper's thread-block
+assignment provides), so the updated rows can be scattered back without
+read-modify-write hazards.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_B = 256
+
+
+def _sgd_kernel(
+    scal_ref,
+    r_ref,
+    bi_ref,
+    bj_ref,
+    u_ref,
+    v_ref,
+    bi_out,
+    bj_out,
+    u_out,
+    v_out,
+    e_out,
+):
+    """Fused biased-MF SGD over one [TB, F] tile.
+
+    scal_ref holds the broadcast scalars:
+    [mu, gamma, lambda_b, lambda_u, lambda_v].
+    """
+    mu = scal_ref[0]
+    gamma = scal_ref[1]
+    lambda_b = scal_ref[2]
+    lambda_u = scal_ref[3]
+    lambda_v = scal_ref[4]
+    u = u_ref[...]
+    v = v_ref[...]
+    bi = bi_ref[...]
+    bj = bj_ref[...]
+    pred = mu + bi + bj + jnp.sum(u * v, axis=-1)
+    e = r_ref[...] - pred
+    bi_out[...] = bi + gamma * (e - lambda_b * bi)
+    bj_out[...] = bj + gamma * (e - lambda_b * bj)
+    u_out[...] = u + gamma * (e[:, None] * v - lambda_u * u)
+    # Eq. (5) uses the PRE-update u for v's gradient.
+    v_out[...] = v + gamma * (e[:, None] * u - lambda_v * v)
+    e_out[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def mf_sgd_batch(
+    scalars, r, bi, bj, u, v, *, tile_b=DEFAULT_TILE_B, interpret=True
+):
+    """Fused batch SGD step.
+
+    Args:
+      scalars: [5] f32 = (mu, gamma, lambda_b, lambda_u, lambda_v).
+      r, bi, bj: [B]. u, v: [B, F]. B must be a multiple of tile_b.
+
+    Returns (bi', bj', u', v', e).
+    """
+    b, f = u.shape
+    assert b % tile_b == 0, f"B={b} not a multiple of tile_b={tile_b}"
+    grid = (b // tile_b,)
+    vec = lambda: pl.BlockSpec((tile_b,), lambda i: (i,))
+    mat = lambda: pl.BlockSpec((tile_b, f), lambda i: (i, 0))
+    scal = pl.BlockSpec((5,), lambda i: (0,))
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[scal, vec(), vec(), vec(), mat(), mat()],
+        out_specs=[vec(), vec(), mat(), mat(), vec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, f), jnp.float32),
+            jax.ShapeDtypeStruct((b, f), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, r, bi, bj, u, v)
+
+
+def _rmse_kernel(scal_ref, r_ref, bi_ref, bj_ref, u_ref, v_ref, valid_ref, acc_ref, *, n_steps):
+    """Accumulate (sse, count) across batch tiles into a [2] output."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mu = scal_ref[0]
+    pred = mu + bi_ref[...] + bj_ref[...] + jnp.sum(u_ref[...] * v_ref[...], axis=-1)
+    e = (r_ref[...] - pred) * valid_ref[...]
+    acc_ref[0] += jnp.sum(e * e)
+    acc_ref[1] += jnp.sum(valid_ref[...])
+    del n_steps
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def rmse_chunk(scalars, r, bi, bj, u, v, valid, *, tile_b=DEFAULT_TILE_B, interpret=True):
+    """Masked SSE/count reduction over a padded eval chunk.
+
+    Args:
+      scalars: [5] f32, only scalars[0] (= mu) is used (same layout as the
+        SGD kernel so the rust side reuses one buffer).
+      valid: [B] 1.0 live / 0.0 padding.
+
+    Returns [2] f32 = (sse, count).
+    """
+    b, f = u.shape
+    assert b % tile_b == 0
+    n_steps = b // tile_b
+    vec = lambda: pl.BlockSpec((tile_b,), lambda i: (i,))
+    mat = lambda: pl.BlockSpec((tile_b, f), lambda i: (i, 0))
+    scal = pl.BlockSpec((5,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_rmse_kernel, n_steps=n_steps),
+        grid=(n_steps,),
+        in_specs=[scal, vec(), vec(), vec(), mat(), mat(), vec()],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        interpret=interpret,
+    )(scalars, r, bi, bj, u, v, valid)

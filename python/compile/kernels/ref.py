@@ -1,0 +1,117 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every L1 kernel has an oracle here; pytest asserts allclose between the
+kernel (interpret=True) and the oracle across hypothesis-swept shapes,
+dtypes and seeds. The oracles are also the L2 fallback path used when a
+graph is exported without Pallas (``aot.py --no-pallas``).
+"""
+
+import jax.numpy as jnp
+
+
+def simlsh_hash_ref(psi_rt, phi):
+    """Eq. (3) as a dense matmul.
+
+    Args:
+      psi_rt: [N, M] Ψ-weighted dense-ified transpose of the rating
+        matrix (zeros where no interaction).
+      phi: [M, G] ±1 row codes (Φ(H_i)).
+
+    Returns:
+      [N, G] float32 bits in {0, 1}: Υ(psi_rt @ phi).
+    """
+    acc = psi_rt @ phi
+    return (acc >= 0).astype(jnp.float32)
+
+
+def mf_predict_ref(mu, bi, bj, u, v):
+    """Biased-MF batch prediction: mu + bi + bj + Σ_f u*v."""
+    return mu + bi + bj + jnp.sum(u * v, axis=-1)
+
+
+def mf_sgd_batch_ref(mu, r, bi, bj, u, v, gamma, lambda_b, lambda_u, lambda_v):
+    """One fused Eq. (5) step over a gathered batch.
+
+    All rows in the batch are assumed conflict-free (the rust coordinator
+    schedules batches so no two samples share a row or column — the same
+    invariant the paper's thread blocks rely on).
+
+    Returns (bi', bj', u', v', e).
+    """
+    pred = mf_predict_ref(mu, bi, bj, u, v)
+    e = r - pred
+    bi_new = bi + gamma * (e - lambda_b * bi)
+    bj_new = bj + gamma * (e - lambda_b * bj)
+    u_new = u + gamma * (e[:, None] * v - lambda_u * u)
+    v_new = v + gamma * (e[:, None] * u - lambda_v * v)  # pre-update u
+    return bi_new, bj_new, u_new, v_new, e
+
+
+def culsh_predict_ref(mu, bi, bj, u, v, w, c, resid, mask):
+    """Eq. (1) batch prediction.
+
+    Args:
+      mu: scalar. bi, bj: [B]. u, v: [B, F].
+      w, c: [B, K] gathered influence rows of the target column.
+      resid: [B, K] explicit residuals (r_ij1 − b̄_ij1), zero where implicit.
+      mask: [B, K] 1.0 where the neighbour slot is explicit (∈ R^K).
+
+    Returns [B] predictions.
+    """
+    n_r = jnp.sum(mask, axis=-1)
+    n_n = jnp.sum(1.0 - mask, axis=-1)
+    scale_r = jnp.where(n_r > 0, 1.0 / jnp.sqrt(jnp.maximum(n_r, 1.0)), 0.0)
+    scale_n = jnp.where(n_n > 0, 1.0 / jnp.sqrt(jnp.maximum(n_n, 1.0)), 0.0)
+    explicit = scale_r * jnp.sum(mask * resid * w, axis=-1)
+    implicit = scale_n * jnp.sum((1.0 - mask) * c, axis=-1)
+    return mf_predict_ref(mu, bi, bj, u, v) + explicit + implicit
+
+
+def culsh_sgd_batch_ref(
+    mu,
+    r,
+    bi,
+    bj,
+    u,
+    v,
+    w,
+    c,
+    resid,
+    mask,
+    gamma,
+    gamma_wc,
+    lambda_b,
+    lambda_u,
+    lambda_v,
+    lambda_w,
+    lambda_c,
+):
+    """One fused Eq. (5) step for the full CULSH-MF parameter set.
+
+    Returns (bi', bj', u', v', w', c', e).
+    """
+    pred = culsh_predict_ref(mu, bi, bj, u, v, w, c, resid, mask)
+    e = r - pred
+    n_r = jnp.sum(mask, axis=-1)
+    n_n = jnp.sum(1.0 - mask, axis=-1)
+    scale_r = jnp.where(n_r > 0, 1.0 / jnp.sqrt(jnp.maximum(n_r, 1.0)), 0.0)
+    scale_n = jnp.where(n_n > 0, 1.0 / jnp.sqrt(jnp.maximum(n_n, 1.0)), 0.0)
+    bi_new = bi + gamma * (e - lambda_b * bi)
+    bj_new = bj + gamma * (e - lambda_b * bj)
+    u_new = u + gamma * (e[:, None] * v - lambda_u * u)
+    v_new = v + gamma * (e[:, None] * u - lambda_v * v)
+    w_new = w + gamma_wc * (
+        mask * ((e * scale_r)[:, None] * resid) - lambda_w * mask * w
+    )
+    c_new = c + gamma_wc * ((1.0 - mask) * (e * scale_n)[:, None] - lambda_c * (1.0 - mask) * c)
+    return bi_new, bj_new, u_new, v_new, w_new, c_new, e
+
+
+def rmse_chunk_ref(mu, r, bi, bj, u, v, valid):
+    """Sum of squared errors over a padded evaluation chunk.
+
+    valid: [B] 1.0 for live samples, 0.0 for padding. Returns (sse, count).
+    """
+    pred = mf_predict_ref(mu, bi, bj, u, v)
+    e = (r - pred) * valid
+    return jnp.sum(e * e), jnp.sum(valid)

@@ -1,0 +1,79 @@
+"""Pallas L1 kernel: tiled simLSH sign-projection hashing.
+
+Eq. (3) over all columns at once is `Υ(Ψ(Rᵀ) @ Φ)` — an [N, M] × [M, G]
+matmul with a sign epilogue. The paper assigns one CUDA thread block per
+column; the TPU mapping instead tiles the matmul for the MXU:
+
+* grid = (N/TN, M/TM); each step multiplies a [TN, TM] tile of Ψ(Rᵀ)
+  against a [TM, G] tile of Φ and accumulates into the [TN, G] output
+  block, which stays VMEM-resident across the whole M loop (its index
+  map is constant in the M grid axis);
+* the sign threshold runs once on the last M-step (the epilogue), so the
+  accumulator never round-trips to HBM as floats.
+
+On this image the kernel must run with ``interpret=True`` (CPU PJRT has
+no Mosaic); the structure is nevertheless the real-TPU structure, and the
+DESIGN.md §Perf table estimates its VMEM/MXU characteristics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_N = 128
+DEFAULT_TILE_M = 128
+
+
+def _hash_kernel(x_ref, phi_ref, out_ref, *, n_steps_m):
+    """One (n_tile, m_tile) grid step: accumulate, threshold at the end."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # MXU tile-matmul: [TN, TM] @ [TM, G] accumulated in f32.
+    out_ref[...] += jnp.dot(
+        x_ref[...], phi_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == n_steps_m - 1)
+    def _epilogue():
+        out_ref[...] = (out_ref[...] >= 0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_m", "interpret"))
+def simlsh_hash(psi_rt, phi, *, tile_n=DEFAULT_TILE_N, tile_m=DEFAULT_TILE_M, interpret=True):
+    """Hash all columns: returns [N, G] float32 bits in {0, 1}.
+
+    Args:
+      psi_rt: [N, M] Ψ-weighted dense column-major ratings (zeros where
+        there is no interaction — zero contributes nothing to Eq. 3).
+      phi: [M, G] ±1 codes.
+    """
+    n, m = psi_rt.shape
+    m2, g = phi.shape
+    assert m == m2, f"inner dims {m} != {m2}"
+    assert n % tile_n == 0, f"N={n} not a multiple of tile_n={tile_n}"
+    assert m % tile_m == 0, f"M={m} not a multiple of tile_m={tile_m}"
+    n_steps_m = m // tile_m
+
+    return pl.pallas_call(
+        functools.partial(_hash_kernel, n_steps_m=n_steps_m),
+        grid=(n // tile_n, n_steps_m),
+        in_specs=[
+            pl.BlockSpec((tile_n, tile_m), lambda i, k: (i, k)),
+            pl.BlockSpec((tile_m, g), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, g), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, g), jnp.float32),
+        interpret=interpret,
+    )(psi_rt, phi)
+
+
+def vmem_bytes(tile_n=DEFAULT_TILE_N, tile_m=DEFAULT_TILE_M, g=8):
+    """Estimated VMEM working set per grid step (f32), for DESIGN.md §Perf:
+    x tile + phi tile + resident out/accumulator block."""
+    return 4 * (tile_n * tile_m + tile_m * g + tile_n * g)

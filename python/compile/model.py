@@ -1,0 +1,98 @@
+"""Layer-2 JAX compute graphs.
+
+Each exported graph composes the L1 Pallas kernels (interpret=True so the
+lowered HLO runs on any PJRT backend, see /opt/xla-example/README.md) into
+the unit of work the rust coordinator dispatches:
+
+* ``mf_sgd_step``       — fused biased-MF minibatch SGD (CUSGD++ batch);
+* ``culsh_sgd_step``    — fused Eq. (1)/(5) CULSH-MF minibatch;
+* ``rmse_chunk_step``   — masked SSE/count reduction for evaluation;
+* ``simlsh_hash_block`` — Eq. (3) sign-projection hashing of a dense
+  column block.
+
+The rust side owns all gathers/scatters (it has the CSR/CSC indexes); the
+graphs see only dense, conflict-free batches — mirroring how the paper's
+kernels see coalesced global-memory tiles.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import culsh_batch, mf_batch, simlsh
+
+# Shapes the AOT artifacts are specialized to. The rust runtime pads the
+# last partial batch (valid-mask for eval; identity no-op rows for SGD).
+BATCH = 1024
+F = 32
+K = 32
+HASH_N = 256
+HASH_M = 512
+HASH_G = 8
+
+
+def mf_sgd_step(scalars, r, bi, bj, u, v):
+    """[5], [B], [B], [B], [B,F], [B,F] -> (bi', bj', u', v', e)."""
+    return mf_batch.mf_sgd_batch(scalars, r, bi, bj, u, v, interpret=True)
+
+
+def culsh_sgd_step(scalars, r, bi, bj, u, v, w, c, resid, mask):
+    """Fused CULSH-MF batch step (see culsh_batch for the layout)."""
+    return culsh_batch.culsh_sgd_batch(
+        scalars, r, bi, bj, u, v, w, c, resid, mask, interpret=True
+    )
+
+
+def rmse_chunk_step(scalars, r, bi, bj, u, v, valid):
+    """Masked (sse, count) reduction over a padded chunk."""
+    return mf_batch.rmse_chunk(scalars, r, bi, bj, u, v, valid, interpret=True)
+
+
+def simlsh_hash_block(psi_rt, phi):
+    """Hash a dense [N, M] Ψ-weighted block against [M, G] ±1 codes."""
+    return simlsh.simlsh_hash(
+        psi_rt,
+        phi,
+        tile_n=min(simlsh.DEFAULT_TILE_N, psi_rt.shape[0]),
+        tile_m=min(simlsh.DEFAULT_TILE_M, psi_rt.shape[1]),
+        interpret=True,
+    )
+
+
+def example_args(name):
+    """ShapeDtypeStructs for AOT lowering of graph `name`."""
+    import jax
+
+    f32 = jnp.float32
+    vec = jax.ShapeDtypeStruct((BATCH,), f32)
+    fmat = jax.ShapeDtypeStruct((BATCH, F), f32)
+    kmat = jax.ShapeDtypeStruct((BATCH, K), f32)
+    if name == "mf_sgd_step":
+        return (jax.ShapeDtypeStruct((5,), f32), vec, vec, vec, fmat, fmat)
+    if name == "culsh_sgd_step":
+        return (
+            jax.ShapeDtypeStruct((8,), f32),
+            vec,
+            vec,
+            vec,
+            fmat,
+            fmat,
+            kmat,
+            kmat,
+            kmat,
+            kmat,
+        )
+    if name == "rmse_chunk_step":
+        return (jax.ShapeDtypeStruct((5,), f32), vec, vec, vec, fmat, fmat, vec)
+    if name == "simlsh_hash_block":
+        return (
+            jax.ShapeDtypeStruct((HASH_N, HASH_M), f32),
+            jax.ShapeDtypeStruct((HASH_M, HASH_G), f32),
+        )
+    raise KeyError(name)
+
+
+GRAPHS = {
+    "mf_sgd_step": mf_sgd_step,
+    "culsh_sgd_step": culsh_sgd_step,
+    "rmse_chunk_step": rmse_chunk_step,
+    "simlsh_hash_block": simlsh_hash_block,
+}

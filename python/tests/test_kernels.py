@@ -1,0 +1,171 @@
+"""L1 Pallas kernels vs pure-jnp oracles, hypothesis-swept."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import culsh_batch, mf_batch, ref, simlsh
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _np(rng, *shape):
+    return rng.normal(0, 0.5, shape).astype(np.float32)
+
+
+# ------------------------------------------------------------- simLSH hash
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_tiles=st.integers(1, 3),
+    m_tiles=st.integers(1, 3),
+    g=st.sampled_from([4, 8, 16]),
+)
+def test_simlsh_hash_matches_ref(seed, n_tiles, m_tiles, g):
+    tile_n, tile_m = 8, 16
+    n, m = n_tiles * tile_n, m_tiles * tile_m
+    rng = np.random.default_rng(seed)
+    x = _np(rng, n, m)
+    phi = rng.choice([-1.0, 1.0], size=(m, g)).astype(np.float32)
+    got = simlsh.simlsh_hash(jnp.array(x), jnp.array(phi), tile_n=tile_n, tile_m=tile_m)
+    want = ref.simlsh_hash_ref(jnp.array(x), jnp.array(phi))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_simlsh_hash_sparse_input_zeros_are_neutral():
+    # zero rows contribute nothing: hashing [x; 0] == hashing x padded
+    rng = np.random.default_rng(7)
+    x = _np(rng, 8, 32)
+    x[:, 16:] = 0.0
+    phi = rng.choice([-1.0, 1.0], size=(32, 8)).astype(np.float32)
+    got = simlsh.simlsh_hash(jnp.array(x), jnp.array(phi), tile_n=8, tile_m=16)
+    want = (x[:, :16] @ phi[:16] >= 0).astype(np.float32)
+    np.testing.assert_array_equal(np.array(got), want)
+
+
+def test_simlsh_hash_rejects_misaligned():
+    rng = np.random.default_rng(3)
+    x = _np(rng, 10, 16)  # 10 % 8 != 0
+    phi = rng.choice([-1.0, 1.0], size=(16, 8)).astype(np.float32)
+    with pytest.raises(AssertionError):
+        simlsh.simlsh_hash(jnp.array(x), jnp.array(phi), tile_n=8, tile_m=16)
+
+
+# --------------------------------------------------------------- MF batch
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 4),
+    f=st.sampled_from([4, 8, 32]),
+)
+def test_mf_sgd_batch_matches_ref(seed, tiles, f):
+    tile_b = 8
+    b = tiles * tile_b
+    rng = np.random.default_rng(seed)
+    scal = np.array([3.2, 0.01, 0.02, 0.03, 0.04], np.float32)
+    r = _np(rng, b) + 3.0
+    bi, bj = _np(rng, b), _np(rng, b)
+    u, v = _np(rng, b, f), _np(rng, b, f)
+    got = mf_batch.mf_sgd_batch(
+        jnp.array(scal), jnp.array(r), jnp.array(bi), jnp.array(bj), jnp.array(u), jnp.array(v),
+        tile_b=tile_b,
+    )
+    want = ref.mf_sgd_batch_ref(3.2, r, bi, bj, u, v, 0.01, 0.02, 0.03, 0.04)
+    for gk, wk in zip(got, want):
+        np.testing.assert_allclose(np.array(gk), np.array(wk), rtol=1e-5, atol=1e-6)
+
+
+def test_mf_sgd_uses_pre_update_u_for_v():
+    # single sample, hand-computed (the Eq. 5 subtlety)
+    scal = jnp.array([0.0, 0.1, 0.0, 0.0, 0.0], jnp.float32)
+    r = jnp.array([1.5], jnp.float32)
+    bi = bj = jnp.zeros(1, jnp.float32)
+    u = jnp.array([[1.0]], jnp.float32)
+    v = jnp.array([[2.0]], jnp.float32)
+    # pred = 2.0, e = -0.5; u' = 1 + .1*(-0.5*2) = 0.9 ; v' = 2 + .1*(-0.5*1) = 1.95
+    bi2, bj2, u2, v2, e = mf_batch.mf_sgd_batch(scal, r, bi, bj, u, v, tile_b=1)
+    assert np.isclose(float(u2[0, 0]), 0.9)
+    assert np.isclose(float(v2[0, 0]), 1.95)
+    assert np.isclose(float(e[0]), -0.5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), pad=st.integers(0, 7))
+def test_rmse_chunk_masks_padding(seed, pad):
+    tile_b, b, f = 8, 16, 4
+    rng = np.random.default_rng(seed)
+    scal = np.array([3.0, 0, 0, 0, 0], np.float32)
+    r = _np(rng, b) + 3.0
+    bi, bj = _np(rng, b), _np(rng, b)
+    u, v = _np(rng, b, f), _np(rng, b, f)
+    valid = np.ones(b, np.float32)
+    if pad:
+        valid[-pad:] = 0.0
+    got = mf_batch.rmse_chunk(
+        jnp.array(scal), jnp.array(r), jnp.array(bi), jnp.array(bj),
+        jnp.array(u), jnp.array(v), jnp.array(valid), tile_b=tile_b,
+    )
+    sse, count = ref.rmse_chunk_ref(3.0, r, bi, bj, u, v, valid)
+    np.testing.assert_allclose(float(got[0]), float(sse), rtol=1e-5)
+    assert float(got[1]) == b - pad
+
+
+# ------------------------------------------------------------ CULSH batch
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 3),
+    f=st.sampled_from([4, 8]),
+    k=st.sampled_from([4, 8, 16]),
+)
+def test_culsh_sgd_batch_matches_ref(seed, tiles, f, k):
+    tile_b = 8
+    b = tiles * tile_b
+    rng = np.random.default_rng(seed)
+    scal = np.array([3.0, 0.02, 0.005, 0.01, 0.01, 0.01, 0.002, 0.002], np.float32)
+    r = _np(rng, b) + 3.0
+    bi, bj = _np(rng, b), _np(rng, b)
+    u, v = _np(rng, b, f), _np(rng, b, f)
+    w, c = _np(rng, b, k), _np(rng, b, k)
+    resid = _np(rng, b, k)
+    mask = rng.integers(0, 2, (b, k)).astype(np.float32)
+    got = culsh_batch.culsh_sgd_batch(
+        jnp.array(scal), jnp.array(r), jnp.array(bi), jnp.array(bj),
+        jnp.array(u), jnp.array(v), jnp.array(w), jnp.array(c),
+        jnp.array(resid), jnp.array(mask), tile_b=tile_b,
+    )
+    want = ref.culsh_sgd_batch_ref(
+        3.0, r, bi, bj, u, v, w, c, resid, mask,
+        0.02, 0.005, 0.01, 0.01, 0.01, 0.002, 0.002,
+    )
+    for gk, wk in zip(got, want):
+        np.testing.assert_allclose(np.array(gk), np.array(wk), rtol=1e-5, atol=1e-6)
+
+
+def test_culsh_all_explicit_and_all_implicit_edges():
+    b, f, k = 8, 4, 4
+    rng = np.random.default_rng(11)
+    scal = np.array([3.0, 0.02, 0.005, 0.01, 0.01, 0.01, 0.002, 0.002], np.float32)
+    args = dict(
+        r=_np(rng, b) + 3.0, bi=_np(rng, b), bj=_np(rng, b),
+        u=_np(rng, b, f), v=_np(rng, b, f), w=_np(rng, b, k), c=_np(rng, b, k),
+        resid=_np(rng, b, k),
+    )
+    for mask in (np.ones((b, k), np.float32), np.zeros((b, k), np.float32)):
+        got = culsh_batch.culsh_sgd_batch(
+            jnp.array(scal), *(jnp.array(args[n]) for n in ("r", "bi", "bj", "u", "v", "w", "c", "resid")),
+            jnp.array(mask), tile_b=8,
+        )
+        want = ref.culsh_sgd_batch_ref(
+            3.0, args["r"], args["bi"], args["bj"], args["u"], args["v"],
+            args["w"], args["c"], args["resid"], mask,
+            0.02, 0.005, 0.01, 0.01, 0.01, 0.002, 0.002,
+        )
+        for gk, wk in zip(got, want):
+            np.testing.assert_allclose(np.array(gk), np.array(wk), rtol=1e-5, atol=1e-6)
+        # zero-count side must not produce NaNs
+        assert not any(np.isnan(np.array(x)).any() for x in got)

@@ -1,0 +1,120 @@
+"""L2 graphs: export shapes, numerical behaviour, and the neural family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, neural
+from compile.kernels import ref
+
+
+def test_graph_registry_covers_example_args():
+    for name in model.GRAPHS:
+        args = model.example_args(name)
+        assert all(hasattr(a, "shape") for a in args)
+    with pytest.raises(KeyError):
+        model.example_args("nope")
+
+
+def test_mf_sgd_step_runs_at_export_shape():
+    rng = np.random.default_rng(0)
+    b, f = model.BATCH, model.F
+    scal = jnp.array([3.0, 0.01, 0.02, 0.02, 0.02], jnp.float32)
+    r = jnp.array(rng.normal(3, 1, b), jnp.float32)
+    bi = jnp.zeros(b)
+    bj = jnp.zeros(b)
+    u = jnp.array(rng.normal(0, 0.1, (b, f)), jnp.float32)
+    v = jnp.array(rng.normal(0, 0.1, (b, f)), jnp.float32)
+    out = model.mf_sgd_step(scal, r, bi, bj, u, v)
+    assert out[2].shape == (b, f)
+    want = ref.mf_sgd_batch_ref(3.0, r, bi, bj, u, v, 0.01, 0.02, 0.02, 0.02)
+    np.testing.assert_allclose(np.array(out[4]), np.array(want[4]), rtol=1e-4, atol=1e-5)
+
+
+def test_repeated_sgd_steps_reduce_error():
+    """Driving the exported step in a loop must fit a batch (integration
+    sanity of the update sign conventions)."""
+    rng = np.random.default_rng(1)
+    b, f = model.BATCH, model.F
+    scal = jnp.array([3.0, 0.05, 0.001, 0.001, 0.001], jnp.float32)
+    r = jnp.array(rng.normal(3, 1, b), jnp.float32)
+    bi = jnp.zeros(b)
+    bj = jnp.zeros(b)
+    u = jnp.array(rng.normal(0, 0.1, (b, f)), jnp.float32)
+    v = jnp.array(rng.normal(0, 0.1, (b, f)), jnp.float32)
+    first_err = None
+    for _ in range(50):
+        bi, bj, u, v, e = model.mf_sgd_step(scal, r, bi, bj, u, v)
+        if first_err is None:
+            first_err = float(jnp.mean(e * e))
+    last_err = float(jnp.mean(e * e))
+    assert last_err < 0.25 * first_err, (first_err, last_err)
+
+
+def test_simlsh_hash_block_matches_ref_at_export_shape():
+    rng = np.random.default_rng(2)
+    x = rng.normal(0, 1, (model.HASH_N, model.HASH_M)).astype(np.float32)
+    phi = rng.choice([-1.0, 1.0], (model.HASH_M, model.HASH_G)).astype(np.float32)
+    got = model.simlsh_hash_block(jnp.array(x), jnp.array(phi))
+    want = ref.simlsh_hash_ref(jnp.array(x), jnp.array(phi))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+# ------------------------------------------------------------- neural NCF
+
+
+@pytest.mark.parametrize("kind", ["gmf", "mlp", "neumf"])
+def test_neural_init_and_logits_shapes(kind):
+    params = neural.INITS[kind](jax.random.PRNGKey(0))
+    users = jnp.arange(16, dtype=jnp.int32)
+    items = jnp.arange(16, dtype=jnp.int32) % neural.N_ITEMS
+    logits = neural.LOGITS[kind](params, users, items)
+    assert logits.shape == (16,)
+    s = neural.score(kind, params, users, items)
+    assert float(jnp.min(s)) >= 0.0 and float(jnp.max(s)) <= 1.0
+
+
+@pytest.mark.parametrize("kind", ["gmf", "mlp", "neumf"])
+def test_neural_training_memorizes_pairs(kind):
+    """All three NCF models must be able to fit 64 random (u, i) labels —
+    the capacity/gradient-flow sanity check before the Table 10 bench."""
+    params = neural.INITS[kind](jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    pairs_u = rng.integers(0, 64, 64)
+    pairs_i = rng.integers(0, 64, 64)
+    lab = rng.integers(0, 2, 64).astype(np.float32)
+    reps = neural.BATCH // 64
+    users = jnp.array(np.tile(pairs_u, reps), jnp.int32)
+    items = jnp.array(np.tile(pairs_i, reps), jnp.int32)
+    labels = jnp.array(np.tile(lab, reps))
+    losses = []
+    for _ in range(300):
+        params, loss = neural.train_step(kind, params, users, items, labels, lr=1.0)
+        losses.append(float(loss))
+    assert losses[-1] < 0.1, losses[::60]
+
+
+def test_flat_spec_is_deterministic_and_sorted():
+    for kind in ("gmf", "mlp", "neumf"):
+        spec1 = neural.flat_spec(kind)
+        spec2 = neural.flat_spec(kind)
+        assert spec1 == spec2
+        names = [n for n, _ in spec1]
+        assert names == sorted(names)
+
+
+def test_make_step_fn_roundtrips_flat_params():
+    kind = "gmf"
+    params = neural.INITS[kind](jax.random.PRNGKey(0))
+    names = [n for n, _ in neural.flat_spec(kind)]
+    flat = tuple(params[n] for n in names)
+    users = jnp.zeros(neural.BATCH, jnp.int32)
+    items = jnp.zeros(neural.BATCH, jnp.int32)
+    labels = jnp.ones(neural.BATCH, jnp.float32)
+    t = jnp.ones(1, jnp.float32)
+    zeros = tuple(jnp.zeros_like(x) for x in flat)
+    out = neural.make_step_fn(kind)(users, items, labels, t, *flat, *zeros, *zeros)
+    assert len(out) == 3 * len(flat) + 1  # params, m, v + loss
+    for o, p in zip(out[: len(flat)], flat):
+        assert o.shape == p.shape

@@ -1,0 +1,35 @@
+//! Table 2 reproduction: generated dataset statistics vs the paper's.
+
+use lshmf::bench::exp::BenchEnv;
+use lshmf::bench::Table;
+
+fn main() {
+    let env = BenchEnv::from_env();
+    println!("== Table 2: datasets (scale {}) ==", env.scale);
+    let mut table = Table::new(&[
+        "dataset", "M", "N", "|Omega|", "test", "min", "max", "paper M", "paper N", "paper |Omega|",
+    ]);
+    let paper = [
+        ("netflix", 480_189usize, 17_770usize, 99_072_112usize),
+        ("movielens", 69_878, 10_677, 9_900_054),
+        ("yahoo", 586_250, 12_658, 91_970_212),
+    ];
+    for (name, pm, pn, pnnz) in paper {
+        let mut rng = env.rng();
+        let ds = env.dataset(name, &mut rng);
+        table.row(&[
+            name.into(),
+            ds.nrows().to_string(),
+            ds.ncols().to_string(),
+            ds.nnz().to_string(),
+            ds.test.len().to_string(),
+            format!("{}", ds.min_value),
+            format!("{}", ds.max_value),
+            pm.to_string(),
+            pn.to_string(),
+            pnnz.to_string(),
+        ]);
+    }
+    table.print();
+    println!("(generated sizes = paper sizes x scale; nnz x scale^1.5 - see data::synth)");
+}

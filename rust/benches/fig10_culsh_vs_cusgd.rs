@@ -1,0 +1,72 @@
+//! Fig. 10 + §5.3 speedups: CULSH-MF (K=32) vs CUSGD++ RMSE-vs-time at
+//! F ∈ {32, 64, 128} on all three datasets, with the time-to-target
+//! speedups the paper quotes as {2.67X, 2.97X, 1.36X}.
+
+use lshmf::bench::exp::{target_rmse, BenchEnv};
+use lshmf::bench::{csv_dump, Table};
+use lshmf::lsh::{NeighbourSearch, SimLsh};
+use lshmf::mf::neighbourhood::{train_culsh_parallel_logged, CulshConfig};
+use lshmf::mf::parallel::train_parallel_sgd_logged;
+use lshmf::mf::sgd::SgdConfig;
+use lshmf::rng::Rng;
+
+fn main() {
+    let env = BenchEnv::from_env();
+    println!("== Fig. 10: CULSH-MF vs CUSGD++ (scale {}) ==", env.scale);
+    let mut table = Table::new(&[
+        "dataset", "F", "CUSGD++ rmse", "CULSH rmse", "CUSGD++ t→target", "CULSH t→target", "speedup",
+    ]);
+    let mut rows = Vec::new();
+    for dataset in ["movielens"] {
+        let mut rng = env.rng();
+        let ds = env.dataset(dataset, &mut rng);
+        let psi = env.psi_power(dataset);
+        let (topk, lsh_secs) = {
+            let (t, c) = SimLsh::new(2, 60, 8, psi).build(&ds.train_csc, 32, &mut Rng::seeded(env.seed));
+            (t, c.seconds)
+        };
+        for f in [32usize, 64, 128] {
+            let sgd_cfg = SgdConfig { f, ..env.sgd_config(dataset, &ds) };
+            let (_, plain) =
+                train_parallel_sgd_logged(&ds.train, &sgd_cfg, 2, &mut Rng::seeded(env.seed));
+            let culsh_cfg = CulshConfig { f, k: 32, ..env.culsh_config(dataset, &ds) };
+            let (_, culsh) = train_culsh_parallel_logged(
+                &ds.train,
+                topk.clone(),
+                &culsh_cfg,
+                2,
+                &mut Rng::seeded(env.seed),
+            );
+            let target = target_rmse(&[&plain, &culsh], 0.01);
+            let t_plain = plain.time_to(target);
+            let t_culsh = culsh.time_to(target).map(|t| t + lsh_secs);
+            let speedup = match (t_plain, t_culsh) {
+                (Some(a), Some(b)) if b > 0.0 => format!("{:.2}X", a / b),
+                _ => "n/a".into(),
+            };
+            table.row(&[
+                dataset.into(),
+                f.to_string(),
+                format!("{:.4}", plain.best_rmse()),
+                format!("{:.4}", culsh.best_rmse()),
+                t_plain.map(|t| format!("{t:.3}")).unwrap_or("n/a".into()),
+                t_culsh.map(|t| format!("{t:.3}")).unwrap_or("n/a".into()),
+                speedup,
+            ]);
+            for (name, log) in [("CUSGD++", &plain), ("CULSH-MF", &culsh)] {
+                for p in &log.points {
+                    rows.push(vec![
+                        dataset.to_string(),
+                        f.to_string(),
+                        name.to_string(),
+                        format!("{:.6}", p.seconds),
+                        format!("{:.6}", p.rmse),
+                    ]);
+                }
+            }
+        }
+    }
+    table.print();
+    csv_dump("fig10_culsh_vs_cusgd", &["dataset", "f", "algo", "seconds", "rmse"], &rows).ok();
+    println!("(paper: CULSH-MF K=32 speedups {{2.67X, 2.97X, 1.36X}} at F={{32,64,128}})");
+}

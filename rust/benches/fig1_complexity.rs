@@ -1,0 +1,60 @@
+//! Fig. 1 reproduction: GSM's O(N^2) vs LSH's O(N) time AND space,
+//! measured by sweeping the column count N at fixed per-column degree.
+
+use lshmf::bench::{csv_dump, Table};
+use lshmf::gsm::Gsm;
+use lshmf::lsh::{NeighbourSearch, SimLsh};
+use lshmf::rng::Rng;
+use lshmf::sparse::{Csc, Triples};
+
+fn workload(n: usize, rng: &mut Rng) -> Csc {
+    // fixed row universe: as N grows, columns overlap more and the GSM's
+    // co-rating pair enumeration grows ~quadratically (Fig. 1's point)
+    let m = 2000;
+    let per_col = 40;
+    let mut t = Triples::new(m, n);
+    let mut seen = std::collections::HashSet::new();
+    for j in 0..n {
+        for _ in 0..per_col {
+            let i = rng.below(m);
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+    }
+    Csc::from_triples(&t)
+}
+
+fn main() {
+    println!("== Fig. 1: GSM vs LSH complexity sweep ==");
+    let mut table = Table::new(&[
+        "N", "GSM secs", "GSM MB", "simLSH secs", "simLSH MB", "time ratio", "space ratio",
+    ]);
+    let mut rows = Vec::new();
+    for n in [100usize, 200, 400, 800, 1600] {
+        let mut rng = Rng::seeded(n as u64);
+        let csc = workload(n, &mut rng);
+        let (_, gsm_cost) = Gsm::new(100.0).build(&csc, 16, &mut rng);
+        let (_, lsh_cost) = SimLsh::new(3, 20, 8, 2).build(&csc, 16, &mut rng);
+        let mb = |b: usize| b as f64 / (1024.0 * 1024.0);
+        table.row(&[
+            n.to_string(),
+            format!("{:.3}", gsm_cost.seconds),
+            format!("{:.2}", mb(gsm_cost.bytes)),
+            format!("{:.3}", lsh_cost.seconds),
+            format!("{:.2}", mb(lsh_cost.bytes)),
+            format!("{:.1}x", gsm_cost.seconds / lsh_cost.seconds.max(1e-9)),
+            format!("{:.1}x", gsm_cost.bytes as f64 / lsh_cost.bytes.max(1) as f64),
+        ]);
+        rows.push(vec![
+            n.to_string(),
+            gsm_cost.seconds.to_string(),
+            gsm_cost.bytes.to_string(),
+            lsh_cost.seconds.to_string(),
+            lsh_cost.bytes.to_string(),
+        ]);
+    }
+    table.print();
+    csv_dump("fig1_complexity", &["n", "gsm_s", "gsm_b", "lsh_s", "lsh_b"], &rows).ok();
+    println!("expected shape: GSM columns grow ~quadratically in N, simLSH ~linearly");
+}

@@ -1,0 +1,128 @@
+//! Hot-path microbenchmarks feeding EXPERIMENTS.md §Perf:
+//!
+//! * L3 SGD inner loop (updates/s) at F ∈ {32, 128};
+//! * CULSH-MF inner loop (updates/s, includes the K-neighbour scan);
+//! * dot-product kernel throughput;
+//! * simLSH hashing throughput (columns/s) and GSM build;
+//! * conflict-free batch assembly (the PJRT gather path);
+//! * PJRT step latency (mf_sgd_step) when artifacts exist.
+
+use lshmf::bench::exp::BenchEnv;
+use lshmf::bench::Bencher;
+use lshmf::lsh::{NeighbourSearch, SimLsh};
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::mf::pjrt_trainer::conflict_free_batches;
+use lshmf::mf::sgd::{train_sgd_logged, SgdConfig};
+use lshmf::rng::Rng;
+use lshmf::runtime::{mf_scalars, Runtime};
+
+fn main() {
+    let env = BenchEnv::from_env();
+    println!("== hot-path microbenchmarks (scale {}) ==", env.scale);
+    let mut rng = env.rng();
+    let ds = env.dataset("movielens", &mut rng);
+    let nnz = ds.nnz();
+    let b = Bencher::default();
+
+    // --- L3 SGD epoch
+    for f in [32usize, 128] {
+        let cfg = SgdConfig { f, epochs: 1, ..env.sgd_config("movielens", &ds) };
+        let m = b.run(&format!("sgd epoch F={f}"), || {
+            train_sgd_logged(&ds.train, &cfg, &mut Rng::seeded(1))
+        });
+        println!(
+            "{}  |  {:.1}M updates/s",
+            m.fmt_line(),
+            nnz as f64 / m.p50.as_secs_f64() / 1e6
+        );
+    }
+
+    // --- CULSH epoch (scan + Eq. 5 full update)
+    {
+        let (topk, _) = SimLsh::new(2, 20, 8, 2).build(&ds.train_csc, 32, &mut rng);
+        let cfg = CulshConfig { epochs: 1, eval: Vec::new(), ..env.culsh_config("movielens", &ds) };
+        let m = b.run("culsh epoch F=32 K=32", || {
+            train_culsh_logged(&ds.train, topk.clone(), &cfg, &mut Rng::seeded(1))
+        });
+        println!(
+            "{}  |  {:.1}M updates/s",
+            m.fmt_line(),
+            nnz as f64 / m.p50.as_secs_f64() / 1e6
+        );
+    }
+
+    // --- dot kernel
+    {
+        let x: Vec<f32> = (0..128).map(|i| i as f32 * 0.01).collect();
+        let y: Vec<f32> = (0..128).map(|i| 1.0 - i as f32 * 0.005).collect();
+        let m = b.run("dot f32x128 x1e5", || {
+            let mut acc = 0f32;
+            for _ in 0..100_000 {
+                acc += lshmf::linalg::dot(std::hint::black_box(&x), std::hint::black_box(&y));
+            }
+            acc
+        });
+        let flops = 2.0 * 128.0 * 1e5 / m.p50.as_secs_f64();
+        println!("{}  |  {:.2} GFLOP/s", m.fmt_line(), flops / 1e9);
+    }
+
+    // --- simLSH hashing
+    {
+        let lsh = SimLsh::new(3, 1, 8, 2);
+        let m = b.run("simLSH signatures (1 round, p=3)", || {
+            lshmf::lsh::RoundHasher::signatures(&lsh, &ds.train_csc, 0, &mut Rng::seeded(1))
+        });
+        println!(
+            "{}  |  {:.0}k cols/s",
+            m.fmt_line(),
+            ds.ncols() as f64 / m.p50.as_secs_f64() / 1e3
+        );
+    }
+
+    // --- conflict-free batching (PJRT gather path)
+    {
+        let entries = ds.train.to_triples().entries().to_vec();
+        let m = b.run("conflict-free batching B=1024", || {
+            conflict_free_batches(&entries, 1024)
+        });
+        println!(
+            "{}  |  {:.1}M entries/s",
+            m.fmt_line(),
+            entries.len() as f64 / m.p50.as_secs_f64() / 1e6
+        );
+    }
+
+    // --- PJRT step latency
+    let dir = Runtime::default_dir();
+    if Runtime::available(&dir) {
+        let mut rt = Runtime::open(&dir).expect("runtime");
+        let (bsz, f) = (rt.manifest.batch, rt.manifest.f);
+        let scal = mf_scalars(3.0, 0.01, 0.01, 0.01, 0.01);
+        let r = vec![3.5f32; bsz];
+        let bi = vec![0.1f32; bsz];
+        let bj = vec![0.1f32; bsz];
+        let u = vec![0.05f32; bsz * f];
+        let v = vec![0.05f32; bsz * f];
+        let m = b.run("pjrt mf_sgd_step B=1024 F=32", || {
+            rt.run_f32(
+                "mf_sgd_step",
+                &[
+                    (&scal, &[5]),
+                    (&r, &[bsz]),
+                    (&bi, &[bsz]),
+                    (&bj, &[bsz]),
+                    (&u, &[bsz, f]),
+                    (&v, &[bsz, f]),
+                ],
+            )
+            .unwrap()
+        });
+        println!(
+            "{}  |  {:.2}M updates/s through PJRT",
+            m.fmt_line(),
+            bsz as f64 / m.p50.as_secs_f64() / 1e6
+        );
+    } else {
+        println!("(artifacts missing — PJRT step latency skipped)");
+    }
+}

@@ -1,0 +1,66 @@
+//! Table 4 reproduction: time to reach an acceptable RMSE, with speedups
+//! over the cuALS baseline. The paper's rows:
+//!
+//! ```text
+//! cuALS     1.30         15.60        15.00
+//! cuSGD     5.05 (3.0X)* 0.31 (4.2X)  1.92 (8.1X)      [*paper formatting]
+//! CUSGD++   1.49 (10.1X) 0.15 (8.7X)  0.69 (22.6X)
+//! ```
+//!
+//! On synthetic data the absolute target is `best-curve × (1+margin)`;
+//! the expected *shape* is cuALS slowest wall-clock to target, CUSGD++
+//! fastest, cuSGD between.
+
+use lshmf::bench::exp::{fmt_speedup, target_rmse, BenchEnv};
+use lshmf::bench::Table;
+use lshmf::mf::als::{train_als_logged, AlsConfig};
+use lshmf::mf::hogwild::train_hogwild_logged;
+use lshmf::mf::parallel::train_parallel_sgd_logged;
+use lshmf::mf::sgd::train_sgd_logged;
+use lshmf::rng::Rng;
+
+fn main() {
+    let env = BenchEnv::from_env();
+    println!("== Table 4: time-to-target speedups (scale {}) ==", env.scale);
+    let mut table = Table::new(&["algorithm", "netflix", "movielens", "yahoo"]);
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["cuALS".into()],
+        vec!["cuSGD".into()],
+        vec!["CUSGD++".into()],
+        vec!["CUSGD++ (nnz-sorted)".into()],
+    ];
+    for dataset in ["netflix", "movielens", "yahoo"] {
+        let mut rng = env.rng();
+        let ds = env.dataset(dataset, &mut rng);
+        let sgd_cfg = env.sgd_config(dataset, &ds);
+        let als_cfg = AlsConfig {
+            f: 32,
+            iterations: (env.epochs / 3).max(3),
+            lambda: 0.05,
+            threads: 2,
+            eval: ds.test.clone(),
+            ..Default::default()
+        };
+        let (_, als) = train_als_logged(&ds.train, &als_cfg, &mut Rng::seeded(env.seed));
+        let (_, hw) = train_hogwild_logged(&ds.train, &sgd_cfg, 2, &mut Rng::seeded(env.seed));
+        let (_, pp) = train_parallel_sgd_logged(&ds.train, &sgd_cfg, 2, &mut Rng::seeded(env.seed));
+        let sorted_cfg = lshmf::mf::sgd::SgdConfig { sort_rows_by_nnz: true, ..sgd_cfg.clone() };
+        let (_, pps) = train_sgd_logged(&ds.train, &sorted_cfg, &mut Rng::seeded(env.seed));
+
+        let target = target_rmse(&[&als, &hw, &pp, &pps], 0.005);
+        println!(
+            "# {dataset}: target rmse {:.4} (paper scale)",
+            target * env.rmse_scale(dataset)
+        );
+        let als_t = als.time_to(target);
+        rows[0].push(fmt_speedup(als_t, als_t));
+        rows[1].push(fmt_speedup(hw.time_to(target), als_t));
+        rows[2].push(fmt_speedup(pp.time_to(target), als_t));
+        rows[3].push(fmt_speedup(pps.time_to(target), als_t));
+    }
+    for row in rows {
+        table.row(&row);
+    }
+    table.print();
+    println!("(speedups relative to cuALS; paper shape: CUSGD++ > cuSGD > cuALS)");
+}

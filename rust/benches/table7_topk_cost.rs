@@ -1,0 +1,78 @@
+//! Table 7 reproduction: the three sub-tables — optimal RMSE (top),
+//! neighbour-construction time (middle), and space overhead (bottom) —
+//! for Rand / GSM / simLSH(p,q) / RP_cos / minHash on all three datasets.
+
+use lshmf::bench::exp::BenchEnv;
+use lshmf::bench::Table;
+use lshmf::gsm::Gsm;
+use lshmf::lsh::{MinHash, NeighbourSearch, RandNeighbours, RpCos, SimLsh};
+use lshmf::mf::neighbourhood::train_culsh_logged;
+use lshmf::rng::Rng;
+
+fn main() {
+    let env = BenchEnv::from_env();
+    println!("== Table 7: Top-K method cost/quality (scale {}) ==", env.scale);
+    let datasets = ["netflix", "movielens", "yahoo"];
+    let methods = [
+        "Rand",
+        "GSM",
+        "simLSH(p=3,q=100)",
+        "simLSH(p=3,q=200)",
+        "RP_cos(p=3,q=200)",
+        "minHash(p=3,q=200)",
+    ];
+    let mut rmse_t = Table::new(&["method", "netflix", "movielens", "yahoo"]);
+    let mut time_t = Table::new(&["method", "netflix", "movielens", "yahoo"]);
+    let mut space_t = Table::new(&["method", "netflix", "movielens", "yahoo"]);
+    let mut rmse_rows: Vec<Vec<String>> = methods.iter().map(|m| vec![m.to_string()]).collect();
+    let mut time_rows = rmse_rows.clone();
+    let mut space_rows = rmse_rows.clone();
+
+    for dataset in datasets {
+        let mut rng = env.rng();
+        let ds = env.dataset(dataset, &mut rng);
+        let cfg = env.culsh_config(dataset, &ds);
+        let psi = env.psi_power(dataset);
+        for (mi, method) in methods.iter().enumerate() {
+            let mut mrng = Rng::seeded(env.seed);
+            let (topk, cost) = match *method {
+                "Rand" => RandNeighbours.build(&ds.train_csc, cfg.k, &mut mrng),
+                "GSM" => Gsm::new(100.0).build(&ds.train_csc, cfg.k, &mut mrng),
+                "simLSH(p=3,q=100)" => {
+                    SimLsh::new(3, 100, 8, psi).build(&ds.train_csc, cfg.k, &mut mrng)
+                }
+                "simLSH(p=3,q=200)" => {
+                    SimLsh::new(3, 200, 8, psi).build(&ds.train_csc, cfg.k, &mut mrng)
+                }
+                "RP_cos(p=3,q=200)" => {
+                    RpCos::new(3, 200, 8).build(&ds.train_csc, cfg.k, &mut mrng)
+                }
+                "minHash(p=3,q=200)" => {
+                    MinHash::new(3, 200).build(&ds.train_csc, cfg.k, &mut mrng)
+                }
+                other => panic!("{other}"),
+            };
+            let (_, log) =
+                train_culsh_logged(&ds.train, topk, &cfg, &mut Rng::seeded(env.seed ^ 1));
+            rmse_rows[mi].push(format!("{:.4}", log.best_rmse() * env.rmse_scale(dataset)));
+            time_rows[mi].push(format!("{:.3}", cost.seconds));
+            space_rows[mi].push(format!("{:.2}", cost.bytes as f64 / (1024.0 * 1024.0)));
+        }
+    }
+    println!("-- optimal RMSE (paper top) --");
+    for r in rmse_rows {
+        rmse_t.row(&r);
+    }
+    rmse_t.print();
+    println!("-- construction time, seconds (paper middle) --");
+    for r in time_rows {
+        time_t.row(&r);
+    }
+    time_t.print();
+    println!("-- space overhead, MB (paper bottom) --");
+    for r in space_rows {
+        space_t.row(&r);
+    }
+    space_t.print();
+    println!("(paper shape: simLSH ~= GSM on RMSE; >=10x cheaper in time and space)");
+}

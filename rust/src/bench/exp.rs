@@ -1,0 +1,198 @@
+//! Shared experiment plumbing for the paper-reproduction benches.
+//!
+//! Every bench binary reproduces one table/figure; this module holds what
+//! they share: scaled dataset preparation, scale-adapted hyper-parameters
+//! (the paper's Eq. 7 schedule is tuned for ~10M-update epochs; smaller
+//! instances need a slower decay), the time-to-target metric, and the
+//! environment knobs:
+//!
+//! * `LSHMF_BENCH_SCALE` — linear dataset scale (default 0.04; 1.0 =
+//!   full Table 2 sizes);
+//! * `LSHMF_BENCH_EPOCHS` — epoch budget override;
+//! * `LSHMF_BENCH_SEED` — RNG seed (default 42).
+
+use crate::config::{ExperimentConfig, LshChoice};
+use crate::data::synth::SynthConfig;
+use crate::data::Dataset;
+use crate::mf::neighbourhood::CulshConfig;
+use crate::mf::sgd::SgdConfig;
+use crate::rng::Rng;
+
+/// Benchmark environment settings.
+#[derive(Clone, Debug)]
+pub struct BenchEnv {
+    pub scale: f64,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl BenchEnv {
+    pub fn from_env() -> Self {
+        let getf = |k: &str, d: f64| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        let getu = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        BenchEnv {
+            scale: getf("LSHMF_BENCH_SCALE", 0.04),
+            epochs: getu("LSHMF_BENCH_EPOCHS", 30),
+            seed: getu("LSHMF_BENCH_SEED", 42) as u64,
+        }
+    }
+
+    pub fn rng(&self) -> Rng {
+        Rng::seeded(self.seed)
+    }
+
+    /// Scale-adapted Eq. 7 decay: full-scale uses the paper's 0.3; small
+    /// instances (fewer updates per epoch) decay proportionally slower.
+    pub fn beta(&self) -> f32 {
+        (0.3 * self.scale.powf(0.75)).clamp(0.005, 0.3) as f32
+    }
+
+    /// Generate one of the three calibrated datasets at the bench scale.
+    ///
+    /// Yahoo!Music values are divided by 20 for training exactly as §5.1
+    /// prescribes ("we divided all the ratings ... by 20, and then we
+    /// multiply by 20 when verifying"); use [`Self::rmse_scale`] to map
+    /// reported RMSEs back to the paper's scale.
+    pub fn dataset(&self, name: &str, rng: &mut Rng) -> Dataset {
+        let cfg = SynthConfig::by_name(name)
+            .unwrap_or_else(|| panic!("unknown dataset {name}"))
+            .scaled(self.scale);
+        let mut t = crate::data::synth::generate_triples(&cfg, rng);
+        if name == "yahoo" {
+            for e in t.entries_mut() {
+                e.2 /= 20.0;
+            }
+        }
+        Dataset::split(&cfg.name, t, cfg.test_fraction, rng)
+    }
+
+    /// Factor mapping trained-scale RMSE back to the paper's rating scale.
+    pub fn rmse_scale(&self, dataset: &str) -> f64 {
+        if dataset == "yahoo" {
+            20.0
+        } else {
+            1.0
+        }
+    }
+
+    /// Paper Table 3 SGD hyper-parameters (per dataset), decay-adapted.
+    pub fn sgd_config(&self, dataset: &str, ds: &Dataset) -> SgdConfig {
+        let (alpha, lambda) = match dataset {
+            "yahoo" => (0.01f32, 0.02f32),
+            _ => (0.04, 0.02),
+        };
+        SgdConfig {
+            f: 32,
+            epochs: self.epochs,
+            alpha,
+            beta: self.beta(),
+            lambda_u: lambda,
+            lambda_v: lambda,
+            lambda_b: lambda,
+            eval: ds.test.clone(),
+            ..Default::default()
+        }
+    }
+
+    /// Paper Table 5 CULSH-MF hyper-parameters, decay-adapted.
+    pub fn culsh_config(&self, dataset: &str, ds: &Dataset) -> CulshConfig {
+        let (alpha, lambda, lambda_wc) = match dataset {
+            "netflix" => (0.02f32, 0.01f32, 0.05f32),
+            "yahoo" => (0.02, 0.02, 0.05),
+            _ => (0.035, 0.02, 0.002),
+        };
+        CulshConfig {
+            f: 32,
+            k: 32,
+            epochs: self.epochs,
+            alpha,
+            alpha_wc: if dataset == "movielens" { 0.002 } else { 0.001 },
+            beta: self.beta(),
+            lambda_u: lambda,
+            lambda_v: lambda,
+            lambda_b: lambda,
+            lambda_w: lambda_wc,
+            lambda_c: lambda_wc,
+            eval: ds.test.clone(),
+            ..Default::default()
+        }
+    }
+
+    /// Ψ exponent per dataset (§5.3: r² except Yahoo's r⁴).
+    pub fn psi_power(&self, dataset: &str) -> u32 {
+        if dataset == "yahoo" {
+            4
+        } else {
+            2
+        }
+    }
+
+    /// An [`ExperimentConfig`] view for CLI-helper reuse.
+    pub fn experiment(&self, dataset: &str, lsh: LshChoice) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset.kind = crate::config::DatasetChoice::parse(dataset).unwrap();
+        cfg.dataset.scale = self.scale;
+        cfg.dataset.seed = self.seed;
+        cfg.trainer.epochs = self.epochs;
+        cfg.trainer.beta = self.beta() as f64;
+        cfg.lsh.kind = lsh;
+        cfg.lsh.psi_power = self.psi_power(dataset);
+        cfg
+    }
+}
+
+/// "Acceptable RMSE" target for time-to-target comparisons: the paper
+/// fixes absolute numbers per real dataset (0.92 / 0.80 / 22.0) that all
+/// compared algorithms eventually reach; the synthetic equivalent is the
+/// *worst of the per-curve minima* plus a small margin, so every curve is
+/// guaranteed to cross the target line and the comparison is about time.
+pub fn target_rmse(curves: &[&crate::mf::TrainLog], margin: f64) -> f64 {
+    let worst_best = curves
+        .iter()
+        .map(|c| c.best_rmse())
+        .fold(f64::NEG_INFINITY, f64::max);
+    worst_best * (1.0 + margin)
+}
+
+/// Render a speedup string ("1.92 (8.1X)") relative to a baseline time.
+pub fn fmt_speedup(seconds: Option<f64>, baseline: Option<f64>) -> String {
+    match (seconds, baseline) {
+        (Some(s), Some(b)) if s > 0.0 => format!("{} ({:.1}X)", crate::bench::fmt_secs(s), b / s),
+        (Some(s), _) => crate::bench::fmt_secs(s),
+        _ => "n/a".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_defaults() {
+        let env = BenchEnv { scale: 0.04, epochs: 30, seed: 42 };
+        assert!(env.beta() > 0.0 && env.beta() <= 0.3);
+        assert_eq!(env.psi_power("yahoo"), 4);
+        assert_eq!(env.psi_power("movielens"), 2);
+    }
+
+    #[test]
+    fn target_rmse_tracks_best_curve() {
+        let mut a = crate::mf::TrainLog::default();
+        a.push(0, 1.0, 1.0);
+        a.push(1, 2.0, 0.9);
+        let mut b = crate::mf::TrainLog::default();
+        b.push(0, 1.0, 0.85);
+        let t = target_rmse(&[&a, &b], 0.02);
+        assert!((t - 0.9 * 1.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_speedup_strings() {
+        assert_eq!(fmt_speedup(Some(2.0), Some(4.0)), "2.00 (2.0X)");
+        assert_eq!(fmt_speedup(None, Some(4.0)), "n/a");
+    }
+}

@@ -1,0 +1,211 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! [`Bencher::run`] measures a closure with warmup + repeated timed
+//! iterations and reports min / mean / p50 / p95 / max. Experiment benches
+//! (one per paper table/figure) also use [`Table`] to print aligned
+//! markdown-ish tables and [`csv_dump`] to emit series for plotting.
+//!
+//! Iterations auto-scale: cheap closures get more repetitions, expensive
+//! ones fewer, bounded by a time budget — the same adaptive idea criterion
+//! uses, simplified.
+
+pub mod exp;
+
+use std::time::{Duration, Instant};
+
+/// Result of a measured run.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn fmt_line(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} min={:>10?} mean={:>10?} p50={:>10?} p95={:>10?} max={:>10?}",
+            self.name, self.iters, self.min, self.mean, self.p50, self.p95, self.max
+        )
+    }
+}
+
+/// Adaptive micro/macro benchmark runner.
+pub struct Bencher {
+    /// Total time budget per benchmark (default 2s).
+    pub budget: Duration,
+    /// Max iterations regardless of budget.
+    pub max_iters: usize,
+    /// Warmup iterations (default 1).
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { budget: Duration::from_secs(2), max_iters: 1000, warmup: 1 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { budget: Duration::from_millis(500), max_iters: 100, warmup: 1 }
+    }
+
+    /// Measure `f`, returning timing stats. The closure's result is
+    /// black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let t_start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < 3 || t_start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let iters = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let pick = |q: f64| samples[((iters - 1) as f64 * q) as usize];
+        Measurement {
+            name: name.to_string(),
+            iters,
+            min: samples[0],
+            mean: sum / iters as u32,
+            p50: pick(0.50),
+            p95: pick(0.95),
+            max: samples[iters - 1],
+        }
+    }
+}
+
+/// Aligned text table for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                widths[c] = widths[c].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for c in 0..ncols {
+                line.push_str(&format!(" {:<width$} |", cells[c], width = widths[c]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Write CSV series to `bench_out/<name>.csv` for plotting.
+pub fn csv_dump(name: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    std::fs::create_dir_all("bench_out")?;
+    let path = format!("bench_out/{name}.csv");
+    let mut body = headers.join(",");
+    body.push('\n');
+    for row in rows {
+        body.push_str(&row.join(","));
+        body.push('\n');
+    }
+    std::fs::write(path, body)
+}
+
+/// Format seconds with sensible precision for bench tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.1}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 1e-3 {
+        format!("{:.3}", s)
+    } else {
+        format!("{:.6}", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something() {
+        let b = Bencher { budget: Duration::from_millis(50), max_iters: 20, warmup: 1 };
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(m.iters >= 3);
+        assert!(m.min <= m.p50 && m.p50 <= m.max);
+        assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["algo", "time"]);
+        t.row(&["sgd".into(), "1.23".into()]);
+        t.row(&["culsh-mf".into(), "0.09".into()]);
+        let s = t.render();
+        assert!(s.contains("| algo"));
+        assert!(s.contains("| culsh-mf"));
+        let first = s.lines().next().unwrap().len();
+        assert!(s.lines().all(|l| l.len() == first), "misaligned:\n{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(fmt_secs(123.4), "123.4");
+        assert_eq!(fmt_secs(1.234), "1.23");
+        assert_eq!(fmt_secs(0.1234), "0.123");
+        assert_eq!(fmt_secs(0.000123), "0.000123");
+    }
+}

@@ -1,0 +1,150 @@
+//! Flag parsing: `<command> [--key value]... [--flag]...`.
+
+use crate::config::ExperimentConfig;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.next() {
+            if first.starts_with("--") {
+                return Err(Error::Config("expected a command before flags".into()));
+            }
+            args.command = first.clone();
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got `{tok}`")))?;
+            if key.is_empty() {
+                return Err(Error::Config("empty flag".into()));
+            }
+            // value = next token unless it is another flag (bool flags)
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            args.flags.insert(key.to_string(), value);
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| Error::Config(format!("--{key} must be an integer")))
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| Error::Config(format!("--{key} must be a number")))
+            })
+            .transpose()
+    }
+
+    /// Build the experiment config: file (if given) + flag overrides.
+    pub fn experiment_config(&self) -> Result<ExperimentConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => ExperimentConfig::from_file(std::path::Path::new(path))?,
+            None => ExperimentConfig::default(),
+        };
+        if let Some(ds) = self.get("dataset") {
+            cfg.dataset.kind = crate::config::DatasetChoice::parse(ds)?;
+        }
+        if let Some(s) = self.get_f64("scale")? {
+            cfg.dataset.scale = s;
+        }
+        if let Some(s) = self.get_usize("seed")? {
+            cfg.dataset.seed = s as u64;
+        }
+        if let Some(t) = self.get("trainer") {
+            cfg.trainer.kind = crate::config::TrainerChoice::parse(t)?;
+        }
+        if let Some(l) = self.get("lsh") {
+            cfg.lsh.kind = crate::config::LshChoice::parse(l)?;
+        }
+        if let Some(v) = self.get_usize("f")? {
+            cfg.model.f = v;
+        }
+        if let Some(v) = self.get_usize("k")? {
+            cfg.model.k = v;
+        }
+        if let Some(v) = self.get_usize("epochs")? {
+            cfg.trainer.epochs = v;
+        }
+        if let Some(v) = self.get_usize("threads")? {
+            cfg.trainer.threads = v;
+        }
+        if let Some(v) = self.get_usize("p")? {
+            cfg.lsh.p = v;
+        }
+        if let Some(v) = self.get_usize("q")? {
+            cfg.lsh.q = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::parse(&sv(&["train", "--f", "64", "--verbose", "--scale", "0.2"])).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get_usize("f").unwrap(), Some(64));
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert_eq!(a.get_f64("scale").unwrap(), Some(0.2));
+        assert_eq!(a.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_flag_before_command_and_bad_numbers() {
+        assert!(Args::parse(&sv(&["--f", "64"])).is_err());
+        let a = Args::parse(&sv(&["train", "--f", "lots"])).unwrap();
+        assert!(a.get_usize("f").is_err());
+    }
+
+    #[test]
+    fn experiment_config_overrides() {
+        let a = Args::parse(&sv(&[
+            "train", "--dataset", "netflix", "--trainer", "als", "--f", "16", "--epochs", "3",
+        ]))
+        .unwrap();
+        let cfg = a.experiment_config().unwrap();
+        assert_eq!(cfg.model.f, 16);
+        assert_eq!(cfg.trainer.epochs, 3);
+        assert_eq!(cfg.trainer.kind, crate::config::TrainerChoice::Als);
+        assert_eq!(cfg.dataset.kind, crate::config::DatasetChoice::Netflix);
+    }
+
+    #[test]
+    fn bad_choice_is_an_error() {
+        let a = Args::parse(&sv(&["train", "--trainer", "magic"])).unwrap();
+        assert!(a.experiment_config().is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! Command implementations for the launcher.
+
+use super::Args;
+use crate::config::{ExperimentConfig, LshChoice, TrainerChoice};
+use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use crate::coordinator::Engine;
+use crate::data::synth::{self, SynthConfig};
+use crate::data::Dataset;
+use crate::gsm::Gsm;
+use crate::lsh::{
+    MinHash, NeighbourSearch, OnlineHashState, RandNeighbours, RpCos, SimLsh, TopK,
+};
+use crate::metrics::Registry;
+use crate::mf::als::AlsConfig;
+use crate::mf::ccd::CcdConfig;
+use crate::mf::neighbourhood::{train_culsh_parallel_logged, CulshConfig};
+use crate::mf::sgd::SgdConfig;
+use crate::mf::TrainLog;
+use crate::rng::Rng;
+use crate::{Error, Result};
+
+/// Build the dataset named by the config.
+pub fn build_dataset(cfg: &ExperimentConfig, rng: &mut Rng) -> Result<Dataset> {
+    let synth_cfg = SynthConfig::by_name(cfg.dataset.kind.name())
+        .ok_or_else(|| Error::Config(format!("dataset `{}` has no synth generator", cfg.dataset.kind.name())))?
+        .scaled(cfg.dataset.scale);
+    let mut t = synth::generate_triples(&synth_cfg, rng);
+    if cfg.dataset.noise_rate > 0.0 {
+        synth::inject_noise(
+            &mut t,
+            cfg.dataset.noise_rate,
+            synth_cfg.min_value,
+            synth_cfg.max_value,
+            rng,
+        );
+    }
+    Ok(Dataset::split(&synth_cfg.name, t, synth_cfg.test_fraction, rng))
+}
+
+/// Build the neighbour table named by the config.
+pub fn build_topk(cfg: &ExperimentConfig, ds: &Dataset, rng: &mut Rng) -> (TopK, f64) {
+    let k = cfg.model.k;
+    let (topk, cost) = match cfg.lsh.kind {
+        LshChoice::SimLsh => SimLsh::new(cfg.lsh.p, cfg.lsh.q, cfg.lsh.g, cfg.lsh.psi_power)
+            .build(&ds.train_csc, k, rng),
+        LshChoice::RpCos => RpCos::new(cfg.lsh.p, cfg.lsh.q, cfg.lsh.g).build(&ds.train_csc, k, rng),
+        LshChoice::MinHash => MinHash::new(cfg.lsh.p, cfg.lsh.q).build(&ds.train_csc, k, rng),
+        LshChoice::Rand => RandNeighbours.build(&ds.train_csc, k, rng),
+        LshChoice::Gsm => Gsm::new(cfg.lsh.lambda_rho).build(&ds.train_csc, k, rng),
+    };
+    (topk, cost.seconds)
+}
+
+/// Run the configured trainer; returns its RMSE-vs-time log.
+pub fn run_trainer(cfg: &ExperimentConfig, ds: &Dataset, rng: &mut Rng) -> Result<TrainLog> {
+    let t = &cfg.trainer;
+    let sgd_cfg = SgdConfig {
+        f: cfg.model.f,
+        epochs: t.epochs,
+        alpha: t.alpha as f32,
+        beta: t.beta as f32,
+        lambda_u: t.lambda_u as f32,
+        lambda_v: t.lambda_v as f32,
+        lambda_b: t.lambda_b as f32,
+        eval: ds.test.clone(),
+        ..Default::default()
+    };
+    let log = match t.kind {
+        TrainerChoice::Serial => {
+            crate::mf::sgd::train_sgd_logged(&ds.train, &sgd_cfg, rng).1
+        }
+        TrainerChoice::Sgd => {
+            crate::mf::parallel::train_parallel_sgd_logged(&ds.train, &sgd_cfg, t.threads, rng).1
+        }
+        TrainerChoice::Hogwild => {
+            crate::mf::hogwild::train_hogwild_logged(&ds.train, &sgd_cfg, t.threads, rng).1
+        }
+        TrainerChoice::Als => {
+            let als_cfg = AlsConfig {
+                f: cfg.model.f,
+                iterations: t.epochs,
+                lambda: t.lambda_u as f32,
+                threads: t.threads,
+                eval: ds.test.clone(),
+                ..Default::default()
+            };
+            crate::mf::als::train_als_logged(&ds.train, &als_cfg, rng).1
+        }
+        TrainerChoice::Ccd => {
+            let ccd_cfg = CcdConfig {
+                f: cfg.model.f,
+                iterations: t.epochs,
+                lambda: t.lambda_u as f32,
+                eval: ds.test.clone(),
+                ..Default::default()
+            };
+            crate::mf::ccd::train_ccd_logged(&ds.train, &ccd_cfg, rng).1
+        }
+        TrainerChoice::Culsh => {
+            let (topk, lsh_secs) = build_topk(cfg, ds, rng);
+            eprintln!("# neighbour table built in {lsh_secs:.3}s ({})", cfg.lsh.kind.name());
+            let culsh_cfg = culsh_config(cfg, ds.test.clone());
+            train_culsh_parallel_logged(&ds.train, topk, &culsh_cfg, t.threads, rng).1
+        }
+    };
+    Ok(log)
+}
+
+pub fn culsh_config(cfg: &ExperimentConfig, eval: Vec<(u32, u32, f32)>) -> CulshConfig {
+    let t = &cfg.trainer;
+    CulshConfig {
+        f: cfg.model.f,
+        k: cfg.model.k,
+        epochs: t.epochs,
+        alpha: t.alpha as f32,
+        alpha_wc: t.alpha_wc as f32,
+        beta: t.beta as f32,
+        lambda_u: t.lambda_u as f32,
+        lambda_v: t.lambda_v as f32,
+        lambda_b: t.lambda_b as f32,
+        lambda_w: t.lambda_w as f32,
+        lambda_c: t.lambda_c as f32,
+        eval,
+        seed: cfg.dataset.seed,
+    }
+}
+
+// ------------------------------------------------------------- commands
+
+pub fn gen_data(args: &mut Args) -> Result<()> {
+    let cfg = args.experiment_config()?;
+    let out = args.get("out").unwrap_or("ratings.txt").to_string();
+    let mut rng = Rng::seeded(cfg.dataset.seed);
+    let synth_cfg = SynthConfig::by_name(cfg.dataset.kind.name())
+        .ok_or_else(|| Error::Config("dataset has no generator".into()))?
+        .scaled(cfg.dataset.scale);
+    let t = synth::generate_triples(&synth_cfg, &mut rng);
+    let mut body = String::with_capacity(t.nnz() * 16);
+    for &(i, j, r) in t.entries() {
+        body.push_str(&format!("{i}\t{j}\t{r}\n"));
+    }
+    std::fs::write(&out, body)?;
+    println!(
+        "wrote {} ratings ({}x{}) to {out}",
+        t.nnz(),
+        t.nrows(),
+        t.ncols()
+    );
+    Ok(())
+}
+
+pub fn train(args: &mut Args) -> Result<()> {
+    let cfg = args.experiment_config()?;
+    let mut rng = Rng::seeded(cfg.dataset.seed);
+    eprintln!(
+        "# dataset={} scale={} trainer={} f={} k={}",
+        cfg.dataset.kind.name(),
+        cfg.dataset.scale,
+        cfg.trainer.kind.name(),
+        cfg.model.f,
+        cfg.model.k
+    );
+    let ds = build_dataset(&cfg, &mut rng)?;
+    eprintln!("# {}x{}, {} train / {} test", ds.nrows(), ds.ncols(), ds.nnz(), ds.test.len());
+    let log = run_trainer(&cfg, &ds, &mut rng)?;
+    println!("epoch\tseconds\trmse");
+    for p in &log.points {
+        println!("{}\t{:.4}\t{:.5}", p.epoch, p.seconds, p.rmse);
+    }
+    println!("# final rmse {:.5} in {:.3}s", log.final_rmse(), log.total_seconds());
+    Ok(())
+}
+
+pub fn online(args: &mut Args) -> Result<()> {
+    let cfg = args.experiment_config()?;
+    let mut rng = Rng::seeded(cfg.dataset.seed);
+    let synth_cfg = SynthConfig::by_name(cfg.dataset.kind.name())
+        .ok_or_else(|| Error::Config("dataset has no generator".into()))?
+        .scaled(cfg.dataset.scale);
+    let full = synth::generate_triples(&synth_cfg, &mut rng);
+    let split = crate::data::online::split_online(&full, cfg.online.holdout, cfg.online.holdout);
+    let stats = split.stats(full.nrows(), full.ncols());
+    println!(
+        "# online split: M={} N={} |Ω|={}  M̄={} N̄={} |Ω̄|={}",
+        stats.m, stats.n, stats.omega, stats.m_bar, stats.n_bar, stats.omega_bar
+    );
+
+    // test set: last 1% of base entries
+    let n_test = (split.base.nnz() / 100).max(1);
+    let base_entries = split.base.entries().to_vec();
+    let (test, train_entries) = base_entries.split_at(n_test);
+    let base_train = crate::sparse::Triples::from_entries(
+        split.base.nrows(),
+        split.base.ncols(),
+        train_entries.to_vec(),
+    );
+
+    let csr = crate::sparse::Csr::from_triples(&base_train);
+    let csc = crate::sparse::Csc::from_triples(&base_train);
+    let lsh = SimLsh::new(cfg.lsh.p, cfg.lsh.q, cfg.lsh.g, cfg.lsh.psi_power);
+    let mut hash_state = OnlineHashState::build(lsh, &csc);
+    let (topk, _) = hash_state.topk(cfg.model.k, &mut rng);
+    let culsh_cfg = culsh_config(&cfg, test.to_vec());
+    let (model, log) =
+        crate::mf::neighbourhood::train_culsh_logged(&csr, topk, &culsh_cfg, &mut rng);
+    let rmse_before = log.final_rmse();
+    println!("# base model rmse {rmse_before:.5}");
+
+    let outcome = crate::mf::online::apply_online(
+        model,
+        &mut hash_state,
+        &base_train,
+        &split.increment,
+        full.nrows(),
+        full.ncols(),
+        &culsh_cfg,
+        cfg.online.epochs,
+        &mut rng,
+    );
+    let rmse_after = outcome.model.rmse(&outcome.combined, test);
+    println!("# after online update rmse {rmse_after:.5} (Δ {:+.5})", rmse_after - rmse_before);
+    println!("# online update took {:.3}s for {} increments", outcome.seconds, stats.omega_bar);
+    Ok(())
+}
+
+pub fn serve(args: &mut Args) -> Result<()> {
+    let cfg = args.experiment_config()?;
+    let port = args.get_usize("port")?.unwrap_or(7878);
+    let mut rng = Rng::seeded(cfg.dataset.seed);
+    let ds = build_dataset(&cfg, &mut rng)?;
+    eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
+    let (topk, _) = build_topk(&cfg, &ds, &mut rng);
+    let culsh_cfg = culsh_config(&cfg, Vec::new());
+    let (model, _) = crate::mf::neighbourhood::train_culsh_logged(
+        &ds.train,
+        topk,
+        &culsh_cfg,
+        &mut rng,
+    );
+    let lsh = SimLsh::new(cfg.lsh.p, cfg.lsh.q, cfg.lsh.g, cfg.lsh.psi_power);
+    let hash_state = OnlineHashState::build(lsh, &ds.train_csc);
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        ds.train.to_triples(),
+        StreamConfig::default(),
+        culsh_cfg,
+        rng.split(7),
+        Registry::new(),
+    );
+    let engine = Engine::new(orch, (ds.min_value, ds.max_value), Registry::new());
+    let listener = std::net::TcpListener::bind(("0.0.0.0", port as u16))?;
+    eprintln!("# serving on port {port} (PREDICT/TOPN/RATE/STATS/QUIT)");
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    crate::coordinator::server::serve(engine, listener, stop)?;
+    Ok(())
+}
+
+pub fn info(_args: &mut Args) -> Result<()> {
+    let dir = crate::runtime::Runtime::default_dir();
+    if !crate::runtime::Runtime::available(&dir) {
+        println!("artifacts: NOT FOUND at {} (run `make artifacts`)", dir.display());
+        return Ok(());
+    }
+    let rt = crate::runtime::Runtime::open(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!(
+        "shapes: batch={} f={} k={} hash=[{}x{}->{} bits]",
+        rt.manifest.batch, rt.manifest.f, rt.manifest.k, rt.manifest.hash_n, rt.manifest.hash_m, rt.manifest.hash_g
+    );
+    println!("graphs:");
+    for (name, entry) in &rt.manifest.graphs {
+        println!("  {name:<24} {} ({} inputs)", entry.file, entry.inputs.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Args {
+        Args::parse(&xs.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn build_dataset_respects_scale() {
+        let cfg = args(&["train", "--dataset", "movielens", "--scale", "0.02"])
+            .experiment_config()
+            .unwrap();
+        let mut rng = Rng::seeded(1);
+        let ds = build_dataset(&cfg, &mut rng).unwrap();
+        assert!(ds.nrows() > 500 && ds.nrows() < 2500);
+        assert!(ds.test.len() > 0);
+    }
+
+    #[test]
+    fn all_trainers_run_one_epoch() {
+        for trainer in ["serial", "sgd", "hogwild", "als", "ccd"] {
+            let cfg = args(&[
+                "train", "--dataset", "movielens", "--scale", "0.01", "--epochs", "1",
+                "--trainer", trainer, "--f", "8", "--threads", "2",
+            ])
+            .experiment_config()
+            .unwrap();
+            let mut rng = Rng::seeded(2);
+            let ds = build_dataset(&cfg, &mut rng).unwrap();
+            let log = run_trainer(&cfg, &ds, &mut rng).unwrap();
+            assert!(log.final_rmse().is_finite(), "{trainer}");
+        }
+    }
+
+    #[test]
+    fn culsh_trainer_runs_with_each_lsh() {
+        for lsh in ["simlsh", "rand"] {
+            let cfg = args(&[
+                "train", "--dataset", "movielens", "--scale", "0.01", "--epochs", "2",
+                "--trainer", "culsh", "--f", "8", "--k", "8", "--lsh", lsh, "--q", "4",
+            ])
+            .experiment_config()
+            .unwrap();
+            let mut rng = Rng::seeded(3);
+            let ds = build_dataset(&cfg, &mut rng).unwrap();
+            let log = run_trainer(&cfg, &ds, &mut rng).unwrap();
+            assert!(log.final_rmse().is_finite(), "{lsh}");
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Command-line launcher.
+//!
+//! ```text
+//! lshmf gen-data  --dataset movielens --scale 0.05 --seed 42 --out ratings.txt
+//! lshmf train     [--config exp.toml] [--dataset movielens] [--scale 0.05]
+//!                 [--trainer culsh|sgd|hogwild|als|ccd|serial] [--f 32] [--k 32]
+//!                 [--epochs 20] [--threads 4] [--lsh simlsh|gsm|rpcos|minhash|rand]
+//! lshmf online    [--config exp.toml] — Table 9 protocol: base train,
+//!                 increment via Algorithm 4, report the RMSE delta
+//! lshmf serve     [--config exp.toml] [--port 7878] — train then serve TCP
+//! lshmf info      — artifact bundle status (PJRT graphs available?)
+//! ```
+//!
+//! Flags override config-file values; defaults come from
+//! [`ExperimentConfig`] (the paper's Tables 3/5 hyper-parameters).
+
+mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point (returns the process exit code).
+pub fn main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// Dispatch a parsed command line (separated from `main` for tests).
+pub fn run(argv: &[String]) -> crate::Result<()> {
+    let mut args = Args::parse(argv)?;
+    let cmd = args.command.clone();
+    match cmd.as_str() {
+        "gen-data" => commands::gen_data(&mut args),
+        "train" => commands::train(&mut args),
+        "online" => commands::online(&mut args),
+        "serve" => commands::serve(&mut args),
+        "info" => commands::info(&mut args),
+        "help" | "" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(crate::Error::Config(format!(
+            "unknown command `{other}` (try `lshmf help`)"
+        ))),
+    }
+}
+
+pub const HELP: &str = "\
+lshmf — LSH-aggregated nonlinear neighbourhood MF (CULSH-MF reproduction)
+
+USAGE: lshmf <command> [flags]
+
+COMMANDS:
+  gen-data   generate a synthetic rating file (Table 2 calibrated)
+  train      train a model and report the RMSE-vs-time curve
+  online     run the Table 9 online-learning protocol
+  serve      train, then serve predictions over TCP (see server.rs verbs)
+  info       show the AOT artifact bundle status
+  help       this text
+
+COMMON FLAGS:
+  --config <file>      TOML experiment config (flags override)
+  --dataset <name>     netflix | movielens | yahoo (synthetic, calibrated)
+  --scale <0..1>       linear size factor (default 0.1)
+  --seed <u64>         RNG seed
+  --trainer <name>     culsh | sgd | hogwild | als | ccd | serial
+  --lsh <name>         simlsh | gsm | rpcos | minhash | rand
+  --f / --k <int>      latent dim / neighbourhood size
+  --epochs <int>       training epochs
+  --threads <int>      worker threads (block-rotation)
+  --port <int>         serve: TCP port (default 7878)
+  --out <file>         gen-data: output path
+";
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn help_runs() {
+        super::run(&["help".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(super::run(&["frobnicate".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,437 @@
+//! Typed experiment configuration with defaults matching the paper's
+//! Tables 3 and 5, plus validation.
+
+use super::toml::{parse, Tree, Value};
+use crate::{Error, Result};
+
+/// Which synthetic dataset family to generate (§Substitutions of
+/// DESIGN.md: calibrated to the paper's Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetChoice {
+    Netflix,
+    Movielens,
+    YahooMusic,
+    /// Small implicit-feedback set (Table 10 protocol).
+    Implicit,
+}
+
+impl DatasetChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "netflix" => DatasetChoice::Netflix,
+            "movielens" => DatasetChoice::Movielens,
+            "yahoo" | "yahoomusic" | "yahoo_music" => DatasetChoice::YahooMusic,
+            "implicit" => DatasetChoice::Implicit,
+            other => return Err(Error::Config(format!("unknown dataset `{other}`"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetChoice::Netflix => "netflix",
+            DatasetChoice::Movielens => "movielens",
+            DatasetChoice::YahooMusic => "yahoo",
+            DatasetChoice::Implicit => "implicit",
+        }
+    }
+}
+
+/// Neighbour-search engine choice (Fig. 7 comparators).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LshChoice {
+    /// The paper's contribution (Eq. 3 + p/q amplification).
+    SimLsh,
+    /// Random projection on cosine distance.
+    RpCos,
+    /// minHash on Jaccard similarity.
+    MinHash,
+    /// Random Top-K control group.
+    Rand,
+    /// Exact O(N²) graph similarity matrix.
+    Gsm,
+}
+
+impl LshChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "simlsh" => LshChoice::SimLsh,
+            "rpcos" | "rp_cos" => LshChoice::RpCos,
+            "minhash" => LshChoice::MinHash,
+            "rand" | "random" => LshChoice::Rand,
+            "gsm" => LshChoice::Gsm,
+            other => return Err(Error::Config(format!("unknown lsh `{other}`"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LshChoice::SimLsh => "simlsh",
+            LshChoice::RpCos => "rp_cos",
+            LshChoice::MinHash => "minhash",
+            LshChoice::Rand => "rand",
+            LshChoice::Gsm => "gsm",
+        }
+    }
+}
+
+/// Trainer selection (Table 4 / Table 6 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainerChoice {
+    /// Serial biased SGD (the paper's "Serial" baseline).
+    Serial,
+    /// Block-parallel SGD — the CUSGD++ analogue.
+    Sgd,
+    /// Lock-free data-parallel SGD — the cuSGD analogue.
+    Hogwild,
+    /// Alternating least squares — the cuALS analogue.
+    Als,
+    /// Cyclic coordinate descent (CCD++).
+    Ccd,
+    /// The headline neighbourhood model (CULSH-MF).
+    Culsh,
+}
+
+impl TrainerChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "serial" => TrainerChoice::Serial,
+            "sgd" | "cusgd" | "cusgd++" => TrainerChoice::Sgd,
+            "hogwild" => TrainerChoice::Hogwild,
+            "als" => TrainerChoice::Als,
+            "ccd" => TrainerChoice::Ccd,
+            "culsh" | "culsh-mf" | "culshmf" => TrainerChoice::Culsh,
+            other => return Err(Error::Config(format!("unknown trainer `{other}`"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainerChoice::Serial => "serial",
+            TrainerChoice::Sgd => "sgd",
+            TrainerChoice::Hogwild => "hogwild",
+            TrainerChoice::Als => "als",
+            TrainerChoice::Ccd => "ccd",
+            TrainerChoice::Culsh => "culsh",
+        }
+    }
+}
+
+/// `[dataset]` section.
+#[derive(Clone, Debug)]
+pub struct DatasetSection {
+    pub kind: DatasetChoice,
+    /// Linear scale factor applied to (M, N); nnz scales quadratically.
+    pub scale: f64,
+    pub seed: u64,
+    /// Fraction of values perturbed for robustness experiments (Table 8).
+    pub noise_rate: f64,
+}
+
+impl Default for DatasetSection {
+    fn default() -> Self {
+        DatasetSection {
+            kind: DatasetChoice::Movielens,
+            scale: 0.1,
+            seed: 42,
+            noise_rate: 0.0,
+        }
+    }
+}
+
+/// `[model]` section: latent dims.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Latent factor dimension F.
+    pub f: usize,
+    /// Neighbourhood size K (Top-K).
+    pub k: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { f: 32, k: 32 }
+    }
+}
+
+/// `[trainer]` section — learning-rate schedule of Eq. (7) plus
+/// regularization (paper Tables 3 & 5).
+#[derive(Clone, Debug)]
+pub struct TrainerSection {
+    pub kind: TrainerChoice,
+    pub epochs: usize,
+    /// Initial learning rate α of Eq. (7).
+    pub alpha: f64,
+    /// Decay β of Eq. (7): γ_t = α / (1 + β t^1.5).
+    pub beta: f64,
+    pub lambda_u: f64,
+    pub lambda_v: f64,
+    pub lambda_b: f64,
+    pub lambda_w: f64,
+    pub lambda_c: f64,
+    /// Learning-rate for the neighbourhood parameters (α_w, α_c).
+    pub alpha_wc: f64,
+    pub threads: usize,
+}
+
+impl Default for TrainerSection {
+    fn default() -> Self {
+        TrainerSection {
+            kind: TrainerChoice::Culsh,
+            epochs: 20,
+            alpha: 0.035,
+            beta: 0.3,
+            lambda_u: 0.02,
+            lambda_v: 0.02,
+            lambda_b: 0.02,
+            lambda_w: 0.002,
+            lambda_c: 0.002,
+            alpha_wc: 0.002,
+            threads: 4,
+        }
+    }
+}
+
+/// `[lsh]` section (paper §5.3: G=8, p=3, q=100, λ_ρ=100, Ψ=r²).
+#[derive(Clone, Debug)]
+pub struct OnlineConfig {
+    /// Fraction of rows/cols held out as the "new" variable sets (Table 9).
+    pub holdout: f64,
+    pub epochs: usize,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig { holdout: 0.01, epochs: 5 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LshSection {
+    pub kind: LshChoice,
+    /// Coarse-grained AND width p.
+    pub p: usize,
+    /// Fine-grained OR count q.
+    pub q: usize,
+    /// Hash width in bits (G).
+    pub g: usize,
+    /// Pearson shrinkage λ_ρ for the GSM.
+    pub lambda_rho: f64,
+    /// Ψ(r) = r^psi_power (2 for Netflix/MovieLens, 4 for Yahoo).
+    pub psi_power: u32,
+}
+
+impl Default for LshSection {
+    fn default() -> Self {
+        LshSection {
+            kind: LshChoice::SimLsh,
+            p: 3,
+            q: 100,
+            g: 8,
+            lambda_rho: 100.0,
+            psi_power: 2,
+        }
+    }
+}
+
+/// `[rotation]` section — multi-device simulation (Fig. 5).
+#[derive(Clone, Debug)]
+pub struct RotationConfig {
+    /// Number of simulated devices D.
+    pub workers: usize,
+    /// Virtual transfer cost per factor byte relative to one nnz update.
+    pub link_cost: f64,
+}
+
+impl Default for RotationConfig {
+    fn default() -> Self {
+        RotationConfig { workers: 1, link_cost: 0.05 }
+    }
+}
+
+/// Whole-experiment configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetSection,
+    pub model: ModelConfig,
+    pub trainer: TrainerSection,
+    pub lsh: LshSection,
+    pub online: OnlineConfig,
+    pub rotation: RotationConfig,
+}
+
+fn get_int(tree: &Tree, sec: &str, key: &str, default: i64) -> Result<i64> {
+    match tree.get(sec).and_then(|s| s.get(key)) {
+        None => Ok(default),
+        Some(v) => v
+            .as_int()
+            .ok_or_else(|| Error::Config(format!("[{sec}] {key} must be an integer"))),
+    }
+}
+
+fn get_float(tree: &Tree, sec: &str, key: &str, default: f64) -> Result<f64> {
+    match tree.get(sec).and_then(|s| s.get(key)) {
+        None => Ok(default),
+        Some(v) => v
+            .as_float()
+            .ok_or_else(|| Error::Config(format!("[{sec}] {key} must be a number"))),
+    }
+}
+
+fn get_str<'t>(tree: &'t Tree, sec: &str, key: &str) -> Result<Option<&'t str>> {
+    match tree.get(sec).and_then(|s| s.get(key)) {
+        None => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(s)),
+        Some(_) => Err(Error::Config(format!("[{sec}] {key} must be a string"))),
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML-subset text, filling defaults and validating.
+    pub fn from_str(text: &str) -> Result<Self> {
+        let tree = parse(text).map_err(Error::Config)?;
+        Self::from_tree(&tree)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_tree(tree: &Tree) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+
+        if let Some(kind) = get_str(tree, "dataset", "kind")? {
+            cfg.dataset.kind = DatasetChoice::parse(kind)?;
+        }
+        cfg.dataset.scale = get_float(tree, "dataset", "scale", cfg.dataset.scale)?;
+        cfg.dataset.seed = get_int(tree, "dataset", "seed", cfg.dataset.seed as i64)? as u64;
+        cfg.dataset.noise_rate = get_float(tree, "dataset", "noise_rate", cfg.dataset.noise_rate)?;
+
+        cfg.model.f = get_int(tree, "model", "f", cfg.model.f as i64)? as usize;
+        cfg.model.k = get_int(tree, "model", "k", cfg.model.k as i64)? as usize;
+
+        if let Some(kind) = get_str(tree, "trainer", "kind")? {
+            cfg.trainer.kind = TrainerChoice::parse(kind)?;
+        }
+        cfg.trainer.epochs = get_int(tree, "trainer", "epochs", cfg.trainer.epochs as i64)? as usize;
+        cfg.trainer.alpha = get_float(tree, "trainer", "alpha", cfg.trainer.alpha)?;
+        cfg.trainer.beta = get_float(tree, "trainer", "beta", cfg.trainer.beta)?;
+        cfg.trainer.lambda_u = get_float(tree, "trainer", "lambda_u", cfg.trainer.lambda_u)?;
+        cfg.trainer.lambda_v = get_float(tree, "trainer", "lambda_v", cfg.trainer.lambda_v)?;
+        cfg.trainer.lambda_b = get_float(tree, "trainer", "lambda_b", cfg.trainer.lambda_b)?;
+        cfg.trainer.lambda_w = get_float(tree, "trainer", "lambda_w", cfg.trainer.lambda_w)?;
+        cfg.trainer.lambda_c = get_float(tree, "trainer", "lambda_c", cfg.trainer.lambda_c)?;
+        cfg.trainer.alpha_wc = get_float(tree, "trainer", "alpha_wc", cfg.trainer.alpha_wc)?;
+        cfg.trainer.threads = get_int(tree, "trainer", "threads", cfg.trainer.threads as i64)? as usize;
+
+        if let Some(kind) = get_str(tree, "lsh", "kind")? {
+            cfg.lsh.kind = LshChoice::parse(kind)?;
+        }
+        cfg.lsh.p = get_int(tree, "lsh", "p", cfg.lsh.p as i64)? as usize;
+        cfg.lsh.q = get_int(tree, "lsh", "q", cfg.lsh.q as i64)? as usize;
+        cfg.lsh.g = get_int(tree, "lsh", "g", cfg.lsh.g as i64)? as usize;
+        cfg.lsh.lambda_rho = get_float(tree, "lsh", "lambda_rho", cfg.lsh.lambda_rho)?;
+        cfg.lsh.psi_power = get_int(tree, "lsh", "psi_power", cfg.lsh.psi_power as i64)? as u32;
+
+        cfg.online.holdout = get_float(tree, "online", "holdout", cfg.online.holdout)?;
+        cfg.online.epochs = get_int(tree, "online", "epochs", cfg.online.epochs as i64)? as usize;
+
+        cfg.rotation.workers =
+            get_int(tree, "rotation", "workers", cfg.rotation.workers as i64)? as usize;
+        cfg.rotation.link_cost =
+            get_float(tree, "rotation", "link_cost", cfg.rotation.link_cost)?;
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let bad = |m: String| Err(Error::Config(m));
+        if self.model.f == 0 {
+            return bad("model.f must be positive".into());
+        }
+        if self.model.k == 0 {
+            return bad("model.k must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.dataset.noise_rate) {
+            return bad("dataset.noise_rate must be in [0,1]".into());
+        }
+        if self.dataset.scale <= 0.0 || self.dataset.scale > 1.0 {
+            return bad("dataset.scale must be in (0,1]".into());
+        }
+        if self.lsh.p == 0 || self.lsh.q == 0 {
+            return bad("lsh.p and lsh.q must be positive".into());
+        }
+        if self.lsh.g == 0 || self.lsh.g > 64 {
+            return bad("lsh.g must be in 1..=64".into());
+        }
+        if self.trainer.alpha <= 0.0 {
+            return bad("trainer.alpha must be positive".into());
+        }
+        if self.rotation.workers == 0 {
+            return bad("rotation.workers must be positive".into());
+        }
+        if !(0.0..1.0).contains(&self.online.holdout) {
+            return bad("online.holdout must be in [0,1)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_choices() {
+        assert_eq!(TrainerChoice::parse("cusgd++").unwrap(), TrainerChoice::Sgd);
+        assert_eq!(LshChoice::parse("rp_cos").unwrap(), LshChoice::RpCos);
+        assert_eq!(
+            DatasetChoice::parse("yahoo").unwrap(),
+            DatasetChoice::YahooMusic
+        );
+        assert!(TrainerChoice::parse("nope").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_ranges() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.lsh.g = 65;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset.scale = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.model.f = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for c in [
+            TrainerChoice::Serial,
+            TrainerChoice::Sgd,
+            TrainerChoice::Hogwild,
+            TrainerChoice::Als,
+            TrainerChoice::Ccd,
+            TrainerChoice::Culsh,
+        ] {
+            assert_eq!(TrainerChoice::parse(c.name()).unwrap(), c);
+        }
+        for l in [
+            LshChoice::SimLsh,
+            LshChoice::RpCos,
+            LshChoice::MinHash,
+            LshChoice::Rand,
+            LshChoice::Gsm,
+        ] {
+            assert_eq!(LshChoice::parse(l.name()).unwrap(), l);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Configuration system: a TOML-subset parser plus the typed experiment
+//! configuration the launcher consumes.
+//!
+//! The offline image has no `serde`/`toml`, so [`parse`] implements the
+//! subset real configs need: `[section]` headers, `key = value` with
+//! string / int / float / bool / flat arrays, comments, and blank lines.
+//! Typed configs ([`ExperimentConfig`]) pull values out of the parsed tree
+//! with defaulting and validation, so a config file only needs to state
+//! what it overrides.
+
+mod experiment;
+mod toml;
+
+pub use experiment::{
+    DatasetChoice, DatasetSection, ExperimentConfig, LshChoice, LshSection, ModelConfig,
+    OnlineConfig, RotationConfig, TrainerChoice, TrainerSection,
+};
+pub use toml::{parse, Value};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_config_file() {
+        let text = r#"
+# experiment config
+[dataset]
+kind = "movielens"
+scale = 0.1
+seed = 42
+
+[model]
+f = 32
+k = 32
+
+[trainer]
+kind = "culsh"
+epochs = 10
+alpha = 0.035
+beta = 0.3
+
+[lsh]
+kind = "simlsh"
+p = 3
+q = 100
+g = 8
+
+[rotation]
+workers = 3
+"#;
+        let cfg = ExperimentConfig::from_str(text).unwrap();
+        assert_eq!(cfg.model.f, 32);
+        assert_eq!(cfg.lsh.p, 3);
+        assert_eq!(cfg.rotation.workers, 3);
+        assert!((cfg.dataset.scale - 0.1).abs() < 1e-9);
+        assert!(matches!(cfg.trainer.kind, TrainerChoice::Culsh));
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let cfg = ExperimentConfig::from_str("[model]\nf = 64\n").unwrap();
+        assert_eq!(cfg.model.f, 64);
+        assert_eq!(cfg.model.k, 32); // default
+        assert_eq!(cfg.lsh.p, 3); // default
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_str("[model]\nf = \"many\"\n").is_err());
+        assert!(ExperimentConfig::from_str("[lsh]\nkind = \"bogus\"\n").is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported: `[section]` headers, `key = value` pairs where value is a
+//! quoted string, integer, float, boolean, or a flat array of those;
+//! `#` comments (full-line or trailing); blank lines. Nested tables,
+//! datetimes, multi-line strings and table arrays are out of scope.
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`scale = 1` means 1.0).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`. Keys before any `[section]` land in `""`.
+pub type Tree = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Tree, String> {
+    let mut tree: Tree = BTreeMap::new();
+    let mut section = String::new();
+    tree.entry(section.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            tree.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        tree.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(tree)
+}
+
+/// Strip a trailing `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (idx, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_array_items(inner)?;
+        let vals = items
+            .iter()
+            .map(|it| parse_value(it.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(vals));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split a flat array body on commas, respecting quoted strings.
+fn split_array_items(inner: &str) -> Result<Vec<String>, String> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in inner.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                items.push(cur.trim().to_string());
+                cur.clear();
+            }
+            '[' | ']' if !in_str => return Err("nested arrays unsupported".into()),
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur.trim().to_string());
+    }
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let t = parse(
+            r#"
+top = 1
+[s]
+name = "hello"   # trailing comment
+n = 42
+x = 3.5
+neg = -7
+big = 1_000_000
+flag = true
+off = false
+arr = [1, 2, 3]
+mixed = ["a", 2.5]
+empty = []
+"#,
+        )
+        .unwrap();
+        assert_eq!(t[""]["top"], Value::Int(1));
+        let s = &t["s"];
+        assert_eq!(s["name"], Value::Str("hello".into()));
+        assert_eq!(s["n"], Value::Int(42));
+        assert_eq!(s["x"], Value::Float(3.5));
+        assert_eq!(s["neg"], Value::Int(-7));
+        assert_eq!(s["big"], Value::Int(1_000_000));
+        assert_eq!(s["flag"], Value::Bool(true));
+        assert_eq!(s["off"], Value::Bool(false));
+        assert_eq!(
+            s["arr"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(s["empty"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(t[""]["k"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_are_reported_with_line() {
+        let e = parse("[s]\nbad line\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("k = \n").is_err());
+        assert!(parse("k = [1, [2]]\n").is_err());
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let t = parse("[a]\nx = 1\nx = 2\n").unwrap();
+        assert_eq!(t["a"]["x"], Value::Int(2));
+    }
+
+    #[test]
+    fn float_accepts_int() {
+        let t = parse("x = 3\n").unwrap();
+        assert_eq!(t[""]["x"].as_float(), Some(3.0));
+    }
+}

@@ -1,0 +1,171 @@
+//! Serving engine: predictions, top-N recommendation and live ingestion
+//! over a trained CULSH-MF model.
+//!
+//! The engine wraps a [`StreamOrchestrator`] (so every `rate` call flows
+//! through the Algorithm-4 online path) and adds the read-side API the
+//! TCP server and the examples consume. Predictions are clamped to the
+//! rating scale; top-N excludes columns the row has already rated.
+
+use super::stream::{Event, IngestResult, StreamOrchestrator};
+use crate::metrics::Registry;
+use crate::mf::neighbourhood::NeighbourScratch;
+
+/// The serving facade.
+pub struct Engine {
+    orch: StreamOrchestrator,
+    metrics: Registry,
+    clamp: (f32, f32),
+}
+
+impl Engine {
+    pub fn new(orch: StreamOrchestrator, clamp: (f32, f32), metrics: Registry) -> Self {
+        Engine { orch, metrics, clamp }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        self.orch.dims()
+    }
+
+    /// Predict the interaction value for (row, col).
+    pub fn predict(&self, i: usize, j: usize) -> Option<f32> {
+        let (m, n) = self.dims();
+        if i >= m || j >= n {
+            return None;
+        }
+        self.metrics.counter("engine.predict").inc();
+        let mut scratch = NeighbourScratch::default();
+        let raw = self
+            .orch
+            .model()
+            .predict(self.orch.matrix(), i, j, &mut scratch);
+        Some(raw.clamp(self.clamp.0, self.clamp.1))
+    }
+
+    /// Top-N highest-predicted unrated columns for a row.
+    pub fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
+        let (m, n) = self.dims();
+        if i >= m {
+            return Vec::new();
+        }
+        self.metrics.counter("engine.topn").inc();
+        let rated: std::collections::HashSet<usize> =
+            self.orch.matrix().row(i).map(|(j, _)| j).collect();
+        let mut scored: Vec<(u32, f32)> = Vec::with_capacity(n - rated.len());
+        let mut scratch = NeighbourScratch::default();
+        for j in 0..n {
+            if rated.contains(&j) {
+                continue;
+            }
+            let s = self
+                .orch
+                .model()
+                .predict(self.orch.matrix(), i, j, &mut scratch)
+                .clamp(self.clamp.0, self.clamp.1);
+            scored.push((j as u32, s));
+        }
+        scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        scored.truncate(n_items);
+        scored
+    }
+
+    /// Ingest a rating through the online path.
+    pub fn rate(&mut self, i: u32, j: u32, r: f32) -> IngestResult {
+        self.orch.ingest(Event::Rate(i, j, r))
+    }
+
+    /// Force-apply buffered ratings.
+    pub fn flush(&mut self) -> usize {
+        self.orch.flush()
+    }
+
+    /// Metrics snapshot (server `STATS` verb).
+    pub fn stats(&self) -> String {
+        let (m, n) = self.dims();
+        format!(
+            "dims {m}x{n}\nbuffered {}\n{}",
+            self.orch.buffered(),
+            self.metrics.snapshot()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
+    use crate::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
+    use crate::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+    use crate::rng::Rng;
+    use crate::sparse::{Csc, Csr, Triples};
+
+    fn engine(rng: &mut Rng) -> Engine {
+        let (m, n) = (30, 15);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 180 {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(2, 5, 8, 2);
+        let hash_state = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash_state.topk(4, rng);
+        let cfg = CulshConfig { f: 4, k: 4, epochs: 5, ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, rng);
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig { batch_size: 4, ..Default::default() },
+            cfg,
+            rng.split(1),
+            Registry::new(),
+        );
+        Engine::new(orch, (1.0, 5.0), Registry::new())
+    }
+
+    #[test]
+    fn predictions_are_clamped_and_bounded() {
+        let mut rng = Rng::seeded(61);
+        let e = engine(&mut rng);
+        for i in 0..30 {
+            for j in 0..15 {
+                let p = e.predict(i, j).unwrap();
+                assert!((1.0..=5.0).contains(&p));
+            }
+        }
+        assert!(e.predict(99, 0).is_none());
+        assert!(e.predict(0, 99).is_none());
+    }
+
+    #[test]
+    fn top_n_excludes_rated_and_is_sorted() {
+        let mut rng = Rng::seeded(62);
+        let e = engine(&mut rng);
+        let rated: std::collections::HashSet<usize> =
+            e.orch.matrix().row(3).map(|(j, _)| j).collect();
+        let recs = e.top_n(3, 5);
+        assert!(recs.len() <= 5);
+        for win in recs.windows(2) {
+            assert!(win[0].1 >= win[1].1);
+        }
+        for (j, _) in &recs {
+            assert!(!rated.contains(&(*j as usize)));
+        }
+    }
+
+    #[test]
+    fn rate_flush_expands_universe() {
+        let mut rng = Rng::seeded(63);
+        let mut e = engine(&mut rng);
+        assert!(e.predict(0, 20).is_none());
+        e.rate(0, 20, 5.0);
+        e.flush();
+        let p = e.predict(0, 20).unwrap();
+        assert!((1.0..=5.0).contains(&p));
+        assert!(e.stats().contains("dims 30x21"));
+    }
+}

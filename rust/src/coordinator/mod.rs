@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: everything that orchestrates the system.
+//!
+//! * [`rotation`] — the multi-device block-rotation scheduler of Fig. 5
+//!   (MCUSGD++/MCULSH-MF): schedule construction, the virtual-clock cost
+//!   model that reproduces the paper's multi-GPU speedups, and the real
+//!   threaded execution path.
+//! * [`stream`] — the online-learning orchestrator: bounded ingest queue
+//!   with backpressure, event batching, hash-delta application, and
+//!   incremental training (the "online sparse big data" pipeline).
+//! * [`engine`] — the serving engine: predictions, top-N recommendation,
+//!   and live ingestion against a trained CULSH-MF model.
+//! * [`server`] — a line-protocol TCP front end over the engine.
+
+pub mod engine;
+pub mod rotation;
+pub mod server;
+pub mod stream;
+
+pub use engine::Engine;
+pub use rotation::{RotationPlan, VirtualClockReport};
+pub use stream::{StreamConfig, StreamOrchestrator};

@@ -1,0 +1,287 @@
+//! Multi-device block-rotation scheduling (Fig. 5: MCUSGD++ / MCULSH-MF).
+//!
+//! The sparse matrix is split into a D×D [`BlockGrid`]; device `d` owns
+//! column band `d` (and its V/W/C parameters) permanently, and the D row
+//! bands (with their U blocks) rotate: in step `s`, device `d` processes
+//! block `(row_band = (d + s) mod D, col_band = d)`, then passes its U
+//! block to the next device. No two devices ever share a row or column
+//! band within a step — the schedule is a Latin square.
+//!
+//! Two execution paths:
+//! * [`RotationPlan::execute_threads`] — real worker threads (exercises
+//!   the schedule's correctness on this host);
+//! * [`RotationPlan::virtual_clock`] — the cost model that reproduces the
+//!   paper's multi-GPU *speedup shape* (1.6×/2.4×/3.2× on 2/3/4 GPUs):
+//!   per-step makespan = max over devices of (compute + transfer), where
+//!   compute ∝ block nnz and transfer ∝ U-block bytes × link cost. A
+//!   single host with one core cannot show real multi-device scaling, so
+//!   the simulated clock is the reproduction vehicle (DESIGN.md
+//!   §Substitutions).
+
+use crate::sparse::{BlockGrid, Triples};
+
+/// A D-device rotation schedule over a block grid.
+#[derive(Clone, Debug)]
+pub struct RotationPlan {
+    d: usize,
+    /// `steps[s][device] = (row_band, col_band)` assignments.
+    steps: Vec<Vec<(usize, usize)>>,
+    /// nnz per block (load model).
+    load: Vec<Vec<usize>>,
+    /// rows per row band (U-block transfer sizes).
+    band_rows: Vec<usize>,
+}
+
+impl RotationPlan {
+    /// Build the Fig. 5 schedule for `d` devices over `t`.
+    pub fn new(t: &Triples, d: usize) -> Self {
+        assert!(d >= 1);
+        let grid = BlockGrid::partition(t, d);
+        let load = grid.load_matrix();
+        let band_rows = (0..d)
+            .map(|b| {
+                let (lo, hi) = grid.row_band_range(b);
+                hi - lo
+            })
+            .collect();
+        let steps = (0..d)
+            .map(|s| (0..d).map(|dev| ((dev + s) % d, dev)).collect())
+            .collect();
+        RotationPlan { d, steps, load, band_rows }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn steps(&self) -> &[Vec<(usize, usize)>] {
+        &self.steps
+    }
+
+    /// Schedule validity: every step touches each row band and each column
+    /// band exactly once, and all D² blocks are covered exactly once per
+    /// epoch. (Property-tested too.)
+    pub fn validate(&self) -> Result<(), String> {
+        let d = self.d;
+        let mut seen = vec![false; d * d];
+        for (s, assignments) in self.steps.iter().enumerate() {
+            let mut rows = vec![false; d];
+            let mut cols = vec![false; d];
+            for &(rb, cb) in assignments {
+                if rows[rb] {
+                    return Err(format!("step {s}: row band {rb} assigned twice"));
+                }
+                if cols[cb] {
+                    return Err(format!("step {s}: col band {cb} assigned twice"));
+                }
+                rows[rb] = true;
+                cols[cb] = true;
+                if seen[rb * d + cb] {
+                    return Err(format!("block ({rb},{cb}) scheduled twice"));
+                }
+                seen[rb * d + cb] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("not all blocks covered".into());
+        }
+        Ok(())
+    }
+
+    /// Run the cost model for one epoch.
+    ///
+    /// * `cost_per_nnz` — seconds per rating update on one device;
+    /// * `transfer_cost_per_row` — seconds to ship one U row between
+    ///   devices (captures F × 4 bytes / link bandwidth); devices overlap
+    ///   compute of step s with the transfer from step s−1 only when
+    ///   `overlap` is set (the paper's "properly distributing
+    ///   communications can shorten the computation time").
+    pub fn virtual_clock(
+        &self,
+        cost_per_nnz: f64,
+        transfer_cost_per_row: f64,
+        overlap: bool,
+    ) -> VirtualClockReport {
+        let d = self.d;
+        let mut total = 0f64;
+        let mut compute_total = 0f64;
+        let mut transfer_total = 0f64;
+        for assignments in &self.steps {
+            let mut step_compute = 0f64;
+            let mut step_transfer = 0f64;
+            for &(rb, cb) in assignments {
+                let c = self.load[rb][cb] as f64 * cost_per_nnz;
+                step_compute = step_compute.max(c);
+                // after the step, each device ships its current U band
+                let tr = if d > 1 {
+                    self.band_rows[rb] as f64 * transfer_cost_per_row
+                } else {
+                    0.0
+                };
+                step_transfer = step_transfer.max(tr);
+            }
+            compute_total += step_compute;
+            transfer_total += step_transfer;
+            total += if overlap {
+                step_compute.max(step_transfer)
+            } else {
+                step_compute + step_transfer
+            };
+        }
+        let serial: f64 = self
+            .load
+            .iter()
+            .flatten()
+            .map(|&nnz| nnz as f64 * cost_per_nnz)
+            .sum();
+        VirtualClockReport {
+            devices: d,
+            epoch_seconds: total,
+            serial_seconds: serial,
+            compute_seconds: compute_total,
+            transfer_seconds: transfer_total,
+            speedup: serial / total.max(f64::MIN_POSITIVE),
+        }
+    }
+
+    /// Execute one epoch of a user-supplied block handler on real threads,
+    /// with the barrier-separated sub-steps the schedule requires. The
+    /// handler receives `(device, row_band, col_band)`.
+    pub fn execute_threads<Fh: Fn(usize, usize, usize) + Sync>(&self, handler: Fh) {
+        let barrier = std::sync::Barrier::new(self.d);
+        std::thread::scope(|scope| {
+            for dev in 0..self.d {
+                let handler = &handler;
+                let barrier = &barrier;
+                let steps = &self.steps;
+                scope.spawn(move || {
+                    for step in steps {
+                        let (rb, cb) = step[dev];
+                        handler(dev, rb, cb);
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+    }
+
+    /// Load imbalance of the schedule: max/mean block nnz per step,
+    /// averaged over steps — 1.0 is perfectly balanced.
+    pub fn imbalance(&self) -> f64 {
+        let d = self.d;
+        let mut acc = 0f64;
+        for assignments in &self.steps {
+            let loads: Vec<f64> = assignments
+                .iter()
+                .map(|&(rb, cb)| self.load[rb][cb] as f64)
+                .collect();
+            let max = loads.iter().cloned().fold(0f64, f64::max);
+            let mean = loads.iter().sum::<f64>() / d as f64;
+            if mean > 0.0 {
+                acc += max / mean;
+            } else {
+                acc += 1.0;
+            }
+        }
+        acc / d as f64
+    }
+}
+
+/// Output of the virtual-clock cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct VirtualClockReport {
+    pub devices: usize,
+    pub epoch_seconds: f64,
+    pub serial_seconds: f64,
+    pub compute_seconds: f64,
+    pub transfer_seconds: f64,
+    pub speedup: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_triples(m: usize, n: usize, nnz: usize, rng: &mut Rng) -> Triples {
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < nnz {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, rng.f32());
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn schedule_is_latin_square() {
+        let mut rng = Rng::seeded(41);
+        for d in 1..=5 {
+            let t = random_triples(50, 40, 300, &mut rng);
+            let plan = RotationPlan::new(&t, d);
+            plan.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn virtual_clock_speedup_grows_with_devices_then_saturates() {
+        let mut rng = Rng::seeded(42);
+        let t = random_triples(400, 300, 20_000, &mut rng);
+        let mut speedups = Vec::new();
+        for d in [1usize, 2, 3, 4] {
+            let plan = RotationPlan::new(&t, d);
+            let r = plan.virtual_clock(1e-7, 5e-7, true);
+            speedups.push(r.speedup);
+        }
+        assert!((speedups[0] - 1.0).abs() < 1e-9);
+        assert!(speedups[1] > 1.3, "2 devices: {}", speedups[1]);
+        assert!(speedups[2] > speedups[1], "3 devices: {speedups:?}");
+        assert!(speedups[3] > speedups[2], "4 devices: {speedups:?}");
+        // sub-linear: communication keeps it under ideal
+        assert!(speedups[3] < 4.0, "{speedups:?}");
+    }
+
+    #[test]
+    fn transfer_cost_hurts_speedup() {
+        let mut rng = Rng::seeded(43);
+        let t = random_triples(200, 200, 5_000, &mut rng);
+        let plan = RotationPlan::new(&t, 3);
+        let fast_link = plan.virtual_clock(1e-7, 1e-8, true).speedup;
+        let slow_link = plan.virtual_clock(1e-7, 1e-5, true).speedup;
+        assert!(fast_link > slow_link);
+    }
+
+    #[test]
+    fn overlap_helps() {
+        let mut rng = Rng::seeded(44);
+        let t = random_triples(200, 200, 5_000, &mut rng);
+        let plan = RotationPlan::new(&t, 3);
+        let with = plan.virtual_clock(1e-7, 2e-7, true).epoch_seconds;
+        let without = plan.virtual_clock(1e-7, 2e-7, false).epoch_seconds;
+        assert!(with < without);
+    }
+
+    #[test]
+    fn execute_threads_visits_every_block_once() {
+        let mut rng = Rng::seeded(45);
+        let t = random_triples(60, 60, 500, &mut rng);
+        for d in [2usize, 3, 4] {
+            let plan = RotationPlan::new(&t, d);
+            let visited = std::sync::Mutex::new(std::collections::HashSet::new());
+            plan.execute_threads(|_dev, rb, cb| {
+                assert!(visited.lock().unwrap().insert((rb, cb)), "block revisited");
+            });
+            assert_eq!(visited.lock().unwrap().len(), d * d);
+        }
+    }
+
+    #[test]
+    fn imbalance_is_at_least_one() {
+        let mut rng = Rng::seeded(46);
+        let t = random_triples(100, 100, 2_000, &mut rng);
+        let plan = RotationPlan::new(&t, 4);
+        assert!(plan.imbalance() >= 1.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Line-protocol TCP front end over the [`Engine`].
+//!
+//! Verbs (one request per line, `\n`-terminated):
+//!
+//! ```text
+//! PREDICT <row> <col>       -> "PRED <value>" | "ERR out-of-range"
+//! TOPN <row> <n>            -> "TOPN <col>:<score> ..."
+//! RATE <row> <col> <value>  -> "OK buffered" | "OK flushed <n>" | "ERR backpressure"
+//! STATS                     -> multi-line stats terminated by "END"
+//! QUIT                      -> closes the connection
+//! ```
+//!
+//! Single-threaded accept loop with the engine behind a mutex: the write
+//! path (RATE → online update) is serialized, matching the paper's
+//! single-writer online model; reads are cheap.
+
+use super::engine::Engine;
+use super::stream::IngestResult;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Handle one already-parsed request line. Exposed for tests (no socket
+/// needed to verify protocol semantics).
+pub fn handle_line(engine: &Mutex<Engine>, line: &str) -> Option<String> {
+    let mut parts = line.split_whitespace();
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "PREDICT" => {
+            let (Some(i), Some(j)) = (parse(parts.next()), parse(parts.next())) else {
+                return Some("ERR usage: PREDICT <row> <col>".into());
+            };
+            match engine.lock().unwrap().predict(i, j) {
+                Some(p) => Some(format!("PRED {p:.4}")),
+                None => Some("ERR out-of-range".into()),
+            }
+        }
+        "TOPN" => {
+            let (Some(i), Some(n)) = (parse(parts.next()), parse(parts.next())) else {
+                return Some("ERR usage: TOPN <row> <n>".into());
+            };
+            let recs = engine.lock().unwrap().top_n(i, n);
+            let body: Vec<String> = recs
+                .iter()
+                .map(|(j, s)| format!("{j}:{s:.4}"))
+                .collect();
+            Some(format!("TOPN {}", body.join(" ")))
+        }
+        "RATE" => {
+            let (Some(i), Some(j), Some(r)) = (
+                parse::<u32>(parts.next()),
+                parse::<u32>(parts.next()),
+                parse::<f32>(parts.next()),
+            ) else {
+                return Some("ERR usage: RATE <row> <col> <value>".into());
+            };
+            match engine.lock().unwrap().rate(i, j, r) {
+                IngestResult::Buffered => Some("OK buffered".into()),
+                IngestResult::Flushed { applied } => Some(format!("OK flushed {applied}")),
+                IngestResult::Rejected => Some("ERR backpressure".into()),
+            }
+        }
+        "FLUSH" => {
+            let n = engine.lock().unwrap().flush();
+            Some(format!("OK flushed {n}"))
+        }
+        "STATS" => {
+            let stats = engine.lock().unwrap().stats();
+            Some(format!("{stats}END"))
+        }
+        "QUIT" => None,
+        "" => Some("ERR empty".into()),
+        other => Some(format!("ERR unknown verb `{other}`")),
+    }
+}
+
+fn parse<T: std::str::FromStr>(s: Option<&str>) -> Option<T> {
+    s.and_then(|x| x.parse().ok())
+}
+
+/// Serve until `stop` flips true (checked between connections).
+pub fn serve(
+    engine: Engine,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    let engine = Mutex::new(engine);
+    listener.set_nonblocking(false)?;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                if let Err(e) = handle_conn(&engine, s) {
+                    eprintln!("connection error: {e}");
+                }
+            }
+            Err(e) => {
+                eprintln!("accept error: {e}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(engine: &Mutex<Engine>, stream: TcpStream) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        match handle_line(engine, &line) {
+            Some(reply) => {
+                writer.write_all(reply.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            None => break, // QUIT
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
+    use crate::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
+    use crate::metrics::Registry;
+    use crate::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+    use crate::rng::Rng;
+    use crate::sparse::{Csc, Csr, Triples};
+
+    fn engine(rng: &mut Rng) -> Mutex<Engine> {
+        let (m, n) = (20, 10);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 100 {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(1, 4, 8, 2);
+        let hash_state = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash_state.topk(3, rng);
+        let cfg = CulshConfig { f: 4, k: 3, epochs: 3, ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, rng);
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig::default(),
+            cfg,
+            rng.split(1),
+            Registry::new(),
+        );
+        Mutex::new(Engine::new(orch, (1.0, 5.0), Registry::new()))
+    }
+
+    #[test]
+    fn protocol_verbs() {
+        let mut rng = Rng::seeded(71);
+        let e = engine(&mut rng);
+        let predict = handle_line(&e, "PREDICT 0 0").unwrap();
+        assert!(predict.starts_with("PRED "), "{predict}");
+        let topn = handle_line(&e, "TOPN 0 3").unwrap();
+        assert!(topn.starts_with("TOPN "), "{topn}");
+        assert!(handle_line(&e, "RATE 0 5 4.5").unwrap().starts_with("OK"));
+        assert!(handle_line(&e, "FLUSH").unwrap().starts_with("OK flushed"));
+        let stats = handle_line(&e, "STATS").unwrap();
+        assert!(stats.contains("dims") && stats.ends_with("END"));
+        assert!(handle_line(&e, "QUIT").is_none());
+    }
+
+    #[test]
+    fn protocol_errors() {
+        let mut rng = Rng::seeded(72);
+        let e = engine(&mut rng);
+        assert!(handle_line(&e, "PREDICT 999 0").unwrap().starts_with("ERR"));
+        assert!(handle_line(&e, "PREDICT x y").unwrap().starts_with("ERR"));
+        assert!(handle_line(&e, "BOGUS").unwrap().starts_with("ERR unknown"));
+        assert!(handle_line(&e, "").unwrap().starts_with("ERR"));
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        use std::io::{BufRead, BufReader, Write};
+        let mut rng = Rng::seeded(73);
+        let e = engine(&mut rng);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let engine = e.into_inner().unwrap();
+            // accept exactly one connection then stop
+            let _ = listener.set_nonblocking(false);
+            if let Ok((s, _)) = listener.accept() {
+                let engine = Mutex::new(engine);
+                let _ = handle_conn(&engine, s);
+            }
+            stop2.store(true, Ordering::Relaxed);
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(b"PREDICT 0 0\nQUIT\n").unwrap();
+        let mut reply = String::new();
+        BufReader::new(client.try_clone().unwrap())
+            .read_line(&mut reply)
+            .unwrap();
+        assert!(reply.starts_with("PRED "), "{reply}");
+        drop(client);
+        handle.join().unwrap();
+    }
+}

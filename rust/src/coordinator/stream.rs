@@ -1,0 +1,313 @@
+//! Streaming ingestion orchestrator — the online-learning pipeline.
+//!
+//! Incremental ratings arrive as [`Event`]s; the orchestrator buffers them
+//! in a bounded queue (backpressure: [`IngestResult::Rejected`] once the
+//! buffer holds `queue_capacity` un-flushed events and auto-flush is
+//! disabled), batches them to amortize the hash/parameter update, and on
+//! flush runs Algorithm 4: absorb the batch into the saved simLSH
+//! accumulators, refresh the Top-K table, and train only the new
+//! variables' parameters.
+//!
+//! The design is caller-driven (deterministic, testable); [`run_channel`]
+//! adapts it to a `std::sync::mpsc` feed for the threaded serving path.
+
+use super::super::mf::neighbourhood::{CulshConfig, CulshModel};
+use super::super::mf::online::apply_online;
+use crate::lsh::OnlineHashState;
+use crate::metrics::Registry;
+use crate::rng::Rng;
+use crate::sparse::{Csr, Triples};
+
+/// A streaming event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// A new interaction (row, col, value); ids may exceed current dims —
+    /// that is how new variables enter the system.
+    Rate(u32, u32, f32),
+    /// Force a flush.
+    Flush,
+    /// Stop a channel-driven run.
+    Shutdown,
+}
+
+/// Orchestrator tuning.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Maximum buffered (un-flushed) events.
+    pub queue_capacity: usize,
+    /// Auto-flush threshold.
+    pub batch_size: usize,
+    /// Epochs of incremental training per flush.
+    pub online_epochs: usize,
+    /// Reject instead of auto-flushing when the buffer fills (used to
+    /// exercise backpressure; servers keep it false).
+    pub reject_when_full: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            queue_capacity: 65_536,
+            batch_size: 1_024,
+            online_epochs: 5,
+            reject_when_full: false,
+        }
+    }
+}
+
+/// Outcome of an ingest call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum IngestResult {
+    Buffered,
+    Flushed { applied: usize },
+    Rejected,
+}
+
+/// The streaming orchestrator: owns the model, the hash state, and the
+/// combined training matrix.
+pub struct StreamOrchestrator {
+    /// `Option` so flush() can move the model through `apply_online`.
+    model: Option<CulshModel>,
+    hash_state: OnlineHashState,
+    combined_t: Triples,
+    combined: Csr,
+    buffer: Vec<(u32, u32, f32)>,
+    cfg: StreamConfig,
+    train_cfg: CulshConfig,
+    rng: Rng,
+    metrics: Registry,
+}
+
+impl StreamOrchestrator {
+    pub fn new(
+        model: CulshModel,
+        hash_state: OnlineHashState,
+        base: Triples,
+        cfg: StreamConfig,
+        train_cfg: CulshConfig,
+        rng: Rng,
+        metrics: Registry,
+    ) -> Self {
+        let combined = Csr::from_triples(&base);
+        StreamOrchestrator {
+            model: Some(model),
+            hash_state,
+            combined_t: base,
+            combined,
+            buffer: Vec::new(),
+            cfg,
+            train_cfg,
+            rng,
+            metrics,
+        }
+    }
+
+    pub fn model(&self) -> &CulshModel {
+        self.model.as_ref().expect("model present outside flush")
+    }
+
+    pub fn matrix(&self) -> &Csr {
+        &self.combined
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.combined_t.nrows(), self.combined_t.ncols())
+    }
+
+    /// Ingest one event.
+    pub fn ingest(&mut self, event: Event) -> IngestResult {
+        match event {
+            Event::Shutdown => IngestResult::Buffered,
+            Event::Flush => IngestResult::Flushed { applied: self.flush() },
+            Event::Rate(i, j, r) => {
+                if self.buffer.len() >= self.cfg.queue_capacity {
+                    if self.cfg.reject_when_full {
+                        self.metrics.counter("stream.rejected").inc();
+                        return IngestResult::Rejected;
+                    }
+                    let applied = self.flush();
+                    self.buffer.push((i, j, r));
+                    self.metrics.counter("stream.ingested").inc();
+                    return IngestResult::Flushed { applied };
+                }
+                self.buffer.push((i, j, r));
+                self.metrics.counter("stream.ingested").inc();
+                if self.buffer.len() >= self.cfg.batch_size {
+                    let applied = self.flush();
+                    return IngestResult::Flushed { applied };
+                }
+                IngestResult::Buffered
+            }
+        }
+    }
+
+    /// Apply all buffered events through Algorithm 4.
+    pub fn flush(&mut self) -> usize {
+        if self.buffer.is_empty() {
+            return 0;
+        }
+        let increment = std::mem::take(&mut self.buffer);
+        let new_rows = increment
+            .iter()
+            .map(|&(i, _, _)| i as usize + 1)
+            .chain(std::iter::once(self.combined_t.nrows()))
+            .max()
+            .unwrap();
+        let new_cols = increment
+            .iter()
+            .map(|&(_, j, _)| j as usize + 1)
+            .chain(std::iter::once(self.combined_t.ncols()))
+            .max()
+            .unwrap();
+
+        let model = self.model.take().expect("model present");
+        let timer = self.metrics.histogram("stream.flush_seconds");
+        let outcome = timer.time(|| {
+            apply_online(
+                model,
+                &mut self.hash_state,
+                &self.combined_t,
+                &increment,
+                new_rows,
+                new_cols,
+                &self.train_cfg,
+                self.cfg.online_epochs,
+                &mut self.rng,
+            )
+        });
+        self.model = Some(outcome.model);
+        self.combined = outcome.combined;
+        self.combined_t.grow_to(new_rows, new_cols);
+        for &(i, j, r) in &increment {
+            self.combined_t.push(i as usize, j as usize, r);
+        }
+        self.metrics.counter("stream.flushes").inc();
+        self.metrics
+            .counter("stream.applied")
+            .add(increment.len() as u64);
+        increment.len()
+    }
+}
+
+/// Drive an orchestrator from an mpsc channel until [`Event::Shutdown`];
+/// returns the orchestrator for inspection.
+pub fn run_channel(
+    mut orch: StreamOrchestrator,
+    rx: std::sync::mpsc::Receiver<Event>,
+) -> StreamOrchestrator {
+    for event in rx {
+        if event == Event::Shutdown {
+            break;
+        }
+        orch.ingest(event);
+    }
+    orch.flush();
+    orch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::{NeighbourSearch, SimLsh};
+    use crate::mf::neighbourhood::train_culsh_logged;
+    use crate::sparse::Csc;
+
+    fn setup(rng: &mut Rng) -> StreamOrchestrator {
+        let (m, n) = (40, 20);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 250 {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(2, 6, 8, 2);
+        let hash_state = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash_state.topk(4, rng);
+        let cfg = CulshConfig { f: 4, k: 4, epochs: 5, ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, rng);
+        StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig { batch_size: 8, queue_capacity: 16, ..Default::default() },
+            cfg,
+            rng.split(99),
+            Registry::new(),
+        )
+    }
+
+    #[test]
+    fn batching_flushes_at_threshold() {
+        let mut rng = Rng::seeded(51);
+        let mut orch = setup(&mut rng);
+        for k in 0..7 {
+            assert_eq!(orch.ingest(Event::Rate(1, 1 + k, 3.0)), IngestResult::Buffered);
+        }
+        // 8th event hits batch_size
+        match orch.ingest(Event::Rate(2, 2, 4.0)) {
+            IngestResult::Flushed { applied } => assert_eq!(applied, 8),
+            other => panic!("expected flush, got {other:?}"),
+        }
+        assert_eq!(orch.buffered(), 0);
+    }
+
+    #[test]
+    fn new_variables_grow_dims() {
+        let mut rng = Rng::seeded(52);
+        let mut orch = setup(&mut rng);
+        let (m0, n0) = orch.dims();
+        orch.ingest(Event::Rate(m0 as u32 + 2, n0 as u32 + 5, 4.5));
+        orch.ingest(Event::Flush);
+        let (m1, n1) = orch.dims();
+        assert_eq!(m1, m0 + 3);
+        assert_eq!(n1, n0 + 6);
+        // model grew too
+        assert_eq!(orch.model().base.bi.len(), m1);
+        assert_eq!(orch.model().base.bj.len(), n1);
+        assert_eq!(orch.model().topk.n(), n1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_configured() {
+        let mut rng = Rng::seeded(53);
+        let mut orch = setup(&mut rng);
+        orch.cfg.reject_when_full = true;
+        orch.cfg.queue_capacity = 4;
+        orch.cfg.batch_size = 100; // no auto-flush
+        for k in 0..4 {
+            assert_eq!(orch.ingest(Event::Rate(0, k, 3.0)), IngestResult::Buffered);
+        }
+        assert_eq!(orch.ingest(Event::Rate(0, 9, 3.0)), IngestResult::Rejected);
+        orch.ingest(Event::Flush);
+        assert_eq!(orch.ingest(Event::Rate(0, 9, 3.0)), IngestResult::Buffered);
+    }
+
+    #[test]
+    fn channel_runner_drains_and_stops() {
+        let mut rng = Rng::seeded(54);
+        let orch = setup(&mut rng);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || run_channel(orch, rx));
+        for k in 0..5 {
+            tx.send(Event::Rate(3, k, 2.5)).unwrap();
+        }
+        tx.send(Event::Shutdown).unwrap();
+        let orch = handle.join().unwrap();
+        assert_eq!(orch.buffered(), 0);
+        assert_eq!(orch.metrics_snapshot_contains("stream.applied"), true);
+    }
+
+    impl StreamOrchestrator {
+        fn metrics_snapshot_contains(&self, name: &str) -> bool {
+            self.metrics.snapshot().contains(name)
+        }
+    }
+}

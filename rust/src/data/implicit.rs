@@ -1,0 +1,230 @@
+//! Implicit-feedback dataset + leave-one-out evaluation protocol for the
+//! Table 10 comparison against the NCF family (He et al. 2017).
+//!
+//! Protocol: every user's interactions are binary; the latest (here: one
+//! uniformly chosen) positive per user is held out; at evaluation time the
+//! model ranks that positive against 99 sampled negatives and we report
+//! HR@10 — the fraction of users whose held-out item lands in the top 10.
+
+use crate::rng::Rng;
+use crate::sparse::Triples;
+
+/// An implicit-feedback dataset with leave-one-out test instances.
+#[derive(Clone, Debug)]
+pub struct ImplicitDataset {
+    pub name: String,
+    /// Binary training interactions as a sparse matrix (value 1.0).
+    pub train: Triples,
+    /// Per-user (user, held_out_item, negatives[99]).
+    pub test: Vec<(u32, u32, Vec<u32>)>,
+    pub n_users: usize,
+    pub n_items: usize,
+}
+
+/// Generator config: cluster-structured implicit interactions so that a
+/// factor model can actually learn preferences.
+#[derive(Clone, Debug)]
+pub struct ImplicitConfig {
+    pub name: String,
+    pub n_users: usize,
+    pub n_items: usize,
+    /// Mean interactions per user.
+    pub per_user: usize,
+    /// Number of latent taste clusters.
+    pub clusters: usize,
+    /// Probability an interaction comes from the user's cluster rather
+    /// than uniform noise.
+    pub affinity: f64,
+    pub negatives: usize,
+}
+
+impl ImplicitConfig {
+    /// MovieLens-1M-like (scaled): 6040 users × 3706 items.
+    pub fn movielens1m_like(scale: f64) -> Self {
+        ImplicitConfig {
+            name: format!("movielens1m@{scale}"),
+            n_users: ((6040 as f64 * scale) as usize).max(64),
+            n_items: ((3706 as f64 * scale) as usize).max(64),
+            per_user: 32,
+            clusters: 24,
+            affinity: 0.8,
+            negatives: 99,
+        }
+    }
+
+    /// Pinterest-like (scaled): 55187 users × 9916 items, denser per user.
+    pub fn pinterest_like(scale: f64) -> Self {
+        ImplicitConfig {
+            name: format!("pinterest@{scale}"),
+            n_users: ((55_187 as f64 * scale) as usize).max(64),
+            n_items: ((9_916 as f64 * scale) as usize).max(64),
+            per_user: 24,
+            clusters: 32,
+            affinity: 0.85,
+            negatives: 99,
+        }
+    }
+}
+
+/// Generate an implicit dataset with the leave-one-out protocol.
+pub fn generate_implicit(cfg: &ImplicitConfig, rng: &mut Rng) -> ImplicitDataset {
+    let items_per_cluster = (cfg.n_items / cfg.clusters).max(1);
+    let mut train = Triples::new(cfg.n_users, cfg.n_items);
+    let mut test = Vec::with_capacity(cfg.n_users);
+
+    for u in 0..cfg.n_users {
+        let cluster = rng.below(cfg.clusters);
+        let lo = cluster * items_per_cluster;
+        let hi = ((cluster + 1) * items_per_cluster).min(cfg.n_items);
+        let mut items = std::collections::HashSet::new();
+        let want = cfg.per_user.max(2);
+        let mut guard = 0;
+        while items.len() < want && guard < want * 20 {
+            guard += 1;
+            let item = if rng.chance(cfg.affinity) && hi > lo {
+                rng.range(lo, hi)
+            } else {
+                rng.below(cfg.n_items)
+            };
+            items.insert(item);
+        }
+        let mut items: Vec<usize> = items.into_iter().collect();
+        items.sort_unstable();
+        // hold out one positive uniformly
+        let held_idx = rng.below(items.len());
+        let held = items.remove(held_idx);
+        for &it in &items {
+            train.push(u, it, 1.0);
+        }
+        // negatives: items the user did NOT interact with
+        let positive: std::collections::HashSet<usize> =
+            items.iter().copied().chain(std::iter::once(held)).collect();
+        let mut negs = Vec::with_capacity(cfg.negatives);
+        let mut guard = 0;
+        while negs.len() < cfg.negatives && guard < cfg.negatives * 100 {
+            guard += 1;
+            let cand = rng.below(cfg.n_items);
+            if !positive.contains(&cand) {
+                negs.push(cand as u32);
+            }
+        }
+        test.push((u as u32, held as u32, negs));
+    }
+
+    ImplicitDataset {
+        name: cfg.name.clone(),
+        train,
+        test,
+        n_users: cfg.n_users,
+        n_items: cfg.n_items,
+    }
+}
+
+/// HR@k: fraction of test users whose held-out item is ranked in the top
+/// `k` among `1 + negatives` candidates, under `score(user, item)`.
+pub fn hit_ratio_at<F: FnMut(u32, u32) -> f32>(
+    ds: &ImplicitDataset,
+    k: usize,
+    mut score: F,
+) -> f64 {
+    if ds.test.is_empty() {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    for (u, pos, negs) in &ds.test {
+        let pos_score = score(*u, *pos);
+        // rank = number of negatives scoring strictly higher
+        let higher = negs.iter().filter(|&&n| score(*u, n) > pos_score).count();
+        if higher < k {
+            hits += 1;
+        }
+    }
+    hits as f64 / ds.test.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ImplicitConfig {
+        ImplicitConfig {
+            name: "tiny".into(),
+            n_users: 50,
+            n_items: 120,
+            per_user: 8,
+            clusters: 6,
+            affinity: 0.9,
+            negatives: 20,
+        }
+    }
+
+    #[test]
+    fn generates_protocol_shape() {
+        let mut rng = Rng::seeded(1);
+        let ds = generate_implicit(&tiny(), &mut rng);
+        assert_eq!(ds.test.len(), 50);
+        for (u, pos, negs) in &ds.test {
+            assert!((*u as usize) < 50);
+            assert!((*pos as usize) < 120);
+            assert_eq!(negs.len(), 20);
+            // held-out positive is not in training for that user
+            assert!(!ds
+                .train
+                .entries()
+                .iter()
+                .any(|&(i, j, _)| i == *u && j == *pos));
+        }
+    }
+
+    #[test]
+    fn perfect_oracle_hits_everything() {
+        let mut rng = Rng::seeded(2);
+        let ds = generate_implicit(&tiny(), &mut rng);
+        // oracle: score 1 for the held-out item, 0 otherwise
+        let held: std::collections::HashMap<u32, u32> =
+            ds.test.iter().map(|(u, p, _)| (*u, *p)).collect();
+        let hr = hit_ratio_at(&ds, 10, |u, it| if held[&u] == it { 1.0 } else { 0.0 });
+        assert!((hr - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_scorer_hits_about_k_over_candidates() {
+        let mut rng = Rng::seeded(3);
+        let ds = generate_implicit(&tiny(), &mut rng);
+        let mut score_rng = Rng::seeded(99);
+        let hr = hit_ratio_at(&ds, 10, |_, _| score_rng.f32());
+        // expected 10/21 ≈ 0.476 with 20 negatives; loose bounds
+        assert!(hr > 0.2 && hr < 0.8, "hr={hr}");
+    }
+
+    #[test]
+    fn cluster_structure_exists() {
+        let mut rng = Rng::seeded(4);
+        let cfg = tiny();
+        let ds = generate_implicit(&cfg, &mut rng);
+        // most of a user's items should fall in one item band
+        let band = |item: u32| (item as usize) / (cfg.n_items / cfg.clusters).max(1);
+        let mut concentrated = 0;
+        for u in 0..cfg.n_users as u32 {
+            let items: Vec<u32> = ds
+                .train
+                .entries()
+                .iter()
+                .filter(|&&(i, _, _)| i == u)
+                .map(|&(_, j, _)| j)
+                .collect();
+            if items.is_empty() {
+                continue;
+            }
+            let mut counts = std::collections::HashMap::new();
+            for &it in &items {
+                *counts.entry(band(it)).or_insert(0usize) += 1;
+            }
+            let max = counts.values().max().copied().unwrap_or(0);
+            if max * 2 > items.len() {
+                concentrated += 1;
+            }
+        }
+        assert!(concentrated > cfg.n_users / 2, "concentrated={concentrated}");
+    }
+}

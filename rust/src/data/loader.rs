@@ -1,0 +1,90 @@
+//! Plain-text rating-file loader.
+//!
+//! Accepts the common `user<sep>item<sep>rating[<sep>timestamp]` line
+//! format used by the MovieLens distributions (separators: whitespace,
+//! `,`, `::`, or tab). If real data is dropped into `data/`, the CLI can
+//! run on it directly instead of the synthetic generators.
+
+use crate::sparse::Triples;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::io::BufRead;
+use std::path::Path;
+
+/// Parse one line into (user, item, rating).
+fn parse_line(line: &str) -> Option<(u64, u64, f32)> {
+    let norm = line.replace("::", " ").replace(',', " ").replace('\t', " ");
+    let mut it = norm.split_whitespace();
+    let u = it.next()?.parse::<u64>().ok()?;
+    let i = it.next()?.parse::<u64>().ok()?;
+    let r = it.next()?.parse::<f32>().ok()?;
+    Some((u, i, r))
+}
+
+/// Load ratings from a file, densifying user/item ids into 0-based
+/// contiguous indices. Blank lines and `#`/`%` comment lines are skipped;
+/// any other malformed line is an error (silent corruption is worse).
+pub fn load_ratings(path: &Path) -> Result<Triples> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut user_ids: HashMap<u64, u32> = HashMap::new();
+    let mut item_ids: HashMap<u64, u32> = HashMap::new();
+    let mut entries = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') || trimmed.starts_with('%') {
+            continue;
+        }
+        let (u, i, r) = parse_line(trimmed).ok_or_else(|| {
+            Error::Data(format!("{}:{}: malformed rating line", path.display(), lineno + 1))
+        })?;
+        let nu = user_ids.len() as u32;
+        let uu = *user_ids.entry(u).or_insert(nu);
+        let ni = item_ids.len() as u32;
+        let ii = *item_ids.entry(i).or_insert(ni);
+        entries.push((uu, ii, r));
+    }
+    if entries.is_empty() {
+        return Err(Error::Data(format!("{}: no ratings found", path.display())));
+    }
+    Ok(Triples::from_entries(user_ids.len(), item_ids.len(), entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("lshmf_loader_{}.txt", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn loads_multiple_separators() {
+        let path = write_tmp("1,10,4.0\n2::20::3.5\n3\t10\t5.0\n# comment\n\n1 20 2.0 12345\n");
+        let t = load_ratings(&path).unwrap();
+        assert_eq!(t.nnz(), 4);
+        assert_eq!(t.nrows(), 3); // users 1,2,3
+        assert_eq!(t.ncols(), 2); // items 10,20
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let path = write_tmp("1,10,4.0\nnot a line\n");
+        assert!(load_ratings(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let path = write_tmp("# nothing\n");
+        assert!(load_ratings(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,96 @@
+//! Dataset substrate: synthetic generators calibrated to the paper's
+//! Table 2, train/test splitting, the online Ω/Ω̄ split of Table 9,
+//! noise injection (Table 8), implicit-feedback sets (Table 10), and a
+//! plain-text loader for externally supplied rating files.
+//!
+//! The evaluation image has no network access, so Netflix / MovieLens /
+//! Yahoo!Music are **simulated**: [`synth::generate`] draws a
+//! popularity-skewed sparse matrix whose values come from a planted
+//! low-rank + bias model with observation noise. That preserves what the
+//! paper's experiments exercise — skewed nnz marginals (load imbalance),
+//! bounded rating scales, neighbourhood structure (columns that share a
+//! latent profile correlate), and an RMSE floor set by the noise level.
+//! See DESIGN.md §Substitutions.
+
+pub mod implicit;
+pub mod loader;
+pub mod online;
+pub mod synth;
+
+use crate::sparse::{Csc, Csr, Triples};
+
+/// A train/test split of an interaction matrix, with cached CSR/CSC views
+/// of the training part.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Csr,
+    pub train_csc: Csc,
+    pub test: Vec<(u32, u32, f32)>,
+    pub max_value: f32,
+    pub min_value: f32,
+}
+
+impl Dataset {
+    /// Build from triples with a `test_fraction` holdout chosen uniformly.
+    pub fn split(
+        name: &str,
+        mut t: Triples,
+        test_fraction: f64,
+        rng: &mut crate::rng::Rng,
+    ) -> Dataset {
+        let (mut max_v, mut min_v) = (f32::NEG_INFINITY, f32::INFINITY);
+        for &(_, _, r) in t.entries() {
+            max_v = max_v.max(r);
+            min_v = min_v.min(r);
+        }
+        rng.shuffle(t.entries_mut());
+        let n_test = ((t.nnz() as f64) * test_fraction) as usize;
+        let entries = std::mem::take(t.entries_mut());
+        let (test, train_entries) = entries.split_at(n_test);
+        let train_t = Triples::from_entries(t.nrows(), t.ncols(), train_entries.to_vec());
+        Dataset {
+            name: name.to_string(),
+            train: Csr::from_triples(&train_t),
+            train_csc: Csc::from_triples(&train_t),
+            test: test.to_vec(),
+            max_value: max_v,
+            min_value: min_v,
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.train.nrows()
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.train.ncols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.train.nnz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn split_partitions_entries() {
+        let mut rng = Rng::seeded(1);
+        let mut t = Triples::new(50, 40);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 500 {
+            let (i, j) = (rng.below(50), rng.below(40));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let ds = Dataset::split("toy", t, 0.1, &mut rng);
+        assert_eq!(ds.test.len(), 50);
+        assert_eq!(ds.train.nnz(), 450);
+        assert!(ds.max_value <= 5.0 && ds.min_value >= 1.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! The online Ω / Ω̄ split of Table 9.
+//!
+//! The paper holds out the *last* fraction of row and column variables as
+//! the "new" sets Ī and J̄: the original system is trained on entries whose
+//! row AND column are original, and the increment Ω̄ is everything that
+//! touches a new variable. New variables may interact with each other
+//! (the paper allows Ī×J̄ entries).
+
+use crate::sparse::Triples;
+
+/// Outcome of the online split.
+#[derive(Clone, Debug)]
+pub struct OnlineSplit {
+    /// Original entries (both endpoints original).
+    pub base: Triples,
+    /// Incremental entries (at least one new endpoint).
+    pub increment: Vec<(u32, u32, f32)>,
+    /// Number of original rows / cols (ids < these bounds are original).
+    pub base_rows: usize,
+    pub base_cols: usize,
+}
+
+/// Split by declaring the top `row_holdout` fraction of row ids and
+/// `col_holdout` of column ids as "new". Ids are assumed exchangeable
+/// (the synthetic generators scatter popularity over the id space).
+pub fn split_online(
+    t: &Triples,
+    row_holdout: f64,
+    col_holdout: f64,
+) -> OnlineSplit {
+    assert!((0.0..1.0).contains(&row_holdout));
+    assert!((0.0..1.0).contains(&col_holdout));
+    let base_rows = ((t.nrows() as f64) * (1.0 - row_holdout)).ceil() as usize;
+    let base_cols = ((t.ncols() as f64) * (1.0 - col_holdout)).ceil() as usize;
+    let mut base = Triples::new(base_rows, base_cols);
+    let mut increment = Vec::new();
+    for &(i, j, r) in t.entries() {
+        if (i as usize) < base_rows && (j as usize) < base_cols {
+            base.push(i as usize, j as usize, r);
+        } else {
+            increment.push((i, j, r));
+        }
+    }
+    OnlineSplit { base, increment, base_rows, base_cols }
+}
+
+/// Table 9 style summary of an online split.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OnlineStats {
+    pub m: usize,
+    pub n: usize,
+    pub omega: usize,
+    pub m_bar: usize,
+    pub n_bar: usize,
+    pub omega_bar: usize,
+}
+
+impl OnlineSplit {
+    pub fn stats(&self, total_rows: usize, total_cols: usize) -> OnlineStats {
+        OnlineStats {
+            m: self.base_rows,
+            n: self.base_cols,
+            omega: self.base.nnz(),
+            m_bar: total_rows - self.base_rows,
+            n_bar: total_cols - self.base_cols,
+            omega_bar: self.increment.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_triples(rng: &mut Rng) -> Triples {
+        let mut t = Triples::new(100, 80);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 800 {
+            let (i, j) = (rng.below(100), rng.below(80));
+            if seen.insert((i, j)) {
+                t.push(i, j, rng.f32() * 5.0);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn split_is_a_partition() {
+        let mut rng = Rng::seeded(1);
+        let t = random_triples(&mut rng);
+        let s = split_online(&t, 0.05, 0.05);
+        assert_eq!(s.base.nnz() + s.increment.len(), t.nnz());
+        // base entries only touch original ids
+        for &(i, j, _) in s.base.entries() {
+            assert!((i as usize) < s.base_rows && (j as usize) < s.base_cols);
+        }
+        // increments touch at least one new id
+        for &(i, j, _) in &s.increment {
+            assert!((i as usize) >= s.base_rows || (j as usize) >= s.base_cols);
+        }
+    }
+
+    #[test]
+    fn stats_match_paper_shape() {
+        let mut rng = Rng::seeded(2);
+        let t = random_triples(&mut rng);
+        let s = split_online(&t, 0.01, 0.01);
+        let st = s.stats(t.nrows(), t.ncols());
+        assert_eq!(st.m + st.m_bar, 100);
+        assert_eq!(st.n + st.n_bar, 80);
+        assert_eq!(st.omega + st.omega_bar, t.nnz());
+        assert!(st.omega_bar < st.omega);
+    }
+
+    #[test]
+    fn zero_holdout_keeps_everything() {
+        let mut rng = Rng::seeded(3);
+        let t = random_triples(&mut rng);
+        let s = split_online(&t, 0.0, 0.0);
+        assert_eq!(s.increment.len(), 0);
+        assert_eq!(s.base.nnz(), t.nnz());
+    }
+}

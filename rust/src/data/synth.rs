@@ -1,0 +1,319 @@
+//! Synthetic rating-matrix generators calibrated to the paper's Table 2.
+//!
+//! Planted model: each row i has a latent profile `a_i ∈ ℝ^d`, each column
+//! j a profile `b_j ∈ ℝ^d` drawn from `C` cluster centroids (columns in
+//! the same cluster are genuine neighbours — this is what the GSM/LSH
+//! methods must discover), plus row/column biases and Gaussian noise:
+//!
+//! ```text
+//! r_ij = clamp( μ* + bi*_i + bj*_j + a_i·b_j + ε,  min_v, max_v )
+//! ```
+//!
+//! The (i, j) support is sampled with Zipf-skewed marginals to reproduce
+//! the popularity skew of the real datasets (and hence the paper's thread
+//! load-imbalance effects).
+
+use super::Dataset;
+use crate::rng::{Rng, Zipf};
+use crate::sparse::Triples;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub name: String,
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    pub min_value: f32,
+    pub max_value: f32,
+    /// Rating quantization step (real sets use 0.5 or 1.0 stars).
+    pub value_step: f32,
+    /// Planted latent dimension.
+    pub latent_dim: usize,
+    /// Number of column clusters (neighbourhood structure).
+    pub col_clusters: usize,
+    /// Zipf exponents for row/column popularity.
+    pub row_skew: f64,
+    pub col_skew: f64,
+    /// Observation noise stddev (sets the achievable RMSE floor).
+    pub noise_std: f32,
+    pub test_fraction: f64,
+}
+
+impl SynthConfig {
+    /// Netflix-like: 480,189 × 17,770, |Ω| ≈ 99M, ratings 1–5.
+    pub fn netflix_like() -> Self {
+        SynthConfig {
+            name: "netflix".into(),
+            nrows: 480_189,
+            ncols: 17_770,
+            nnz: 99_072_112,
+            min_value: 1.0,
+            max_value: 5.0,
+            value_step: 1.0,
+            latent_dim: 12,
+            col_clusters: 64,
+            row_skew: 1.05,
+            col_skew: 0.95,
+            noise_std: 0.85,
+            test_fraction: 0.0142, // 1.4M of 99M
+        }
+    }
+
+    /// MovieLens-10M-like: 69,878 × 10,677, |Ω| ≈ 9.9M, ratings 0.5–5.
+    pub fn movielens_like() -> Self {
+        SynthConfig {
+            name: "movielens".into(),
+            nrows: 69_878,
+            ncols: 10_677,
+            nnz: 9_900_054,
+            min_value: 0.5,
+            max_value: 5.0,
+            value_step: 0.5,
+            latent_dim: 12,
+            col_clusters: 48,
+            row_skew: 1.0,
+            col_skew: 0.9,
+            noise_std: 0.72,
+            test_fraction: 0.0101, // 100k of 9.9M
+        }
+    }
+
+    /// Yahoo!Music-like: 586,250 × 12,658, |Ω| ≈ 92M, ratings 0.5–100.
+    /// (The paper trains on ratings/20 and rescales for reporting; the
+    /// benches do the same.)
+    pub fn yahoo_like() -> Self {
+        SynthConfig {
+            name: "yahoo".into(),
+            nrows: 586_250,
+            ncols: 12_658,
+            nnz: 91_970_212,
+            min_value: 0.5,
+            max_value: 100.0,
+            value_step: 0.5,
+            latent_dim: 12,
+            col_clusters: 56,
+            row_skew: 1.1,
+            col_skew: 1.0,
+            noise_std: 17.0,
+            test_fraction: 0.0109, // 1M of 92M
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "netflix" => Some(Self::netflix_like()),
+            "movielens" => Some(Self::movielens_like()),
+            "yahoo" | "yahoomusic" => Some(Self::yahoo_like()),
+            _ => None,
+        }
+    }
+
+    /// Scale the instance down by a linear factor on rows/cols; nnz scales
+    /// by `scale^1.5` — between linear (constant per-row degree) and
+    /// quadratic (constant density). Quadratic scaling leaves scaled rows
+    /// with only a handful of ratings (unlearnable and unlike subsampling
+    /// a real dataset); the 1.5 exponent keeps both the per-row degree
+    /// and the density in realistic ranges. `scale = 1.0` reproduces the
+    /// full Table 2 sizes.
+    pub fn scaled(mut self, scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0);
+        if (scale - 1.0).abs() < f64::EPSILON {
+            return self;
+        }
+        self.name = format!("{}@{scale}", self.name);
+        self.nrows = ((self.nrows as f64 * scale) as usize).max(16);
+        self.ncols = ((self.ncols as f64 * scale) as usize).max(16);
+        self.nnz = ((self.nnz as f64 * scale.powf(1.5)) as usize).max(256);
+        // cap density at 30%
+        self.nnz = self.nnz.min(self.nrows * self.ncols * 3 / 10);
+        self
+    }
+}
+
+/// Generate a split dataset from the planted model.
+pub fn generate(cfg: &SynthConfig, rng: &mut Rng) -> Dataset {
+    let t = generate_triples(cfg, rng);
+    Dataset::split(&cfg.name, t, cfg.test_fraction, rng)
+}
+
+/// Generate raw triples (no split) — used by the online experiments that
+/// need custom Ω/Ω̄ partitions.
+pub fn generate_triples(cfg: &SynthConfig, rng: &mut Rng) -> Triples {
+    let d = cfg.latent_dim;
+    // Planted factors. Row profiles are i.i.d.; column profiles are
+    // cluster centroids plus a small within-cluster perturbation so that
+    // same-cluster columns are genuine nearest neighbours.
+    let mut row_profiles = vec![0f32; cfg.nrows * d];
+    for x in row_profiles.iter_mut() {
+        *x = rng.normal_f32(0.0, 1.0);
+    }
+    let mut centroids = vec![0f32; cfg.col_clusters * d];
+    for x in centroids.iter_mut() {
+        *x = rng.normal_f32(0.0, 1.0);
+    }
+    let mut col_profiles = vec![0f32; cfg.ncols * d];
+    let mut col_cluster = vec![0u32; cfg.ncols];
+    for j in 0..cfg.ncols {
+        let c = rng.below(cfg.col_clusters);
+        col_cluster[j] = c as u32;
+        for k in 0..d {
+            col_profiles[j * d + k] = centroids[c * d + k] + rng.normal_f32(0.0, 0.25);
+        }
+    }
+
+    let span = cfg.max_value - cfg.min_value;
+    let mid = 0.5 * (cfg.max_value + cfg.min_value);
+    // Scale factor choosing the interaction strength relative to range.
+    let gain = span / (4.0 * (d as f32).sqrt());
+
+    let mut row_bias = vec![0f32; cfg.nrows];
+    for b in row_bias.iter_mut() {
+        *b = rng.normal_f32(0.0, span * 0.08);
+    }
+    let mut col_bias = vec![0f32; cfg.ncols];
+    for b in col_bias.iter_mut() {
+        *b = rng.normal_f32(0.0, span * 0.08);
+    }
+
+    // Zipf-skewed support sampling with a permutation so "popular" ids are
+    // scattered over the index space like in the real data.
+    let row_zipf = Zipf::new(cfg.nrows, cfg.row_skew);
+    let col_zipf = Zipf::new(cfg.ncols, cfg.col_skew);
+    let mut row_perm: Vec<u32> = (0..cfg.nrows as u32).collect();
+    let mut col_perm: Vec<u32> = (0..cfg.ncols as u32).collect();
+    rng.shuffle(&mut row_perm);
+    rng.shuffle(&mut col_perm);
+
+    let mut seen = std::collections::HashSet::with_capacity(cfg.nnz * 2);
+    let mut t = Triples::new(cfg.nrows, cfg.ncols);
+    let mut attempts: usize = 0;
+    let max_attempts = cfg.nnz.saturating_mul(40).max(1 << 16);
+    while t.nnz() < cfg.nnz && attempts < max_attempts {
+        attempts += 1;
+        let i = row_perm[row_zipf.sample(rng)] as usize;
+        let j = col_perm[col_zipf.sample(rng)] as usize;
+        if !seen.insert(((i as u64) << 32) | j as u64) {
+            continue;
+        }
+        let mut v = mid + row_bias[i] + col_bias[j] + rng.normal_f32(0.0, cfg.noise_std);
+        let a = &row_profiles[i * d..(i + 1) * d];
+        let b = &col_profiles[j * d..(j + 1) * d];
+        v += gain * crate::linalg::dot(a, b);
+        // quantize to the rating scale
+        let q = ((v - cfg.min_value) / cfg.value_step).round() * cfg.value_step + cfg.min_value;
+        t.push(i, j, q.clamp(cfg.min_value, cfg.max_value));
+    }
+    t
+}
+
+/// Perturb a fraction of training values with uniform noise over the full
+/// rating range (the Table 8 robustness protocol).
+pub fn inject_noise(t: &mut Triples, rate: f64, min_v: f32, max_v: f32, rng: &mut Rng) -> usize {
+    let mut flipped = 0;
+    let n = t.nnz();
+    let entries = t.entries_mut();
+    let count = ((n as f64) * rate).round() as usize;
+    for _ in 0..count {
+        let k = rng.below(n);
+        entries[k].2 = rng.range_f32(min_v, max_v);
+        flipped += 1;
+    }
+    flipped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SynthConfig {
+        SynthConfig::movielens_like().scaled(0.02)
+    }
+
+    #[test]
+    fn respects_sizes_and_range() {
+        let cfg = tiny();
+        let mut rng = Rng::seeded(1);
+        let t = generate_triples(&cfg, &mut rng);
+        assert_eq!(t.nrows(), cfg.nrows);
+        assert_eq!(t.ncols(), cfg.ncols);
+        // generator may fall slightly short on very dense configs; here it
+        // should hit the target
+        assert!(t.nnz() as f64 > cfg.nnz as f64 * 0.99, "nnz={}", t.nnz());
+        for &(_, _, r) in t.entries() {
+            assert!(r >= cfg.min_value && r <= cfg.max_value);
+            // quantization check
+            let steps = (r - cfg.min_value) / cfg.value_step;
+            assert!((steps - steps.round()).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = tiny();
+        let a = generate_triples(&cfg, &mut Rng::seeded(9));
+        let b = generate_triples(&cfg, &mut Rng::seeded(9));
+        assert_eq!(a.entries(), b.entries());
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let cfg = tiny();
+        let mut rng = Rng::seeded(2);
+        let t = generate_triples(&cfg, &mut rng);
+        let mut col_counts = vec![0usize; cfg.ncols];
+        for &(_, j, _) in t.entries() {
+            col_counts[j as usize] += 1;
+        }
+        col_counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top_decile: usize = col_counts[..cfg.ncols / 10].iter().sum();
+        let share = top_decile as f64 / t.nnz() as f64;
+        assert!(share > 0.3, "top-decile share {share}");
+    }
+
+    #[test]
+    fn same_cluster_columns_correlate() {
+        // Columns in the same planted cluster should have higher rating
+        // correlation than random pairs — this is the signal GSM/LSH mine.
+        let mut cfg = tiny();
+        cfg.noise_std = 0.3;
+        let mut rng = Rng::seeded(3);
+        let d = cfg.latent_dim;
+        // regenerate profiles the same way generate_triples does is not
+        // accessible; instead verify via the matrix itself on dense cols.
+        let t = generate_triples(&cfg, &mut rng);
+        let csc = crate::sparse::Csc::from_triples(&t);
+        // mean rating per column as a crude profile signal
+        let col_mean = |j: usize| -> f32 {
+            let (rows, vals) = csc.col_raw(j);
+            if rows.is_empty() {
+                return 0.0;
+            }
+            vals.iter().sum::<f32>() / vals.len() as f32
+        };
+        // Spread of column means should be substantial (cluster structure)
+        let means: Vec<f32> = (0..cfg.ncols).map(col_mean).collect();
+        let nonzero: Vec<f32> = means.iter().copied().filter(|m| *m != 0.0).collect();
+        let avg = nonzero.iter().sum::<f32>() / nonzero.len() as f32;
+        let var =
+            nonzero.iter().map(|m| (m - avg) * (m - avg)).sum::<f32>() / nonzero.len() as f32;
+        assert!(var > 0.05, "column-mean variance {var} too small — no structure");
+        let _ = d;
+    }
+
+    #[test]
+    fn noise_injection_counts() {
+        let cfg = tiny();
+        let mut rng = Rng::seeded(4);
+        let mut t = generate_triples(&cfg, &mut rng);
+        let n = inject_noise(&mut t, 0.01, cfg.min_value, cfg.max_value, &mut rng);
+        assert_eq!(n, ((t.nnz() as f64) * 0.01).round() as usize);
+    }
+
+    #[test]
+    fn scaled_keeps_density_reasonable() {
+        let cfg = SynthConfig::netflix_like().scaled(0.01);
+        assert!(cfg.nnz <= cfg.nrows * cfg.ncols * 3 / 10);
+        assert!(cfg.nrows >= 16 && cfg.ncols >= 16);
+    }
+}

@@ -1,0 +1,282 @@
+//! Exact Graph Similarity Matrix (GSM) construction — the O(N²) baseline
+//! the paper's simLSH replaces (Definitions 3.1–3.2, Table 1).
+//!
+//! Similarity between columns `j1, j2` is the shrunk Pearson correlation
+//! over their *common* support:
+//!
+//! ```text
+//! S_{j1,j2} = n_{j1,j2} / (n_{j1,j2} + λ_ρ) · ρ_{j1,j2}      (Table 1)
+//! ```
+//!
+//! where `n_{j1,j2} = |Ω̂_{j1} ∩ Ω̂_{j2}|`. Construction enumerates
+//! co-rating pairs row by row (`Σ_i |Ω_i|²` work — quadratic in the dense
+//! rows, the very cost Fig. 1 illustrates), accumulating the five Pearson
+//! sufficient statistics per pair, then takes exact Top-K per column.
+//!
+//! The accumulator footprint is reported in the [`CostReport`] so Table 7
+//! (space overhead) can contrast it against the LSH engines.
+
+use crate::lsh::{finalize_row, CostReport, NeighbourSearch, TopK};
+use crate::rng::Rng;
+use crate::sparse::{Csc, Csr};
+use std::collections::HashMap;
+
+/// Pearson sufficient statistics for one column pair.
+#[derive(Clone, Copy, Debug, Default)]
+struct PairStats {
+    n: u32,
+    sx: f64,
+    sy: f64,
+    sxx: f64,
+    syy: f64,
+    sxy: f64,
+}
+
+impl PairStats {
+    #[inline]
+    fn add(&mut self, x: f64, y: f64) {
+        self.n += 1;
+        self.sx += x;
+        self.sy += y;
+        self.sxx += x * x;
+        self.syy += y * y;
+        self.sxy += x * y;
+    }
+
+    /// Pearson correlation over the common support (0 if degenerate).
+    fn pearson(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        let cov = self.sxy - self.sx * self.sy / n;
+        let vx = self.sxx - self.sx * self.sx / n;
+        let vy = self.syy - self.sy * self.sy / n;
+        if vx <= 1e-12 || vy <= 1e-12 {
+            return 0.0;
+        }
+        (cov / (vx * vy).sqrt()).clamp(-1.0, 1.0)
+    }
+
+    /// Shrunk similarity S = n/(n+λ) · ρ.
+    fn similarity(&self, lambda_rho: f64) -> f64 {
+        let n = self.n as f64;
+        n / (n + lambda_rho) * self.pearson()
+    }
+}
+
+/// Exact GSM Top-K engine.
+#[derive(Clone, Debug)]
+pub struct Gsm {
+    /// Pearson shrinkage λ_ρ (the paper uses 100).
+    pub lambda_rho: f64,
+    /// Rows denser than this are subsampled during pair enumeration to
+    /// bound the quadratic blowup (0 = exact). The paper's serial GSM is
+    /// exact; benches use exact mode and eat the cost — that *is* the
+    /// result.
+    pub row_cap: usize,
+}
+
+impl Default for Gsm {
+    fn default() -> Self {
+        Gsm { lambda_rho: 100.0, row_cap: 0 }
+    }
+}
+
+impl Gsm {
+    pub fn new(lambda_rho: f64) -> Self {
+        Gsm { lambda_rho, row_cap: 0 }
+    }
+
+    /// Compute all pairwise similarities (exact) as per-column maps.
+    /// Exposed for tests; [`NeighbourSearch::build`] wraps it.
+    pub fn similarities(&self, csr: &Csr, rng: &mut Rng) -> (Vec<HashMap<u32, PairStatsPub>>, usize) {
+        let ncols = csr.ncols();
+        let mut stats: HashMap<u64, PairStats> = HashMap::new();
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for i in 0..csr.nrows() {
+            let (cols, vals) = csr.row_raw(i);
+            scratch.clear();
+            if self.row_cap > 0 && cols.len() > self.row_cap {
+                // subsample without replacement
+                let picks = rng.sample_distinct(cols.len(), self.row_cap);
+                for &pidx in &picks {
+                    scratch.push((cols[pidx], vals[pidx]));
+                }
+            } else {
+                scratch.extend(cols.iter().copied().zip(vals.iter().copied()));
+            }
+            for (a_pos, &(ja, ra)) in scratch.iter().enumerate() {
+                for &(jb, rb) in &scratch[a_pos + 1..] {
+                    let (lo, hi, x, y) = if ja < jb {
+                        (ja, jb, ra, rb)
+                    } else {
+                        (jb, ja, rb, ra)
+                    };
+                    stats
+                        .entry(((lo as u64) << 32) | hi as u64)
+                        .or_default()
+                        .add(x as f64, y as f64);
+                }
+            }
+        }
+        let bytes = stats.len() * (8 + std::mem::size_of::<PairStats>() + 8);
+        // re-bucket per column with similarity values
+        let mut per_col: Vec<HashMap<u32, PairStatsPub>> = vec![HashMap::new(); ncols];
+        for (key, st) in stats {
+            let (j1, j2) = ((key >> 32) as u32, key as u32);
+            let s = st.similarity(self.lambda_rho);
+            let ps = PairStatsPub { n: st.n, similarity: s };
+            per_col[j1 as usize].insert(j2, ps);
+            per_col[j2 as usize].insert(j1, ps);
+        }
+        (per_col, bytes)
+    }
+}
+
+/// Public slice of the pair statistics (co-count + shrunk similarity).
+#[derive(Clone, Copy, Debug)]
+pub struct PairStatsPub {
+    pub n: u32,
+    pub similarity: f64,
+}
+
+impl NeighbourSearch for Gsm {
+    fn name(&self) -> String {
+        format!("GSM(λ_ρ={})", self.lambda_rho)
+    }
+
+    fn build(&mut self, csc: &Csc, k: usize, rng: &mut Rng) -> (TopK, CostReport) {
+        let t0 = std::time::Instant::now();
+        // Pair enumeration wants rows; rebuild a CSR view.
+        let csr = Csr::from_triples(&csc_to_triples(csc));
+        let (per_col, stat_bytes) = self.similarities(&csr, rng);
+        let n = csc.ncols();
+        let mut rows = Vec::with_capacity(n);
+        for (j, sims) in per_col.iter().enumerate() {
+            let mut cands: Vec<(u32, f64)> =
+                sims.iter().map(|(&c, ps)| (c, ps.similarity)).collect();
+            cands.sort_unstable_by(|a, b| {
+                b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+            });
+            let ordered: Vec<u32> = cands.into_iter().map(|(c, _)| c).collect();
+            rows.push(finalize_row(j, ordered, k, n, rng));
+        }
+        let topk = TopK::from_rows(rows, k);
+        let per_col_bytes: usize = per_col.iter().map(|m| 48 + m.len() * 24).sum();
+        (
+            topk,
+            CostReport {
+                seconds: t0.elapsed().as_secs_f64(),
+                bytes: stat_bytes + per_col_bytes,
+            },
+        )
+    }
+}
+
+fn csc_to_triples(csc: &Csc) -> crate::sparse::Triples {
+    let mut t = crate::sparse::Triples::new(csc.nrows(), csc.ncols());
+    for j in 0..csc.ncols() {
+        for (i, r) in csc.col(j) {
+            t.push(i, j, r);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Triples;
+
+    #[test]
+    fn pearson_of_identical_columns_is_one() {
+        let mut st = PairStats::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            st.add(v, v);
+        }
+        assert!((st.pearson() - 1.0).abs() < 1e-9);
+        // shrinkage: n=4, λ=4 → 4/8 * 1 = 0.5
+        assert!((st.similarity(4.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_of_anticorrelated_is_minus_one() {
+        let mut st = PairStats::default();
+        for (x, y) in [(1.0, 4.0), (2.0, 3.0), (3.0, 2.0), (4.0, 1.0)] {
+            st.add(x, y);
+        }
+        assert!((st.pearson() + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_column_has_zero_similarity() {
+        let mut st = PairStats::default();
+        for v in [1.0, 2.0, 3.0] {
+            st.add(2.5, v);
+        }
+        assert_eq!(st.pearson(), 0.0);
+    }
+
+    #[test]
+    fn finds_correlated_columns_exactly() {
+        // columns 0,1 strongly correlated on 30 common rows; column 2
+        // uncorrelated noise
+        let mut rng = Rng::seeded(31);
+        let mut t = Triples::new(40, 3);
+        for i in 0..30 {
+            let base = 1.0 + rng.f32() * 4.0;
+            t.push(i, 0, base);
+            t.push(i, 1, (base + 0.2).min(5.0));
+            t.push(i, 2, 1.0 + rng.f32() * 4.0);
+        }
+        let csc = Csc::from_triples(&t);
+        let mut gsm = Gsm::new(10.0);
+        let (topk, cost) = gsm.build(&csc, 1, &mut rng);
+        assert_eq!(topk.neighbours(0)[0], 1);
+        assert_eq!(topk.neighbours(1)[0], 0);
+        assert!(cost.bytes > 0);
+    }
+
+    #[test]
+    fn shrinkage_prefers_well_supported_pairs() {
+        // pair (0,1): ρ=1 on 2 common rows; pair (0,2): ρ≈0.9 on 30 rows.
+        // With λ_ρ=25, shrunk sims: 2/27·1 ≈ 0.074 vs 30/55·0.9 ≈ 0.49.
+        let mut t = Triples::new(64, 3);
+        t.push(62, 0, 1.0);
+        t.push(62, 1, 1.0);
+        t.push(63, 0, 2.0);
+        t.push(63, 1, 2.0);
+        let mut rng = Rng::seeded(32);
+        for i in 0..30 {
+            let v = 1.0 + (i % 5) as f32;
+            t.push(i, 0, v);
+            t.push(i, 2, v + rng.f32() * 0.8);
+        }
+        let csc = Csc::from_triples(&t);
+        let mut gsm = Gsm::new(25.0);
+        let (topk, _) = gsm.build(&csc, 1, &mut rng);
+        assert_eq!(topk.neighbours(0)[0], 2);
+    }
+
+    #[test]
+    fn row_cap_bounds_work_but_keeps_signal() {
+        let mut rng = Rng::seeded(33);
+        let mut t = Triples::new(50, 4);
+        for i in 0..50 {
+            let v = 1.0 + rng.f32() * 4.0;
+            t.push(i, 0, v);
+            t.push(i, 1, (v + 0.1).min(5.0));
+            if rng.chance(0.5) {
+                t.push(i, 2, 1.0 + rng.f32() * 4.0);
+            }
+            if rng.chance(0.5) {
+                t.push(i, 3, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csc = Csc::from_triples(&t);
+        let mut gsm = Gsm { lambda_rho: 5.0, row_cap: 3 };
+        let (topk, _) = gsm.build(&csc, 1, &mut rng);
+        assert_eq!(topk.neighbours(0)[0], 1);
+    }
+}

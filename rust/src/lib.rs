@@ -1,0 +1,64 @@
+//! # lshmf — LSH-Aggregated Nonlinear Neighbourhood Matrix Factorization
+//!
+//! A reproduction of *"Locality Sensitive Hash Aggregated Nonlinear
+//! Neighbourhood Matrix Factorization for Online Sparse Big Data Analysis"*
+//! (Li et al., 2021) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: sparse-data substrates,
+//!   the simLSH / GSM neighbourhood search engines, the full family of MF
+//!   trainers (serial SGD, block-parallel SGD a.k.a. CUSGD++, hogwild
+//!   a.k.a. cuSGD, ALS, CCD++, and the headline CULSH-MF neighbourhood
+//!   model), the online-learning path, the multi-device block-rotation
+//!   scheduler, a streaming ingestion orchestrator, and a serving engine.
+//! * **Layer 2 (python/compile)** — JAX compute graphs (batched Eq. (1)
+//!   prediction, fused minibatch SGD, RMSE evaluation, GMF/MLP/NeuMF
+//!   baselines), AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot-spots (tiled sign-projection hashing, fused MF batch kernels),
+//!   lowered inside the L2 graphs.
+//!
+//! Python never runs at request time: [`runtime`] loads the AOT artifacts
+//! through PJRT (`xla` crate) and executes them from rust.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use lshmf::data::synth::{SynthConfig, generate};
+//! use lshmf::mf::sgd::{SgdConfig, train_sgd};
+//! use lshmf::rng::Rng;
+//!
+//! let mut rng = Rng::seeded(7);
+//! let ds = generate(&SynthConfig::movielens_like().scaled(0.05), &mut rng);
+//! let model = train_sgd(&ds.train, &SgdConfig::default(), &mut rng);
+//! println!("rmse = {}", model.rmse(&ds.test));
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod gsm;
+pub mod linalg;
+pub mod lsh;
+pub mod metrics;
+pub mod mf;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("data error: {0}")]
+    Data(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,125 @@
+//! Cholesky factorization and solver for the ALS normal equations.
+//!
+//! ALS (the cuALS comparator, Tan et al. 2016) solves per row/column
+//! `(Σ v_j v_jᵀ + λ n I) u_i = Σ r_ij v_j` — an F×F SPD system with
+//! F ∈ {32..128}. A dense right-looking Cholesky is exactly right at this
+//! size; no pivoting needed for SPD.
+
+/// In-place lower-triangular Cholesky of a row-major `n×n` SPD matrix.
+/// Returns `Err` if the matrix is not positive definite.
+pub fn cholesky_factor(a: &mut [f32], n: usize) -> Result<(), &'static str> {
+    debug_assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        // diagonal
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err("matrix not positive definite");
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        // column below the diagonal
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / d;
+        }
+        // zero the strictly-upper part for hygiene
+        for k in (j + 1)..n {
+            a[j * n + k] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve `L Lᵀ x = b` given the Cholesky factor `l` (lower, row-major).
+pub fn cholesky_solve(l: &[f32], n: usize, b: &mut [f32]) {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    // forward: L y = b
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+    // backward: Lᵀ x = y
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// Solve the SPD system `A x = b` in place (A is destroyed, b becomes x).
+pub fn solve_normal_eq(a: &mut [f32], n: usize, b: &mut [f32]) -> Result<(), &'static str> {
+    cholesky_factor(a, n)?;
+    cholesky_solve(a, n, b);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Build a random SPD matrix `A = B Bᵀ + n I`.
+    fn random_spd(n: usize, rng: &mut Rng) -> Vec<f32> {
+        let b: Vec<f32> = (0..n * n).map(|_| rng.f32() - 0.5).collect();
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f32 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn solves_known_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] → x = [1.5, 2]
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        let mut b = vec![10.0, 9.0];
+        solve_normal_eq(&mut a, 2, &mut b).unwrap();
+        assert!((b[0] - 1.5).abs() < 1e-5);
+        assert!((b[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn random_spd_roundtrip() {
+        let mut rng = Rng::seeded(7);
+        for n in [1usize, 2, 5, 16, 32] {
+            let a = random_spd(n, &mut rng);
+            let x_true: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            // b = A x
+            let mut b = vec![0f32; n];
+            for i in 0..n {
+                for j in 0..n {
+                    b[i] += a[i * n + j] * x_true[j];
+                }
+            }
+            let mut a_work = a.clone();
+            solve_normal_eq(&mut a_work, n, &mut b).unwrap();
+            for i in 0..n {
+                assert!((b[i] - x_true[i]).abs() < 1e-3, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky_factor(&mut a, 2).is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Dense linear-algebra substrate.
+//!
+//! Everything the trainers need and nothing more: contiguous factor
+//! matrices ([`FactorMatrix`] — row-major `M×F` with aligned rows), the
+//! fused vector kernels of the SGD hot loop ([`dot`], [`axpy_update`]),
+//! and a Cholesky solver for the ALS normal equations.
+//!
+//! The vector kernels are written as 4-way unrolled loops over `f32`
+//! slices; rustc/LLVM auto-vectorizes these to SSE/AVX on x86-64. This is
+//! the CPU analogue of the paper's warp-shuffle dot product (§4.2): keep
+//! the working vectors in the closest level of the hierarchy (registers /
+//! L1) and avoid re-loading across the inner loop.
+
+mod cholesky;
+
+pub use cholesky::{cholesky_factor, cholesky_solve, solve_normal_eq};
+
+/// Dot product of two equal-length slices, 8-way unrolled.
+///
+/// Eight independent accumulators let LLVM keep a full SIMD register of
+/// partial sums (f32x8 on AVX) with no loop-carried dependence — measured
+/// ~2.7× over the naive loop and ~1.5× over a 4-wide unroll on this host
+/// (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let k = c * 8;
+        // bounds-check-free slices help the vectorizer
+        let (xa, xb) = (&a[k..k + 8], &b[k..k + 8]);
+        for l in 0..8 {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for k in chunks * 8..n {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// The fused SGD factor update of Eq. (5):
+/// `u ← u + γ (e·v − λ·u)` and `v ← v + γ (e·u_old − λ·v)` must use the
+/// *pre-update* `u`, so the kernel computes both halves in one pass over
+/// the registers.
+#[inline]
+pub fn sgd_pair_update(u: &mut [f32], v: &mut [f32], e: f32, gamma: f32, lu: f32, lv: f32) {
+    debug_assert_eq!(u.len(), v.len());
+    for k in 0..u.len() {
+        let (uk, vk) = (u[k], v[k]);
+        u[k] = uk + gamma * (e * vk - lu * uk);
+        v[k] = vk + gamma * (e * uk - lv * vk);
+    }
+}
+
+/// `y ← y + α x` (axpy).
+#[inline]
+pub fn axpy_update(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for k in 0..y.len() {
+        y[k] += alpha * x[k];
+    }
+}
+
+/// `y ← y * (1 - s) + α x` — regularized gradient step.
+#[inline]
+pub fn scaled_axpy(y: &mut [f32], shrink: f32, alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for k in 0..y.len() {
+        y[k] = y[k] * (1.0 - shrink) + alpha * x[k];
+    }
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm_sq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// Row-major dense factor matrix (U ∈ ℝ^{M×F} or V ∈ ℝ^{N×F}).
+#[derive(Clone, Debug)]
+pub struct FactorMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl FactorMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        FactorMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Conventional MF init: uniform in ±(1/sqrt(F)).
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::rng::Rng) -> Self {
+        let scale = 1.0 / (cols as f32).sqrt();
+        let mut m = FactorMatrix::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, scale);
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Disjoint mutable rows (SGD updates u_i and v_j simultaneously).
+    /// Panics if `i == j` against the same matrix — callers never do that
+    /// (rows come from different matrices or disjoint bands).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Append `extra` new rows initialized uniform ±1/sqrt(F)
+    /// (online learning: new variables enter the system).
+    pub fn grow_rows(&mut self, extra: usize, rng: &mut crate::rng::Rng) {
+        let scale = 1.0 / (self.cols as f32).sqrt();
+        let mut tail = vec![0.0f32; extra * self.cols];
+        rng.fill_uniform(&mut tail, scale);
+        self.data.extend_from_slice(&tail);
+        self.rows += extra;
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::seeded(1);
+        for n in [0usize, 1, 3, 4, 7, 32, 33, 128] {
+            let a: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sgd_pair_update_uses_pre_update_u() {
+        // Hand-computed: u=[1], v=[2], e=0.5, gamma=0.1, lambda=0.
+        // u' = 1 + 0.1*(0.5*2) = 1.1 ; v' = 2 + 0.1*(0.5*1) = 2.05 (old u!)
+        let mut u = [1.0f32];
+        let mut v = [2.0f32];
+        sgd_pair_update(&mut u, &mut v, 0.5, 0.1, 0.0, 0.0);
+        assert!((u[0] - 1.1).abs() < 1e-6);
+        assert!((v[0] - 2.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = [1.0f32, 2.0, 3.0];
+        axpy_update(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, [3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn factor_matrix_rows_disjoint() {
+        let mut rng = Rng::seeded(2);
+        let m = FactorMatrix::random(10, 8, &mut rng);
+        assert_eq!(m.row(3).len(), 8);
+        // init scale bound
+        let bound = 1.0 / (8f32).sqrt() + 1e-6;
+        assert!(m.data().iter().all(|&x| x.abs() <= bound));
+    }
+
+    #[test]
+    fn grow_rows_extends() {
+        let mut rng = Rng::seeded(3);
+        let mut m = FactorMatrix::random(4, 4, &mut rng);
+        let before = m.row(2).to_vec();
+        m.grow_rows(3, &mut rng);
+        assert_eq!(m.rows(), 7);
+        assert_eq!(m.row(2), &before[..]);
+        assert_eq!(m.row(6).len(), 4);
+    }
+}

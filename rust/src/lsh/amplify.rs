@@ -1,0 +1,216 @@
+//! Coarse/fine-grained amplification shared by all LSH engines
+//! (Algorithm 1 of the paper, lines 1–12, hash-family-agnostic).
+//!
+//! A [`RoundHasher`] produces one **round signature** per column: the
+//! concatenation of `p` base hashes (coarse-grained AND — two columns are
+//! candidates in a round only if *all p* hashes agree, probability
+//! `P₁ᵖ`). The pipeline runs `q` independent rounds (fine-grained OR —
+//! candidates in *any* round are kept, probability `1 − (1 − P₁ᵖ)^q`),
+//! counts per-pair collision frequency, and keeps the K most frequent
+//! co-collisioners per column, random-supplemented to exactly K.
+//!
+//! Giant buckets (e.g. columns with near-empty support hashing alike) are
+//! enumeration-capped: per round, a column accumulates at most
+//! [`MAX_BUCKET_SCAN`] sampled bucketmates instead of the full O(B²)
+//! pair walk — the standard LSH implementation trade that bounds worst
+//! case while leaving the frequency ranking intact.
+
+use super::{finalize_row, CostReport, TopK};
+use crate::rng::Rng;
+use crate::sparse::Csc;
+use std::collections::HashMap;
+
+/// Cap on bucketmates scanned per column per round.
+pub const MAX_BUCKET_SCAN: usize = 64;
+
+/// One LSH family: produces the concatenated p-hash signature of every
+/// column for a given round.
+pub trait RoundHasher {
+    /// Engine name for reports.
+    fn name(&self) -> String;
+    /// `p` — the AND width (for cost accounting / reports).
+    fn p(&self) -> usize;
+    /// Compute the signature of every column for round `round`.
+    /// Signatures are opaque u64s; equal signature ⇔ all p hashes agree
+    /// (up to a negligible 2⁻⁶⁴ mixing collision).
+    fn signatures(&self, csc: &Csc, round: u64, rng: &mut Rng) -> Vec<u64>;
+}
+
+/// Mix a base hash into a running signature (boost-style combiner).
+#[inline]
+pub fn combine(sig: u64, h: u64) -> u64 {
+    // splitmix-style avalanche of the incoming hash, xor-rotated in
+    let mut z = h.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    sig.rotate_left(13) ^ (z ^ (z >> 31))
+}
+
+/// Run the q-round collision-counting pipeline and emit the Top-K table.
+///
+/// Returns the table plus a [`CostReport`] whose `bytes` is the peak size
+/// of the per-column collision counters plus one round's signature and
+/// bucket table (the transient state Fig. 1 contrasts with the O(N²) GSM).
+pub fn collision_topk<H: RoundHasher>(
+    hasher: &H,
+    csc: &Csc,
+    k: usize,
+    q: usize,
+    rng: &mut Rng,
+) -> (TopK, CostReport) {
+    collision_topk_sigs(
+        csc.ncols(),
+        |round, rng| hasher.signatures(csc, round, rng),
+        k,
+        q,
+        rng,
+    )
+}
+
+/// Signature-closure variant of [`collision_topk`] — used by the online
+/// hash state, which derives signatures from stored accumulators rather
+/// than from a matrix.
+pub fn collision_topk_sigs<F: FnMut(u64, &mut Rng) -> Vec<u64>>(
+    n: usize,
+    mut sig_fn: F,
+    k: usize,
+    q: usize,
+    rng: &mut Rng,
+) -> (TopK, CostReport) {
+    let t0 = std::time::Instant::now();
+    // Per-column collision counters.
+    let mut counts: Vec<HashMap<u32, u32>> = vec![HashMap::new(); n];
+    let mut bucket_bytes_peak = 0usize;
+
+    for round in 0..q as u64 {
+        let sigs = sig_fn(round, rng);
+        debug_assert_eq!(sigs.len(), n);
+        // Bucket by signature.
+        let mut buckets: HashMap<u64, Vec<u32>> = HashMap::new();
+        for (j, &s) in sigs.iter().enumerate() {
+            buckets.entry(s).or_default().push(j as u32);
+        }
+        let round_bytes = n * 8
+            + buckets.len() * (8 + 24)
+            + buckets.values().map(|b| b.len() * 4).sum::<usize>();
+        bucket_bytes_peak = bucket_bytes_peak.max(round_bytes);
+        // Count bucketmates (capped per column).
+        for members in buckets.values() {
+            if members.len() < 2 {
+                continue;
+            }
+            if members.len() <= MAX_BUCKET_SCAN {
+                for (a_pos, &a) in members.iter().enumerate() {
+                    for &b in &members[a_pos + 1..] {
+                        *counts[a as usize].entry(b).or_insert(0) += 1;
+                        *counts[b as usize].entry(a).or_insert(0) += 1;
+                    }
+                }
+            } else {
+                // sample MAX_BUCKET_SCAN partners per member
+                for &a in members.iter() {
+                    for _ in 0..MAX_BUCKET_SCAN {
+                        let b = members[rng.below(members.len())];
+                        if b != a {
+                            *counts[a as usize].entry(b).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let counter_bytes: usize = counts
+        .iter()
+        .map(|m| 48 + m.len() * (4 + 4 + 8)) // rough HashMap entry cost
+        .sum();
+
+    // Top-K by collision frequency (ties broken by smaller id for
+    // determinism), then random supplement.
+    let mut rows = Vec::with_capacity(n);
+    for (j, cnt) in counts.iter().enumerate() {
+        let mut cands: Vec<(u32, u32)> = cnt.iter().map(|(&c, &f)| (c, f)).collect();
+        cands.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let ordered: Vec<u32> = cands.into_iter().map(|(c, _)| c).collect();
+        rows.push(finalize_row(j, ordered, k, n, rng));
+    }
+    let topk = TopK::from_rows(rows, k);
+    let cost = CostReport {
+        seconds: t0.elapsed().as_secs_f64(),
+        bytes: bucket_bytes_peak + counter_bytes,
+    };
+    (topk, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Triples;
+
+    /// A fake hasher that buckets columns by `j % groups` every round —
+    /// columns in the same residue class must end up neighbours.
+    struct ModHasher {
+        groups: u64,
+    }
+
+    impl RoundHasher for ModHasher {
+        fn name(&self) -> String {
+            "mod".into()
+        }
+
+        fn p(&self) -> usize {
+            1
+        }
+
+        fn signatures(&self, csc: &Csc, _round: u64, _rng: &mut Rng) -> Vec<u64> {
+            (0..csc.ncols() as u64).map(|j| j % self.groups).collect()
+        }
+    }
+
+    fn empty_csc(ncols: usize) -> Csc {
+        Csc::from_triples(&Triples::new(4, ncols))
+    }
+
+    #[test]
+    fn bucketmates_become_neighbours() {
+        let csc = empty_csc(12);
+        let mut rng = Rng::seeded(1);
+        let (topk, _) = collision_topk(&ModHasher { groups: 3 }, &csc, 3, 5, &mut rng);
+        // column 0's residue class is {0,3,6,9}; its 3 neighbours must be
+        // exactly {3,6,9}
+        let mut nb: Vec<u32> = topk.neighbours(0).to_vec();
+        nb.sort_unstable();
+        assert_eq!(nb, vec![3, 6, 9]);
+    }
+
+    #[test]
+    fn supplements_when_bucket_too_small() {
+        let csc = empty_csc(12);
+        let mut rng = Rng::seeded(2);
+        // groups=12 → singleton buckets → all neighbours random
+        let (topk, _) = collision_topk(&ModHasher { groups: 12 }, &csc, 4, 3, &mut rng);
+        for j in 0..12 {
+            let nb = topk.neighbours(j);
+            assert_eq!(nb.len(), 4);
+            assert!(nb.iter().all(|&c| c != j as u32));
+            let set: std::collections::HashSet<_> = nb.iter().collect();
+            assert_eq!(set.len(), 4);
+        }
+    }
+
+    #[test]
+    fn cost_report_nonzero() {
+        let csc = empty_csc(20);
+        let mut rng = Rng::seeded(3);
+        let (_, cost) = collision_topk(&ModHasher { groups: 4 }, &csc, 2, 2, &mut rng);
+        assert!(cost.bytes > 0);
+        assert!(cost.seconds >= 0.0);
+    }
+
+    #[test]
+    fn combine_disambiguates_order() {
+        let a = combine(combine(0, 1), 2);
+        let b = combine(combine(0, 2), 1);
+        assert_ne!(a, b);
+    }
+}

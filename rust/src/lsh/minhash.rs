@@ -1,0 +1,160 @@
+//! minHash over column supports (the Jaccard comparator of Fig. 7).
+//!
+//! One base hash of column `j` is `min_{i ∈ Ω̂_j} h(i)` under a random
+//! permutation-ish hash `h` of the row universe; two columns agree with
+//! probability equal to their Jaccard similarity of supports. As the
+//! paper notes, minHash "only considers the existence of the elements and
+//! neglects the real value" — which is exactly why simLSH beats it on
+//! rating data.
+
+use super::amplify::{collision_topk, combine, RoundHasher};
+use super::{CostReport, NeighbourSearch, TopK};
+use crate::rng::Rng;
+use crate::sparse::Csc;
+
+/// minHash engine.
+#[derive(Clone, Debug)]
+pub struct MinHash {
+    pub p: usize,
+    pub q: usize,
+    pub seed: u64,
+}
+
+impl MinHash {
+    pub fn new(p: usize, q: usize) -> Self {
+        MinHash { p, q, seed: 0x31A5_4A5E }
+    }
+
+    /// Hash of row index `i` under base hash `(round, slot)`.
+    #[inline]
+    fn row_hash(&self, i: usize, round: u64, slot: usize) -> u64 {
+        let mut s = self.seed
+            ^ round.wrapping_mul(0xBF58476D1CE4E5B9)
+            ^ (slot as u64).wrapping_mul(0x94D049BB133111EB)
+            ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        crate::rng::splitmix64(&mut s)
+    }
+
+    /// One base minhash of one column. Empty columns hash to a sentinel
+    /// derived from their id so they don't all collide.
+    pub fn hash_column(&self, csc: &Csc, j: usize, round: u64, slot: usize) -> u64 {
+        let (rows, _) = csc.col_raw(j);
+        if rows.is_empty() {
+            return self.row_hash(usize::MAX - j, round, slot);
+        }
+        rows.iter()
+            .map(|&i| self.row_hash(i as usize, round, slot))
+            .min()
+            .unwrap()
+    }
+}
+
+impl RoundHasher for MinHash {
+    fn name(&self) -> String {
+        format!("minHash(p={},q={})", self.p, self.q)
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn signatures(&self, csc: &Csc, round: u64, _rng: &mut Rng) -> Vec<u64> {
+        let n = csc.ncols();
+        let mut sigs = vec![0u64; n];
+        for slot in 0..self.p {
+            for (j, sig) in sigs.iter_mut().enumerate() {
+                *sig = combine(*sig, self.hash_column(csc, j, round, slot));
+            }
+        }
+        sigs
+    }
+}
+
+impl NeighbourSearch for MinHash {
+    fn name(&self) -> String {
+        RoundHasher::name(self)
+    }
+
+    fn build(&mut self, csc: &Csc, k: usize, rng: &mut Rng) -> (TopK, CostReport) {
+        collision_topk(self, csc, k, self.q, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Triples;
+
+    #[test]
+    fn identical_supports_always_collide() {
+        let mut entries = Vec::new();
+        for i in [2u32, 5, 9, 14] {
+            entries.push((i, 0, 1.0));
+            entries.push((i, 1, 5.0)); // different VALUES, same support
+        }
+        let t = Triples::from_entries(20, 2, entries);
+        let csc = Csc::from_triples(&t);
+        let mh = MinHash::new(1, 1);
+        for round in 0..16 {
+            assert_eq!(
+                mh.hash_column(&csc, 0, round, 0),
+                mh.hash_column(&csc, 1, round, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn collision_rate_estimates_jaccard() {
+        // supports: A = {0..20}, B = {10..30} → J = 10/30 ≈ 0.333
+        let mut entries = Vec::new();
+        for i in 0..20u32 {
+            entries.push((i, 0, 1.0));
+        }
+        for i in 10..30u32 {
+            entries.push((i, 1, 1.0));
+        }
+        let t = Triples::from_entries(30, 2, entries);
+        let csc = Csc::from_triples(&t);
+        let mh = MinHash::new(1, 1);
+        let rounds = 3000;
+        let mut coll = 0;
+        for round in 0..rounds {
+            if mh.hash_column(&csc, 0, round, 0) == mh.hash_column(&csc, 1, round, 0) {
+                coll += 1;
+            }
+        }
+        let rate = coll as f64 / rounds as f64;
+        assert!((rate - 1.0 / 3.0).abs() < 0.04, "rate={rate}");
+    }
+
+    #[test]
+    fn empty_columns_do_not_all_collide() {
+        let t = Triples::new(10, 5);
+        let csc = Csc::from_triples(&t);
+        let mh = MinHash::new(1, 1);
+        let h: Vec<u64> = (0..5).map(|j| mh.hash_column(&csc, j, 0, 0)).collect();
+        let set: std::collections::HashSet<_> = h.iter().collect();
+        assert_eq!(set.len(), 5);
+    }
+
+    #[test]
+    fn end_to_end_neighbours_by_support() {
+        let mut rng = Rng::seeded(5);
+        let mut entries = Vec::new();
+        // columns 0,1 share support; 2 disjoint
+        for i in 0..100u32 {
+            if i % 3 == 0 {
+                entries.push((i, 0, rng.f32() * 5.0));
+                entries.push((i, 1, rng.f32() * 5.0));
+            } else if i % 3 == 1 {
+                entries.push((i, 2, rng.f32() * 5.0));
+            }
+        }
+        let t = Triples::from_entries(100, 3, entries);
+        let csc = Csc::from_triples(&t);
+        let mut mh = MinHash::new(2, 25);
+        let (topk, _) = mh.build(&csc, 1, &mut rng);
+        assert_eq!(topk.neighbours(0)[0], 1);
+        assert_eq!(topk.neighbours(1)[0], 0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Locality-sensitive neighbourhood search (§4.1 of the paper).
+//!
+//! All engines produce the same artifact: the **Top-K nearest-neighbour
+//! matrix** `J^K ∈ ℕ^{N×K}` ([`TopK`]) over the column variable set `J`,
+//! plus a [`CostReport`] (build seconds + peak auxiliary bytes) so the
+//! Table 7 cost comparison falls out of the same interface.
+//!
+//! Engines:
+//! * [`simlsh::SimLsh`] — the paper's contribution: sign hashing of
+//!   Ψ-weighted ratings (Eq. 3) with coarse-grained (p AND) /
+//!   fine-grained (q OR) amplification;
+//! * [`rp_cos::RpCos`] — random-projection cosine LSH;
+//! * [`minhash::MinHash`] — Jaccard minHash over the column supports;
+//! * [`rand_topk::RandNeighbours`] — the randomized control group;
+//! * [`crate::gsm::Gsm`] — the exact O(N²) similarity matrix baseline.
+//!
+//! The LSH engines share the collision-counting amplification pipeline in
+//! [`amplify`], differing only in their per-round signature functions.
+
+pub mod amplify;
+pub mod minhash;
+pub mod online;
+pub mod rand_topk;
+pub mod rp_cos;
+pub mod simlsh;
+
+pub use amplify::{collision_topk, collision_topk_sigs, RoundHasher};
+pub use minhash::MinHash;
+pub use online::OnlineHashState;
+pub use rand_topk::RandNeighbours;
+pub use rp_cos::RpCos;
+pub use simlsh::SimLsh;
+
+use crate::rng::Rng;
+use crate::sparse::Csc;
+
+/// Top-K nearest-neighbour matrix `J^K`: row `j` lists the K neighbours
+/// of column variable `J_j` (most-similar first where the engine ranks).
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    idx: Vec<u32>,
+}
+
+impl TopK {
+    pub fn new(n: usize, k: usize) -> Self {
+        TopK { k, idx: vec![u32::MAX; n * k] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<u32>>, k: usize) -> Self {
+        let mut t = TopK::new(rows.len(), k);
+        for (j, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), k, "row {j} has {} neighbours, want {k}", row.len());
+            t.idx[j * k..(j + 1) * k].copy_from_slice(row);
+        }
+        t
+    }
+
+    #[inline]
+    pub fn neighbours(&self, j: usize) -> &[u32] {
+        &self.idx[j * self.k..(j + 1) * self.k]
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        if self.k == 0 {
+            0
+        } else {
+            self.idx.len() / self.k
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.idx.len() * 4
+    }
+
+    /// Append rows for new column variables (online learning).
+    pub fn push_row(&mut self, row: &[u32]) {
+        assert_eq!(row.len(), self.k);
+        self.idx.extend_from_slice(row);
+    }
+
+    /// Sort every row ascending (the CULSH merge-scan precondition; slot
+    /// order is semantically free — see `CulshModel::init`).
+    pub fn sort_rows(&mut self) {
+        for j in 0..self.n() {
+            self.idx[j * self.k..(j + 1) * self.k].sort_unstable();
+        }
+    }
+
+    /// Replace an existing row.
+    pub fn set_row(&mut self, j: usize, row: &[u32]) {
+        assert_eq!(row.len(), self.k);
+        self.idx[j * self.k..(j + 1) * self.k].copy_from_slice(row);
+    }
+
+    /// Overlap |A∩B| / K between two neighbour tables — the recall metric
+    /// used to validate LSH engines against the exact GSM.
+    pub fn overlap(&self, other: &TopK) -> f64 {
+        assert_eq!(self.n(), other.n());
+        assert_eq!(self.k, other.k);
+        if self.n() == 0 {
+            return 1.0;
+        }
+        let mut inter = 0usize;
+        for j in 0..self.n() {
+            let a: std::collections::HashSet<u32> =
+                self.neighbours(j).iter().copied().collect();
+            inter += other.neighbours(j).iter().filter(|x| a.contains(x)).count();
+        }
+        inter as f64 / (self.n() * self.k) as f64
+    }
+}
+
+/// Build-cost accounting for the Table 7 comparison.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostReport {
+    pub seconds: f64,
+    /// Peak auxiliary memory (hash tables / similarity accumulators),
+    /// excluding the input matrix and the output TopK.
+    pub bytes: usize,
+}
+
+/// A neighbourhood-search engine: anything that can produce `J^K`.
+pub trait NeighbourSearch {
+    fn name(&self) -> String;
+    fn build(&mut self, csc: &Csc, k: usize, rng: &mut Rng) -> (TopK, CostReport);
+}
+
+/// Fill a neighbour row to exactly `k` entries: dedupe, drop self, then
+/// random-supplement from `[0, n)` (the paper's "random supplement if the
+/// number is less than K").
+pub fn finalize_row(j: usize, mut cands: Vec<u32>, k: usize, n: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut seen = std::collections::HashSet::with_capacity(k * 2);
+    cands.retain(|&c| c as usize != j && seen.insert(c));
+    cands.truncate(k);
+    if n > 0 {
+        let mut guard = 0usize;
+        while cands.len() < k && guard < 100 * k + 100 {
+            guard += 1;
+            let c = rng.below(n) as u32;
+            if c as usize != j && seen.insert(c) {
+                cands.push(c);
+            }
+        }
+        // tiny-n fallback: allow duplicates rather than loop forever
+        while cands.len() < k {
+            cands.push(rng.below(n) as u32);
+        }
+    }
+    cands
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_accessors() {
+        let t = TopK::from_rows(vec![vec![1, 2], vec![0, 2], vec![0, 1]], 2);
+        assert_eq!(t.n(), 3);
+        assert_eq!(t.k(), 2);
+        assert_eq!(t.neighbours(1), &[0, 2]);
+        assert_eq!(t.bytes(), 24);
+    }
+
+    #[test]
+    fn overlap_metric() {
+        let a = TopK::from_rows(vec![vec![1, 2], vec![0, 3]], 2);
+        let b = TopK::from_rows(vec![vec![2, 3], vec![0, 3]], 2);
+        // row0 shares {2} (1 of 2), row1 shares {0,3} (2 of 2) -> 3/4
+        assert!((a.overlap(&b) - 0.75).abs() < 1e-9);
+        assert!((a.overlap(&a) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn push_and_set_row() {
+        let mut t = TopK::from_rows(vec![vec![1, 2]], 2);
+        t.push_row(&[0, 1]);
+        assert_eq!(t.n(), 2);
+        assert_eq!(t.neighbours(1), &[0, 1]);
+        t.set_row(0, &[3, 4]);
+        assert_eq!(t.neighbours(0), &[3, 4]);
+    }
+
+    #[test]
+    fn finalize_row_invariants() {
+        let mut rng = Rng::seeded(1);
+        for _ in 0..100 {
+            let n = rng.range(2, 50);
+            let k = rng.range(1, n.min(10));
+            let j = rng.below(n);
+            let cands: Vec<u32> = (0..rng.below(30)).map(|_| rng.below(n) as u32).collect();
+            let row = finalize_row(j, cands, k, n, &mut rng);
+            assert_eq!(row.len(), k);
+            if n > k {
+                // no self, unique
+                assert!(row.iter().all(|&c| c as usize != j));
+                let set: std::collections::HashSet<_> = row.iter().collect();
+                assert_eq!(set.len(), k);
+            }
+        }
+    }
+
+    #[test]
+    fn finalize_row_keeps_candidate_order() {
+        let mut rng = Rng::seeded(2);
+        let row = finalize_row(9, vec![5, 5, 3, 9, 7], 3, 100, &mut rng);
+        assert_eq!(&row[..3], &[5, 3, 7]);
+    }
+}

@@ -1,0 +1,60 @@
+//! Randomized control group: K uniformly random "neighbours" per column
+//! (the `Rand` rows of Fig. 7 / Table 7). The paper includes it to show
+//! the neighbourhood term helps *because* the neighbours are real, not
+//! merely because the model has 2K extra parameters per column.
+
+use super::{finalize_row, CostReport, NeighbourSearch, TopK};
+use crate::rng::Rng;
+use crate::sparse::Csc;
+
+/// Uniform random Top-K selector.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RandNeighbours;
+
+impl NeighbourSearch for RandNeighbours {
+    fn name(&self) -> String {
+        "Rand".into()
+    }
+
+    fn build(&mut self, csc: &Csc, k: usize, rng: &mut Rng) -> (TopK, CostReport) {
+        let t0 = std::time::Instant::now();
+        let n = csc.ncols();
+        let rows: Vec<Vec<u32>> = (0..n)
+            .map(|j| finalize_row(j, Vec::new(), k, n, rng))
+            .collect();
+        (
+            TopK::from_rows(rows, k),
+            CostReport { seconds: t0.elapsed().as_secs_f64(), bytes: 0 },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Triples;
+
+    #[test]
+    fn produces_valid_rows() {
+        let csc = Csc::from_triples(&Triples::new(5, 40));
+        let mut rng = Rng::seeded(1);
+        let (topk, cost) = RandNeighbours.build(&csc, 8, &mut rng);
+        assert_eq!(topk.n(), 40);
+        for j in 0..40 {
+            let nb = topk.neighbours(j);
+            assert_eq!(nb.len(), 8);
+            assert!(nb.iter().all(|&c| (c as usize) < 40 && c as usize != j));
+            let set: std::collections::HashSet<_> = nb.iter().collect();
+            assert_eq!(set.len(), 8);
+        }
+        assert_eq!(cost.bytes, 0);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let csc = Csc::from_triples(&Triples::new(5, 30));
+        let (a, _) = RandNeighbours.build(&csc, 4, &mut Rng::seeded(1));
+        let (b, _) = RandNeighbours.build(&csc, 4, &mut Rng::seeded(2));
+        assert!(a.overlap(&b) < 0.6);
+    }
+}

@@ -1,0 +1,170 @@
+//! Random-projection cosine LSH (the `RP_cos` comparator of Fig. 7).
+//!
+//! Classic SimHash/sign-random-projection: each base hash draws a
+//! Gaussian vector `w ∈ ℝ^M` and emits `sign(Σ_i r_ij · w_i)` per bit.
+//! Equivalent to simLSH with Ψ = identity and Gaussian (not ±1) row
+//! weights; the paper's point is that on sparse integer-ish ratings the
+//! Ψ-spread ±1 projection is both cheaper and slightly more accurate.
+
+use super::amplify::{collision_topk, combine, RoundHasher};
+use super::{CostReport, NeighbourSearch, TopK};
+use crate::rng::Rng;
+use crate::sparse::Csc;
+
+/// Random-projection cosine LSH engine.
+#[derive(Clone, Debug)]
+pub struct RpCos {
+    pub p: usize,
+    pub q: usize,
+    /// Bits per base hash.
+    pub g: usize,
+    pub seed: u64,
+}
+
+impl RpCos {
+    pub fn new(p: usize, q: usize, g: usize) -> Self {
+        RpCos { p, q, g, seed: 0xC0_51_4E }
+    }
+
+    /// Deterministic Gaussian weight for (row, bit, round, slot) via a
+    /// counter-based generator (two splitmix draws → Box–Muller).
+    #[inline]
+    fn gauss_weight(&self, i: usize, gbit: usize, round: u64, slot: usize) -> f32 {
+        let mut s = self.seed
+            ^ round.wrapping_mul(0xA24BAED4963EE407)
+            ^ (slot as u64).wrapping_mul(0x9FB21C651E98DF25)
+            ^ (i as u64).wrapping_mul(0xD1B54A32D192ED03)
+            ^ (gbit as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let u1 = (crate::rng::splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let u2 = (crate::rng::splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let r = (-2.0 * (u1.max(1e-300)).ln()).sqrt();
+        (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// One base hash of one column.
+    pub fn hash_column(&self, csc: &Csc, j: usize, round: u64, slot: usize) -> u64 {
+        let (rows, vals) = csc.col_raw(j);
+        let mut h = 0u64;
+        for gbit in 0..self.g {
+            let mut acc = 0f32;
+            for (&i, &r) in rows.iter().zip(vals) {
+                acc += r * self.gauss_weight(i as usize, gbit, round, slot);
+            }
+            if acc >= 0.0 {
+                h |= 1 << gbit;
+            }
+        }
+        h
+    }
+}
+
+impl RoundHasher for RpCos {
+    fn name(&self) -> String {
+        format!("RP_cos(p={},q={},G={})", self.p, self.q, self.g)
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn signatures(&self, csc: &Csc, round: u64, _rng: &mut Rng) -> Vec<u64> {
+        let n = csc.ncols();
+        let mut sigs = vec![0u64; n];
+        for slot in 0..self.p {
+            for (j, sig) in sigs.iter_mut().enumerate() {
+                *sig = combine(*sig, self.hash_column(csc, j, round, slot));
+            }
+        }
+        sigs
+    }
+}
+
+impl NeighbourSearch for RpCos {
+    fn name(&self) -> String {
+        RoundHasher::name(self)
+    }
+
+    fn build(&mut self, csc: &Csc, k: usize, rng: &mut Rng) -> (TopK, CostReport) {
+        collision_topk(self, csc, k, self.q, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Triples;
+
+    #[test]
+    fn scale_invariance() {
+        // cosine LSH ignores positive scaling
+        let mut entries = Vec::new();
+        for i in 0..30u32 {
+            let v = 1.0 + (i % 7) as f32 * 0.5;
+            entries.push((i, 0, v));
+            entries.push((i, 1, 3.0 * v));
+        }
+        let t = Triples::from_entries(30, 2, entries);
+        let csc = Csc::from_triples(&t);
+        let lsh = RpCos::new(1, 1, 16);
+        for round in 0..8 {
+            assert_eq!(
+                lsh.hash_column(&csc, 0, round, 0),
+                lsh.hash_column(&csc, 1, round, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn opposite_columns_anti_collide() {
+        // r and -r flip every bit
+        let mut entries = Vec::new();
+        for i in 0..30u32 {
+            let v = 1.0 + (i % 5) as f32;
+            entries.push((i, 0, v));
+            entries.push((i, 1, -v));
+        }
+        let t = Triples::from_entries(30, 2, entries);
+        let csc = Csc::from_triples(&t);
+        let lsh = RpCos::new(1, 1, 16);
+        let h0 = lsh.hash_column(&csc, 0, 3, 0);
+        let h1 = lsh.hash_column(&csc, 1, 3, 0);
+        // accumulators are exact negatives; sign(a) != sign(-a) except a=0
+        let mask = (1u64 << 16) - 1;
+        assert_eq!(h0 ^ h1, mask, "h0={h0:016b} h1={h1:016b}");
+    }
+
+    #[test]
+    fn gaussian_weights_deterministic() {
+        let lsh = RpCos::new(2, 2, 8);
+        assert_eq!(
+            lsh.gauss_weight(3, 4, 1, 0).to_bits(),
+            lsh.gauss_weight(3, 4, 1, 0).to_bits()
+        );
+        assert_ne!(
+            lsh.gauss_weight(3, 4, 1, 0).to_bits(),
+            lsh.gauss_weight(3, 4, 2, 0).to_bits()
+        );
+    }
+
+    #[test]
+    fn finds_duplicate_columns() {
+        let mut rng = Rng::seeded(3);
+        let mut entries = Vec::new();
+        for i in 0..200u32 {
+            if rng.chance(0.3) {
+                let v = 1.0 + rng.f32() * 4.0;
+                entries.push((i, 0, v));
+                entries.push((i, 1, v));
+            }
+            if rng.chance(0.3) {
+                entries.push((i, 2, 1.0 + rng.f32() * 4.0));
+            }
+        }
+        let t = Triples::from_entries(200, 3, entries);
+        let csc = Csc::from_triples(&t);
+        let mut lsh = RpCos::new(2, 20, 8);
+        let (topk, _) = lsh.build(&csc, 1, &mut rng);
+        assert_eq!(topk.neighbours(0)[0], 1);
+        assert_eq!(topk.neighbours(1)[0], 0);
+    }
+}

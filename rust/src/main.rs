@@ -1,0 +1,4 @@
+//! lshmf launcher binary.
+fn main() {
+    std::process::exit(lshmf::cli::main());
+}

@@ -1,0 +1,244 @@
+//! Lightweight metrics: counters, gauges, timers, and log-scaled
+//! histograms, shared across coordinator threads.
+//!
+//! Everything is lock-free (`AtomicU64`) so the SGD hot loop and the
+//! streaming ingest path can record without contention. A [`Registry`]
+//! renders a human-readable snapshot for the CLI / server `STATS` verb.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (bit-cast f64).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Power-of-two bucketed latency histogram (ns), 1ns .. ~36s.
+pub struct Histogram {
+    buckets: [AtomicU64; 56],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let b = (64 - ns.max(1).leading_zeros() as usize - 1).min(55);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of the
+    /// bucket holding the q-th sample).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (b + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Named metric registry shared by coordinator components.
+#[derive(Default, Clone)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner
+            .gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Render all metrics as `name value` lines.
+    pub fn snapshot(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name} {}\n", c.get()));
+        }
+        for (name, g) in self.inner.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {name} {:.6}\n", g.get()));
+        }
+        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "hist {name} count={} mean_ns={:.0} p50_ns={} p99_ns={}\n",
+                h.count(),
+                h.mean_ns(),
+                h.quantile_ns(0.50),
+                h.quantile_ns(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        let c = r.counter("reqs");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name -> same counter
+        assert_eq!(r.counter("reqs").get(), 5);
+        let g = r.gauge("rmse");
+        g.set(0.92);
+        assert!((r.gauge("rmse").get() - 0.92).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let h = Histogram::default();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(10));
+        }
+        h.record(Duration::from_millis(50));
+        assert_eq!(h.count(), 101);
+        assert!(h.mean_ns() > 9_000.0);
+        // p50 bucket bound should be near 10us (within 2x log-bucket)
+        let p50 = h.quantile_ns(0.5);
+        assert!((8_192..=16_384).contains(&p50), "p50={p50}");
+        // p99.9 catches the 50ms outlier's bucket
+        let p999 = h.quantile_ns(0.999);
+        assert!(p999 >= 33_000_000, "p999={p999}");
+    }
+
+    #[test]
+    fn snapshot_renders() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.gauge("b").set(1.0);
+        r.histogram("c").record(Duration::from_nanos(100));
+        let s = r.snapshot();
+        assert!(s.contains("counter a 1"));
+        assert!(s.contains("gauge b"));
+        assert!(s.contains("hist c count=1"));
+    }
+
+    #[test]
+    fn threads_share_counter() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+}

@@ -1,0 +1,104 @@
+//! Baseline statistics (term ① of Eq. 1): the global mean μ, row
+//! deviations b_i and column deviations b̂_j, computed exactly as the
+//! paper's "simple case":
+//!
+//! ```text
+//! μ    = Σ_{(i,j)∈Ω} r_ij / |Ω|
+//! b_i  = Σ_{j∈Ω_i}  r_ij / |Ω_i|  − μ
+//! b̂_j  = Σ_{i∈Ω̂_j} r_ij / |Ω̂_j| − μ
+//! ```
+//!
+//! These seed the trainable biases and supply the `b̄_{i,j1}` residual
+//! coefficients of the explicit neighbourhood term.
+
+use crate::sparse::Csr;
+
+/// μ / b_i / b̂_j statistics of a training matrix.
+#[derive(Clone, Debug)]
+pub struct Baselines {
+    pub mu: f32,
+    pub bi: Vec<f32>,
+    pub bj: Vec<f32>,
+}
+
+impl Baselines {
+    pub fn compute(csr: &Csr) -> Self {
+        let mu = csr.mean();
+        let mut bi = vec![0f32; csr.nrows()];
+        let mut col_sum = vec![0f64; csr.ncols()];
+        let mut col_cnt = vec![0u32; csr.ncols()];
+        for i in 0..csr.nrows() {
+            let (cols, vals) = csr.row_raw(i);
+            if !cols.is_empty() {
+                let s: f64 = vals.iter().map(|&v| v as f64).sum();
+                bi[i] = (s / cols.len() as f64) as f32 - mu;
+            }
+            for (&j, &v) in cols.iter().zip(vals) {
+                col_sum[j as usize] += v as f64;
+                col_cnt[j as usize] += 1;
+            }
+        }
+        let bj = col_sum
+            .iter()
+            .zip(&col_cnt)
+            .map(|(&s, &c)| if c == 0 { 0.0 } else { (s / c as f64) as f32 - mu })
+            .collect();
+        Baselines { mu, bi, bj }
+    }
+
+    /// The overall baseline rating `b̄_ij = μ + b_i + b̂_j`.
+    #[inline]
+    pub fn bbar(&self, i: usize, j: usize) -> f32 {
+        self.mu + self.bi[i] + self.bj[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Triples;
+
+    #[test]
+    fn hand_computed_example() {
+        // [4 .]      row means: 4, 2 ; col means: 3, 2 ; μ = 8/3
+        // [2 2]
+        let t = Triples::from_entries(2, 2, vec![(0, 0, 4.0), (1, 0, 2.0), (1, 1, 2.0)]);
+        let b = Baselines::compute(&Csr::from_triples(&t));
+        let mu = 8.0 / 3.0;
+        assert!((b.mu - mu).abs() < 1e-6);
+        assert!((b.bi[0] - (4.0 - mu)).abs() < 1e-6);
+        assert!((b.bi[1] - (2.0 - mu)).abs() < 1e-6);
+        assert!((b.bj[0] - (3.0 - mu)).abs() < 1e-6);
+        assert!((b.bj[1] - (2.0 - mu)).abs() < 1e-6);
+        assert!((b.bbar(0, 1) - (mu + (4.0 - mu) + (2.0 - mu))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_rows_get_zero_bias() {
+        let t = Triples::from_entries(3, 3, vec![(0, 0, 5.0)]);
+        let b = Baselines::compute(&Csr::from_triples(&t));
+        assert_eq!(b.bi[1], 0.0);
+        assert_eq!(b.bi[2], 0.0);
+        assert_eq!(b.bj[1], 0.0);
+    }
+
+    #[test]
+    fn deviations_sum_weighted_to_zero() {
+        // Σ_i |Ω_i| b_i = Σ_ij r_ij − μ|Ω| = 0 by construction
+        let mut rng = crate::rng::Rng::seeded(3);
+        let mut t = Triples::new(20, 15);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 120 {
+            let (i, j) = (rng.below(20), rng.below(15));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let b = Baselines::compute(&csr);
+        let weighted: f64 = (0..20)
+            .map(|i| csr.row_nnz(i) as f64 * b.bi[i] as f64)
+            .sum();
+        assert!(weighted.abs() < 1e-2, "weighted sum {weighted}");
+    }
+}

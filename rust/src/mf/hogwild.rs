@@ -1,0 +1,188 @@
+//! Lock-free data-parallel SGD — the cuSGD analogue (Xie et al. 2017).
+//!
+//! cuSGD shards the *entries* across thousands of GPU threads and lets
+//! factor updates race through global memory. The CPU analogue shards
+//! entries across worker threads and performs the racy reads/writes
+//! through relaxed atomics (bit-cast f32), which keeps the race
+//! *defined* while preserving hogwild semantics: updates may be lost or
+//! interleaved, and convergence survives anyway (Niu et al., Hogwild!).
+//!
+//! This is the comparison point the paper beats: no locality (every
+//! update streams `u_i` and `v_j` from "global memory"), but also no load
+//! imbalance.
+
+use super::sgd::SgdConfig;
+use super::{Baselines, LearningSchedule, MfModel, TrainLog};
+use crate::rng::Rng;
+use crate::sparse::Csr;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Atomic f32 helpers over a plain f32 buffer.
+#[inline]
+fn as_atomics(xs: &mut [f32]) -> &[AtomicU32] {
+    // SAFETY: AtomicU32 has the same size/alignment as f32/u32 and the
+    // buffer is exclusively held for the training duration.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const AtomicU32, xs.len()) }
+}
+
+#[inline]
+fn load(a: &AtomicU32) -> f32 {
+    f32::from_bits(a.load(Ordering::Relaxed))
+}
+
+#[inline]
+fn store(a: &AtomicU32, v: f32) {
+    a.store(v.to_bits(), Ordering::Relaxed)
+}
+
+/// Train hogwild SGD with `threads` workers racing over entry shards.
+pub fn train_hogwild_logged(
+    csr: &Csr,
+    cfg: &SgdConfig,
+    threads: usize,
+    rng: &mut Rng,
+) -> (MfModel, TrainLog) {
+    assert!(threads >= 1);
+    let baselines = Baselines::compute(csr);
+    let mut model = MfModel::init(csr.nrows(), csr.ncols(), cfg.f, baselines.mu, rng);
+    if cfg.biases {
+        model.bi = baselines.bi.clone();
+        model.bj = baselines.bj.clone();
+    }
+    let schedule = LearningSchedule { alpha: cfg.alpha, beta: cfg.beta };
+    let f = cfg.f;
+    let mu = model.mu;
+
+    // Shard entries round-robin after a shuffle (cuSGD's data parallelism).
+    let mut entries = csr.to_triples().entries().to_vec();
+    rng.shuffle(&mut entries);
+    let shards: Vec<&[(u32, u32, f32)]> = {
+        let chunk = entries.len().div_ceil(threads);
+        entries.chunks(chunk.max(1)).collect()
+    };
+
+    let mut log = TrainLog::default();
+    let mut train_secs = 0f64;
+
+    for epoch in 0..cfg.epochs {
+        let gamma = schedule.rate(epoch);
+        let t0 = std::time::Instant::now();
+        {
+            let u = as_atomics(model.u.data_mut());
+            let v = as_atomics_from(&mut model.v);
+            let bi = as_atomics(&mut model.bi);
+            let bj = as_atomics(&mut model.bj);
+            std::thread::scope(|scope| {
+                for shard in &shards {
+                    let shard: &[(u32, u32, f32)] = shard;
+                    scope.spawn(move || {
+                        let mut u_buf = vec![0f32; f];
+                        let mut v_buf = vec![0f32; f];
+                        for &(i, j, r) in shard {
+                            let (i, j) = (i as usize, j as usize);
+                            for k in 0..f {
+                                u_buf[k] = load(&u[i * f + k]);
+                                v_buf[k] = load(&v[j * f + k]);
+                            }
+                            let b_i = load(&bi[i]);
+                            let b_j = load(&bj[j]);
+                            let pred = mu + b_i + b_j + crate::linalg::dot(&u_buf, &v_buf);
+                            let e = r - pred;
+                            if cfg.biases {
+                                store(&bi[i], b_i + gamma * (e - cfg.lambda_b * b_i));
+                                store(&bj[j], b_j + gamma * (e - cfg.lambda_b * b_j));
+                            }
+                            for k in 0..f {
+                                let (uk, vk) = (u_buf[k], v_buf[k]);
+                                store(&u[i * f + k], uk + gamma * (e * vk - cfg.lambda_u * uk));
+                                store(&v[j * f + k], vk + gamma * (e * uk - cfg.lambda_v * vk));
+                            }
+                        }
+                    });
+                }
+            });
+        }
+        train_secs += t0.elapsed().as_secs_f64();
+        if !cfg.eval.is_empty() {
+            log.push(epoch, train_secs, model.rmse(&cfg.eval));
+        }
+    }
+    if cfg.eval.is_empty() {
+        log.push(cfg.epochs.saturating_sub(1), train_secs, f64::NAN);
+    }
+    (model, log)
+}
+
+#[inline]
+fn as_atomics_from(m: &mut crate::linalg::FactorMatrix) -> &[AtomicU32] {
+    as_atomics(m.data_mut())
+}
+
+/// Convenience wrapper returning the model only.
+pub fn train_hogwild(csr: &Csr, cfg: &SgdConfig, threads: usize, rng: &mut Rng) -> MfModel {
+    train_hogwild_logged(csr, cfg, threads, rng).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Triples;
+
+    fn planted(rng: &mut Rng) -> (Csr, Vec<(u32, u32, f32)>) {
+        let (m, n, f_true) = (50, 35, 3);
+        let uu: Vec<f32> = (0..m * f_true).map(|_| rng.normal_f32(0.0, 0.7)).collect();
+        let vv: Vec<f32> = (0..n * f_true).map(|_| rng.normal_f32(0.0, 0.7)).collect();
+        let mut t = Triples::new(m, n);
+        let mut test = Vec::new();
+        for i in 0..m {
+            for j in 0..n {
+                if rng.chance(0.5) {
+                    let dot: f32 = (0..f_true)
+                        .map(|k| uu[i * f_true + k] * vv[j * f_true + k])
+                        .sum();
+                    let v = 3.0 + dot;
+                    if rng.chance(0.9) {
+                        t.push(i, j, v);
+                    } else {
+                        test.push((i as u32, j as u32, v));
+                    }
+                }
+            }
+        }
+        (Csr::from_triples(&t), test)
+    }
+
+    #[test]
+    fn converges_single_thread() {
+        let mut rng = Rng::seeded(10);
+        let (csr, test) = planted(&mut rng);
+        let cfg = SgdConfig {
+            f: 8,
+            epochs: 100,
+            beta: 0.02,
+            lambda_u: 0.01,
+            lambda_v: 0.01,
+            eval: test,
+            ..Default::default()
+        };
+        let (_, log) = train_hogwild_logged(&csr, &cfg, 1, &mut Rng::seeded(4));
+        assert!(log.final_rmse() < 0.55, "rmse={}", log.final_rmse());
+    }
+
+    #[test]
+    fn converges_with_races() {
+        let mut rng = Rng::seeded(11);
+        let (csr, test) = planted(&mut rng);
+        let cfg = SgdConfig {
+            f: 8,
+            epochs: 100,
+            beta: 0.02,
+            lambda_u: 0.01,
+            lambda_v: 0.01,
+            eval: test,
+            ..Default::default()
+        };
+        let (_, log) = train_hogwild_logged(&csr, &cfg, 4, &mut Rng::seeded(5));
+        assert!(log.final_rmse() < 0.55, "rmse={}", log.final_rmse());
+    }
+}

@@ -1,0 +1,571 @@
+//! CULSH-MF — the nonlinear neighbourhood MF of Eq. (1), trained with the
+//! disentangled SGD of Eq. (5) (Algorithm 3).
+//!
+//! ```text
+//! r̂_ij = b̄_ij                                                  ①
+//!       + |R^K(i;j)|^{-1/2} Σ_{j1∈R^K(i;j)} (r_ij1 − b̄_ij1) w_{j,j1}   ②
+//!       + |N^K(i;j)|^{-1/2} Σ_{j2∈N^K(i;j)} c_{j,j2}                    ③
+//!       + u_i v_jᵀ                                               ④
+//! ```
+//!
+//! with `R^K(i;j) = R(i) ∩ S^K(j)` (neighbours of j the row i has rated)
+//! and — the paper's §4.2 load-balancing adjustment — `N^K(i;j) =
+//! S^K(j) \ R^K(i;j)`, so every rating touches exactly K neighbourhood
+//! slots and the per-thread load is uniform.
+//!
+//! The neighbour table `S^K(j)` comes from any [`crate::lsh`] engine:
+//! simLSH gives **CULSH-MF**, the exact GSM gives the paper's baseline
+//! "nonlinear neighbourhood MF [29]", and a random table gives the
+//! control group.
+//!
+//! The parallel trainer re-uses the conflict-free T×T block rotation of
+//! [`super::parallel`], but transposed: each worker owns a *column* band
+//! (its `{v_j, b̂_j, w_j, c_j}` live thread-local, mirroring Algorithm 3's
+//! registers) and row bands rotate through the sub-steps.
+
+use super::{Baselines, LearningSchedule, MfModel, TrainLog};
+use crate::linalg::FactorMatrix;
+use crate::lsh::TopK;
+use crate::rng::Rng;
+use crate::sparse::{BlockGrid, Csr};
+use std::cell::UnsafeCell;
+use std::sync::Barrier;
+
+/// Hyper-parameters (defaults = paper Table 5, MovieLens column).
+#[derive(Clone, Debug)]
+pub struct CulshConfig {
+    pub f: usize,
+    pub k: usize,
+    pub epochs: usize,
+    /// α for {b_i, b̂_j, u, v} (Eq. 7 schedule).
+    pub alpha: f32,
+    /// α for {W, C} (the paper uses a much smaller rate).
+    pub alpha_wc: f32,
+    pub beta: f32,
+    pub lambda_u: f32,
+    pub lambda_v: f32,
+    pub lambda_b: f32,
+    pub lambda_w: f32,
+    pub lambda_c: f32,
+    pub eval: Vec<(u32, u32, f32)>,
+    pub seed: u64,
+}
+
+impl Default for CulshConfig {
+    fn default() -> Self {
+        CulshConfig {
+            f: 32,
+            k: 32,
+            epochs: 20,
+            alpha: 0.035,
+            alpha_wc: 0.002,
+            beta: 0.3,
+            lambda_u: 0.02,
+            lambda_v: 0.02,
+            lambda_b: 0.02,
+            lambda_w: 0.002,
+            lambda_c: 0.002,
+            eval: Vec::new(),
+            seed: 0xC0DE,
+        }
+    }
+}
+
+/// The trained CULSH-MF model: biased MF + neighbourhood influences.
+#[derive(Clone, Debug)]
+pub struct CulshModel {
+    pub base: MfModel,
+    /// Explicit influence matrix W ∈ ℝ^{N×K}.
+    pub w: FactorMatrix,
+    /// Implicit influence matrix C ∈ ℝ^{N×K}.
+    pub c: FactorMatrix,
+    /// Neighbour table S^K.
+    pub topk: TopK,
+    /// Frozen baselines supplying the b̄_{i,j1} residual coefficients.
+    pub baselines: Baselines,
+}
+
+/// Scratch for one prediction's neighbourhood scan (reused across the
+/// training loop to stay allocation-free — slot, residual pairs for the
+/// explicit set; slot list for the implicit set).
+#[derive(Default)]
+pub struct NeighbourScratch {
+    explicit: Vec<(usize, f32)>,
+    implicit: Vec<usize>,
+}
+
+impl NeighbourScratch {
+    /// The R^K slots: (neighbour slot index, rating residual).
+    pub fn explicit_slots(&self) -> &[(usize, f32)] {
+        &self.explicit
+    }
+
+    /// The N^K slots.
+    pub fn implicit_slots(&self) -> &[usize] {
+        &self.implicit
+    }
+}
+
+impl CulshModel {
+    /// Initialize with a given neighbour table.
+    ///
+    /// Neighbour rows are sorted ascending so the per-rating scan can
+    /// merge-walk them against the (sorted) CSR row instead of doing K
+    /// binary searches — the §Perf hot-loop optimization. Slot order is a
+    /// free choice: W/C weights are learned per slot, so any fixed
+    /// permutation is equivalent.
+    pub fn init(
+        csr: &Csr,
+        mut topk: TopK,
+        f: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let baselines = Baselines::compute(csr);
+        let k = topk.k();
+        topk.sort_rows();
+        let mut base = MfModel::init(csr.nrows(), csr.ncols(), f, baselines.mu, rng);
+        base.bi = baselines.bi.clone();
+        base.bj = baselines.bj.clone();
+        // W, C start at zero: the model begins as plain biased MF and the
+        // neighbourhood terms grow as evidence accumulates.
+        CulshModel {
+            base,
+            w: FactorMatrix::zeros(csr.ncols(), k),
+            c: FactorMatrix::zeros(csr.ncols(), k),
+            topk,
+            baselines,
+        }
+    }
+
+    /// Scan the K neighbours of `j` against row `i`'s ratings, splitting
+    /// them into R^K (rated → (slot, residual)) and N^K (unrated → slot).
+    #[inline]
+    pub fn scan_neighbours(
+        &self,
+        csr: &Csr,
+        i: usize,
+        j: usize,
+        scratch: &mut NeighbourScratch,
+    ) {
+        scratch.explicit.clear();
+        scratch.implicit.clear();
+        let (cols, vals) = csr.row_raw(i);
+        let neighbours = self.topk.neighbours(j);
+        // merge-walk: both `cols` and `neighbours` are sorted ascending
+        // (CSR rows by construction, neighbour rows since `init`), so one
+        // linear pass classifies every slot — O(K + |Ω_i|) instead of
+        // O(K log |Ω_i|).
+        let mut pos = 0usize;
+        for (slot, &j1) in neighbours.iter().enumerate() {
+            while pos < cols.len() && cols[pos] < j1 {
+                pos += 1;
+            }
+            if pos < cols.len() && cols[pos] == j1 {
+                let resid = vals[pos] - self.baselines.bbar(i, j1 as usize);
+                scratch.explicit.push((slot, resid));
+            } else {
+                scratch.implicit.push(slot);
+            }
+        }
+    }
+
+    /// Eq. (1) prediction (needs the training matrix for the explicit
+    /// residuals, exactly like Koren's model).
+    pub fn predict(&self, csr: &Csr, i: usize, j: usize, scratch: &mut NeighbourScratch) -> f32 {
+        self.scan_neighbours(csr, i, j, scratch);
+        self.predict_scanned(i, j, scratch)
+    }
+
+    /// Prediction given an existing scan.
+    #[inline]
+    pub fn predict_scanned(&self, i: usize, j: usize, scratch: &NeighbourScratch) -> f32 {
+        let mut pred = self.base.mu
+            + self.base.bi[i]
+            + self.base.bj[j]
+            + crate::linalg::dot(self.base.u.row(i), self.base.v.row(j));
+        if !scratch.explicit.is_empty() {
+            let wj = self.w.row(j);
+            let scale = 1.0 / (scratch.explicit.len() as f32).sqrt();
+            let mut acc = 0f32;
+            for &(slot, resid) in &scratch.explicit {
+                acc += resid * wj[slot];
+            }
+            pred += scale * acc;
+        }
+        if !scratch.implicit.is_empty() {
+            let cj = self.c.row(j);
+            let scale = 1.0 / (scratch.implicit.len() as f32).sqrt();
+            let mut acc = 0f32;
+            for &slot in &scratch.implicit {
+                acc += cj[slot];
+            }
+            pred += scale * acc;
+        }
+        match self.base.clamp {
+            Some((lo, hi)) => pred.clamp(lo, hi),
+            None => pred,
+        }
+    }
+
+    /// RMSE over a test set.
+    pub fn rmse(&self, csr: &Csr, test: &[(u32, u32, f32)]) -> f64 {
+        let mut scratch = NeighbourScratch::default();
+        super::rmse_of(test, |i, j| self.predict(csr, i, j, &mut scratch))
+    }
+
+    pub fn k(&self) -> usize {
+        self.topk.k()
+    }
+
+    /// Parameter footprint: |Ω| is excluded; this is the paper's
+    /// O(MF + NF + 3NK) spatial overhead claim.
+    pub fn bytes(&self) -> usize {
+        self.base.bytes() + self.w.bytes() + self.c.bytes() + self.topk.bytes()
+    }
+}
+
+/// One SGD update for a single rating (Eq. 5, all six parameter families).
+#[inline]
+fn update_one(
+    model: &mut CulshModel,
+    csr: &Csr,
+    i: usize,
+    j: usize,
+    r: f32,
+    gamma: f32,
+    gamma_wc: f32,
+    cfg: &CulshConfig,
+    scratch: &mut NeighbourScratch,
+) -> f32 {
+    model.scan_neighbours(csr, i, j, scratch);
+    let pred = model.predict_scanned(i, j, scratch);
+    let e = r - pred;
+    // biases
+    model.base.bi[i] += gamma * (e - cfg.lambda_b * model.base.bi[i]);
+    model.base.bj[j] += gamma * (e - cfg.lambda_b * model.base.bj[j]);
+    // factors (pre-update u used for v's gradient — sgd_pair_update)
+    crate::linalg::sgd_pair_update(
+        model.base.u.row_mut(i),
+        model.base.v.row_mut(j),
+        e,
+        gamma,
+        cfg.lambda_u,
+        cfg.lambda_v,
+    );
+    // explicit influences
+    if !scratch.explicit.is_empty() {
+        let scale = e / (scratch.explicit.len() as f32).sqrt();
+        let wj = model.w.row_mut(j);
+        for &(slot, resid) in &scratch.explicit {
+            wj[slot] += gamma_wc * (scale * resid - cfg.lambda_w * wj[slot]);
+        }
+    }
+    // implicit influences
+    if !scratch.implicit.is_empty() {
+        let scale = e / (scratch.implicit.len() as f32).sqrt();
+        let cj = model.c.row_mut(j);
+        for &slot in &scratch.implicit {
+            cj[slot] += gamma_wc * (scale - cfg.lambda_c * cj[slot]);
+        }
+    }
+    e
+}
+
+/// Serial trainer (the Table 6 "LSH-MF" / GSM-MF rows run this with the
+/// corresponding neighbour table).
+pub fn train_culsh_logged(
+    csr: &Csr,
+    topk: TopK,
+    cfg: &CulshConfig,
+    rng: &mut Rng,
+) -> (CulshModel, TrainLog) {
+    let mut model = CulshModel::init(csr, topk, cfg.f, rng);
+    let schedule = LearningSchedule { alpha: cfg.alpha, beta: cfg.beta };
+    let schedule_wc = LearningSchedule { alpha: cfg.alpha_wc, beta: cfg.beta };
+    let mut scratch = NeighbourScratch::default();
+
+    let mut log = TrainLog::default();
+    let mut train_secs = 0f64;
+    for epoch in 0..cfg.epochs {
+        let gamma = schedule.rate(epoch);
+        let gamma_wc = schedule_wc.rate(epoch);
+        let t0 = std::time::Instant::now();
+        // Column-major pass (Algorithm 3): keep {v_j, b̂_j, w_j, c_j} hot.
+        // CSR drives the actual loop; iterate rows but group by rows —
+        // row-major keeps u_i hot instead, which on CPU is the better
+        // trade because the binary search runs over the row's columns.
+        for i in 0..csr.nrows() {
+            let (cols, vals) = csr.row_raw(i);
+            for (&j, &r) in cols.iter().zip(vals) {
+                update_one(
+                    &mut model, csr, i, j as usize, r, gamma, gamma_wc, cfg, &mut scratch,
+                );
+            }
+        }
+        train_secs += t0.elapsed().as_secs_f64();
+        if !cfg.eval.is_empty() {
+            log.push(epoch, train_secs, model.rmse(csr, &cfg.eval));
+        }
+    }
+    if cfg.eval.is_empty() {
+        log.push(cfg.epochs.saturating_sub(1), train_secs, f64::NAN);
+    }
+    (model, log)
+}
+
+/// Shared-mutable holder for the conflict-free rotation schedule (see
+/// [`super::parallel`] for the safety argument).
+struct SharedCulsh(UnsafeCell<CulshModel>);
+unsafe impl Sync for SharedCulsh {}
+
+/// Parallel trainer: T workers over a T×T block rotation. Worker `t` owns
+/// column band `t` (its V/b̂/W/C rows are touched by no one else), and row
+/// bands rotate so `u_i`/`b_i` are also exclusive within a sub-step.
+pub fn train_culsh_parallel_logged(
+    csr: &Csr,
+    topk: TopK,
+    cfg: &CulshConfig,
+    threads: usize,
+    rng: &mut Rng,
+) -> (CulshModel, TrainLog) {
+    assert!(threads >= 1);
+    let model = CulshModel::init(csr, topk, cfg.f, rng);
+    let schedule = LearningSchedule { alpha: cfg.alpha, beta: cfg.beta };
+    let schedule_wc = LearningSchedule { alpha: cfg.alpha_wc, beta: cfg.beta };
+
+    let grid = BlockGrid::partition(&csr.to_triples(), threads);
+    let blocks: Vec<Vec<Vec<(u32, u32, f32)>>> = (0..threads)
+        .map(|rb| {
+            (0..threads)
+                .map(|cb| {
+                    let mut e = grid.block(rb, cb).entries.clone();
+                    e.sort_unstable_by_key(|&(i, j, _)| (i, j));
+                    e
+                })
+                .collect()
+        })
+        .collect();
+
+    let shared = SharedCulsh(UnsafeCell::new(model));
+    let mut log = TrainLog::default();
+    let mut train_secs = 0f64;
+    for epoch in 0..cfg.epochs {
+        let gamma = schedule.rate(epoch);
+        let gamma_wc = schedule_wc.rate(epoch);
+        let t0 = std::time::Instant::now();
+        let barrier = Barrier::new(threads);
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let shared = &shared;
+                let blocks = &blocks;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut scratch = NeighbourScratch::default();
+                    for s in 0..threads {
+                        let rb = (t + s) % threads;
+                        // SAFETY: worker t exclusively owns column band t;
+                        // row band rb is exclusive within sub-step s; the
+                        // barrier orders sub-steps.
+                        let model = unsafe { &mut *shared.0.get() };
+                        for &(i, j, r) in &blocks[rb][t] {
+                            update_one(
+                                model,
+                                csr,
+                                i as usize,
+                                j as usize,
+                                r,
+                                gamma,
+                                gamma_wc,
+                                cfg,
+                                &mut scratch,
+                            );
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        train_secs += t0.elapsed().as_secs_f64();
+        if !cfg.eval.is_empty() {
+            let model = unsafe { &*shared.0.get() };
+            log.push(epoch, train_secs, model.rmse(csr, &cfg.eval));
+        }
+    }
+    let model = shared.0.into_inner();
+    if cfg.eval.is_empty() {
+        log.push(cfg.epochs.saturating_sub(1), train_secs, f64::NAN);
+    }
+    (model, log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::{NeighbourSearch, SimLsh};
+    use crate::sparse::{Csc, Triples};
+
+    /// Clustered columns: columns in the same cluster share a latent
+    /// profile, so neighbourhood information genuinely helps.
+    fn clustered(rng: &mut Rng) -> (Csr, Csc, Vec<(u32, u32, f32)>) {
+        // Low-rank planted model with clustered columns: row tastes
+        // a_i ∈ ℝ³, cluster centroids b_cl ∈ ℝ³, v_j = b_cl + ε. Columns
+        // of one cluster are genuine neighbours AND the matrix
+        // generalizes (3 ≪ ratings per row).
+        let (m, n, clusters, d) = (80, 40, 8, 3);
+        let a: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+        let cent: Vec<f32> = (0..clusters * d).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+        let mut vprof = vec![0f32; n * d];
+        for j in 0..n {
+            let cl = j % clusters;
+            for x in 0..d {
+                vprof[j * d + x] = cent[cl * d + x] + rng.normal_f32(0.0, 0.1);
+            }
+        }
+        let mut t = Triples::new(m, n);
+        let mut test = Vec::new();
+        for j in 0..n {
+            for i in 0..m {
+                if rng.chance(0.4) {
+                    let dot: f32 = (0..d).map(|x| a[i * d + x] * vprof[j * d + x]).sum();
+                    let v = (2.75 + dot + rng.normal_f32(0.0, 0.25)).clamp(0.5, 5.0);
+                    if rng.chance(0.88) {
+                        t.push(i, j, v);
+                    } else {
+                        test.push((i as u32, j as u32, v));
+                    }
+                }
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        (csr, csc, test)
+    }
+
+    fn small_cfg(test: Vec<(u32, u32, f32)>) -> CulshConfig {
+        CulshConfig {
+            f: 8,
+            k: 8,
+            epochs: 100,
+            alpha: 0.04,
+            alpha_wc: 0.01,
+            beta: 0.02,
+            lambda_u: 0.01,
+            lambda_v: 0.01,
+            lambda_b: 0.01,
+            eval: test,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_with_simlsh_neighbours() {
+        let mut rng = Rng::seeded(16);
+        let (csr, csc, test) = clustered(&mut rng);
+        let mut lsh = SimLsh::new(2, 20, 8, 2);
+        let (topk, _) = lsh.build(&csc, 8, &mut rng);
+        let cfg = small_cfg(test);
+        let (_, log) = train_culsh_logged(&csr, topk, &cfg, &mut Rng::seeded(11));
+        assert!(log.final_rmse() < 0.6, "rmse={}", log.final_rmse());
+    }
+
+    #[test]
+    fn neighbourhood_beats_or_matches_plain_mf_early() {
+        // The paper's Fig. 10 claim: at equal (small) epoch budgets the
+        // neighbourhood model descends faster. Compare test RMSE after
+        // few epochs.
+        let mut rng = Rng::seeded(17);
+        let (csr, csc, test) = clustered(&mut rng);
+        let mut lsh = SimLsh::new(2, 30, 8, 2);
+        let (topk, _) = lsh.build(&csc, 8, &mut rng);
+        let epochs = 6;
+        let culsh_cfg = CulshConfig { epochs, ..small_cfg(test.clone()) };
+        let (_, culsh_log) = train_culsh_logged(&csr, topk, &culsh_cfg, &mut Rng::seeded(12));
+        let sgd_cfg = crate::mf::sgd::SgdConfig {
+            f: 8,
+            epochs,
+            alpha: 0.03,
+            beta: 0.1,
+            eval: test,
+            ..Default::default()
+        };
+        let (_, sgd_log) = super::super::sgd::train_sgd_logged(&csr, &sgd_cfg, &mut Rng::seeded(12));
+        assert!(
+            culsh_log.final_rmse() <= sgd_log.final_rmse() + 0.03,
+            "culsh {} vs sgd {}",
+            culsh_log.final_rmse(),
+            sgd_log.final_rmse()
+        );
+    }
+
+    #[test]
+    fn explicit_implicit_partition_is_exact() {
+        let mut rng = Rng::seeded(18);
+        let (csr, csc, _) = clustered(&mut rng);
+        let mut lsh = SimLsh::new(2, 10, 8, 2);
+        let (topk, _) = lsh.build(&csc, 8, &mut rng);
+        let model = CulshModel::init(&csr, topk, 4, &mut rng);
+        let mut scratch = NeighbourScratch::default();
+        for i in (0..csr.nrows()).step_by(7) {
+            for j in (0..csr.ncols()).step_by(5) {
+                model.scan_neighbours(&csr, i, j, &mut scratch);
+                // |R^K| + |N^K| = K  (the §4.2 adjustment)
+                assert_eq!(scratch.explicit.len() + scratch.implicit.len(), 8);
+                // every explicit slot corresponds to a rated neighbour
+                let (cols, _) = csr.row_raw(i);
+                for &(slot, _) in &scratch.explicit {
+                    let j1 = model.topk.neighbours(j)[slot];
+                    assert!(cols.binary_search(&j1).is_ok());
+                }
+                for &slot in &scratch.implicit {
+                    let j2 = model.topk.neighbours(j)[slot];
+                    assert!(cols.binary_search(&j2).is_err());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_quality() {
+        let mut rng = Rng::seeded(19);
+        let (csr, csc, test) = clustered(&mut rng);
+        let mut lsh = SimLsh::new(2, 20, 8, 2);
+        let (topk, _) = lsh.build(&csc, 8, &mut rng);
+        let cfg = small_cfg(test);
+        let (_, serial) =
+            train_culsh_logged(&csr, topk.clone(), &cfg, &mut Rng::seeded(13));
+        for threads in [2usize, 3] {
+            let (_, par) = train_culsh_parallel_logged(
+                &csr,
+                topk.clone(),
+                &cfg,
+                threads,
+                &mut Rng::seeded(13),
+            );
+            assert!(
+                (par.final_rmse() - serial.final_rmse()).abs() < 0.08,
+                "threads={threads}: parallel {} vs serial {}",
+                par.final_rmse(),
+                serial.final_rmse()
+            );
+        }
+    }
+
+    #[test]
+    fn zero_wc_reduces_to_biased_mf() {
+        // With W=C=0 the prediction is exactly the biased-MF prediction.
+        let mut rng = Rng::seeded(20);
+        let (csr, csc, _) = clustered(&mut rng);
+        let mut lsh = SimLsh::new(1, 4, 8, 2);
+        let (topk, _) = lsh.build(&csc, 4, &mut rng);
+        let model = CulshModel::init(&csr, topk, 4, &mut rng);
+        let mut scratch = NeighbourScratch::default();
+        for (i, j) in [(0usize, 0usize), (3, 7), (10, 20)] {
+            let got = model.predict(&csr, i, j, &mut scratch);
+            let want = model.base.mu
+                + model.base.bi[i]
+                + model.base.bj[j]
+                + crate::linalg::dot(model.base.u.row(i), model.base.v.row(j));
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+}

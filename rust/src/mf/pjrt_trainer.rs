@@ -1,0 +1,275 @@
+//! PJRT-backed MF training: the L3 coordinator drives the AOT-compiled
+//! L1/L2 kernels (`mf_sgd_step`, `rmse_chunk_step`) instead of native
+//! rust math — the full three-layer path of the architecture.
+//!
+//! The coordinator owns what the kernels cannot see: the sparse indexes.
+//! Each step it **gathers** a conflict-free batch (no row or column
+//! repeated — the same invariant the paper's thread-block schedule
+//! provides), ships dense `[B]`/`[B,F]` buffers to the executable, and
+//! **scatters** the updated rows back. Padding slots replicate entry
+//! (0,0) and are discarded on scatter, so partial batches are exact.
+//!
+//! This trainer exists to *prove the stack composes* (the end-to-end
+//! example and the hotpath bench drive it); the pure-rust trainers remain
+//! the fastest CPU path because they skip the gather/scatter and
+//! literal-marshalling overhead — see EXPERIMENTS.md §Perf for the
+//! measured comparison.
+
+use super::{Baselines, LearningSchedule, MfModel, TrainLog};
+use crate::rng::Rng;
+use crate::runtime::{mf_scalars, Runtime};
+use crate::sparse::Csr;
+use crate::Result;
+
+/// Configuration for the PJRT trainer (subset of [`super::sgd::SgdConfig`]
+/// — biases are always trained; batch size comes from the manifest).
+#[derive(Clone, Debug)]
+pub struct PjrtSgdConfig {
+    pub epochs: usize,
+    pub alpha: f32,
+    pub beta: f32,
+    pub lambda_u: f32,
+    pub lambda_v: f32,
+    pub lambda_b: f32,
+    pub eval: Vec<(u32, u32, f32)>,
+}
+
+impl Default for PjrtSgdConfig {
+    fn default() -> Self {
+        PjrtSgdConfig {
+            epochs: 10,
+            alpha: 0.04,
+            beta: 0.3,
+            lambda_u: 0.02,
+            lambda_v: 0.02,
+            lambda_b: 0.02,
+            eval: Vec::new(),
+        }
+    }
+}
+
+/// Split entries into conflict-free batches of at most `b`.
+///
+/// Row-bucketed round-robin: entries are grouped by row, and each batch
+/// takes at most one entry per row (rows conflict-free by construction)
+/// while a per-batch column stamp rejects column clashes (rare after the
+/// row pass; rejected entries simply stay for a later batch). One entry
+/// is consumed per (row, batch) visit, so the walk is O(total + batches)
+/// — the naive spill-queue version degraded quadratically on Zipf-hot
+/// rows (see EXPERIMENTS.md §Perf).
+pub fn conflict_free_batches(
+    entries: &[(u32, u32, f32)],
+    b: usize,
+) -> Vec<Vec<(u32, u32, f32)>> {
+    if entries.is_empty() {
+        return Vec::new();
+    }
+    // dense per-row queues + a live-row list that shrinks as rows drain,
+    // so late batches (only the Zipf-hot rows left) walk a short list
+    let nrows = entries.iter().map(|&(i, _, _)| i as usize + 1).max().unwrap();
+    let ncols = entries.iter().map(|&(_, j, _)| j as usize + 1).max().unwrap();
+    let mut by_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); nrows];
+    for &(i, j, r) in entries {
+        by_row[i as usize].push((j, r));
+    }
+    // consume from the back (reverse so input order is preserved)
+    for q in by_row.iter_mut() {
+        q.reverse();
+    }
+    let mut live: Vec<u32> = (0..nrows as u32)
+        .filter(|&i| !by_row[i as usize].is_empty())
+        .collect();
+
+    let mut batches = Vec::new();
+    let mut remaining = entries.len();
+    // epoch-stamped column occupancy: col_stamp[j] == batch id → taken
+    let mut col_stamp = vec![u32::MAX; ncols];
+    let mut batch_id = 0u32;
+    while remaining > 0 {
+        let mut batch = Vec::with_capacity(b.min(remaining));
+        let mut write = 0usize;
+        for read in 0..live.len() {
+            let row = live[read];
+            let q = &mut by_row[row as usize];
+            if batch.len() < b {
+                // take the last entry of this row whose column is free
+                if let Some(pos) = q
+                    .iter()
+                    .rposition(|&(j, _)| col_stamp[j as usize] != batch_id)
+                {
+                    let (j, r) = q.remove(pos);
+                    col_stamp[j as usize] = batch_id;
+                    batch.push((row, j, r));
+                }
+            }
+            if !q.is_empty() {
+                live[write] = row;
+                write += 1;
+            }
+        }
+        live.truncate(write);
+        debug_assert!(!batch.is_empty(), "no progress in batching");
+        remaining -= batch.len();
+        batches.push(batch);
+        batch_id = batch_id.wrapping_add(1);
+    }
+    batches
+}
+
+/// Train biased MF through the `mf_sgd_step` artifact.
+pub fn train_pjrt_sgd_logged(
+    rt: &mut Runtime,
+    csr: &Csr,
+    cfg: &PjrtSgdConfig,
+    rng: &mut Rng,
+) -> Result<(MfModel, TrainLog)> {
+    let b = rt.manifest.batch;
+    let f = rt.manifest.f;
+    let baselines = Baselines::compute(csr);
+    let mut model = MfModel::init(csr.nrows(), csr.ncols(), f, baselines.mu, rng);
+    model.bi = baselines.bi.clone();
+    model.bj = baselines.bj.clone();
+    let schedule = LearningSchedule { alpha: cfg.alpha, beta: cfg.beta };
+
+    let mut entries = csr.to_triples().entries().to_vec();
+    rng.shuffle(&mut entries);
+    let batches = conflict_free_batches(&entries, b);
+
+    // dense staging buffers reused across steps
+    let mut r_buf = vec![0f32; b];
+    let mut bi_buf = vec![0f32; b];
+    let mut bj_buf = vec![0f32; b];
+    let mut u_buf = vec![0f32; b * f];
+    let mut v_buf = vec![0f32; b * f];
+
+    let mut log = TrainLog::default();
+    let mut train_secs = 0f64;
+    for epoch in 0..cfg.epochs {
+        let gamma = schedule.rate(epoch);
+        let scal = mf_scalars(model.mu, gamma, cfg.lambda_b, cfg.lambda_u, cfg.lambda_v);
+        let t0 = std::time::Instant::now();
+        for batch in &batches {
+            // gather (pad = replicate entry 0, discarded on scatter)
+            for s in 0..b {
+                let &(i, j, r) = batch.get(s).unwrap_or(&batch[0]);
+                let (i, j) = (i as usize, j as usize);
+                r_buf[s] = r;
+                bi_buf[s] = model.bi[i];
+                bj_buf[s] = model.bj[j];
+                u_buf[s * f..(s + 1) * f].copy_from_slice(model.u.row(i));
+                v_buf[s * f..(s + 1) * f].copy_from_slice(model.v.row(j));
+            }
+            let out = rt.run_f32(
+                "mf_sgd_step",
+                &[
+                    (&scal, &[5]),
+                    (&r_buf, &[b]),
+                    (&bi_buf, &[b]),
+                    (&bj_buf, &[b]),
+                    (&u_buf, &[b, f]),
+                    (&v_buf, &[b, f]),
+                ],
+            )?;
+            // scatter (live slots only)
+            for (s, &(i, j, _)) in batch.iter().enumerate() {
+                let (i, j) = (i as usize, j as usize);
+                model.bi[i] = out[0][s];
+                model.bj[j] = out[1][s];
+                model.u.row_mut(i).copy_from_slice(&out[2][s * f..(s + 1) * f]);
+                model.v.row_mut(j).copy_from_slice(&out[3][s * f..(s + 1) * f]);
+            }
+        }
+        train_secs += t0.elapsed().as_secs_f64();
+        if !cfg.eval.is_empty() {
+            let rmse = pjrt_rmse(rt, &model, &cfg.eval)?;
+            log.push(epoch, train_secs, rmse);
+        }
+    }
+    if cfg.eval.is_empty() {
+        log.push(cfg.epochs.saturating_sub(1), train_secs, f64::NAN);
+    }
+    Ok((model, log))
+}
+
+/// Evaluate RMSE through the `rmse_chunk_step` artifact (padded + masked).
+pub fn pjrt_rmse(rt: &mut Runtime, model: &MfModel, test: &[(u32, u32, f32)]) -> Result<f64> {
+    if test.is_empty() {
+        return Ok(0.0);
+    }
+    let b = rt.manifest.batch;
+    let f = rt.manifest.f;
+    assert_eq!(model.f(), f, "model F must match the artifact");
+    let scal = mf_scalars(model.mu, 0.0, 0.0, 0.0, 0.0);
+    let mut sse = 0f64;
+    let mut count = 0f64;
+    let mut r_buf = vec![0f32; b];
+    let mut bi_buf = vec![0f32; b];
+    let mut bj_buf = vec![0f32; b];
+    let mut u_buf = vec![0f32; b * f];
+    let mut v_buf = vec![0f32; b * f];
+    let mut valid = vec![0f32; b];
+    for chunk in test.chunks(b) {
+        for s in 0..b {
+            let &(i, j, r) = chunk.get(s).unwrap_or(&(0, 0, 0.0));
+            let (i, j) = (i as usize, j as usize);
+            r_buf[s] = r;
+            bi_buf[s] = model.bi[i];
+            bj_buf[s] = model.bj[j];
+            u_buf[s * f..(s + 1) * f].copy_from_slice(model.u.row(i));
+            v_buf[s * f..(s + 1) * f].copy_from_slice(model.v.row(j));
+            valid[s] = if s < chunk.len() { 1.0 } else { 0.0 };
+        }
+        let out = rt.run_f32(
+            "rmse_chunk_step",
+            &[
+                (&scal, &[5]),
+                (&r_buf, &[b]),
+                (&bi_buf, &[b]),
+                (&bj_buf, &[b]),
+                (&u_buf, &[b, f]),
+                (&v_buf, &[b, f]),
+                (&valid, &[b]),
+            ],
+        )?;
+        sse += out[0][0] as f64;
+        count += out[0][1] as f64;
+    }
+    Ok((sse / count).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_conflict_free_and_complete() {
+        let mut rng = Rng::seeded(81);
+        let mut entries = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        while entries.len() < 500 {
+            let (i, j) = (rng.below(50) as u32, rng.below(40) as u32);
+            if seen.insert((i, j)) {
+                entries.push((i, j, rng.f32()));
+            }
+        }
+        let batches = conflict_free_batches(&entries, 32);
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, entries.len());
+        for batch in &batches {
+            assert!(batch.len() <= 32);
+            let rows: std::collections::HashSet<_> = batch.iter().map(|e| e.0).collect();
+            let cols: std::collections::HashSet<_> = batch.iter().map(|e| e.1).collect();
+            assert_eq!(rows.len(), batch.len(), "row conflict");
+            assert_eq!(cols.len(), batch.len(), "col conflict");
+        }
+    }
+
+    #[test]
+    fn single_hot_row_degenerates_gracefully() {
+        // every entry shares row 0: batches must all be singletons
+        let entries: Vec<(u32, u32, f32)> = (0..20).map(|j| (0, j, 1.0)).collect();
+        let batches = conflict_free_batches(&entries, 8);
+        assert_eq!(batches.len(), 20);
+        assert!(batches.iter().all(|b| b.len() == 1));
+    }
+}

@@ -1,0 +1,153 @@
+//! Mini property-testing framework (the offline image has no `proptest`).
+//!
+//! [`check`] runs a property against `cases` randomly generated inputs;
+//! on failure it re-runs the generator with a binary-search over the
+//! generator's *size budget* to report a smaller counterexample (sized
+//! shrinking rather than structural shrinking — enough to localize most
+//! failures), then panics with the seed so the case is reproducible.
+//!
+//! ```
+//! use lshmf::prop::{check, Gen};
+//! check("reverse twice is identity", 100, |g| {
+//!     let xs: Vec<u32> = g.vec(0..=64, |g| g.u32(0..1000));
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     ys == xs
+//! });
+//! ```
+
+use crate::rng::Rng;
+use std::ops::RangeInclusive;
+
+/// Input generator handed to properties: seeded randomness plus a size
+/// budget that shrinks on failure.
+pub struct Gen {
+    rng: Rng,
+    /// Scale in (0, 1]; generators multiply their max sizes by this.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::seeded(seed), size }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer in range, biased toward the low end as size shrinks.
+    pub fn usize(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.below(span.max(0) + 1)
+    }
+
+    pub fn u32(&mut self, range: std::ops::Range<u32>) -> u32 {
+        let span = ((range.end - range.start) as f64 * self.size).ceil() as u32;
+        range.start + (self.rng.below(span.max(1) as usize) as u32)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// A vector with size-scaled length.
+    pub fn vec<T>(&mut self, len: RangeInclusive<usize>, mut item: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| item(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Environment knob: `LSHMF_PROP_SEED` pins the base seed.
+fn base_seed() -> u64 {
+    std::env::var("LSHMF_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE)
+}
+
+/// Run `prop` against `cases` generated inputs. Panics on the first
+/// failure after attempting size-shrinking, reporting the failing seed.
+pub fn check(name: &str, cases: u32, prop: impl Fn(&mut Gen) -> bool) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ ((case as u64) << 17) ^ 0x9E37_79B9;
+        let mut g = Gen::new(seed, 1.0);
+        if prop(&mut g) {
+            continue;
+        }
+        // Shrink: find the smallest size in {1/16, 2/16, ...} that fails.
+        let mut failing_size = 1.0;
+        for step in 1..=16 {
+            let size = step as f64 / 16.0;
+            let mut g = Gen::new(seed, size);
+            if !prop(&mut g) {
+                failing_size = size;
+                break;
+            }
+        }
+        panic!(
+            "property `{name}` failed (case {case}, seed {seed:#x}, \
+             shrunk size {failing_size:.3}); rerun with LSHMF_PROP_SEED={base}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sort is idempotent", 50, |g| {
+            let mut xs = g.vec(0..=32, |g| g.u32(0..100));
+            xs.sort_unstable();
+            let once = xs.clone();
+            xs.sort_unstable();
+            xs == once
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| false);
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("usize in range", 100, |g| {
+            let x = g.usize(5..=10);
+            (5..=10).contains(&x)
+        });
+        check("u32 in range", 100, |g| {
+            let x = g.u32(3..30);
+            (3..30).contains(&x)
+        });
+        check("vec len in range", 100, |g| {
+            let v = g.vec(2..=8, |g| g.bool());
+            (2..=8).contains(&v.len())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_env_seed() {
+        // Same seed, same draws.
+        let mut a = Gen::new(1234, 1.0);
+        let mut b = Gen::new(1234, 1.0);
+        for _ in 0..32 {
+            assert_eq!(a.u32(0..1000), b.u32(0..1000));
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Zipf-distributed sampling for popularity-skewed synthetic datasets.
+//!
+//! Real rating matrices (Netflix, MovieLens, Yahoo!Music) have heavily
+//! skewed marginals: a few items collect most ratings. The paper's thread
+//! load-imbalance discussion (§5.2) only manifests under that skew, so the
+//! synthetic generators sample rows/columns from a Zipf(s) law.
+//!
+//! Implementation: Walker/Vose **alias method** — exact distribution, O(n)
+//! setup, O(1) per draw. Dataset generation draws ~|Ω| samples, so constant
+//! per-draw cost matters more than setup.
+
+use super::Rng;
+
+/// Discrete distribution over `{0, .., n-1}` sampled via the alias method.
+#[derive(Clone, Debug)]
+pub struct Alias {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl Alias {
+    /// Build from unnormalized non-negative weights.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one weight");
+        assert!(n <= u32::MAX as usize);
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "weights must sum to a positive finite value");
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            alias[s as usize] = l;
+            // large donor loses (1 - prob[s]) of its mass
+            prob[l as usize] -= 1.0 - prob[s as usize];
+            if prob[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Remaining entries are numerically == 1.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+            alias[i as usize] = i;
+        }
+        Alias { prob, alias }
+    }
+
+    /// Draw an index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+/// Zipf distribution over `{0, 1, ..., n-1}` with exponent `s > 0`:
+/// P(k) ∝ 1/(k+1)^s. Rank 0 is the most popular.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    table: Alias,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1, "Zipf needs n >= 1");
+        assert!(s > 0.0, "Zipf exponent must be positive");
+        let weights: Vec<f64> = (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect();
+        Zipf { table: Alias::new(&weights) }
+    }
+
+    /// Draw a rank in `[0, n)`.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        self.table.sample(rng)
+    }
+
+    pub fn n(&self) -> usize {
+        self.table.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alias_matches_weights() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let a = Alias::new(&w);
+        let mut r = Rng::seeded(1);
+        let n = 200_000;
+        let mut counts = [0f64; 4];
+        for _ in 0..n {
+            counts[a.sample(&mut r)] += 1.0;
+        }
+        let total: f64 = w.iter().sum();
+        for i in 0..4 {
+            let expect = w[i] / total;
+            let got = counts[i] / n as f64;
+            assert!((got - expect).abs() < 0.01, "i={i} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn alias_single_weight() {
+        let a = Alias::new(&[5.0]);
+        let mut r = Rng::seeded(2);
+        for _ in 0..10 {
+            assert_eq!(a.sample(&mut r), 0);
+        }
+    }
+
+    #[test]
+    fn in_range() {
+        let z = Zipf::new(100, 1.1);
+        let mut r = Rng::seeded(1);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 100);
+        }
+    }
+
+    #[test]
+    fn rank_zero_is_most_popular() {
+        let z = Zipf::new(1000, 1.2);
+        let mut r = Rng::seeded(2);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[100]);
+        let head: usize = counts[..10].iter().sum();
+        assert!(head > 30_000, "head mass {head}");
+    }
+
+    #[test]
+    fn skew_increases_with_s() {
+        let mut r = Rng::seeded(3);
+        let mut head_share = |s: f64, r: &mut Rng| {
+            let z = Zipf::new(500, s);
+            let mut c = vec![0usize; 500];
+            for _ in 0..50_000 {
+                c[z.sample(r)] += 1;
+            }
+            c[..5].iter().sum::<usize>()
+        };
+        let light = head_share(0.8, &mut r);
+        let heavy = head_share(1.8, &mut r);
+        assert!(heavy > light, "heavy={heavy} light={light}");
+    }
+
+    #[test]
+    fn zipf_marginal_matches_analytic() {
+        let n = 50;
+        let s = 1.3;
+        let z = Zipf::new(n, s);
+        let mut r = Rng::seeded(4);
+        let draws = 200_000;
+        let mut counts = vec![0f64; n];
+        for _ in 0..draws {
+            counts[z.sample(&mut r)] += 1.0;
+        }
+        let norm: f64 = (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).sum();
+        for k in [0usize, 1, 5, 20] {
+            let expect = 1.0 / ((k + 1) as f64).powf(s) / norm;
+            let got = counts[k] / draws as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "k={k} got={got} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn n_one_always_zero() {
+        let z = Zipf::new(1, 1.3);
+        let mut r = Rng::seeded(4);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut r), 0);
+        }
+    }
+}

@@ -1,0 +1,392 @@
+//! Minimal JSON parser for the AOT manifest (no serde offline).
+//!
+//! Full JSON value model (objects, arrays, strings with escapes, numbers,
+//! booleans, null) — small, recursive-descent, and fully tested. Only the
+//! manifest reader consumes it, but it is a general parser.
+
+use std::collections::BTreeMap;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse_json(text: &str) -> Result<Json, String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing garbage at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected `{}` at byte {}", c as char, pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        return Err("unexpected end of input".into());
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {pos}"))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or_else(|| format!("bad number at byte {start}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    break;
+                }
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 >= b.len() {
+                            return Err("bad \\u escape".into());
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .map_err(|_| "bad \\u escape")?;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => return Err(format!("bad escape \\{}", c as char)),
+                }
+                *pos += 1;
+            }
+            c => {
+                // handle multi-byte UTF-8 transparently
+                let s = &b[*pos..];
+                let ch_len = match c {
+                    0x00..=0x7f => 1,
+                    0xc0..=0xdf => 2,
+                    0xe0..=0xef => 3,
+                    _ => 4,
+                };
+                out.push_str(
+                    std::str::from_utf8(&s[..ch_len.min(s.len())])
+                        .map_err(|_| "bad utf8")?,
+                );
+                *pos += ch_len;
+            }
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == b',' {
+            *pos += 1;
+            continue;
+        }
+        expect(b, pos, b']')?;
+        return Ok(Json::Arr(items));
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect(b, pos, b'{')?;
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        map.insert(key, val);
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == b',' {
+            *pos += 1;
+            continue;
+        }
+        expect(b, pos, b'}')?;
+        return Ok(Json::Obj(map));
+    }
+}
+
+/// Typed view of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub f: usize,
+    pub k: usize,
+    pub hash_n: usize,
+    pub hash_m: usize,
+    pub hash_g: usize,
+    pub graphs: BTreeMap<String, GraphEntry>,
+    pub neural: NeuralMeta,
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphEntry {
+    pub file: String,
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// Parameter names for neural steps (empty otherwise).
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct NeuralMeta {
+    pub n_users: usize,
+    pub n_items: usize,
+    pub embed: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = parse_json(text)?;
+        let need = |k: &str| j.get(k).and_then(Json::as_usize).ok_or(format!("missing {k}"));
+        let mut graphs = BTreeMap::new();
+        for (name, entry) in j
+            .get("graphs")
+            .and_then(Json::as_obj)
+            .ok_or("missing graphs")?
+        {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or("graph missing file")?
+                .to_string();
+            let mut inputs = Vec::new();
+            for spec in entry.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape = spec
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                let dtype = spec
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string();
+                inputs.push((shape, dtype));
+            }
+            let mut params = Vec::new();
+            for p in entry.get("params").and_then(Json::as_arr).unwrap_or(&[]) {
+                let name = p.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                params.push((name, shape));
+            }
+            graphs.insert(name.clone(), GraphEntry { file, inputs, params });
+        }
+        let neural_j = j.get("neural");
+        let nm = |k: &str| {
+            neural_j
+                .and_then(|n| n.get(k))
+                .and_then(Json::as_usize)
+                .unwrap_or(0)
+        };
+        Ok(Manifest {
+            batch: need("batch")?,
+            f: need("f")?,
+            k: need("k")?,
+            hash_n: need("hash_n")?,
+            hash_m: need("hash_m")?,
+            hash_g: need("hash_g")?,
+            graphs,
+            neural: NeuralMeta {
+                n_users: nm("n_users"),
+                n_items: nm("n_items"),
+                embed: nm("embed"),
+                batch: nm("batch"),
+                eval_batch: nm("eval_batch"),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_arrays_objects() {
+        let j = parse_json(r#"{"a": 1.5, "b": [1, 2, 3], "c": {"d": "x"}, "e": true, "f": null}"#)
+            .unwrap();
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("b").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("c").unwrap().get("d").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("e"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("f"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let j = parse_json(r#"["a\nb", "q\"q", "A", "héllo"]"#).unwrap();
+        let a = j.as_arr().unwrap();
+        assert_eq!(a[0].as_str(), Some("a\nb"));
+        assert_eq!(a[1].as_str(), Some("q\"q"));
+        assert_eq!(a[2].as_str(), Some("A"));
+        assert_eq!(a[3].as_str(), Some("héllo"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1, 2,, 3]").is_err());
+        assert!(parse_json("{} extra").is_err());
+        assert!(parse_json(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let j = parse_json("[-1.5e3, 0.25, 7]").unwrap();
+        let a = j.as_arr().unwrap();
+        assert_eq!(a[0].as_f64(), Some(-1500.0));
+        assert_eq!(a[1].as_f64(), Some(0.25));
+        assert_eq!(a[2].as_usize(), Some(7));
+    }
+
+    #[test]
+    fn parses_manifest_shape() {
+        let text = r#"{
+            "format": "hlo-text", "batch": 1024, "f": 32, "k": 32,
+            "hash_n": 256, "hash_m": 512, "hash_g": 8,
+            "neural": {"n_users": 2048, "n_items": 1024, "embed": 16,
+                       "batch": 512, "eval_batch": 512},
+            "graphs": {
+                "mf_sgd_step": {"file": "mf_sgd_step.hlo.txt",
+                    "inputs": [{"shape": [5], "dtype": "float32"},
+                               {"shape": [1024], "dtype": "float32"}]},
+                "gmf_step": {"file": "gmf_step.hlo.txt",
+                    "inputs": [{"shape": [512], "dtype": "int32"}],
+                    "params": [{"name": "item", "shape": [1024, 16]}]}
+            }
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.batch, 1024);
+        assert_eq!(m.hash_g, 8);
+        assert_eq!(m.graphs["mf_sgd_step"].inputs[1].0, vec![1024]);
+        assert_eq!(m.graphs["gmf_step"].params[0].0, "item");
+        assert_eq!(m.neural.n_users, 2048);
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! Build-time python lowers every L2 graph to HLO **text** (see
+//! `python/compile/aot.py`); this module compiles those files on the PJRT
+//! CPU client once ([`Runtime::load`] caches executables by name) and
+//! exposes typed entry points whose buffers are plain `&[f32]` slices —
+//! the coordinator never touches XLA types.
+//!
+//! Python is never invoked here: after `make artifacts`, the rust binary
+//! is self-contained.
+
+pub mod manifest;
+
+pub use manifest::{GraphEntry, Manifest};
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded artifact bundle: PJRT client + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+impl Runtime {
+    /// Default artifact directory (next to the workspace root), overridable
+    /// with `LSHMF_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("LSHMF_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        // cargo test/bench runs with cwd = crate dir (rust/); the bundle
+        // lives at the workspace root.
+        for cand in ["artifacts", "../artifacts"] {
+            let p = PathBuf::from(cand);
+            if Self::available(&p) {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// True if the artifact bundle exists (tests skip PJRT paths if not).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    /// Open the bundle and create the PJRT CPU client. Executables are
+    /// compiled lazily on first use.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| Error::Runtime(format!("manifest: {e}")))?;
+        let manifest = Manifest::parse(&manifest_text).map_err(Error::Runtime)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, executables: HashMap::new() })
+    }
+
+    /// Compile (or fetch the cached) executable for a graph.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let entry = self
+                .manifest
+                .graphs
+                .get(name)
+                .ok_or_else(|| Error::Runtime(format!("unknown graph `{name}`")))?;
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xerr)?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute a graph on f32 inputs with the given shapes; returns the
+    /// flat f32 contents of every output leaf (jax lowers with
+    /// `return_tuple=True`, so the single result literal is a tuple).
+    pub fn run_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, shape)| Self::lit_f32(data, shape))
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(name, lits)
+    }
+
+    /// Execute with pre-built literals (used when inputs mix dtypes).
+    pub fn run_literals(
+        &mut self,
+        name: &str,
+        inputs: Vec<xla::Literal>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(&inputs).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let leaves = result.to_tuple().map_err(xerr)?;
+        leaves
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(xerr))
+            .collect()
+    }
+
+    /// Build an i32 literal (neural index inputs).
+    pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data).reshape(&dims).map_err(xerr)
+    }
+
+    /// Build an f32 literal.
+    pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data).reshape(&dims).map_err(xerr)
+    }
+}
+
+/// Scalar buffer layout for `mf_sgd_step` / `rmse_chunk_step`.
+pub fn mf_scalars(mu: f32, gamma: f32, lambda_b: f32, lambda_u: f32, lambda_v: f32) -> [f32; 5] {
+    [mu, gamma, lambda_b, lambda_u, lambda_v]
+}
+
+/// Scalar buffer layout for `culsh_sgd_step`.
+#[allow(clippy::too_many_arguments)]
+pub fn culsh_scalars(
+    mu: f32,
+    gamma: f32,
+    gamma_wc: f32,
+    lambda_b: f32,
+    lambda_u: f32,
+    lambda_v: f32,
+    lambda_w: f32,
+    lambda_c: f32,
+) -> [f32; 8] {
+    [mu, gamma, gamma_wc, lambda_b, lambda_u, lambda_v, lambda_w, lambda_c]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Artifact-gated: most runtime behaviour is exercised in
+    /// `rust/tests/runtime_parity.rs`; here we only check the negative
+    /// paths that need no PJRT.
+    #[test]
+    fn missing_dir_is_unavailable() {
+        assert!(!Runtime::available(Path::new("/nonexistent")));
+    }
+
+    #[test]
+    fn scalar_layouts() {
+        assert_eq!(mf_scalars(1., 2., 3., 4., 5.), [1., 2., 3., 4., 5.]);
+        let s = culsh_scalars(1., 2., 3., 4., 5., 6., 7., 8.);
+        assert_eq!(s[2], 3.0);
+        assert_eq!(s.len(), 8);
+    }
+}

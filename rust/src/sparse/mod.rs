@@ -1,0 +1,128 @@
+//! Sparse-matrix substrate: COO triples, CSR/CSC views, block partitions.
+//!
+//! The interaction matrix **R ∈ ℝ^{M×N}** (paper notation: rows are the
+//! `I` variable set, columns the `J` variable set) is stored as:
+//!
+//! * [`Triples`] — the raw (i, j, r) stream, the format produced by data
+//!   generators and consumed by the streaming coordinator;
+//! * [`Csr`] — row-compressed, the layout the row-wise SGD pass wants
+//!   (all `{r_ij | j ∈ Ω_i}` contiguous);
+//! * [`Csc`] — column-compressed, the layout the column-wise CULSH-MF
+//!   pass (Alg. 3) and the GSM/LSH neighbourhood constructions want
+//!   (all `{r_ij | i ∈ Ω̂_j}` contiguous);
+//! * [`BlockGrid`] — the D×D partition of Fig. 5 used by the multi-device
+//!   rotation scheduler.
+
+mod blocks;
+mod matrix;
+
+pub use blocks::{Block, BlockGrid};
+pub use matrix::{Csc, Csr, Triples};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn toy() -> Triples {
+        // 3x4 matrix:
+        //   [5 . 3 .]
+        //   [. 2 . .]
+        //   [1 . . 4]
+        Triples::from_entries(
+            3,
+            4,
+            vec![(0, 0, 5.0), (0, 2, 3.0), (1, 1, 2.0), (2, 0, 1.0), (2, 3, 4.0)],
+        )
+    }
+
+    #[test]
+    fn csr_rows() {
+        let csr = Csr::from_triples(&toy());
+        assert_eq!(csr.nrows(), 3);
+        assert_eq!(csr.ncols(), 4);
+        assert_eq!(csr.nnz(), 5);
+        let r0: Vec<_> = csr.row(0).collect();
+        assert_eq!(r0, vec![(0, 5.0), (2, 3.0)]);
+        let r1: Vec<_> = csr.row(1).collect();
+        assert_eq!(r1, vec![(1, 2.0)]);
+        let r2: Vec<_> = csr.row(2).collect();
+        assert_eq!(r2, vec![(0, 1.0), (3, 4.0)]);
+    }
+
+    #[test]
+    fn csc_cols() {
+        let csc = Csc::from_triples(&toy());
+        let c0: Vec<_> = csc.col(0).collect();
+        assert_eq!(c0, vec![(0, 5.0), (2, 1.0)]);
+        let c3: Vec<_> = csc.col(3).collect();
+        assert_eq!(c3, vec![(2, 4.0)]);
+        assert_eq!(csc.col(1).count(), 1);
+    }
+
+    #[test]
+    fn csr_csc_roundtrip() {
+        let mut rng = Rng::seeded(5);
+        let mut entries = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            let i = rng.below(40);
+            let j = rng.below(60);
+            if seen.insert((i, j)) {
+                entries.push((i as u32, j as u32, rng.f32() * 5.0));
+            }
+        }
+        let t = Triples::from_entries(40, 60, entries.clone());
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        // Every entry must appear in both views.
+        for &(i, j, r) in &entries {
+            assert!(csr.row(i as usize).any(|(jj, rr)| jj == j as usize && rr == r));
+            assert!(csc.col(j as usize).any(|(ii, rr)| ii == i as usize && rr == r));
+        }
+        assert_eq!(csr.nnz(), entries.len());
+        assert_eq!(csc.nnz(), entries.len());
+    }
+
+    #[test]
+    fn csr_to_triples_roundtrip() {
+        let t = toy();
+        let csr = Csr::from_triples(&t);
+        let back = csr.to_triples();
+        let mut a = t.entries().to_vec();
+        let mut b = back.entries().to_vec();
+        a.sort_by_key(|&(i, j, _)| (i, j));
+        b.sort_by_key(|&(i, j, _)| (i, j));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mean_and_counts() {
+        let csr = Csr::from_triples(&toy());
+        assert!((csr.mean() - 3.0).abs() < 1e-6);
+        assert_eq!(csr.row_nnz(0), 2);
+        assert_eq!(csr.row_nnz(1), 1);
+    }
+
+    #[test]
+    fn block_grid_covers_everything() {
+        let t = toy();
+        let grid = BlockGrid::partition(&t, 2);
+        let total: usize = grid.blocks().iter().map(|b| b.entries.len()).sum();
+        assert_eq!(total, t.nnz());
+        for b in grid.blocks() {
+            for &(i, j, _) in &b.entries {
+                assert!(grid.row_owner(i as usize) == b.row_band);
+                assert!(grid.col_owner(j as usize) == b.col_band);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let t = Triples::from_entries(5, 5, vec![(4, 4, 1.0)]);
+        let csr = Csr::from_triples(&t);
+        assert_eq!(csr.row(0).count(), 0);
+        assert_eq!(csr.row(4).count(), 1);
+    }
+}

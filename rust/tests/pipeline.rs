@@ -1,0 +1,260 @@
+//! Cross-module integration tests: the whole L3 pipeline on structured
+//! synthetic data.
+
+use lshmf::data::synth::SynthConfig;
+use lshmf::gsm::Gsm;
+use lshmf::lsh::{MinHash, NeighbourSearch, RandNeighbours, RpCos, SimLsh};
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::mf::sgd::{train_sgd_logged, SgdConfig};
+use lshmf::rng::Rng;
+use lshmf::sparse::{Csc, Csr, Triples};
+
+/// Clustered low-rank data where neighbourhoods are real.
+fn clustered(rng: &mut Rng, m: usize, n: usize, clusters: usize) -> (Csr, Csc, Vec<(u32, u32, f32)>) {
+    let d = 3;
+    let a: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+    let cent: Vec<f32> = (0..clusters * d).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+    let mut vprof = vec![0f32; n * d];
+    for j in 0..n {
+        let cl = j % clusters;
+        for x in 0..d {
+            vprof[j * d + x] = cent[cl * d + x] + rng.normal_f32(0.0, 0.1);
+        }
+    }
+    let mut t = Triples::new(m, n);
+    let mut test = Vec::new();
+    for j in 0..n {
+        for i in 0..m {
+            if rng.chance(0.35) {
+                let dot: f32 = (0..d).map(|x| a[i * d + x] * vprof[j * d + x]).sum();
+                let v = (2.75 + dot + rng.normal_f32(0.0, 0.25)).clamp(0.5, 5.0);
+                if rng.chance(0.9) {
+                    t.push(i, j, v);
+                } else {
+                    test.push((i as u32, j as u32, v));
+                }
+            }
+        }
+    }
+    (Csr::from_triples(&t), Csc::from_triples(&t), test)
+}
+
+/// simLSH must pick *meaningfully better-than-random* neighbours at a
+/// fraction of the GSM's memory. (Recall against the exact GSM is modest
+/// by design — an 8-bit sign sketch over sparse supports only surfaces
+/// the strongest pairs; the paper's Fig. 7 claim is end-model RMSE
+/// parity, which `culsh_descends_faster_than_plain_sgd` plus the Table 7
+/// bench cover. Here we assert neighbour *quality*: the mean GSM
+/// similarity of simLSH-chosen neighbours must far exceed random's.)
+#[test]
+fn simlsh_picks_better_than_random_neighbours() {
+    let mut rng = Rng::seeded(201);
+    let (csr, csc, _) = clustered(&mut rng, 150, 60, 10);
+    let k = 6;
+    let gsm = Gsm::new(20.0);
+    let (sims, _) = gsm.similarities(&csr, &mut rng);
+    let mean_sim = |topk: &lshmf::lsh::TopK| -> f64 {
+        let mut acc = 0.0;
+        let mut cnt = 0usize;
+        for j in 0..topk.n() {
+            for &nb in topk.neighbours(j) {
+                acc += sims[j].get(&nb).map(|ps| ps.similarity).unwrap_or(0.0);
+                cnt += 1;
+            }
+        }
+        acc / cnt as f64
+    };
+    // centered Ψ is the strongest variant on this dense-ish fixture
+    let (sim_topk, sim_cost) = SimLsh::new(1, 60, 8, 2)
+        .centered(2.75)
+        .build(&csc, k, &mut rng);
+    let (rand_topk, _) = RandNeighbours.build(&csc, k, &mut rng);
+    let (gsm_topk, gsm_cost) = Gsm::new(20.0).build(&csc, k, &mut rng);
+
+    let q_sim = mean_sim(&sim_topk);
+    let q_rand = mean_sim(&rand_topk);
+    let q_gsm = mean_sim(&gsm_topk);
+    assert!(
+        q_sim > q_rand * 1.5 && q_sim > q_rand + 0.02,
+        "simLSH quality {q_sim:.4} vs random {q_rand:.4} (gsm {q_gsm:.4})"
+    );
+    // and the LSH memory cost must be far below the GSM's
+    assert!(
+        sim_cost.bytes < gsm_cost.bytes,
+        "simLSH {} bytes vs GSM {} bytes",
+        sim_cost.bytes,
+        gsm_cost.bytes
+    );
+}
+
+/// Same-cluster columns should be over-represented in value-aware
+/// engines' Top-K lists; minHash (support-only) and the random control
+/// must trail simLSH — the paper's motivation for simLSH over minHash.
+#[test]
+fn engines_find_cluster_structure() {
+    let mut rng = Rng::seeded(202);
+    let clusters = 10;
+    // denser fixture: per-bit correlation needs support overlap to show
+    let (_, csc, _) = clustered_dense(&mut rng, 150, 60, clusters, 0.6, 0.15);
+    let k = 4;
+    let same_cluster_rate = |topk: &lshmf::lsh::TopK| -> f64 {
+        let mut hits = 0;
+        let mut total = 0;
+        for j in 0..topk.n() {
+            for &nb in topk.neighbours(j) {
+                total += 1;
+                if nb as usize % clusters == j % clusters {
+                    hits += 1;
+                }
+            }
+        }
+        hits as f64 / total as f64
+    };
+    let chance = 1.0 / clusters as f64;
+
+    let (sim, _) = SimLsh::new(1, 60, 8, 2).build(&csc, k, &mut rng);
+    let (simc, _) = SimLsh::new(1, 60, 8, 2).centered(2.75).build(&csc, k, &mut rng);
+    let (mh, _) = MinHash::new(2, 40).build(&csc, k, &mut rng);
+    let (rnd, _) = RandNeighbours.build(&csc, k, &mut rng);
+
+    let (r_sim, r_simc, r_mh, r_rnd) = (
+        same_cluster_rate(&sim),
+        same_cluster_rate(&simc),
+        same_cluster_rate(&mh),
+        same_cluster_rate(&rnd),
+    );
+    assert!(r_sim > 1.7 * chance, "simLSH {r_sim}");
+    assert!(r_simc >= r_sim - 0.02, "centered {r_simc} vs plain {r_sim}");
+    // minHash sees only supports — clusters share VALUE structure, not
+    // support structure, so it must trail simLSH (the paper's point).
+    assert!(r_mh < r_sim, "minHash {r_mh} vs simLSH {r_sim}");
+    assert!(r_rnd < 1.5 * chance, "random {r_rnd}");
+    let _ = RpCos::new(1, 1, 1); // keep the import exercised
+}
+
+/// Denser variant of the fixture for hash-signal tests.
+#[allow(clippy::too_many_arguments)]
+fn clustered_dense(
+    rng: &mut Rng,
+    m: usize,
+    n: usize,
+    clusters: usize,
+    density: f64,
+    noise: f32,
+) -> (Csr, Csc, Vec<(u32, u32, f32)>) {
+    let d = 3;
+    let a: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+    let cent: Vec<f32> = (0..clusters * d).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+    let mut vprof = vec![0f32; n * d];
+    for j in 0..n {
+        let cl = j % clusters;
+        for x in 0..d {
+            vprof[j * d + x] = cent[cl * d + x] + rng.normal_f32(0.0, 0.1);
+        }
+    }
+    let mut t = Triples::new(m, n);
+    for j in 0..n {
+        for i in 0..m {
+            if rng.chance(density) {
+                let dot: f32 = (0..d).map(|x| a[i * d + x] * vprof[j * d + x]).sum();
+                let v = (2.75 + dot + rng.normal_f32(0.0, noise)).clamp(0.5, 5.0);
+                t.push(i, j, v);
+            }
+        }
+    }
+    (Csr::from_triples(&t), Csc::from_triples(&t), Vec::new())
+}
+
+/// CULSH-MF with simLSH neighbours must beat plain biased SGD at a small
+/// epoch budget on clustered data (the Fig. 10 shape).
+#[test]
+fn culsh_descends_faster_than_plain_sgd() {
+    let mut rng = Rng::seeded(203);
+    let (csr, csc, test) = clustered(&mut rng, 120, 60, 10);
+    let (topk, _) = SimLsh::new(2, 30, 8, 2).build(&csc, 8, &mut rng);
+    let epochs = 8;
+    let culsh_cfg = CulshConfig {
+        f: 8,
+        k: 8,
+        epochs,
+        alpha: 0.04,
+        alpha_wc: 0.01,
+        beta: 0.02,
+        lambda_u: 0.01,
+        lambda_v: 0.01,
+        lambda_b: 0.01,
+        eval: test.clone(),
+        ..Default::default()
+    };
+    let (_, culsh) = train_culsh_logged(&csr, topk, &culsh_cfg, &mut Rng::seeded(1));
+    let sgd_cfg = SgdConfig {
+        f: 8,
+        epochs,
+        alpha: 0.04,
+        beta: 0.02,
+        lambda_u: 0.01,
+        lambda_v: 0.01,
+        lambda_b: 0.01,
+        eval: test,
+        ..Default::default()
+    };
+    let (_, sgd) = train_sgd_logged(&csr, &sgd_cfg, &mut Rng::seeded(1));
+    assert!(
+        culsh.final_rmse() <= sgd.final_rmse() + 0.02,
+        "culsh {} vs sgd {}",
+        culsh.final_rmse(),
+        sgd.final_rmse()
+    );
+}
+
+/// The synthetic Table 2 generators hit their calibrated shapes.
+#[test]
+fn synth_generators_match_table2_shapes() {
+    for (cfg, m, n) in [
+        (SynthConfig::netflix_like(), 480_189, 17_770),
+        (SynthConfig::movielens_like(), 69_878, 10_677),
+        (SynthConfig::yahoo_like(), 586_250, 12_658),
+    ] {
+        assert_eq!(cfg.nrows, m);
+        assert_eq!(cfg.ncols, n);
+    }
+    // generation at small scale preserves the rating range
+    let mut rng = Rng::seeded(204);
+    let ds = lshmf::data::synth::generate(&SynthConfig::yahoo_like().scaled(0.01), &mut rng);
+    assert!(ds.max_value <= 100.0 && ds.min_value >= 0.5);
+    assert!(ds.nnz() > 1000);
+}
+
+/// End-to-end config-driven run through the CLI helpers (the same path
+/// `lshmf train` takes).
+#[test]
+fn cli_train_path_end_to_end() {
+    let cfg = lshmf::config::ExperimentConfig::from_str(
+        r#"
+[dataset]
+kind = "movielens"
+scale = 0.012
+seed = 77
+
+[model]
+f = 8
+k = 8
+
+[trainer]
+kind = "culsh"
+epochs = 3
+threads = 2
+
+[lsh]
+kind = "simlsh"
+p = 2
+q = 6
+"#,
+    )
+    .unwrap();
+    let mut rng = Rng::seeded(cfg.dataset.seed);
+    let ds = lshmf::cli::commands::build_dataset(&cfg, &mut rng).unwrap();
+    let log = lshmf::cli::commands::run_trainer(&cfg, &ds, &mut rng).unwrap();
+    assert!(log.final_rmse().is_finite());
+    assert!(log.points.len() == 3);
+}

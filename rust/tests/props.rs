@@ -1,0 +1,173 @@
+//! Property tests on coordinator and substrate invariants, via the
+//! in-repo `lshmf::prop` mini-framework (proptest is unavailable offline).
+
+use lshmf::coordinator::rotation::RotationPlan;
+use lshmf::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
+use lshmf::prop::{check, Gen};
+use lshmf::sparse::{BlockGrid, Csc, Csr, Triples};
+
+fn gen_triples(g: &mut Gen, max_m: usize, max_n: usize, max_nnz: usize) -> Triples {
+    let m = g.usize(2..=max_m);
+    let n = g.usize(2..=max_n);
+    let nnz = g.usize(1..=max_nnz);
+    let mut t = Triples::new(m, n);
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..nnz {
+        let (i, j) = (g.rng().below(m), g.rng().below(n));
+        if seen.insert((i, j)) {
+            t.push(i, j, 0.5 + g.rng().f32() * 4.5);
+        }
+    }
+    t
+}
+
+/// The rotation schedule is a Latin square for every D and matrix shape.
+#[test]
+fn prop_rotation_schedule_is_latin_square() {
+    check("rotation is latin square", 60, |g| {
+        let t = gen_triples(g, 60, 60, 300);
+        let d = g.usize(1..=6);
+        RotationPlan::new(&t, d).validate().is_ok()
+    });
+}
+
+/// CSR and CSC views agree entry-for-entry with the source triples.
+#[test]
+fn prop_csr_csc_roundtrip() {
+    check("csr/csc roundtrip", 60, |g| {
+        let t = gen_triples(g, 40, 40, 250);
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        if csr.nnz() != t.nnz() || csc.nnz() != t.nnz() {
+            return false;
+        }
+        t.entries().iter().all(|&(i, j, r)| {
+            csr.row(i as usize).any(|(jj, rr)| jj == j as usize && rr == r)
+                && csc.col(j as usize).any(|(ii, rr)| ii == i as usize && rr == r)
+        })
+    });
+}
+
+/// Block partitions cover every entry exactly once, for any D.
+#[test]
+fn prop_block_grid_partitions() {
+    check("block grid partitions", 60, |g| {
+        let t = gen_triples(g, 50, 50, 300);
+        let d = g.usize(1..=5);
+        let grid = BlockGrid::partition(&t, d);
+        let total: usize = grid.blocks().iter().map(|b| b.entries.len()).sum();
+        total == t.nnz()
+    });
+}
+
+/// Top-K rows are always exactly K, self-free and duplicate-free.
+#[test]
+fn prop_topk_invariants() {
+    check("topk invariants", 25, |g| {
+        let t = gen_triples(g, 40, 30, 200);
+        let n = t.ncols();
+        if n < 3 {
+            return true;
+        }
+        let csc = Csc::from_triples(&t);
+        let k = g.usize(1..=(n - 1).min(8));
+        let q = g.usize(1..=6);
+        let mut lsh = SimLsh::new(g.usize(1..=2), q, 8, 2);
+        let (topk, _) = lsh.build(&csc, k, g.rng());
+        (0..n).all(|j| {
+            let nb = topk.neighbours(j);
+            let set: std::collections::HashSet<_> = nb.iter().collect();
+            nb.len() == k
+                && set.len() == k
+                && nb.iter().all(|&c| (c as usize) < n && c as usize != j)
+        })
+    });
+}
+
+/// Online hash absorption ≡ from-scratch build (up to fp rounding at
+/// near-zero accumulators) for arbitrary splits.
+#[test]
+fn prop_online_hash_matches_rebuild() {
+    check("online hash == rebuild", 15, |g| {
+        let full = gen_triples(g, 30, 15, 150);
+        if full.nnz() < 4 {
+            return true;
+        }
+        // random split point over columns/rows
+        let base_rows = g.usize(1..=full.nrows());
+        let base_cols = g.usize(1..=full.ncols());
+        let mut base = Triples::new(base_rows, base_cols);
+        let mut inc = Vec::new();
+        for &(i, j, r) in full.entries() {
+            if (i as usize) < base_rows && (j as usize) < base_cols {
+                base.push(i as usize, j as usize, r);
+            } else {
+                inc.push((i, j, r));
+            }
+        }
+        let lsh = SimLsh { p: 1, q: 4, g: 8, psi_power: 2, center: 0.0, seed: 7 };
+        let mut online = OnlineHashState::build(lsh.clone(), &Csc::from_triples(&base));
+        online.apply_increment(&inc, full.ncols());
+        let scratch = OnlineHashState::build(lsh, &Csc::from_triples(&full));
+        let mut flips = 0;
+        let mut total = 0;
+        for round in 0..4 {
+            for j in 0..full.ncols() {
+                total += 1;
+                if online.hash(round, 0, j) != scratch.hash(round, 0, j) {
+                    flips += 1;
+                }
+            }
+        }
+        flips * 50 <= total // ≤ 2% near-zero sign flips tolerated
+    });
+}
+
+/// The TOML-subset parser round-trips what the config writer would emit.
+#[test]
+fn prop_config_parser_roundtrip() {
+    check("config roundtrip", 100, |g| {
+        let f = g.usize(1..=256);
+        let k = g.usize(1..=256);
+        let scale = (g.usize(1..=100) as f64) / 100.0;
+        let epochs = g.usize(1..=500);
+        let text = format!(
+            "[model]\nf = {f}\nk = {k}\n[dataset]\nscale = {scale}\n[trainer]\nepochs = {epochs}\n"
+        );
+        let cfg = lshmf::config::ExperimentConfig::from_str(&text).unwrap();
+        cfg.model.f == f
+            && cfg.model.k == k
+            && (cfg.dataset.scale - scale).abs() < 1e-12
+            && cfg.trainer.epochs == epochs
+    });
+}
+
+/// Baselines: weighted row deviations always sum to ~zero.
+#[test]
+fn prop_baseline_deviations_balance() {
+    check("baseline deviations balance", 50, |g| {
+        let t = gen_triples(g, 30, 30, 200);
+        if t.nnz() == 0 {
+            return true;
+        }
+        let csr = Csr::from_triples(&t);
+        let b = lshmf::mf::Baselines::compute(&csr);
+        let weighted: f64 = (0..csr.nrows())
+            .map(|i| csr.row_nnz(i) as f64 * b.bi[i] as f64)
+            .sum();
+        weighted.abs() < 1e-2 * t.nnz() as f64
+    });
+}
+
+/// Virtual clock: speedup is within [1/D overhead floor, D] and the
+/// serial total is schedule-independent.
+#[test]
+fn prop_virtual_clock_bounds() {
+    check("virtual clock bounds", 40, |g| {
+        let t = gen_triples(g, 60, 60, 400);
+        let d = g.usize(1..=5);
+        let plan = RotationPlan::new(&t, d);
+        let r = plan.virtual_clock(1e-7, 1e-7, true);
+        r.speedup > 0.0 && r.speedup <= d as f64 + 1e-9 && r.serial_seconds >= 0.0
+    });
+}

@@ -1,0 +1,269 @@
+//! Artifact-gated integration tests: the AOT graphs (Pallas/JAX lowered to
+//! HLO, executed through PJRT) must agree numerically with the rust-native
+//! math that the L3 trainers use.
+//!
+//! Skipped (pass trivially with a note) when `artifacts/` has not been
+//! built; `make test` always builds it first.
+
+use lshmf::rng::Rng;
+use lshmf::runtime::{culsh_scalars, mf_scalars, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("artifacts not built; skipping PJRT parity test");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open runtime"))
+}
+
+fn randn(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+}
+
+#[test]
+fn mf_sgd_step_matches_native_math() {
+    let Some(mut rt) = runtime() else { return };
+    let (b, f) = (rt.manifest.batch, rt.manifest.f);
+    let mut rng = Rng::seeded(101);
+    let scal = mf_scalars(3.0, 0.01, 0.02, 0.03, 0.04);
+    let r: Vec<f32> = (0..b).map(|_| 3.0 + rng.normal_f32(0.0, 1.0)).collect();
+    let bi = randn(&mut rng, b, 0.1);
+    let bj = randn(&mut rng, b, 0.1);
+    let u = randn(&mut rng, b * f, 0.1);
+    let v = randn(&mut rng, b * f, 0.1);
+
+    let out = rt
+        .run_f32(
+            "mf_sgd_step",
+            &[
+                (&scal, &[5]),
+                (&r, &[b]),
+                (&bi, &[b]),
+                (&bj, &[b]),
+                (&u, &[b, f]),
+                (&v, &[b, f]),
+            ],
+        )
+        .expect("execute");
+    assert_eq!(out.len(), 5, "bi', bj', u', v', e");
+
+    // native Eq. (5) math
+    for s in 0..b {
+        let dot: f32 = (0..f).map(|k| u[s * f + k] * v[s * f + k]).sum();
+        let pred = 3.0 + bi[s] + bj[s] + dot;
+        let e = r[s] - pred;
+        assert!((out[4][s] - e).abs() < 1e-4, "e mismatch at {s}");
+        let bi_new = bi[s] + 0.01 * (e - 0.02 * bi[s]);
+        assert!((out[0][s] - bi_new).abs() < 1e-4);
+        for k in 0..f {
+            let u_new = u[s * f + k] + 0.01 * (e * v[s * f + k] - 0.03 * u[s * f + k]);
+            let v_new = v[s * f + k] + 0.01 * (e * u[s * f + k] - 0.04 * v[s * f + k]);
+            assert!((out[2][s * f + k] - u_new).abs() < 1e-4);
+            assert!((out[3][s * f + k] - v_new).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn culsh_sgd_step_matches_native_math() {
+    let Some(mut rt) = runtime() else { return };
+    let (b, f, k) = (rt.manifest.batch, rt.manifest.f, rt.manifest.k);
+    let mut rng = Rng::seeded(102);
+    let scal = culsh_scalars(3.0, 0.02, 0.005, 0.01, 0.01, 0.01, 0.002, 0.002);
+    let r: Vec<f32> = (0..b).map(|_| 3.0 + rng.normal_f32(0.0, 1.0)).collect();
+    let bi = randn(&mut rng, b, 0.1);
+    let bj = randn(&mut rng, b, 0.1);
+    let u = randn(&mut rng, b * f, 0.1);
+    let v = randn(&mut rng, b * f, 0.1);
+    let w = randn(&mut rng, b * k, 0.1);
+    let c = randn(&mut rng, b * k, 0.1);
+    let resid = randn(&mut rng, b * k, 0.5);
+    let mask: Vec<f32> = (0..b * k).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect();
+
+    let out = rt
+        .run_f32(
+            "culsh_sgd_step",
+            &[
+                (&scal, &[8]),
+                (&r, &[b]),
+                (&bi, &[b]),
+                (&bj, &[b]),
+                (&u, &[b, f]),
+                (&v, &[b, f]),
+                (&w, &[b, k]),
+                (&c, &[b, k]),
+                (&resid, &[b, k]),
+                (&mask, &[b, k]),
+            ],
+        )
+        .expect("execute");
+    assert_eq!(out.len(), 7);
+
+    for s in (0..b).step_by(37) {
+        let dot: f32 = (0..f).map(|x| u[s * f + x] * v[s * f + x]).sum();
+        let n_r: f32 = (0..k).map(|x| mask[s * k + x]).sum();
+        let n_n = k as f32 - n_r;
+        let scale_r = if n_r > 0.0 { 1.0 / n_r.sqrt() } else { 0.0 };
+        let scale_n = if n_n > 0.0 { 1.0 / n_n.sqrt() } else { 0.0 };
+        let explicit: f32 = (0..k)
+            .map(|x| mask[s * k + x] * resid[s * k + x] * w[s * k + x])
+            .sum();
+        let implicit: f32 = (0..k).map(|x| (1.0 - mask[s * k + x]) * c[s * k + x]).sum();
+        let pred = 3.0 + bi[s] + bj[s] + dot + scale_r * explicit + scale_n * implicit;
+        let e = r[s] - pred;
+        assert!(
+            (out[6][s] - e).abs() < 2e-4,
+            "e mismatch at {s}: {} vs {e}",
+            out[6][s]
+        );
+        // spot-check w update
+        for x in 0..k {
+            let m = mask[s * k + x];
+            let w_new = w[s * k + x]
+                + 0.005 * (m * e * scale_r * resid[s * k + x] - 0.002 * m * w[s * k + x]);
+            assert!(
+                (out[4][s * k + x] - w_new).abs() < 2e-4,
+                "w mismatch at ({s},{x})"
+            );
+        }
+    }
+}
+
+#[test]
+fn rmse_chunk_matches_native() {
+    let Some(mut rt) = runtime() else { return };
+    let (b, f) = (rt.manifest.batch, rt.manifest.f);
+    let mut rng = Rng::seeded(103);
+    let scal = mf_scalars(3.0, 0.0, 0.0, 0.0, 0.0);
+    let r: Vec<f32> = (0..b).map(|_| 3.0 + rng.normal_f32(0.0, 1.0)).collect();
+    let bi = randn(&mut rng, b, 0.1);
+    let bj = randn(&mut rng, b, 0.1);
+    let u = randn(&mut rng, b * f, 0.1);
+    let v = randn(&mut rng, b * f, 0.1);
+    let mut valid = vec![1.0f32; b];
+    for x in valid.iter_mut().skip(b - 100) {
+        *x = 0.0;
+    }
+    let out = rt
+        .run_f32(
+            "rmse_chunk_step",
+            &[
+                (&scal, &[5]),
+                (&r, &[b]),
+                (&bi, &[b]),
+                (&bj, &[b]),
+                (&u, &[b, f]),
+                (&v, &[b, f]),
+                (&valid, &[b]),
+            ],
+        )
+        .expect("execute");
+    let (sse, count) = (out[0][0], out[0][1]);
+    assert_eq!(count as usize, b - 100);
+    let mut want = 0f64;
+    for s in 0..b - 100 {
+        let dot: f32 = (0..f).map(|x| u[s * f + x] * v[s * f + x]).sum();
+        let e = (r[s] - (3.0 + bi[s] + bj[s] + dot)) as f64;
+        want += e * e;
+    }
+    assert!(
+        (sse as f64 - want).abs() / want < 1e-4,
+        "sse {sse} vs {want}"
+    );
+}
+
+#[test]
+fn simlsh_hash_block_matches_rust_hasher_semantics() {
+    let Some(mut rt) = runtime() else { return };
+    let (n, m, g) = (rt.manifest.hash_n, rt.manifest.hash_m, rt.manifest.hash_g);
+    let mut rng = Rng::seeded(104);
+    // dense Ψ-weighted block with ~90% zeros (sparse-like)
+    let mut x = vec![0f32; n * m];
+    for v in x.iter_mut() {
+        if rng.chance(0.1) {
+            *v = (1.0 + rng.f32() * 4.0).powi(2);
+        }
+    }
+    let phi: Vec<f32> = (0..m * g).map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 }).collect();
+    let out = rt
+        .run_f32("simlsh_hash_block", &[(&x, &[n, m]), (&phi, &[m, g])])
+        .expect("execute");
+    let bits = &out[0];
+    assert_eq!(bits.len(), n * g);
+    for row in (0..n).step_by(17) {
+        for bit in 0..g {
+            let acc: f32 = (0..m).map(|i| x[row * m + i] * phi[i * g + bit]).sum();
+            let want = if acc >= 0.0 { 1.0 } else { 0.0 };
+            assert_eq!(bits[row * g + bit], want, "bit ({row},{bit}), acc={acc}");
+        }
+    }
+}
+
+#[test]
+fn neural_gmf_step_trains_through_pjrt() {
+    let Some(mut rt) = runtime() else { return };
+    if !rt.manifest.graphs.contains_key("gmf_step") {
+        eprintln!("neural graphs not exported; skipping");
+        return;
+    }
+    let meta = rt.manifest.neural.clone();
+    let params_spec = rt.manifest.graphs["gmf_step"].params.clone();
+    let n = params_spec.len();
+    let mut rng = Rng::seeded(105);
+    // init params in the manifest's declared order; Adam moments at zero
+    let mut params: Vec<Vec<f32>> = params_spec
+        .iter()
+        .map(|(_, shape)| {
+            let len: usize = shape.iter().product();
+            randn(&mut rng, len, 0.3)
+        })
+        .collect();
+    let mut m_state: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut v_state: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    // memorizable batch: 32 pairs tiled
+    let bsz = meta.batch;
+    let mut users = vec![0i32; bsz];
+    let mut items = vec![0i32; bsz];
+    let mut labels = vec![0f32; bsz];
+    for s in 0..bsz {
+        let p = s % 32;
+        users[s] = (p * 7 % meta.n_users) as i32;
+        items[s] = (p * 13 % meta.n_items) as i32;
+        labels[s] = (p % 2) as f32;
+    }
+    let mut first_loss = None;
+    let mut last_loss = 0f32;
+    for step in 1..=100i32 {
+        let t = [step as f32];
+        let mut lits = vec![
+            Runtime::lit_i32(&users, &[bsz]).unwrap(),
+            Runtime::lit_i32(&items, &[bsz]).unwrap(),
+            Runtime::lit_f32(&labels, &[bsz]).unwrap(),
+            Runtime::lit_f32(&t, &[1]).unwrap(),
+        ];
+        for bank in [&params, &m_state, &v_state] {
+            for (p, (_, shape)) in bank.iter().zip(&params_spec) {
+                lits.push(Runtime::lit_f32(p, shape).unwrap());
+            }
+        }
+        let out = rt.run_literals("gmf_step", lits).expect("execute");
+        // outputs: params..., m..., v..., loss
+        for (dst, src) in params.iter_mut().zip(&out[..n]) {
+            dst.copy_from_slice(src);
+        }
+        for (dst, src) in m_state.iter_mut().zip(&out[n..2 * n]) {
+            dst.copy_from_slice(src);
+        }
+        for (dst, src) in v_state.iter_mut().zip(&out[2 * n..3 * n]) {
+            dst.copy_from_slice(src);
+        }
+        last_loss = out[3 * n][0];
+        first_loss.get_or_insert(last_loss);
+    }
+    let first = first_loss.unwrap();
+    assert!(
+        last_loss < first * 0.7,
+        "loss did not drop: {first} -> {last_loss}"
+    );
+}
