@@ -1,0 +1,30 @@
+#!/usr/bin/env sh
+# Tier-1 gate plus lints. Build + tests are hard failures; fmt/clippy are
+# advisory until the pre-existing tree is formatted (flip STRICT_LINTS=1
+# to gate on them).
+set -eu
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo build --examples --release"
+cargo build --examples --release
+
+lint_status=0
+echo "==> cargo fmt --check"
+cargo fmt --check || lint_status=1
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings || lint_status=1
+
+if [ "${STRICT_LINTS:-0}" = "1" ] && [ "$lint_status" -ne 0 ]; then
+    echo "lints failed (STRICT_LINTS=1)"
+    exit 1
+elif [ "$lint_status" -ne 0 ]; then
+    echo "WARNING: fmt/clippy reported issues (advisory; set STRICT_LINTS=1 to gate)"
+fi
+
+echo "ci.sh: OK"

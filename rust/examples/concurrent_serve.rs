@@ -1,0 +1,155 @@
+//! Concurrent serving scenario: train CULSH-MF, stand the pooled TCP
+//! server up on a local port, then hammer it with parallel reader
+//! connections while a writer connection streams live ratings through
+//! the single-writer online path.
+//!
+//! Demonstrates the tentpole serving property: `PREDICT`/`TOPN` latency
+//! stays flat *during* flushes because readers run on epoch-swapped
+//! snapshots and never wait for the online update.
+//!
+//! Run with: `cargo run --release --example concurrent_serve`
+
+use lshmf::coordinator::server;
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
+use lshmf::data::synth::{generate, SynthConfig};
+use lshmf::lsh::{OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const READERS: usize = 4;
+const REQUESTS_PER_READER: usize = 400;
+const RATES: usize = 512;
+
+fn main() {
+    let mut rng = Rng::seeded(13);
+    let ds = generate(&SynthConfig::movielens_like().scaled(0.02), &mut rng);
+    println!("catalog: {} users × {} items", ds.nrows(), ds.ncols());
+
+    let lsh = SimLsh::new(2, 16, 8, 2);
+    let hash_state = OnlineHashState::build(lsh, &ds.train_csc);
+    let (topk, _) = hash_state.topk(16, &mut rng);
+    let cfg = CulshConfig { f: 16, k: 16, epochs: 20, beta: 0.02, ..Default::default() };
+    let (model, _) = train_culsh_logged(&ds.train, topk, &cfg, &mut rng);
+
+    let metrics = Registry::new();
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        ds.train.to_triples(),
+        // small batches so the reader traffic overlaps many flushes
+        StreamConfig { batch_size: 64, ..Default::default() },
+        cfg,
+        rng.split(3),
+        metrics.clone(),
+    );
+    let engine = Engine::new(orch, (ds.min_value, ds.max_value), metrics);
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let stop = stop.clone();
+        std::thread::spawn(move || server::serve(engine, listener, stop, READERS + 1))
+    };
+    println!("serving on {addr} with {} connection threads", READERS + 1);
+
+    let (nrows, ncols) = (ds.nrows(), ds.ncols());
+    let t0 = Instant::now();
+    let mut reader_threads = Vec::new();
+    for reader in 0..READERS {
+        reader_threads.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).expect("connect");
+            let mut tx = stream.try_clone().unwrap();
+            let mut rx = BufReader::new(stream);
+            let mut latencies = Vec::with_capacity(REQUESTS_PER_READER);
+            for k in 0..REQUESTS_PER_READER {
+                let line = if k % 10 == 0 {
+                    format!("TOPN {} 10\n", (k * 31 + reader) % nrows)
+                } else {
+                    format!("PREDICT {} {}\n", (k * 17 + reader) % nrows, (k * 13) % ncols)
+                };
+                let q0 = Instant::now();
+                tx.write_all(line.as_bytes()).unwrap();
+                let mut reply = String::new();
+                rx.read_line(&mut reply).unwrap();
+                latencies.push(q0.elapsed());
+                assert!(!reply.starts_with("ERR"), "{line} -> {reply}");
+            }
+            tx.write_all(b"QUIT\n").unwrap();
+            latencies
+        }));
+    }
+    let writer_thread = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut tx = stream.try_clone().unwrap();
+        let mut rx = BufReader::new(stream);
+        let mut flushes = 0usize;
+        for k in 0..RATES {
+            let (i, j) = ((k * 7) % nrows, (k * 11) % ncols);
+            tx.write_all(format!("RATE {i} {j} 4.0\n").as_bytes()).unwrap();
+            let mut reply = String::new();
+            rx.read_line(&mut reply).unwrap();
+            if reply.starts_with("OK flushed") {
+                flushes += 1;
+            }
+        }
+        tx.write_all(b"QUIT\n").unwrap();
+        flushes
+    });
+
+    let mut latencies: Vec<Duration> = Vec::new();
+    for t in reader_threads {
+        latencies.extend(t.join().unwrap());
+    }
+    let flushes = writer_thread.join().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_unstable();
+    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    let total = READERS * REQUESTS_PER_READER;
+    println!(
+        "{total} reads from {READERS} parallel connections in {wall:.2}s \
+         ({:.0} req/s) while {RATES} RATEs drove {flushes} flushes",
+        total as f64 / wall
+    );
+    println!(
+        "read latency p50 {:?} p95 {:?} p99 {:?} max {:?} — flat through flushes",
+        pct(0.50),
+        pct(0.95),
+        pct(0.99),
+        pct(1.0)
+    );
+
+    // pull the server's own metrics before shutting down
+    {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut tx = stream.try_clone().unwrap();
+        let mut rx = BufReader::new(stream);
+        tx.write_all(b"STATS\n").unwrap();
+        let mut line = String::new();
+        println!("--- server stats ---");
+        while rx.read_line(&mut line).unwrap() > 0 {
+            if line.trim_end().ends_with("END") {
+                break;
+            }
+            let keep = ["dims", "buffered", "version", "server.", "shared.", "stream."];
+            if keep.iter().any(|p| line.contains(p)) {
+                print!("{line}");
+            }
+            line.clear();
+        }
+        tx.write_all(b"QUIT\n").unwrap();
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    let engine = server_thread.join().unwrap().expect("server");
+    println!("server stopped cleanly; final dims {:?}", engine.dims());
+}

@@ -226,6 +226,9 @@ pub fn online(args: &mut Args) -> Result<()> {
 pub fn serve(args: &mut Args) -> Result<()> {
     let cfg = args.experiment_config()?;
     let port = args.get_usize("port")?.unwrap_or(7878);
+    // `--threads` doubles as the connection-pool width for serving (it
+    // is also the trainer's block-rotation width; both default to 4).
+    let threads = cfg.trainer.threads.max(1);
     let mut rng = Rng::seeded(cfg.dataset.seed);
     let ds = build_dataset(&cfg, &mut rng)?;
     eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
@@ -239,6 +242,10 @@ pub fn serve(args: &mut Args) -> Result<()> {
     );
     let lsh = SimLsh::new(cfg.lsh.p, cfg.lsh.q, cfg.lsh.g, cfg.lsh.psi_power);
     let hash_state = OnlineHashState::build(lsh, &ds.train_csc);
+    // One registry across orchestrator, engine, and server so the STATS
+    // verb reports the whole pipeline (per-verb counters, lock waits,
+    // flush timings) in one dump.
+    let metrics = Registry::new();
     let orch = StreamOrchestrator::new(
         model,
         hash_state,
@@ -246,13 +253,16 @@ pub fn serve(args: &mut Args) -> Result<()> {
         StreamConfig::default(),
         culsh_cfg,
         rng.split(7),
-        Registry::new(),
+        metrics.clone(),
     );
-    let engine = Engine::new(orch, (ds.min_value, ds.max_value), Registry::new());
+    let engine = Engine::new(orch, (ds.min_value, ds.max_value), metrics);
     let listener = std::net::TcpListener::bind(("0.0.0.0", port as u16))?;
-    eprintln!("# serving on port {port} (PREDICT/TOPN/RATE/STATS/QUIT)");
+    eprintln!(
+        "# serving on port {port} with {threads} reader thread(s) \
+         (PREDICT/TOPN/RATE/FLUSH/STATS/QUIT)"
+    );
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    crate::coordinator::server::serve(engine, listener, stop)?;
+    crate::coordinator::server::serve(engine, listener, stop, threads)?;
     Ok(())
 }
 

@@ -7,7 +7,9 @@
 //!                 [--epochs 20] [--threads 4] [--lsh simlsh|gsm|rpcos|minhash|rand]
 //! lshmf online    [--config exp.toml] — Table 9 protocol: base train,
 //!                 increment via Algorithm 4, report the RMSE delta
-//! lshmf serve     [--config exp.toml] [--port 7878] — train then serve TCP
+//! lshmf serve     [--config exp.toml] [--port 7878] [--threads 4] — train,
+//!                 then serve TCP with a bounded reader pool (writes are
+//!                 single-writer; see coordinator::shared)
 //! lshmf info      — artifact bundle status (PJRT graphs available?)
 //! ```
 //!
@@ -73,7 +75,8 @@ COMMON FLAGS:
   --lsh <name>         simlsh | gsm | rpcos | minhash | rand
   --f / --k <int>      latent dim / neighbourhood size
   --epochs <int>       training epochs
-  --threads <int>      worker threads (block-rotation)
+  --threads <int>      worker threads (training block-rotation; serve
+                       uses it as the connection-pool width)
   --port <int>         serve: TCP port (default 7878)
   --out <file>         gen-data: output path
 ";

@@ -8,7 +8,37 @@
 
 use super::stream::{Event, IngestResult, StreamOrchestrator};
 use crate::metrics::Registry;
-use crate::mf::neighbourhood::NeighbourScratch;
+use crate::mf::neighbourhood::{CulshModel, NeighbourScratch};
+use crate::sparse::Csr;
+
+/// Score every unrated column of `matrix` for row `i` and return the top
+/// `n_items` by clamped prediction (ties broken by ascending column id).
+///
+/// Shared by the single-threaded [`Engine`] and the lock-free read path
+/// of [`super::shared::SharedEngine`], so both serving flavours rank
+/// identically. `i` must be in range.
+pub(crate) fn rank_unrated(
+    model: &CulshModel,
+    matrix: &Csr,
+    i: usize,
+    n_items: usize,
+    clamp: (f32, f32),
+) -> Vec<(u32, f32)> {
+    let n = matrix.ncols();
+    let rated: std::collections::HashSet<usize> = matrix.row(i).map(|(j, _)| j).collect();
+    let mut scored: Vec<(u32, f32)> = Vec::with_capacity(n - rated.len());
+    let mut scratch = NeighbourScratch::default();
+    for j in 0..n {
+        if rated.contains(&j) {
+            continue;
+        }
+        let s = model.predict(matrix, i, j, &mut scratch).clamp(clamp.0, clamp.1);
+        scored.push((j as u32, s));
+    }
+    scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    scored.truncate(n_items);
+    scored
+}
 
 /// The serving facade.
 pub struct Engine {
@@ -24,6 +54,31 @@ impl Engine {
 
     pub fn dims(&self) -> (usize, usize) {
         self.orch.dims()
+    }
+
+    /// The current model (last-flushed state).
+    pub fn model(&self) -> &CulshModel {
+        self.orch.model()
+    }
+
+    /// The combined training matrix (last-flushed state).
+    pub fn matrix(&self) -> &Csr {
+        self.orch.matrix()
+    }
+
+    /// Events buffered but not yet applied.
+    pub fn buffered(&self) -> usize {
+        self.orch.buffered()
+    }
+
+    /// The rating-scale clamp applied to predictions.
+    pub fn clamp(&self) -> (f32, f32) {
+        self.clamp
+    }
+
+    /// The engine's metric registry (shared with the concurrent server).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 
     /// Predict the interaction value for (row, col).
@@ -43,29 +98,12 @@ impl Engine {
 
     /// Top-N highest-predicted unrated columns for a row.
     pub fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
-        let (m, n) = self.dims();
+        let (m, _) = self.dims();
         if i >= m {
             return Vec::new();
         }
         self.metrics.counter("engine.topn").inc();
-        let rated: std::collections::HashSet<usize> =
-            self.orch.matrix().row(i).map(|(j, _)| j).collect();
-        let mut scored: Vec<(u32, f32)> = Vec::with_capacity(n - rated.len());
-        let mut scratch = NeighbourScratch::default();
-        for j in 0..n {
-            if rated.contains(&j) {
-                continue;
-            }
-            let s = self
-                .orch
-                .model()
-                .predict(self.orch.matrix(), i, j, &mut scratch)
-                .clamp(self.clamp.0, self.clamp.1);
-            scored.push((j as u32, s));
-        }
-        scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        scored.truncate(n_items);
-        scored
+        rank_unrated(self.orch.model(), self.orch.matrix(), i, n_items, self.clamp)
     }
 
     /// Ingest a rating through the online path.
@@ -93,7 +131,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
-    use crate::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
+    use crate::lsh::{OnlineHashState, SimLsh};
     use crate::mf::neighbourhood::{train_culsh_logged, CulshConfig};
     use crate::rng::Rng;
     use crate::sparse::{Csc, Csr, Triples};

@@ -9,13 +9,20 @@
 //!   incremental training (the "online sparse big data" pipeline).
 //! * [`engine`] — the serving engine: predictions, top-N recommendation,
 //!   and live ingestion against a trained CULSH-MF model.
-//! * [`server`] — a line-protocol TCP front end over the engine.
+//! * [`shared`] — the concurrent serving core: epoch-swapped read
+//!   snapshots over a single writer thread, so `PREDICT`/`TOPN`/`STATS`
+//!   proceed lock-free while `RATE` events stream through the online
+//!   path — reads are never blocked by a flush.
+//! * [`server`] — a line-protocol TCP front end with a bounded
+//!   connection-thread pool over the concurrent core.
 
 pub mod engine;
 pub mod rotation;
 pub mod server;
+pub mod shared;
 pub mod stream;
 
 pub use engine::Engine;
 pub use rotation::{RotationPlan, VirtualClockReport};
+pub use shared::{SharedEngine, Snapshot, WriterHandle};
 pub use stream::{StreamConfig, StreamOrchestrator};

@@ -1,4 +1,4 @@
-//! Line-protocol TCP front end over the [`Engine`].
+//! Line-protocol TCP front end over the serving engines.
 //!
 //! Verbs (one request per line, `\n`-terminated):
 //!
@@ -6,24 +6,91 @@
 //! PREDICT <row> <col>       -> "PRED <value>" | "ERR out-of-range"
 //! TOPN <row> <n>            -> "TOPN <col>:<score> ..."
 //! RATE <row> <col> <value>  -> "OK buffered" | "OK flushed <n>" | "ERR backpressure"
+//! FLUSH                     -> "OK flushed <n>"
 //! STATS                     -> multi-line stats terminated by "END"
 //! QUIT                      -> closes the connection
 //! ```
 //!
-//! Single-threaded accept loop with the engine behind a mutex: the write
-//! path (RATE → online update) is serialized, matching the paper's
-//! single-writer online model; reads are cheap.
+//! Two serving flavours implement the same [`Serving`] protocol surface:
+//!
+//! * `Mutex<Engine>` — the original fully-serialized engine, still used
+//!   by tests and in-process embedding (`handle_line` is generic over
+//!   both, so single-connection protocol semantics are identical for
+//!   every verb except `STATS`, whose free-form body additionally
+//!   carries a `version <n>` line on the concurrent engine);
+//! * [`SharedEngine`] — the concurrent read / single-writer core that
+//!   [`serve`] uses: a bounded pool of connection threads executes
+//!   `PREDICT`/`TOPN`/`STATS` against lock-free snapshots while `RATE`
+//!   funnels through the writer thread, so reads proceed even during a
+//!   flush.
 
 use super::engine::Engine;
+use super::shared::SharedEngine;
 use super::stream::IngestResult;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// The protocol surface a serving engine must expose. `&self` receivers
+/// throughout: implementations provide their own interior
+/// synchronization (a mutex, or snapshots + a writer channel).
+pub trait Serving {
+    fn predict(&self, i: usize, j: usize) -> Option<f32>;
+    fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)>;
+    fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult;
+    fn flush(&self) -> usize;
+    fn stats(&self) -> String;
+}
+
+impl Serving for Mutex<Engine> {
+    fn predict(&self, i: usize, j: usize) -> Option<f32> {
+        self.lock().unwrap().predict(i, j)
+    }
+
+    fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
+        self.lock().unwrap().top_n(i, n_items)
+    }
+
+    fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult {
+        self.lock().unwrap().rate(i, j, r)
+    }
+
+    fn flush(&self) -> usize {
+        self.lock().unwrap().flush()
+    }
+
+    fn stats(&self) -> String {
+        self.lock().unwrap().stats()
+    }
+}
+
+impl Serving for SharedEngine {
+    fn predict(&self, i: usize, j: usize) -> Option<f32> {
+        SharedEngine::predict(self, i, j)
+    }
+
+    fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
+        SharedEngine::top_n(self, i, n_items)
+    }
+
+    fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult {
+        SharedEngine::rate(self, i, j, r)
+    }
+
+    fn flush(&self) -> usize {
+        SharedEngine::flush(self)
+    }
+
+    fn stats(&self) -> String {
+        SharedEngine::stats(self)
+    }
+}
+
 /// Handle one already-parsed request line. Exposed for tests (no socket
-/// needed to verify protocol semantics).
-pub fn handle_line(engine: &Mutex<Engine>, line: &str) -> Option<String> {
+/// needed to verify protocol semantics) and generic over the serving
+/// flavour so both answer identically.
+pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String> {
     let mut parts = line.split_whitespace();
     let verb = parts.next().unwrap_or("");
     match verb {
@@ -31,7 +98,7 @@ pub fn handle_line(engine: &Mutex<Engine>, line: &str) -> Option<String> {
             let (Some(i), Some(j)) = (parse(parts.next()), parse(parts.next())) else {
                 return Some("ERR usage: PREDICT <row> <col>".into());
             };
-            match engine.lock().unwrap().predict(i, j) {
+            match engine.predict(i, j) {
                 Some(p) => Some(format!("PRED {p:.4}")),
                 None => Some("ERR out-of-range".into()),
             }
@@ -40,7 +107,7 @@ pub fn handle_line(engine: &Mutex<Engine>, line: &str) -> Option<String> {
             let (Some(i), Some(n)) = (parse(parts.next()), parse(parts.next())) else {
                 return Some("ERR usage: TOPN <row> <n>".into());
             };
-            let recs = engine.lock().unwrap().top_n(i, n);
+            let recs = engine.top_n(i, n);
             let body: Vec<String> = recs
                 .iter()
                 .map(|(j, s)| format!("{j}:{s:.4}"))
@@ -55,18 +122,18 @@ pub fn handle_line(engine: &Mutex<Engine>, line: &str) -> Option<String> {
             ) else {
                 return Some("ERR usage: RATE <row> <col> <value>".into());
             };
-            match engine.lock().unwrap().rate(i, j, r) {
+            match engine.rate(i, j, r) {
                 IngestResult::Buffered => Some("OK buffered".into()),
                 IngestResult::Flushed { applied } => Some(format!("OK flushed {applied}")),
                 IngestResult::Rejected => Some("ERR backpressure".into()),
             }
         }
         "FLUSH" => {
-            let n = engine.lock().unwrap().flush();
+            let n = engine.flush();
             Some(format!("OK flushed {n}"))
         }
         "STATS" => {
-            let stats = engine.lock().unwrap().stats();
+            let stats = engine.stats();
             Some(format!("{stats}END"))
         }
         "QUIT" => None,
@@ -79,13 +146,50 @@ fn parse<T: std::str::FromStr>(s: Option<&str>) -> Option<T> {
     s.and_then(|x| x.parse().ok())
 }
 
-/// Serve until `stop` flips true (checked between connections).
+/// Serve until `stop` flips true (checked between accepts; poke the
+/// listener with one throwaway connection after setting the flag to
+/// unblock a pending accept).
+///
+/// Concurrency model: the accept loop hands sockets to a bounded pool of
+/// `threads` connection workers over a channel; every worker holds a
+/// clone of the [`SharedEngine`] read handle, and all `RATE` traffic
+/// converges on the engine's single writer thread. Shutdown drains the
+/// pool, then joins the writer (flushing buffered events) and returns
+/// the engine.
 pub fn serve(
     engine: Engine,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
-) -> std::io::Result<()> {
-    let engine = Mutex::new(engine);
+    threads: usize,
+) -> std::io::Result<Engine> {
+    let threads = threads.max(1);
+    let (shared, writer) = SharedEngine::spawn(engine);
+    let (conn_tx, conn_rx) = std::sync::mpsc::channel::<TcpStream>();
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut workers = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        let conn_rx = Arc::clone(&conn_rx);
+        let shared = shared.clone();
+        workers.push(std::thread::spawn(move || loop {
+            // Holding the queue lock only while dequeuing; connection
+            // handling runs unlocked so workers serve in parallel.
+            let next = conn_rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
+            let Ok(stream) = next else { break };
+            // Contain per-connection panics (e.g. a request against a
+            // degenerate model state): without this, each panic would
+            // silently shrink the pool until accepted connections hang
+            // with no worker left to serve them.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handle_conn(&shared, stream)
+            }));
+            match outcome {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("connection error: {e}"),
+                Err(_) => eprintln!("connection handler panicked; worker kept alive"),
+            }
+        }));
+    }
+
     listener.set_nonblocking(false)?;
     for stream in listener.incoming() {
         if stop.load(Ordering::Relaxed) {
@@ -93,19 +197,22 @@ pub fn serve(
         }
         match stream {
             Ok(s) => {
-                if let Err(e) = handle_conn(&engine, s) {
-                    eprintln!("connection error: {e}");
-                }
+                // Bounded pool: the channel queues bursts; workers drain it.
+                let _ = conn_tx.send(s);
             }
             Err(e) => {
                 eprintln!("accept error: {e}");
             }
         }
     }
-    Ok(())
+    drop(conn_tx);
+    for w in workers {
+        let _ = w.join();
+    }
+    Ok(writer.join())
 }
 
-fn handle_conn(engine: &Mutex<Engine>, stream: TcpStream) -> std::io::Result<()> {
+fn handle_conn<S: Serving + ?Sized>(engine: &S, stream: TcpStream) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -125,13 +232,13 @@ fn handle_conn(engine: &Mutex<Engine>, stream: TcpStream) -> std::io::Result<()>
 mod tests {
     use super::*;
     use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
-    use crate::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
+    use crate::lsh::{OnlineHashState, SimLsh};
     use crate::metrics::Registry;
     use crate::mf::neighbourhood::{train_culsh_logged, CulshConfig};
     use crate::rng::Rng;
     use crate::sparse::{Csc, Csr, Triples};
 
-    fn engine(rng: &mut Rng) -> Mutex<Engine> {
+    fn engine_with(rng: &mut Rng, stream_cfg: StreamConfig) -> Engine {
         let (m, n) = (20, 10);
         let mut t = Triples::new(m, n);
         let mut seen = std::collections::HashSet::new();
@@ -152,12 +259,16 @@ mod tests {
             model,
             hash_state,
             t,
-            StreamConfig::default(),
+            stream_cfg,
             cfg,
             rng.split(1),
             Registry::new(),
         );
-        Mutex::new(Engine::new(orch, (1.0, 5.0), Registry::new()))
+        Engine::new(orch, (1.0, 5.0), Registry::new())
+    }
+
+    fn engine(rng: &mut Rng) -> Mutex<Engine> {
+        Mutex::new(engine_with(rng, StreamConfig::default()))
     }
 
     #[test]
@@ -185,6 +296,54 @@ mod tests {
         assert!(handle_line(&e, "").unwrap().starts_with("ERR"));
     }
 
+    /// The backpressure contract surfaces on the wire: with
+    /// `reject_when_full` set, the (capacity+1)-th un-flushed RATE maps
+    /// to `ERR backpressure`, and a FLUSH clears it.
+    #[test]
+    fn rate_maps_backpressure_to_err() {
+        let mut rng = Rng::seeded(74);
+        let e = Mutex::new(engine_with(
+            &mut rng,
+            StreamConfig {
+                queue_capacity: 3,
+                batch_size: 100,
+                reject_when_full: true,
+                ..Default::default()
+            },
+        ));
+        for k in 0..3 {
+            let reply = handle_line(&e, &format!("RATE 0 {k} 3.0")).unwrap();
+            assert_eq!(reply, "OK buffered", "event {k}");
+        }
+        assert_eq!(handle_line(&e, "RATE 0 7 3.0").unwrap(), "ERR backpressure");
+        assert_eq!(handle_line(&e, "FLUSH").unwrap(), "OK flushed 3");
+        assert_eq!(handle_line(&e, "RATE 0 7 3.0").unwrap(), "OK buffered");
+    }
+
+    /// The shared (concurrent) engine answers the protocol byte-for-byte
+    /// like the mutex-serialized engine.
+    #[test]
+    fn shared_engine_protocol_parity() {
+        let mut rng = Rng::seeded(75);
+        let single = engine(&mut rng);
+        let mut rng2 = Rng::seeded(75);
+        let (shared, writer) = SharedEngine::spawn(engine_with(&mut rng2, StreamConfig::default()));
+        for line in [
+            "PREDICT 0 0",
+            "PREDICT 999 0",
+            "TOPN 0 3",
+            "RATE 0 5 4.5",
+            "FLUSH",
+            "PREDICT 0 5",
+        ] {
+            let a = handle_line(&single, line).unwrap();
+            let b = handle_line(&shared, line).unwrap();
+            assert_eq!(a, b, "line {line}");
+        }
+        assert!(handle_line::<SharedEngine>(&shared, "QUIT").is_none());
+        writer.join();
+    }
+
     #[test]
     fn tcp_roundtrip() {
         use std::io::{BufRead, BufReader, Write};
@@ -196,13 +355,8 @@ mod tests {
         let stop2 = stop.clone();
         let handle = std::thread::spawn(move || {
             let engine = e.into_inner().unwrap();
-            // accept exactly one connection then stop
-            let _ = listener.set_nonblocking(false);
-            if let Ok((s, _)) = listener.accept() {
-                let engine = Mutex::new(engine);
-                let _ = handle_conn(&engine, s);
-            }
-            stop2.store(true, Ordering::Relaxed);
+            // serve one connection through the pooled server, then stop
+            serve(engine, listener, stop2, 2).unwrap();
         });
         let mut client = TcpStream::connect(addr).unwrap();
         client.write_all(b"PREDICT 0 0\nQUIT\n").unwrap();
@@ -212,6 +366,9 @@ mod tests {
             .unwrap();
         assert!(reply.starts_with("PRED "), "{reply}");
         drop(client);
+        // unblock the accept loop and shut down
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr);
         handle.join().unwrap();
     }
 }

@@ -1,0 +1,381 @@
+//! Concurrent serving core: epoch-swapped read snapshots over a single
+//! writer thread.
+//!
+//! The original server serialized *every* request — reads included —
+//! behind one `Mutex<Engine>`, so a flush (incremental retraining, tens
+//! of milliseconds and up) stalled all traffic. Following the cuMF line
+//! of work (Tan et al.), throughput comes from separating the
+//! read-mostly factor state from the serialized update stream:
+//!
+//! * **Reads** (`PREDICT` / `TOPN` / `STATS`) clone an `Arc<Snapshot>`
+//!   out of an `RwLock` held for nanoseconds, then compute entirely
+//!   lock-free on the immutable snapshot. Any number of connections read
+//!   in parallel, *including while a flush is running*.
+//! * **Writes** (`RATE` / `FLUSH`) are funnelled through an `mpsc`
+//!   channel into one writer thread that owns the [`Engine`] (and with
+//!   it the [`super::stream::StreamOrchestrator`] online path), exactly
+//!   preserving the paper's single-writer online model. After each
+//!   flush the writer publishes a fresh snapshot by swapping the `Arc`.
+//!
+//! Readers therefore always see a complete, internally consistent
+//! (model, matrix) pair — torn reads are impossible by construction —
+//! and snapshot `version`s increase monotonically.
+//!
+//! Metrics (all in the engine's [`Registry`]): per-verb counters
+//! (`server.predict`, `server.topn`, `server.rate`, `server.flush`,
+//! `server.stats`), lock/queue wait histograms (`shared.read_wait`,
+//! `shared.write_wait`, `shared.publish_wait`) and the
+//! `shared.read_wait_last_ns` gauge.
+
+use super::engine::{rank_unrated, Engine};
+use super::stream::IngestResult;
+use crate::metrics::Registry;
+use crate::mf::neighbourhood::{CulshModel, NeighbourScratch};
+use crate::sparse::Csr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// An immutable view of the factor state, published by the writer after
+/// every flush.
+pub struct Snapshot {
+    /// The CULSH-MF model as of the last flush.
+    pub model: CulshModel,
+    /// The combined training matrix the model was flushed against.
+    pub matrix: Csr,
+    /// Monotonic publication counter (0 at spawn, +1 per flush).
+    pub version: u64,
+}
+
+impl Snapshot {
+    pub fn dims(&self) -> (usize, usize) {
+        (self.matrix.nrows(), self.matrix.ncols())
+    }
+}
+
+/// A write-path request for the single writer thread.
+enum WriteCmd {
+    Rate { i: u32, j: u32, r: f32, reply: Sender<IngestResult> },
+    Flush { reply: Sender<usize> },
+    Shutdown,
+}
+
+/// Cloneable handle to the concurrent serving core. Each connection
+/// thread clones one; reads are lock-free after an `Arc` clone, writes
+/// round-trip through the writer thread.
+#[derive(Clone)]
+pub struct SharedEngine {
+    state: Arc<RwLock<Arc<Snapshot>>>,
+    tx: Sender<WriteCmd>,
+    buffered: Arc<AtomicUsize>,
+    clamp: (f32, f32),
+    metrics: Registry,
+}
+
+/// Owns the writer thread; [`WriterHandle::join`] stops it (flushing any
+/// buffered events) and returns the engine for inspection.
+pub struct WriterHandle {
+    handle: JoinHandle<Engine>,
+    tx: Sender<WriteCmd>,
+}
+
+impl WriterHandle {
+    /// Request shutdown and wait for the writer to drain.
+    pub fn join(self) -> Engine {
+        let _ = self.tx.send(WriteCmd::Shutdown);
+        self.handle.join().expect("writer thread panicked")
+    }
+}
+
+impl SharedEngine {
+    /// Split an [`Engine`] into a concurrent read handle plus its single
+    /// writer thread. Uses the engine's own metric registry, so engine-
+    /// and server-level counters land in one `STATS` report.
+    pub fn spawn(engine: Engine) -> (SharedEngine, WriterHandle) {
+        let clamp = engine.clamp();
+        let metrics = engine.metrics().clone();
+        let initial = Arc::new(Snapshot {
+            model: engine.model().clone(),
+            matrix: engine.matrix().clone(),
+            version: 0,
+        });
+        let state = Arc::new(RwLock::new(initial));
+        let buffered = Arc::new(AtomicUsize::new(engine.buffered()));
+        let (tx, rx) = channel();
+        let handle = {
+            let state = Arc::clone(&state);
+            let buffered = Arc::clone(&buffered);
+            let metrics = metrics.clone();
+            std::thread::spawn(move || writer_loop(engine, rx, state, buffered, metrics))
+        };
+        let shared = SharedEngine { state, tx: tx.clone(), buffered, clamp, metrics };
+        (shared, WriterHandle { handle, tx })
+    }
+
+    /// Clone the current snapshot out of the lock (held only for the
+    /// `Arc` clone; all computation afterwards is lock-free).
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        let t0 = Instant::now();
+        let guard = self.state.read().unwrap_or_else(|e| e.into_inner());
+        let snap = Arc::clone(&guard);
+        drop(guard);
+        let waited = t0.elapsed();
+        self.metrics.histogram("shared.read_wait").record(waited);
+        self.metrics.gauge("shared.read_wait_last_ns").set(waited.as_nanos() as f64);
+        snap
+    }
+
+    /// Dimensions of the last-published snapshot.
+    pub fn dims(&self) -> (usize, usize) {
+        self.snapshot().dims()
+    }
+
+    /// Version of the last-published snapshot (monotonic).
+    pub fn version(&self) -> u64 {
+        self.snapshot().version
+    }
+
+    /// Predict the interaction value for (row, col) on the current
+    /// snapshot. `None` if out of range.
+    pub fn predict(&self, i: usize, j: usize) -> Option<f32> {
+        self.metrics.counter("server.predict").inc();
+        let snap = self.snapshot();
+        let (m, n) = snap.dims();
+        if i >= m || j >= n {
+            return None;
+        }
+        let mut scratch = NeighbourScratch::default();
+        let raw = snap.model.predict(&snap.matrix, i, j, &mut scratch);
+        Some(raw.clamp(self.clamp.0, self.clamp.1))
+    }
+
+    /// Top-N highest-predicted unrated columns for a row, on the current
+    /// snapshot.
+    pub fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
+        self.metrics.counter("server.topn").inc();
+        let snap = self.snapshot();
+        let (m, _) = snap.dims();
+        if i >= m {
+            return Vec::new();
+        }
+        rank_unrated(&snap.model, &snap.matrix, i, n_items, self.clamp)
+    }
+
+    /// Ingest a rating through the single-writer online path. Blocks
+    /// until the writer replies, so backpressure (`Rejected`) and flush
+    /// outcomes surface synchronously — the protocol semantics match the
+    /// single-threaded engine exactly.
+    pub fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult {
+        self.metrics.counter("server.rate").inc();
+        let timer = self.metrics.timer("shared.write_wait");
+        let (reply_tx, reply_rx) = channel();
+        if self.tx.send(WriteCmd::Rate { i, j, r, reply: reply_tx }).is_err() {
+            // Writer is gone (shutdown): surface as backpressure rather
+            // than panicking a connection thread.
+            return IngestResult::Rejected;
+        }
+        let result = reply_rx.recv().unwrap_or(IngestResult::Rejected);
+        drop(timer);
+        result
+    }
+
+    /// Force-apply buffered ratings; returns the number applied.
+    pub fn flush(&self) -> usize {
+        self.metrics.counter("server.flush").inc();
+        let (reply_tx, reply_rx) = channel();
+        if self.tx.send(WriteCmd::Flush { reply: reply_tx }).is_err() {
+            return 0;
+        }
+        reply_rx.recv().unwrap_or(0)
+    }
+
+    /// Metrics snapshot (server `STATS` verb). Same leading lines as the
+    /// single-threaded engine (`dims`, `buffered`) plus the snapshot
+    /// version and the full registry dump.
+    pub fn stats(&self) -> String {
+        self.metrics.counter("server.stats").inc();
+        let snap = self.snapshot();
+        let (m, n) = snap.dims();
+        format!(
+            "dims {m}x{n}\nbuffered {}\nversion {}\n{}",
+            self.buffered.load(Ordering::Relaxed),
+            snap.version,
+            self.metrics.snapshot()
+        )
+    }
+}
+
+/// The single writer: owns the engine, applies every write command in
+/// arrival order, republishes the snapshot after each flush.
+fn writer_loop(
+    mut engine: Engine,
+    rx: Receiver<WriteCmd>,
+    state: Arc<RwLock<Arc<Snapshot>>>,
+    buffered: Arc<AtomicUsize>,
+    metrics: Registry,
+) -> Engine {
+    let mut version = 1u64;
+    for cmd in rx {
+        match cmd {
+            WriteCmd::Rate { i, j, r, reply } => {
+                let result = engine.rate(i, j, r);
+                if matches!(result, IngestResult::Flushed { .. }) {
+                    publish(&state, &engine, version, &metrics);
+                    version += 1;
+                }
+                buffered.store(engine.buffered(), Ordering::Relaxed);
+                let _ = reply.send(result);
+            }
+            WriteCmd::Flush { reply } => {
+                let applied = engine.flush();
+                // No-op flushes (idle FLUSH probes) publish nothing: a
+                // publish deep-clones the model and matrix, which is
+                // wasteful when state hasn't changed.
+                if applied > 0 {
+                    publish(&state, &engine, version, &metrics);
+                    version += 1;
+                }
+                buffered.store(engine.buffered(), Ordering::Relaxed);
+                let _ = reply.send(applied);
+            }
+            WriteCmd::Shutdown => break,
+        }
+    }
+    // Drain on shutdown so no accepted rating is silently dropped.
+    engine.flush();
+    buffered.store(engine.buffered(), Ordering::Relaxed);
+    engine
+}
+
+/// Swap in a fresh snapshot. The (brief) write lock only covers the
+/// pointer swap — model/matrix cloning happens before taking it.
+fn publish(state: &RwLock<Arc<Snapshot>>, engine: &Engine, version: u64, metrics: &Registry) {
+    let snap = Arc::new(Snapshot {
+        model: engine.model().clone(),
+        matrix: engine.matrix().clone(),
+        version,
+    });
+    let timer = metrics.timer("shared.publish_wait");
+    let mut guard = state.write().unwrap_or_else(|e| e.into_inner());
+    *guard = snap;
+    drop(guard);
+    drop(timer);
+    metrics.counter("shared.publishes").inc();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
+    use crate::lsh::{OnlineHashState, SimLsh};
+    use crate::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+    use crate::rng::Rng;
+    use crate::sparse::{Csc, Csr, Triples};
+
+    fn engine(rng: &mut Rng, stream_cfg: StreamConfig) -> Engine {
+        let (m, n) = (25, 12);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 140 {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(1, 4, 8, 2);
+        let hash_state = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash_state.topk(3, rng);
+        let cfg = CulshConfig { f: 4, k: 3, epochs: 3, ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, rng);
+        let registry = Registry::new();
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            stream_cfg,
+            cfg,
+            rng.split(1),
+            registry.clone(),
+        );
+        Engine::new(orch, (1.0, 5.0), registry)
+    }
+
+    #[test]
+    fn reads_match_single_threaded_engine() {
+        let mut rng = Rng::seeded(91);
+        let e = engine(&mut rng, StreamConfig::default());
+        // ground truth from the engine before it moves into the writer
+        let want_p = e.predict(2, 3);
+        let want_top = e.top_n(2, 4);
+        let (shared, writer) = SharedEngine::spawn(e);
+        assert_eq!(shared.predict(2, 3), want_p);
+        assert_eq!(shared.top_n(2, 4), want_top);
+        assert!(shared.predict(999, 0).is_none());
+        assert!(shared.top_n(999, 4).is_empty());
+        assert_eq!(shared.version(), 0);
+        writer.join();
+    }
+
+    #[test]
+    fn rate_flush_publishes_new_snapshot() {
+        let mut rng = Rng::seeded(92);
+        let e = engine(&mut rng, StreamConfig { batch_size: 4, ..Default::default() });
+        let (shared, writer) = SharedEngine::spawn(e);
+        let (m0, n0) = shared.dims();
+        // out-of-universe prediction is None until the rating flushes
+        assert!(shared.predict(0, n0 + 2).is_none());
+        for k in 0..3 {
+            assert_eq!(shared.rate(0, (n0 + k) as u32, 5.0), IngestResult::Buffered);
+        }
+        // 4th rating hits batch_size -> flush -> publish
+        let res = shared.rate(0, (n0 + 2) as u32, 4.0);
+        assert!(matches!(res, IngestResult::Flushed { applied: 4 }), "{res:?}");
+        assert_eq!(shared.version(), 1);
+        assert_eq!(shared.dims(), (m0, n0 + 3));
+        let p = shared.predict(0, n0 + 2).unwrap();
+        assert!((1.0..=5.0).contains(&p));
+        let engine = writer.join();
+        assert_eq!(engine.dims(), (m0, n0 + 3));
+    }
+
+    #[test]
+    fn explicit_flush_and_stats() {
+        let mut rng = Rng::seeded(93);
+        let e = engine(&mut rng, StreamConfig::default());
+        let (shared, writer) = SharedEngine::spawn(e);
+        assert_eq!(shared.rate(1, 2, 4.0), IngestResult::Buffered);
+        let stats = shared.stats();
+        assert!(stats.contains("buffered 1"), "{stats}");
+        assert_eq!(shared.flush(), 1);
+        let stats = shared.stats();
+        assert!(stats.contains("buffered 0"), "{stats}");
+        assert!(stats.contains("version 1"), "{stats}");
+        assert!(stats.contains("server.rate"), "{stats}");
+        writer.join();
+    }
+
+    #[test]
+    fn backpressure_round_trips_through_writer() {
+        let mut rng = Rng::seeded(94);
+        let e = engine(
+            &mut rng,
+            StreamConfig {
+                queue_capacity: 2,
+                batch_size: 100,
+                reject_when_full: true,
+                ..Default::default()
+            },
+        );
+        let (shared, writer) = SharedEngine::spawn(e);
+        assert_eq!(shared.rate(0, 1, 3.0), IngestResult::Buffered);
+        assert_eq!(shared.rate(0, 2, 3.0), IngestResult::Buffered);
+        assert_eq!(shared.rate(0, 3, 3.0), IngestResult::Rejected);
+        shared.flush();
+        assert_eq!(shared.rate(0, 3, 3.0), IngestResult::Buffered);
+        writer.join();
+    }
+}

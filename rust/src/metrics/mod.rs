@@ -156,6 +156,13 @@ impl Registry {
             .clone()
     }
 
+    /// RAII wait/latency timer: records into `name` when the guard drops.
+    /// Used by the serving path to account lock-wait and queue-wait time
+    /// without sprinkling `Instant` bookkeeping through the hot path.
+    pub fn timer(&self, name: &str) -> TimerGuard {
+        TimerGuard { histogram: self.histogram(name), start: Instant::now() }
+    }
+
     /// Render all metrics as `name value` lines.
     pub fn snapshot(&self) -> String {
         let mut out = String::new();
@@ -175,6 +182,18 @@ impl Registry {
             ));
         }
         out
+    }
+}
+
+/// Guard returned by [`Registry::timer`]; records elapsed time on drop.
+pub struct TimerGuard {
+    histogram: Arc<Histogram>,
+    start: Instant,
+}
+
+impl Drop for TimerGuard {
+    fn drop(&mut self) {
+        self.histogram.record(self.start.elapsed());
     }
 }
 
@@ -223,6 +242,17 @@ mod tests {
         assert!(s.contains("counter a 1"));
         assert!(s.contains("gauge b"));
         assert!(s.contains("hist c count=1"));
+    }
+
+    #[test]
+    fn timer_guard_records_on_drop() {
+        let r = Registry::new();
+        {
+            let _t = r.timer("lock.wait");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(r.histogram("lock.wait").count(), 1);
+        assert!(r.histogram("lock.wait").mean_ns() >= 500_000.0);
     }
 
     #[test]

@@ -2,16 +2,27 @@
 //! HLO, executed through PJRT) must agree numerically with the rust-native
 //! math that the L3 trainers use.
 //!
-//! Skipped (pass trivially with a note) when `artifacts/` has not been
-//! built; `make test` always builds it first.
+//! **Gated on `LSHMF_AOT_DIR`**: the artifacts do not exist offline (they
+//! need the python AOT toolchain) and executing them needs a PJRT-enabled
+//! build (see `lshmf::runtime` — the offline stub cannot run graphs). With
+//! the variable unset every test here passes trivially with a skip note,
+//! keeping tier-1 (`cargo test -q`) green offline. Point `LSHMF_AOT_DIR`
+//! at a built `artifacts/` bundle on a PJRT-enabled build to opt in.
 
 use lshmf::rng::Rng;
 use lshmf::runtime::{culsh_scalars, mf_scalars, Runtime};
 
 fn runtime() -> Option<Runtime> {
-    let dir = Runtime::default_dir();
+    let Ok(dir) = std::env::var("LSHMF_AOT_DIR") else {
+        eprintln!("LSHMF_AOT_DIR not set; skipping PJRT parity test (offline tier-1)");
+        return None;
+    };
+    let dir = std::path::PathBuf::from(dir);
     if !Runtime::available(&dir) {
-        eprintln!("artifacts not built; skipping PJRT parity test");
+        eprintln!(
+            "no artifact bundle at {} (missing manifest.json); skipping PJRT parity test",
+            dir.display()
+        );
         return None;
     }
     Some(Runtime::open(&dir).expect("open runtime"))

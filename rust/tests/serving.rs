@@ -1,0 +1,282 @@
+//! Integration tests for the concurrent serving stack: readers must make
+//! progress while the single writer streams `RATE` events through
+//! flushes, snapshots must be monotonically consistent (never torn,
+//! never going backwards), and the streaming backpressure contract must
+//! hold exactly at `queue_capacity`.
+
+use lshmf::coordinator::server::{self, handle_line};
+use lshmf::coordinator::shared::SharedEngine;
+use lshmf::coordinator::stream::{IngestResult, StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
+use lshmf::lsh::{OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::rng::Rng;
+use lshmf::sparse::{Csc, Csr, Triples};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Small trained engine over a dense-ish random fixture.
+fn engine(seed: u64, stream_cfg: StreamConfig) -> Engine {
+    let mut rng = Rng::seeded(seed);
+    let (m, n) = (30, 15);
+    let mut t = Triples::new(m, n);
+    let mut seen = std::collections::HashSet::new();
+    while t.nnz() < 180 {
+        let (i, j) = (rng.below(m), rng.below(n));
+        if seen.insert((i, j)) {
+            t.push(i, j, 1.0 + rng.f32() * 4.0);
+        }
+    }
+    let csr = Csr::from_triples(&t);
+    let csc = Csc::from_triples(&t);
+    let lsh = SimLsh::new(1, 5, 8, 2);
+    let hash_state = OnlineHashState::build(lsh, &csc);
+    let (topk, _) = hash_state.topk(4, &mut rng);
+    let cfg = CulshConfig { f: 4, k: 4, epochs: 4, ..Default::default() };
+    let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut rng);
+    let metrics = Registry::new();
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        t,
+        stream_cfg,
+        cfg,
+        rng.split(1),
+        metrics.clone(),
+    );
+    Engine::new(orch, (1.0, 5.0), metrics)
+}
+
+/// The acceptance-criterion scenario, in-process: 6 reader threads issue
+/// `PREDICT`/`TOPN`/`STATS` protocol lines nonstop while the writer
+/// streams `RATE` events that trigger many flushes. No deadlock (the
+/// test finishes), no torn reads (every reply well-formed), and every
+/// reader observes monotonically non-decreasing snapshot versions and
+/// dimensions.
+#[test]
+fn readers_progress_during_flushes() {
+    let e = engine(41, StreamConfig { batch_size: 8, ..Default::default() });
+    let (shared, writer_handle) = SharedEngine::spawn(e);
+    let readers = 6;
+    let requests_per_reader = 120;
+
+    std::thread::scope(|scope| {
+        for reader in 0..readers {
+            let shared = shared.clone();
+            scope.spawn(move || {
+                let mut last_version = 0u64;
+                let mut last_dims = (0usize, 0usize);
+                for k in 0..requests_per_reader {
+                    let line = match k % 3 {
+                        0 => format!("PREDICT {} {}", (k + reader) % 30, k % 15),
+                        1 => format!("TOPN {} 5", (k * 7 + reader) % 30),
+                        _ => "STATS".to_string(),
+                    };
+                    let reply = handle_line(&shared, &line).expect("no QUIT here");
+                    assert!(
+                        reply.starts_with("PRED ")
+                            || reply.starts_with("TOPN")
+                            || reply.ends_with("END"),
+                        "reader {reader}: {line} -> {reply}"
+                    );
+                    // snapshot monotonicity: version and dims never go back
+                    let snap = shared.snapshot();
+                    assert!(
+                        snap.version >= last_version,
+                        "version went backwards: {} -> {}",
+                        last_version,
+                        snap.version
+                    );
+                    let dims = snap.dims();
+                    assert!(
+                        dims.0 >= last_dims.0 && dims.1 >= last_dims.1,
+                        "dims shrank: {last_dims:?} -> {dims:?}"
+                    );
+                    // the snapshot pair is internally consistent (the
+                    // model always covers the matrix dimensions)
+                    assert_eq!(snap.model.base.bi.len(), dims.0);
+                    assert_eq!(snap.model.base.bj.len(), dims.1);
+                    last_version = snap.version;
+                    last_dims = dims;
+                }
+            });
+        }
+        // the writer: 160 ratings at batch_size 8 -> ~20 flushes, with
+        // universe growth sprinkled in
+        let shared_writer = shared.clone();
+        scope.spawn(move || {
+            for k in 0u32..160 {
+                let (i, j) = if k % 16 == 15 {
+                    (30 + (k / 16), 15 + (k / 16)) // new row + new column
+                } else {
+                    (k % 30, k % 15)
+                };
+                let reply = handle_line(&shared_writer, &format!("RATE {i} {j} 3.5")).unwrap();
+                assert!(reply.starts_with("OK"), "{reply}");
+            }
+        });
+    });
+
+    // all flushes published: final dims include every grown variable
+    let engine = writer_handle.join();
+    let (m, n) = engine.dims();
+    assert!(m >= 40 && n >= 25, "dims after growth: {m}x{n}");
+    assert!(shared.version() >= 19, "publishes: {}", shared.version());
+}
+
+/// Same scenario over real sockets: ≥4 simultaneous reader connections
+/// complete PREDICT/TOPN streams while a writer connection drives
+/// RATE-triggered flushes, against the pooled TCP server.
+#[test]
+fn tcp_concurrent_readers_and_writer() {
+    let e = engine(42, StreamConfig { batch_size: 8, ..Default::default() });
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let stop = stop.clone();
+        std::thread::spawn(move || server::serve(e, listener, stop, 6).unwrap())
+    };
+
+    let mut clients = Vec::new();
+    for reader in 0..4usize {
+        clients.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader_buf = BufReader::new(stream);
+            for k in 0..60 {
+                let line = if k % 2 == 0 {
+                    format!("PREDICT {} {}\n", (k + reader) % 30, k % 15)
+                } else {
+                    format!("TOPN {} 4\n", (k + reader) % 30)
+                };
+                writer.write_all(line.as_bytes()).unwrap();
+                let mut reply = String::new();
+                reader_buf.read_line(&mut reply).unwrap();
+                assert!(
+                    reply.starts_with("PRED ") || reply.starts_with("TOPN"),
+                    "reader {reader}: {reply}"
+                );
+            }
+            writer.write_all(b"QUIT\n").unwrap();
+        }));
+    }
+    let rate_client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader_buf = BufReader::new(stream);
+        let mut flushes = 0usize;
+        for k in 0u32..96 {
+            writer
+                .write_all(format!("RATE {} {} 4.0\n", k % 30, k % 15).as_bytes())
+                .unwrap();
+            let mut reply = String::new();
+            reader_buf.read_line(&mut reply).unwrap();
+            assert!(reply.starts_with("OK"), "{reply}");
+            if reply.starts_with("OK flushed") {
+                flushes += 1;
+            }
+        }
+        writer.write_all(b"QUIT\n").unwrap();
+        flushes
+    });
+
+    for c in clients {
+        c.join().unwrap();
+    }
+    let flushes = rate_client.join().unwrap();
+    assert!(flushes >= 10, "expected many RATE-driven flushes, got {flushes}");
+
+    // shut the server down and reclaim the engine
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    let engine = server_thread.join().unwrap();
+    assert_eq!(engine.buffered(), 0, "writer drained on shutdown");
+}
+
+/// `StreamConfig::reject_when_full` contract, at the exact boundary:
+/// ingest yields `Rejected` exactly when the buffer already holds
+/// `queue_capacity` un-flushed events — not one sooner — and recovers
+/// after a flush.
+#[test]
+fn backpressure_boundary_is_exact() {
+    for capacity in [1usize, 4, 9] {
+        let mut e = engine(
+            43,
+            StreamConfig {
+                queue_capacity: capacity,
+                batch_size: usize::MAX, // never auto-flush
+                reject_when_full: true,
+                ..Default::default()
+            },
+        );
+        for k in 0..capacity {
+            assert_eq!(
+                e.rate(0, k as u32, 3.0),
+                IngestResult::Buffered,
+                "capacity {capacity}, event {k} must buffer"
+            );
+            assert_eq!(e.buffered(), k + 1);
+        }
+        assert_eq!(
+            e.rate(0, 99, 3.0),
+            IngestResult::Rejected,
+            "capacity {capacity}: event {capacity} must reject"
+        );
+        assert_eq!(e.buffered(), capacity, "rejected event must not be buffered");
+        assert_eq!(e.flush(), capacity);
+        assert_eq!(e.rate(0, 99, 3.0), IngestResult::Buffered, "recovers after flush");
+    }
+}
+
+/// Without `reject_when_full`, hitting capacity auto-flushes instead of
+/// rejecting (the server default), and the new event is retained.
+#[test]
+fn full_queue_auto_flushes_by_default() {
+    let mut e = engine(
+        44,
+        StreamConfig {
+            queue_capacity: 3,
+            batch_size: usize::MAX,
+            reject_when_full: false,
+            ..Default::default()
+        },
+    );
+    for k in 0..3 {
+        assert_eq!(e.rate(0, k, 3.0), IngestResult::Buffered);
+    }
+    match e.rate(0, 9, 3.0) {
+        IngestResult::Flushed { applied } => assert_eq!(applied, 3),
+        other => panic!("expected auto-flush, got {other:?}"),
+    }
+    assert_eq!(e.buffered(), 1, "the triggering event stays buffered");
+}
+
+/// The writer-thread path applies exactly what the equivalent direct
+/// engine sequence applies (same seed, same events → same flush counts
+/// and final dimensions).
+#[test]
+fn shared_path_matches_direct_engine() {
+    let e = engine(45, StreamConfig { batch_size: 100, ..Default::default() });
+    let (shared, writer) = SharedEngine::spawn(e);
+    for k in 0..5u32 {
+        assert_eq!(
+            shared.rate(2, 20 + k, 2.5),
+            IngestResult::Buffered,
+            "event {k}"
+        );
+    }
+    assert_eq!(shared.flush(), 5);
+    assert_eq!(shared.flush(), 0, "nothing left to apply");
+    let from_shared = writer.join();
+
+    let mut direct = engine(45, StreamConfig { batch_size: 100, ..Default::default() });
+    for k in 0..5u32 {
+        assert_eq!(direct.rate(2, 20 + k, 2.5), IngestResult::Buffered);
+    }
+    assert_eq!(direct.flush(), 5);
+    assert_eq!(from_shared.dims(), direct.dims());
+}
