@@ -1,7 +1,9 @@
 #!/usr/bin/env sh
-# Tier-1 gate plus lints. Build + tests are hard failures; fmt/clippy are
-# advisory until the pre-existing tree is formatted (flip STRICT_LINTS=1
-# to gate on them).
+# Tier-1 gate plus lints. Build + tests are hard failures; fmt/clippy
+# gate too (STRICT_LINTS defaults to 1; set STRICT_LINTS=0 to demote
+# them to advisory, e.g. while paying down newly introduced drift —
+# `cargo fmt` the tree and commit the mechanical diff instead where
+# possible).
 set -eu
 
 echo "==> cargo build --release"
@@ -20,11 +22,11 @@ cargo fmt --check || lint_status=1
 echo "==> cargo clippy -- -D warnings"
 cargo clippy --all-targets -- -D warnings || lint_status=1
 
-if [ "${STRICT_LINTS:-0}" = "1" ] && [ "$lint_status" -ne 0 ]; then
+if [ "${STRICT_LINTS:-1}" = "1" ] && [ "$lint_status" -ne 0 ]; then
     echo "lints failed (STRICT_LINTS=1)"
     exit 1
 elif [ "$lint_status" -ne 0 ]; then
-    echo "WARNING: fmt/clippy reported issues (advisory; set STRICT_LINTS=1 to gate)"
+    echo "WARNING: fmt/clippy reported issues (advisory; STRICT_LINTS=0 set)"
 fi
 
 echo "ci.sh: OK"

@@ -9,12 +9,17 @@
 
 use lshmf::bench::exp::BenchEnv;
 use lshmf::bench::Bencher;
-use lshmf::lsh::{NeighbourSearch, SimLsh};
+use lshmf::coordinator::shared::SharedEngine;
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
+use lshmf::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
 use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
 use lshmf::mf::pjrt_trainer::conflict_free_batches;
 use lshmf::mf::sgd::{train_sgd_logged, SgdConfig};
 use lshmf::rng::Rng;
 use lshmf::runtime::{mf_scalars, Runtime};
+use lshmf::sparse::{Csc, Csr, Triples};
 
 fn main() {
     let env = BenchEnv::from_env();
@@ -90,6 +95,69 @@ fn main() {
             m.fmt_line(),
             entries.len() as f64 / m.p50.as_secs_f64() / 1e6
         );
+    }
+
+    // --- sharded snapshot publish (bytes cloned per flush, D=4)
+    {
+        // Fixture sized so the acceptance comparison is honest: a full
+        // (model, matrix) clone — what the pre-sharding publish paid on
+        // every flush — versus what the sharded publish actually copies
+        // when one column band is dirtied.
+        let (m, n) = (2048usize, 256usize);
+        let mut fix_rng = Rng::seeded(77);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 40_000 {
+            let (i, j) = (fix_rng.below(m), fix_rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + fix_rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let hash_state = OnlineHashState::build(SimLsh::new(2, 8, 8, 2), &csc);
+        let (topk, _) = hash_state.topk(8, &mut fix_rng);
+        let cfg = CulshConfig { f: 32, k: 8, epochs: 1, eval: Vec::new(), ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut Rng::seeded(7));
+        let metrics = Registry::new();
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig { batch_size: usize::MAX >> 1, ..Default::default() },
+            cfg,
+            Rng::seeded(9),
+            metrics.clone(),
+        );
+        let engine = Engine::new(orch, (1.0, 5.0), metrics.clone());
+        let full_bytes = engine.model().bytes() + engine.matrix().bytes();
+        let (shared, writer) = SharedEngine::spawn_sharded(engine, 4);
+        let band0_cols = n / 4;
+        let mk = b.run("sharded publish D=4 (1-band flush)", || {
+            // dirty only band 0: re-rate 8 of its columns, then flush
+            for c in 0..8u32 {
+                shared.rate(
+                    c % m as u32,
+                    c % band0_cols as u32,
+                    2.0 + (c % 3) as f32,
+                );
+            }
+            shared.flush()
+        });
+        let cloned = metrics.gauge("shared.publish_bytes_cloned").get();
+        println!(
+            "{}  |  {:.0} bytes cloned vs {} full clone ({:.1}% of baseline)",
+            mk.fmt_line(),
+            cloned,
+            full_bytes,
+            100.0 * cloned / full_bytes as f64
+        );
+        assert!(
+            cloned < full_bytes as f64 / 2.0,
+            "1-band publish must clone < 1/2 of the full (model, matrix) state: \
+             {cloned} vs {full_bytes}"
+        );
+        writer.join();
     }
 
     // --- PJRT step latency

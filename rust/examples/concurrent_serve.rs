@@ -3,9 +3,12 @@
 //! connections while a writer connection streams live ratings through
 //! the single-writer online path.
 //!
-//! Demonstrates the tentpole serving property: `PREDICT`/`TOPN` latency
-//! stays flat *during* flushes because readers run on epoch-swapped
-//! snapshots and never wait for the online update.
+//! Demonstrates the tentpole serving properties: `PREDICT`/`MPREDICT`/
+//! `TOPN` latency stays flat *during* flushes because readers run on
+//! epoch-swapped snapshots and never wait for the online update — and
+//! with the snapshot sharded by column band, each flush republishes only
+//! the bands it dirtied (watch `shared.publish_bytes_cloned` and the
+//! `shared.shard<b>.publishes` counters in the stats dump).
 //!
 //! Run with: `cargo run --release --example concurrent_serve`
 
@@ -26,6 +29,7 @@ use std::time::{Duration, Instant};
 const READERS: usize = 4;
 const REQUESTS_PER_READER: usize = 400;
 const RATES: usize = 512;
+const SHARDS: usize = 4;
 
 fn main() {
     let mut rng = Rng::seeded(13);
@@ -56,9 +60,14 @@ fn main() {
     let stop = Arc::new(AtomicBool::new(false));
     let server_thread = {
         let stop = stop.clone();
-        std::thread::spawn(move || server::serve(engine, listener, stop, READERS + 1))
+        std::thread::spawn(move || {
+            server::serve_sharded(engine, listener, stop, READERS + 1, SHARDS)
+        })
     };
-    println!("serving on {addr} with {} connection threads", READERS + 1);
+    println!(
+        "serving on {addr} with {} connection threads, {SHARDS} snapshot shards",
+        READERS + 1
+    );
 
     let (nrows, ncols) = (ds.nrows(), ds.ncols());
     let t0 = Instant::now();
@@ -72,6 +81,15 @@ fn main() {
             for k in 0..REQUESTS_PER_READER {
                 let line = if k % 10 == 0 {
                     format!("TOPN {} 10\n", (k * 31 + reader) % nrows)
+                } else if k % 10 == 5 {
+                    // batched lookups answer from one snapshot version
+                    format!(
+                        "MPREDICT {} {} {} {}\n",
+                        (k * 17 + reader) % nrows,
+                        (k * 13) % ncols,
+                        (k * 13 + 1) % ncols,
+                        (k * 13 + 2) % ncols
+                    )
                 } else {
                     format!("PREDICT {} {}\n", (k * 17 + reader) % nrows, (k * 13) % ncols)
                 };
@@ -139,7 +157,8 @@ fn main() {
             if line.trim_end().ends_with("END") {
                 break;
             }
-            let keep = ["dims", "buffered", "version", "server.", "shared.", "stream."];
+            let keep =
+                ["dims", "buffered", "version", "shards", "server.", "shared.", "stream."];
             if keep.iter().any(|p| line.contains(p)) {
                 print!("{line}");
             }

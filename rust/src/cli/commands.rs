@@ -229,6 +229,11 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // `--threads` doubles as the connection-pool width for serving (it
     // is also the trainer's block-rotation width; both default to 4).
     let threads = cfg.trainer.threads.max(1);
+    // `--shards` sets how many column bands the snapshot publish splits
+    // the factor state into (a flush republishes only dirty bands).
+    let shards = args
+        .get_usize("shards")?
+        .unwrap_or(crate::coordinator::DEFAULT_SHARDS);
     let mut rng = Rng::seeded(cfg.dataset.seed);
     let ds = build_dataset(&cfg, &mut rng)?;
     eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
@@ -258,11 +263,12 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let engine = Engine::new(orch, (ds.min_value, ds.max_value), metrics);
     let listener = std::net::TcpListener::bind(("0.0.0.0", port as u16))?;
     eprintln!(
-        "# serving on port {port} with {threads} reader thread(s) \
-         (PREDICT/TOPN/RATE/FLUSH/STATS/QUIT)"
+        "# serving on port {port} with {threads} reader thread(s), \
+         {shards} snapshot shard(s) \
+         (PREDICT/MPREDICT/TOPN/RATE/FLUSH/STATS/QUIT)"
     );
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    crate::coordinator::server::serve(engine, listener, stop, threads)?;
+    crate::coordinator::server::serve_sharded(engine, listener, stop, threads, shards)?;
     Ok(())
 }
 

@@ -7,9 +7,10 @@
 //!                 [--epochs 20] [--threads 4] [--lsh simlsh|gsm|rpcos|minhash|rand]
 //! lshmf online    [--config exp.toml] — Table 9 protocol: base train,
 //!                 increment via Algorithm 4, report the RMSE delta
-//! lshmf serve     [--config exp.toml] [--port 7878] [--threads 4] — train,
-//!                 then serve TCP with a bounded reader pool (writes are
-//!                 single-writer; see coordinator::shared)
+//! lshmf serve     [--config exp.toml] [--port 7878] [--threads 4]
+//!                 [--shards 8] — train, then serve TCP with a bounded
+//!                 reader pool (writes are single-writer; snapshots are
+//!                 sharded by column band; see coordinator::shared)
 //! lshmf info      — artifact bundle status (PJRT graphs available?)
 //! ```
 //!
@@ -78,6 +79,7 @@ COMMON FLAGS:
   --threads <int>      worker threads (training block-rotation; serve
                        uses it as the connection-pool width)
   --port <int>         serve: TCP port (default 7878)
+  --shards <int>       serve: snapshot column-band shard count (default 8)
   --out <file>         gen-data: output path
 ";
 

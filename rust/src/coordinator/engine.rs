@@ -11,12 +11,64 @@ use crate::metrics::Registry;
 use crate::mf::neighbourhood::{CulshModel, NeighbourScratch};
 use crate::sparse::Csr;
 
-/// Score every unrated column of `matrix` for row `i` and return the top
-/// `n_items` by clamped prediction (ties broken by ascending column id).
+/// Score every unrated column of `matrix` for row `i` with `score` and
+/// return the top `n_items` (ties broken by ascending column id).
 ///
-/// Shared by the single-threaded [`Engine`] and the lock-free read path
-/// of [`super::shared::SharedEngine`], so both serving flavours rank
-/// identically. `i` must be in range.
+/// Shared by the single-threaded [`Engine`] and the sharded read path of
+/// [`super::shared::SharedEngine`], so both serving flavours rank
+/// identically. Ordering uses `f32::total_cmp`, not
+/// `partial_cmp().unwrap()`: a NaN score out of a degenerate model state
+/// must sort deterministically instead of panicking the connection
+/// thread. `i` must be in range.
+pub(crate) fn rank_unrated_by(
+    matrix: &Csr,
+    i: usize,
+    n_items: usize,
+    mut score: impl FnMut(usize) -> f32,
+) -> Vec<(u32, f32)> {
+    let n = matrix.ncols();
+    let rated: std::collections::HashSet<usize> = matrix.row(i).map(|(j, _)| j).collect();
+    let mut scored: Vec<(u32, f32)> = Vec::with_capacity(n - rated.len());
+    for j in 0..n {
+        if rated.contains(&j) {
+            continue;
+        }
+        scored.push((j as u32, score(j)));
+    }
+    // NaN scores sink to the tail (a poisoned column must never lead
+    // the recommendations; under plain descending `total_cmp` positive
+    // NaN would sort above +inf).
+    scored.sort_unstable_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
+        (true, true) => a.0.cmp(&b.0),
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)),
+    });
+    scored.truncate(n_items);
+    scored
+}
+
+/// Score the requested columns of an `n`-column state with `score`,
+/// mapping out-of-range columns to `None` (the `MPREDICT` body). Shared
+/// by both serving flavours so their replies cannot drift.
+pub(crate) fn predict_many_by(
+    n: usize,
+    cols: &[u32],
+    mut score: impl FnMut(usize) -> f32,
+) -> Vec<Option<f32>> {
+    cols.iter()
+        .map(|&j| {
+            let j = j as usize;
+            if j >= n {
+                None
+            } else {
+                Some(score(j))
+            }
+        })
+        .collect()
+}
+
+/// [`rank_unrated_by`] over a model's clamped Eq. (1) predictions.
 pub(crate) fn rank_unrated(
     model: &CulshModel,
     matrix: &Csr,
@@ -24,20 +76,10 @@ pub(crate) fn rank_unrated(
     n_items: usize,
     clamp: (f32, f32),
 ) -> Vec<(u32, f32)> {
-    let n = matrix.ncols();
-    let rated: std::collections::HashSet<usize> = matrix.row(i).map(|(j, _)| j).collect();
-    let mut scored: Vec<(u32, f32)> = Vec::with_capacity(n - rated.len());
     let mut scratch = NeighbourScratch::default();
-    for j in 0..n {
-        if rated.contains(&j) {
-            continue;
-        }
-        let s = model.predict(matrix, i, j, &mut scratch).clamp(clamp.0, clamp.1);
-        scored.push((j as u32, s));
-    }
-    scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-    scored.truncate(n_items);
-    scored
+    rank_unrated_by(matrix, i, n_items, |j| {
+        model.predict(matrix, i, j, &mut scratch).clamp(clamp.0, clamp.1)
+    })
 }
 
 /// The serving facade.
@@ -64,6 +106,17 @@ impl Engine {
     /// The combined training matrix (last-flushed state).
     pub fn matrix(&self) -> &Csr {
         self.orch.matrix()
+    }
+
+    /// Shared handle to the combined matrix (zero-copy snapshot publish).
+    pub fn matrix_arc(&self) -> std::sync::Arc<Csr> {
+        self.orch.matrix_arc()
+    }
+
+    /// Column ids applied by the most recent flush (the sharded
+    /// publish's dirty-band source).
+    pub fn last_flush_cols(&self) -> &[u32] {
+        self.orch.last_flush_cols()
     }
 
     /// Events buffered but not yet applied.
@@ -104,6 +157,24 @@ impl Engine {
         }
         self.metrics.counter("engine.topn").inc();
         rank_unrated(self.orch.model(), self.orch.matrix(), i, n_items, self.clamp)
+    }
+
+    /// Batched prediction against one engine state (the `MPREDICT`
+    /// verb). `None` if the row is out of range; per-column `None` for
+    /// out-of-range columns.
+    pub fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
+        let (m, n) = self.dims();
+        if i >= m {
+            return None;
+        }
+        self.metrics.counter("engine.mpredict").inc();
+        let mut scratch = NeighbourScratch::default();
+        Some(predict_many_by(n, cols, |j| {
+            self.orch
+                .model()
+                .predict(self.orch.matrix(), i, j, &mut scratch)
+                .clamp(self.clamp.0, self.clamp.1)
+        }))
     }
 
     /// Ingest a rating through the online path.
@@ -193,6 +264,46 @@ mod tests {
         for (j, _) in &recs {
             assert!(!rated.contains(&(*j as usize)));
         }
+    }
+
+    /// Regression: a NaN-producing model state (poisoned bias) must not
+    /// panic the ranking — `partial_cmp().unwrap()` panicked the
+    /// connection thread — and NaN scores must never lead the reply.
+    #[test]
+    fn rank_survives_nan_scores() {
+        let mut rng = Rng::seeded(64);
+        let e = engine(&mut rng);
+        let mut model = e.orch.model().clone();
+        model.base.bj[0] = f32::NAN;
+        model.base.bi[2] = f32::NAN;
+        let recs = rank_unrated(&model, e.orch.matrix(), 2, 5, (1.0, 5.0));
+        assert!(recs.len() <= 5);
+        // every unrated column scored NaN for row 2; ties broken by id
+        for win in recs.windows(2) {
+            assert!(win[0].0 < win[1].0);
+        }
+        // a single NaN column among finite scores sinks to the tail
+        let recs = rank_unrated(&model, e.orch.matrix(), 3, 15, (1.0, 5.0));
+        assert!(!recs.is_empty());
+        for win in recs.windows(2) {
+            assert!(
+                !win[0].1.is_nan() || win[1].1.is_nan(),
+                "NaN score ranked above a finite one: {recs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn predict_many_matches_predict() {
+        let mut rng = Rng::seeded(65);
+        let e = engine(&mut rng);
+        let cols: Vec<u32> = vec![0, 3, 7, 99, 14];
+        let got = e.predict_many(2, &cols).unwrap();
+        for (&j, p) in cols.iter().zip(&got) {
+            assert_eq!(*p, e.predict(2, j as usize), "col {j}");
+        }
+        assert_eq!(got[3], None, "out-of-range column maps to None");
+        assert!(e.predict_many(99, &cols).is_none(), "out-of-range row");
     }
 
     #[test]

@@ -9,10 +9,11 @@
 //!   incremental training (the "online sparse big data" pipeline).
 //! * [`engine`] — the serving engine: predictions, top-N recommendation,
 //!   and live ingestion against a trained CULSH-MF model.
-//! * [`shared`] — the concurrent serving core: epoch-swapped read
-//!   snapshots over a single writer thread, so `PREDICT`/`TOPN`/`STATS`
-//!   proceed lock-free while `RATE` events stream through the online
-//!   path — reads are never blocked by a flush.
+//! * [`shared`] — the concurrent serving core: epoch-swapped,
+//!   column-band-sharded read snapshots over a single writer thread, so
+//!   `PREDICT`/`MPREDICT`/`TOPN`/`STATS` proceed lock-free while `RATE`
+//!   events stream through the online path — reads are never blocked by
+//!   a flush, and a flush republishes only the bands it dirtied.
 //! * [`server`] — a line-protocol TCP front end with a bounded
 //!   connection-thread pool over the concurrent core.
 
@@ -24,5 +25,5 @@ pub mod stream;
 
 pub use engine::Engine;
 pub use rotation::{RotationPlan, VirtualClockReport};
-pub use shared::{SharedEngine, Snapshot, WriterHandle};
+pub use shared::{SharedEngine, Snapshot, WriterHandle, DEFAULT_SHARDS};
 pub use stream::{StreamConfig, StreamOrchestrator};

@@ -4,8 +4,13 @@
 //!
 //! ```text
 //! PREDICT <row> <col>       -> "PRED <value>" | "ERR out-of-range"
+//! MPREDICT <row> <col>...   -> "PREDS <v1> <v2> ..." ("-" per out-of-range col;
+//!                              at most MAX_MPREDICT_COLS columns, else
+//!                              "ERR too-many-cols")
 //! TOPN <row> <n>            -> "TOPN <col>:<score> ..."
-//! RATE <row> <col> <value>  -> "OK buffered" | "OK flushed <n>" | "ERR backpressure"
+//! RATE <row> <col> <value>  -> "OK buffered" | "OK flushed <n>"
+//!                              | "ERR backpressure" | "ERR invalid-value"
+//!                              | "ERR out-of-bounds"
 //! FLUSH                     -> "OK flushed <n>"
 //! STATS                     -> multi-line stats terminated by "END"
 //! QUIT                      -> closes the connection
@@ -32,11 +37,19 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// Most columns one `MPREDICT` line may request. Bounds the work and
+/// allocation a single request line can demand — the read-side analogue
+/// of the `RATE` path's `max_rows`/`max_cols` hardening.
+pub const MAX_MPREDICT_COLS: usize = 256;
+
 /// The protocol surface a serving engine must expose. `&self` receivers
 /// throughout: implementations provide their own interior
 /// synchronization (a mutex, or snapshots + a writer channel).
 pub trait Serving {
     fn predict(&self, i: usize, j: usize) -> Option<f32>;
+    /// Batched prediction against one consistent state; `None` for an
+    /// out-of-range row, per-column `None` for out-of-range columns.
+    fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>>;
     fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)>;
     fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult;
     fn flush(&self) -> usize;
@@ -46,6 +59,12 @@ pub trait Serving {
 impl Serving for Mutex<Engine> {
     fn predict(&self, i: usize, j: usize) -> Option<f32> {
         self.lock().unwrap().predict(i, j)
+    }
+
+    fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
+        // One lock for the whole batch — the same consistency the
+        // sharded engine gets from a single snapshot clone.
+        self.lock().unwrap().predict_many(i, cols)
     }
 
     fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
@@ -68,6 +87,10 @@ impl Serving for Mutex<Engine> {
 impl Serving for SharedEngine {
     fn predict(&self, i: usize, j: usize) -> Option<f32> {
         SharedEngine::predict(self, i, j)
+    }
+
+    fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
+        SharedEngine::predict_many(self, i, cols)
     }
 
     fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
@@ -103,6 +126,39 @@ pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String
                 None => Some("ERR out-of-range".into()),
             }
         }
+        "MPREDICT" => {
+            let Some(i) = parse::<usize>(parts.next()) else {
+                return Some("ERR usage: MPREDICT <row> <col> [<col> ...]".into());
+            };
+            let mut cols: Vec<u32> = Vec::new();
+            for p in parts {
+                if cols.len() >= MAX_MPREDICT_COLS {
+                    return Some("ERR too-many-cols".into());
+                }
+                match p.parse::<u32>() {
+                    Ok(j) => cols.push(j),
+                    Err(_) => {
+                        return Some("ERR usage: MPREDICT <row> <col> [<col> ...]".into())
+                    }
+                }
+            }
+            if cols.is_empty() {
+                return Some("ERR usage: MPREDICT <row> <col> [<col> ...]".into());
+            }
+            match engine.predict_many(i, &cols) {
+                None => Some("ERR out-of-range".into()),
+                Some(preds) => {
+                    let body: Vec<String> = preds
+                        .iter()
+                        .map(|p| match p {
+                            Some(v) => format!("{v:.4}"),
+                            None => "-".into(),
+                        })
+                        .collect();
+                    Some(format!("PREDS {}", body.join(" ")))
+                }
+            }
+        }
         "TOPN" => {
             let (Some(i), Some(n)) = (parse(parts.next()), parse(parts.next())) else {
                 return Some("ERR usage: TOPN <row> <n>".into());
@@ -126,6 +182,8 @@ pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String
                 IngestResult::Buffered => Some("OK buffered".into()),
                 IngestResult::Flushed { applied } => Some(format!("OK flushed {applied}")),
                 IngestResult::Rejected => Some("ERR backpressure".into()),
+                IngestResult::InvalidValue => Some("ERR invalid-value".into()),
+                IngestResult::OutOfBounds => Some("ERR out-of-bounds".into()),
             }
         }
         "FLUSH" => {
@@ -162,8 +220,20 @@ pub fn serve(
     stop: Arc<AtomicBool>,
     threads: usize,
 ) -> std::io::Result<Engine> {
+    serve_sharded(engine, listener, stop, threads, super::shared::DEFAULT_SHARDS)
+}
+
+/// [`serve`] with an explicit column-band shard count for the snapshot
+/// publish (see [`SharedEngine::spawn_sharded`]).
+pub fn serve_sharded(
+    engine: Engine,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    threads: usize,
+    shards: usize,
+) -> std::io::Result<Engine> {
     let threads = threads.max(1);
-    let (shared, writer) = SharedEngine::spawn(engine);
+    let (shared, writer) = SharedEngine::spawn_sharded(engine, shards);
     let (conn_tx, conn_rx) = std::sync::mpsc::channel::<TcpStream>();
     let conn_rx = Arc::new(Mutex::new(conn_rx));
     let mut workers = Vec::with_capacity(threads);
@@ -277,6 +347,9 @@ mod tests {
         let e = engine(&mut rng);
         let predict = handle_line(&e, "PREDICT 0 0").unwrap();
         assert!(predict.starts_with("PRED "), "{predict}");
+        let mpredict = handle_line(&e, "MPREDICT 0 0 1 2").unwrap();
+        assert!(mpredict.starts_with("PREDS "), "{mpredict}");
+        assert_eq!(mpredict.split_whitespace().count(), 4, "{mpredict}");
         let topn = handle_line(&e, "TOPN 0 3").unwrap();
         assert!(topn.starts_with("TOPN "), "{topn}");
         assert!(handle_line(&e, "RATE 0 5 4.5").unwrap().starts_with("OK"));
@@ -294,6 +367,32 @@ mod tests {
         assert!(handle_line(&e, "PREDICT x y").unwrap().starts_with("ERR"));
         assert!(handle_line(&e, "BOGUS").unwrap().starts_with("ERR unknown"));
         assert!(handle_line(&e, "").unwrap().starts_with("ERR"));
+        assert!(handle_line(&e, "MPREDICT 0").unwrap().starts_with("ERR usage"));
+        assert!(handle_line(&e, "MPREDICT 999 0").unwrap().starts_with("ERR out-of-range"));
+        // out-of-range *columns* answer "-" placeholders, not errors
+        assert_eq!(handle_line(&e, "MPREDICT 0 999").unwrap(), "PREDS -");
+        // one request line cannot demand unbounded prediction work
+        let flood = format!("MPREDICT 0{}", " 1".repeat(MAX_MPREDICT_COLS + 1));
+        assert_eq!(handle_line(&e, &flood).unwrap(), "ERR too-many-cols");
+        let full = format!("MPREDICT 0{}", " 1".repeat(MAX_MPREDICT_COLS));
+        assert!(handle_line(&e, &full).unwrap().starts_with("PREDS "));
+    }
+
+    /// A NaN wire value parses but is refused before it can poison the
+    /// factors; an absurd id is refused before the flush path would
+    /// allocate multi-GB parameter vectors.
+    #[test]
+    fn rate_rejects_nan_and_oob_on_the_wire() {
+        let mut rng = Rng::seeded(76);
+        let e = engine(&mut rng);
+        assert_eq!(handle_line(&e, "RATE 0 0 NaN").unwrap(), "ERR invalid-value");
+        assert_eq!(handle_line(&e, "RATE 0 0 inf").unwrap(), "ERR invalid-value");
+        assert_eq!(
+            handle_line(&e, "RATE 4000000000 4000000000 5").unwrap(),
+            "ERR out-of-bounds"
+        );
+        // the engine state is untouched
+        assert_eq!(handle_line(&e, "FLUSH").unwrap(), "OK flushed 0");
     }
 
     /// The backpressure contract surfaces on the wire: with
@@ -331,10 +430,14 @@ mod tests {
         for line in [
             "PREDICT 0 0",
             "PREDICT 999 0",
+            "MPREDICT 0 0 1 2 999",
             "TOPN 0 3",
             "RATE 0 5 4.5",
+            "RATE 0 0 NaN",
+            "RATE 4000000000 0 3.0",
             "FLUSH",
             "PREDICT 0 5",
+            "MPREDICT 0 5 6",
         ] {
             let a = handle_line(&single, line).unwrap();
             let b = handle_line(&shared, line).unwrap();

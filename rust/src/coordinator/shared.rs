@@ -1,57 +1,106 @@
-//! Concurrent serving core: epoch-swapped read snapshots over a single
-//! writer thread.
+//! Concurrent serving core: epoch-swapped, column-band-sharded read
+//! snapshots over a single writer thread.
 //!
 //! The original server serialized *every* request — reads included —
 //! behind one `Mutex<Engine>`, so a flush (incremental retraining, tens
-//! of milliseconds and up) stalled all traffic. Following the cuMF line
-//! of work (Tan et al.), throughput comes from separating the
-//! read-mostly factor state from the serialized update stream:
+//! of milliseconds and up) stalled all traffic. PR 1 split reads onto
+//! epoch-swapped snapshots, but still republished the *entire* (model,
+//! matrix) pair on every flush — a deep clone growing linearly with
+//! state size. Following the cuMF line of work (Tan et al.), this core
+//! now shards the published state by **column band** (the same
+//! contiguous-band split the block-rotation schedule uses, via
+//! [`crate::sparse::band_of`]):
 //!
-//! * **Reads** (`PREDICT` / `TOPN` / `STATS`) clone an `Arc<Snapshot>`
-//!   out of an `RwLock` held for nanoseconds, then compute entirely
-//!   lock-free on the immutable snapshot. Any number of connections read
-//!   in parallel, *including while a flush is running*.
+//! * **Reads** (`PREDICT` / `MPREDICT` / `TOPN` / `STATS`) clone one
+//!   `Arc<Snapshot>` out of an `RwLock` held for nanoseconds, then
+//!   compute entirely lock-free on the immutable sharded view. A
+//!   snapshot holds `Arc`s to the row factors, the training matrix, and
+//!   one [`ColBand`] per shard — always a complete, internally
+//!   consistent state, so torn reads stay impossible by construction.
 //! * **Writes** (`RATE` / `FLUSH`) are funnelled through an `mpsc`
-//!   channel into one writer thread that owns the [`Engine`] (and with
-//!   it the [`super::stream::StreamOrchestrator`] online path), exactly
-//!   preserving the paper's single-writer online model. After each
-//!   flush the writer publishes a fresh snapshot by swapping the `Arc`.
+//!   channel into one writer thread that owns the [`Engine`], exactly
+//!   preserving the paper's single-writer online model. Each flush
+//!   reports the column ids it applied; `publish` keys the per-shard
+//!   dirty set off that report and clones **only the dirty bands** (plus
+//!   any band whose Top-K rows the LSH re-search moved),
+//!   reference-sharing the clean ones across versions. The matrix `Arc`
+//!   is shared with the orchestrator outright — publishing it copies
+//!   nothing.
 //!
-//! Readers therefore always see a complete, internally consistent
-//! (model, matrix) pair — torn reads are impossible by construction —
-//! and snapshot `version`s increase monotonically.
+//! The per-shard dirty sets follow the same band assignment the
+//! rotation schedule uses, which leaves the seam for the multi-writer
+//! follow-up: one write queue per band, conflict-free by construction.
 //!
 //! Metrics (all in the engine's [`Registry`]): per-verb counters
-//! (`server.predict`, `server.topn`, `server.rate`, `server.flush`,
-//! `server.stats`), lock/queue wait histograms (`shared.read_wait`,
-//! `shared.write_wait`, `shared.publish_wait`) and the
-//! `shared.read_wait_last_ns` gauge.
+//! (`server.predict`, `server.mpredict`, `server.topn`, `server.rate`,
+//! `server.flush`, `server.stats`), wait histograms (`shared.read_wait`,
+//! `shared.write_wait`, `shared.publish_wait`), the publish-cost gauges
+//! `shared.publish_bytes_cloned` / counter
+//! `shared.publish_bytes_cloned_total`, the per-shard counters
+//! `shared.shard<b>.publishes`, and `shared.shards_cloned`.
 
-use super::engine::{rank_unrated, Engine};
+use super::engine::{predict_many_by, rank_unrated_by, Engine};
 use super::stream::IngestResult;
 use crate::metrics::Registry;
-use crate::mf::neighbourhood::{CulshModel, NeighbourScratch};
-use crate::sparse::Csr;
+use crate::mf::neighbourhood::{ColBand, NeighbourScratch, RowFactors, ShardedFactors};
+use crate::sparse::{band_of, band_range, Csr};
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// An immutable view of the factor state, published by the writer after
-/// every flush.
+/// Default column-band shard count for [`SharedEngine::spawn`].
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// An immutable sharded view of the factor state, published by the
+/// writer after every flush. Clean shards are reference-shared with the
+/// previous version; `buffered` rides inside so `STATS` reads a
+/// coherent (version, buffered) pair from one pointer load.
 pub struct Snapshot {
-    /// The CULSH-MF model as of the last flush.
-    pub model: CulshModel,
-    /// The combined training matrix the model was flushed against.
-    pub matrix: Csr,
+    rows: Arc<RowFactors>,
+    shards: Arc<[Arc<ColBand>]>,
+    matrix: Arc<Csr>,
     /// Monotonic publication counter (0 at spawn, +1 per flush).
     pub version: u64,
+    /// Events buffered but not yet applied. The writer stores into the
+    /// *current* snapshot's counter on every buffered rating (one
+    /// relaxed store — no lock, no republish) and never into a
+    /// superseded snapshot's, so a reader holding version `v` always
+    /// sees a buffered count that belongs to `v`: a pre-flush version
+    /// can never pair with a post-flush count.
+    buffered: AtomicUsize,
 }
 
 impl Snapshot {
     pub fn dims(&self) -> (usize, usize) {
         (self.matrix.nrows(), self.matrix.ncols())
+    }
+
+    /// Events buffered but not yet applied, as of this version.
+    pub fn buffered(&self) -> usize {
+        self.buffered.load(Ordering::Relaxed)
+    }
+
+    /// Row-side factors shared by every band.
+    pub fn rows(&self) -> &RowFactors {
+        &self.rows
+    }
+
+    /// The column-band shards.
+    pub fn shards(&self) -> &[Arc<ColBand>] {
+        &self.shards
+    }
+
+    /// The combined training matrix this state was flushed against.
+    pub fn matrix(&self) -> &Csr {
+        &self.matrix
+    }
+
+    /// Assemble the consistent sharded read view.
+    fn view(&self) -> ShardedFactors<'_> {
+        ShardedFactors { rows: &self.rows, bands: &self.shards, matrix: &self.matrix }
     }
 }
 
@@ -69,7 +118,6 @@ enum WriteCmd {
 pub struct SharedEngine {
     state: Arc<RwLock<Arc<Snapshot>>>,
     tx: Sender<WriteCmd>,
-    buffered: Arc<AtomicUsize>,
     clamp: (f32, f32),
     metrics: Registry,
 }
@@ -90,27 +138,28 @@ impl WriterHandle {
 }
 
 impl SharedEngine {
-    /// Split an [`Engine`] into a concurrent read handle plus its single
-    /// writer thread. Uses the engine's own metric registry, so engine-
-    /// and server-level counters land in one `STATS` report.
+    /// [`SharedEngine::spawn_sharded`] with [`DEFAULT_SHARDS`] bands.
     pub fn spawn(engine: Engine) -> (SharedEngine, WriterHandle) {
+        Self::spawn_sharded(engine, DEFAULT_SHARDS)
+    }
+
+    /// Split an [`Engine`] into a concurrent read handle plus its single
+    /// writer thread, sharding the published state into `shards` column
+    /// bands. Uses the engine's own metric registry, so engine- and
+    /// server-level counters land in one `STATS` report.
+    pub fn spawn_sharded(engine: Engine, shards: usize) -> (SharedEngine, WriterHandle) {
+        let d = shards.max(1);
         let clamp = engine.clamp();
         let metrics = engine.metrics().clone();
-        let initial = Arc::new(Snapshot {
-            model: engine.model().clone(),
-            matrix: engine.matrix().clone(),
-            version: 0,
-        });
+        let initial = Arc::new(full_snapshot(&engine, d, 0));
         let state = Arc::new(RwLock::new(initial));
-        let buffered = Arc::new(AtomicUsize::new(engine.buffered()));
         let (tx, rx) = channel();
         let handle = {
             let state = Arc::clone(&state);
-            let buffered = Arc::clone(&buffered);
             let metrics = metrics.clone();
-            std::thread::spawn(move || writer_loop(engine, rx, state, buffered, metrics))
+            std::thread::spawn(move || writer_loop(engine, rx, state, metrics))
         };
-        let shared = SharedEngine { state, tx: tx.clone(), buffered, clamp, metrics };
+        let shared = SharedEngine { state, tx: tx.clone(), clamp, metrics };
         (shared, WriterHandle { handle, tx })
     }
 
@@ -137,6 +186,11 @@ impl SharedEngine {
         self.snapshot().version
     }
 
+    /// Buffered-event count of the last-published snapshot.
+    pub fn buffered(&self) -> usize {
+        self.snapshot().buffered()
+    }
+
     /// Predict the interaction value for (row, col) on the current
     /// snapshot. `None` if out of range.
     pub fn predict(&self, i: usize, j: usize) -> Option<f32> {
@@ -147,8 +201,25 @@ impl SharedEngine {
             return None;
         }
         let mut scratch = NeighbourScratch::default();
-        let raw = snap.model.predict(&snap.matrix, i, j, &mut scratch);
+        let raw = snap.view().predict(i, j, &mut scratch);
         Some(raw.clamp(self.clamp.0, self.clamp.1))
+    }
+
+    /// Batched prediction — the whole batch reads one snapshot, so every
+    /// answer comes from the same published version (the `MPREDICT`
+    /// consistency contract).
+    pub fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
+        self.metrics.counter("server.mpredict").inc();
+        let snap = self.snapshot();
+        let (m, n) = snap.dims();
+        if i >= m {
+            return None;
+        }
+        let view = snap.view();
+        let mut scratch = NeighbourScratch::default();
+        Some(predict_many_by(n, cols, |j| {
+            view.predict(i, j, &mut scratch).clamp(self.clamp.0, self.clamp.1)
+        }))
     }
 
     /// Top-N highest-predicted unrated columns for a row, on the current
@@ -160,12 +231,17 @@ impl SharedEngine {
         if i >= m {
             return Vec::new();
         }
-        rank_unrated(&snap.model, &snap.matrix, i, n_items, self.clamp)
+        let view = snap.view();
+        let mut scratch = NeighbourScratch::default();
+        rank_unrated_by(snap.matrix(), i, n_items, |j| {
+            view.predict(i, j, &mut scratch).clamp(self.clamp.0, self.clamp.1)
+        })
     }
 
     /// Ingest a rating through the single-writer online path. Blocks
-    /// until the writer replies, so backpressure (`Rejected`) and flush
-    /// outcomes surface synchronously — the protocol semantics match the
+    /// until the writer replies, so backpressure (`Rejected`),
+    /// validation (`InvalidValue` / `OutOfBounds`) and flush outcomes
+    /// surface synchronously — the protocol semantics match the
     /// single-threaded engine exactly.
     pub fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult {
         self.metrics.counter("server.rate").inc();
@@ -193,76 +269,179 @@ impl SharedEngine {
 
     /// Metrics snapshot (server `STATS` verb). Same leading lines as the
     /// single-threaded engine (`dims`, `buffered`) plus the snapshot
-    /// version and the full registry dump.
+    /// version and shard count, then the full registry dump. All header
+    /// lines come from **one** snapshot clone, so `STATS` can never pair
+    /// a pre-flush version with a post-flush buffered count.
     pub fn stats(&self) -> String {
         self.metrics.counter("server.stats").inc();
         let snap = self.snapshot();
         let (m, n) = snap.dims();
         format!(
-            "dims {m}x{n}\nbuffered {}\nversion {}\n{}",
-            self.buffered.load(Ordering::Relaxed),
+            "dims {m}x{n}\nbuffered {}\nversion {}\nshards {}\n{}",
+            snap.buffered(),
             snap.version,
+            snap.shards.len(),
             self.metrics.snapshot()
         )
     }
 }
 
+/// Build a complete snapshot (every shard fresh) — the spawn-time state.
+fn full_snapshot(engine: &Engine, d: usize, version: u64) -> Snapshot {
+    let model = engine.model();
+    let matrix = engine.matrix_arc();
+    let ncols = matrix.ncols();
+    let shards: Vec<Arc<ColBand>> = (0..d)
+        .map(|b| {
+            let (lo, hi) = band_range(b, ncols, d);
+            Arc::new(model.col_band(lo, hi))
+        })
+        .collect();
+    Snapshot {
+        rows: Arc::new(model.row_factors()),
+        shards: shards.into(),
+        matrix,
+        version,
+        buffered: AtomicUsize::new(engine.buffered()),
+    }
+}
+
 /// The single writer: owns the engine, applies every write command in
-/// arrival order, republishes the snapshot after each flush.
+/// arrival order, republishes the (partially shared) snapshot after
+/// each flush — the dirty-band set comes straight from the flush's own
+/// applied-column report ([`Engine::last_flush_cols`]). Between
+/// publishes it keeps the *current* snapshot's buffered counter fresh
+/// with one relaxed store per buffered rating — superseded snapshots
+/// are never written again, which is what keeps a reader's (version,
+/// buffered) pair coherent.
 fn writer_loop(
     mut engine: Engine,
     rx: Receiver<WriteCmd>,
     state: Arc<RwLock<Arc<Snapshot>>>,
-    buffered: Arc<AtomicUsize>,
     metrics: Registry,
 ) -> Engine {
     let mut version = 1u64;
+    let mut current = Arc::clone(&state.read().unwrap_or_else(|e| e.into_inner()));
     for cmd in rx {
         match cmd {
             WriteCmd::Rate { i, j, r, reply } => {
                 let result = engine.rate(i, j, r);
-                if matches!(result, IngestResult::Flushed { .. }) {
-                    publish(&state, &engine, version, &metrics);
-                    version += 1;
+                match result {
+                    IngestResult::Buffered => {
+                        current.buffered.store(engine.buffered(), Ordering::Relaxed);
+                    }
+                    IngestResult::Flushed { .. } => {
+                        current = publish(&state, &engine, version, &metrics);
+                        version += 1;
+                    }
+                    // Rejected / InvalidValue / OutOfBounds never enter
+                    // the buffer: nothing to track or republish.
+                    _ => {}
                 }
-                buffered.store(engine.buffered(), Ordering::Relaxed);
                 let _ = reply.send(result);
             }
             WriteCmd::Flush { reply } => {
                 let applied = engine.flush();
                 // No-op flushes (idle FLUSH probes) publish nothing: a
-                // publish deep-clones the model and matrix, which is
-                // wasteful when state hasn't changed.
+                // publish clones the dirty shards, which is wasteful
+                // when state hasn't changed.
                 if applied > 0 {
-                    publish(&state, &engine, version, &metrics);
+                    current = publish(&state, &engine, version, &metrics);
                     version += 1;
                 }
-                buffered.store(engine.buffered(), Ordering::Relaxed);
                 let _ = reply.send(applied);
             }
             WriteCmd::Shutdown => break,
         }
     }
-    // Drain on shutdown so no accepted rating is silently dropped.
+    // Drain on shutdown so no accepted rating is silently dropped, and
+    // reflect the drained buffer in the published count.
     engine.flush();
-    buffered.store(engine.buffered(), Ordering::Relaxed);
+    current.buffered.store(engine.buffered(), Ordering::Relaxed);
     engine
 }
 
-/// Swap in a fresh snapshot. The (brief) write lock only covers the
-/// pointer swap — model/matrix cloning happens before taking it.
-fn publish(state: &RwLock<Arc<Snapshot>>, engine: &Engine, version: u64, metrics: &Registry) {
+/// Swap in a fresh snapshot, cloning **only the dirty column bands**:
+/// a band is dirty when the just-applied flush rated one of its columns
+/// ([`Engine::last_flush_cols`]), when the column universe grew (band
+/// boundaries move), or when the LSH re-search moved one of its Top-K
+/// rows. Clean bands, the row factors (when no row appeared) and the
+/// matrix `Arc` are shared with the previous version. The (brief) write
+/// lock only covers the pointer swap — all cloning happens before
+/// taking it. Returns the published snapshot so the writer can keep its
+/// buffered counter fresh.
+fn publish(
+    state: &RwLock<Arc<Snapshot>>,
+    engine: &Engine,
+    version: u64,
+    metrics: &Registry,
+) -> Arc<Snapshot> {
+    let prev = Arc::clone(&state.read().unwrap_or_else(|e| e.into_inner()));
+    let model = engine.model();
+    let matrix = engine.matrix_arc();
+    let (nrows, ncols) = (matrix.nrows(), matrix.ncols());
+    let (prev_rows, prev_cols) = prev.dims();
+    let d = prev.shards.len();
+    let mut bytes_cloned = 0usize;
+
+    let rows = if nrows != prev_rows {
+        let rf = model.row_factors();
+        bytes_cloned += rf.bytes();
+        Arc::new(rf)
+    } else {
+        Arc::clone(&prev.rows)
+    };
+
+    // A flush-rated band is treated as dirty even though today's
+    // Algorithm 4 freezes old columns' parameters (re-rated values live
+    // in the matrix, which is Arc-shared): the publish contract must not
+    // bake in that freeze, or a future online trainer that nudges a
+    // re-rated column's {b̂, v, w, c} would silently serve stale bands.
+    // The topk-equality check below covers the one way today's flush
+    // mutates an un-rated band.
+    let touched_bands: HashSet<usize> = engine
+        .last_flush_cols()
+        .iter()
+        .map(|&j| band_of(j as usize, ncols, d))
+        .collect();
+    let mut shards_cloned = 0u64;
+    let shards: Vec<Arc<ColBand>> = (0..d)
+        .map(|b| {
+            let clean = ncols == prev_cols
+                && !touched_bands.contains(&b)
+                && model.topk_band_matches(&prev.shards[b]);
+            if clean {
+                Arc::clone(&prev.shards[b])
+            } else {
+                let (lo, hi) = band_range(b, ncols, d);
+                let band = model.col_band(lo, hi);
+                bytes_cloned += band.bytes();
+                shards_cloned += 1;
+                metrics.counter(&format!("shared.shard{b}.publishes")).inc();
+                Arc::new(band)
+            }
+        })
+        .collect();
+
     let snap = Arc::new(Snapshot {
-        model: engine.model().clone(),
-        matrix: engine.matrix().clone(),
+        rows,
+        shards: shards.into(),
+        matrix,
         version,
+        buffered: AtomicUsize::new(engine.buffered()),
     });
     let timer = metrics.timer("shared.publish_wait");
     let mut guard = state.write().unwrap_or_else(|e| e.into_inner());
-    *guard = snap;
+    *guard = Arc::clone(&snap);
     drop(guard);
     drop(timer);
     metrics.counter("shared.publishes").inc();
+    metrics.counter("shared.shards_cloned").add(shards_cloned);
+    metrics.gauge("shared.publish_bytes_cloned").set(bytes_cloned as f64);
+    metrics
+        .counter("shared.publish_bytes_cloned_total")
+        .add(bytes_cloned as u64);
+    snap
 }
 
 #[cfg(test)]
@@ -311,13 +490,20 @@ mod tests {
         // ground truth from the engine before it moves into the writer
         let want_p = e.predict(2, 3);
         let want_top = e.top_n(2, 4);
-        let (shared, writer) = SharedEngine::spawn(e);
-        assert_eq!(shared.predict(2, 3), want_p);
-        assert_eq!(shared.top_n(2, 4), want_top);
-        assert!(shared.predict(999, 0).is_none());
-        assert!(shared.top_n(999, 4).is_empty());
-        assert_eq!(shared.version(), 0);
-        writer.join();
+        let want_many = e.predict_many(2, &[0, 3, 99]);
+        for d in [1usize, 3, 4, 8] {
+            let mut rng2 = Rng::seeded(91);
+            let e = engine(&mut rng2, StreamConfig::default());
+            let (shared, writer) = SharedEngine::spawn_sharded(e, d);
+            assert_eq!(shared.predict(2, 3), want_p, "d={d}");
+            assert_eq!(shared.top_n(2, 4), want_top, "d={d}");
+            assert_eq!(shared.predict_many(2, &[0, 3, 99]), want_many, "d={d}");
+            assert!(shared.predict(999, 0).is_none());
+            assert!(shared.top_n(999, 4).is_empty());
+            assert!(shared.predict_many(999, &[0]).is_none());
+            assert_eq!(shared.version(), 0);
+            writer.join();
+        }
     }
 
     #[test]
@@ -331,9 +517,10 @@ mod tests {
         for k in 0..3 {
             assert_eq!(shared.rate(0, (n0 + k) as u32, 5.0), IngestResult::Buffered);
         }
-        // 4th rating hits batch_size -> flush -> publish
+        // 4th rating hits batch_size -> flush -> publish; it re-rates
+        // the 3rd cell, so last-write-wins dedup applies 3 entries
         let res = shared.rate(0, (n0 + 2) as u32, 4.0);
-        assert!(matches!(res, IngestResult::Flushed { applied: 4 }), "{res:?}");
+        assert!(matches!(res, IngestResult::Flushed { applied: 3 }), "{res:?}");
         assert_eq!(shared.version(), 1);
         assert_eq!(shared.dims(), (m0, n0 + 3));
         let p = shared.predict(0, n0 + 2).unwrap();
@@ -350,6 +537,7 @@ mod tests {
         assert_eq!(shared.rate(1, 2, 4.0), IngestResult::Buffered);
         let stats = shared.stats();
         assert!(stats.contains("buffered 1"), "{stats}");
+        assert!(stats.contains("version 0"), "{stats}");
         assert_eq!(shared.flush(), 1);
         let stats = shared.stats();
         assert!(stats.contains("buffered 0"), "{stats}");
@@ -376,6 +564,57 @@ mod tests {
         assert_eq!(shared.rate(0, 3, 3.0), IngestResult::Rejected);
         shared.flush();
         assert_eq!(shared.rate(0, 3, 3.0), IngestResult::Buffered);
+        writer.join();
+    }
+
+    #[test]
+    fn validation_round_trips_through_writer() {
+        let mut rng = Rng::seeded(95);
+        let e = engine(
+            &mut rng,
+            StreamConfig { max_rows: 1000, max_cols: 1000, ..Default::default() },
+        );
+        let (shared, writer) = SharedEngine::spawn(e);
+        assert_eq!(shared.rate(0, 1, f32::NAN), IngestResult::InvalidValue);
+        assert_eq!(shared.rate(4_000_000_000, 0, 5.0), IngestResult::OutOfBounds);
+        assert_eq!(shared.buffered(), 0);
+        writer.join();
+    }
+
+    /// A flush that touches a single column band clones only that shard
+    /// (plus any band whose Top-K rows the re-search moved); the matrix
+    /// and row factors republish by reference when rows didn't grow.
+    #[test]
+    fn publish_shares_clean_shards() {
+        let mut rng = Rng::seeded(96);
+        let e = engine(&mut rng, StreamConfig::default());
+        let metrics = e.metrics().clone();
+        let full_bytes = e.model().bytes() + e.matrix().bytes();
+        let (shared, writer) = SharedEngine::spawn_sharded(e, 4);
+        let before = shared.snapshot();
+        // re-rate inside band 0 only (cols 0..3 of 12 at d=4)
+        assert_eq!(shared.rate(0, 0, 3.5), IngestResult::Buffered);
+        assert_eq!(shared.rate(1, 1, 2.5), IngestResult::Buffered);
+        assert_eq!(shared.flush(), 2);
+        let after = shared.snapshot();
+        assert_eq!(after.version, 1);
+        // band 0 must be a fresh clone
+        assert!(
+            !Arc::ptr_eq(&before.shards[0], &after.shards[0]),
+            "dirty band republished by reference"
+        );
+        // row factors and matrix arcs: rows shared (no growth), matrix
+        // swapped to the new flushed state but never deep-cloned by the
+        // publish (it is the orchestrator's own Arc).
+        assert!(Arc::ptr_eq(&before.rows, &after.rows), "row factors should be shared");
+        let cloned = metrics.gauge("shared.publish_bytes_cloned").get();
+        assert!(cloned > 0.0);
+        assert!(
+            cloned < full_bytes as f64,
+            "partial publish ({cloned}) must beat the full clone ({full_bytes})"
+        );
+        // at least the dirty band was counted
+        assert!(metrics.counter("shared.shard0.publishes").get() >= 1);
         writer.join();
     }
 }

@@ -1,22 +1,27 @@
 //! Streaming ingestion orchestrator — the online-learning pipeline.
 //!
-//! Incremental ratings arrive as [`Event`]s; the orchestrator buffers them
-//! in a bounded queue (backpressure: [`IngestResult::Rejected`] once the
-//! buffer holds `queue_capacity` un-flushed events and auto-flush is
-//! disabled), batches them to amortize the hash/parameter update, and on
-//! flush runs Algorithm 4: absorb the batch into the saved simLSH
-//! accumulators, refresh the Top-K table, and train only the new
-//! variables' parameters.
+//! Incremental ratings arrive as [`Event`]s; the orchestrator validates
+//! them (non-finite values and ids beyond the configured universe bounds
+//! never enter the buffer), buffers them in a bounded queue
+//! (backpressure: [`IngestResult::Rejected`] once the buffer holds
+//! `queue_capacity` un-flushed events and auto-flush is disabled),
+//! batches them to amortize the hash/parameter update, and on flush runs
+//! Algorithm 4: fold the batch into the combined matrix and the saved
+//! simLSH accumulators (re-ratings are last-write-wins — they overwrite
+//! in place instead of accumulating duplicate CSR entries), refresh the
+//! Top-K table, and train only the new variables' parameters.
 //!
 //! The design is caller-driven (deterministic, testable); [`run_channel`]
 //! adapts it to a `std::sync::mpsc` feed for the threaded serving path.
 
 use super::super::mf::neighbourhood::{CulshConfig, CulshModel};
-use super::super::mf::online::apply_online;
+use super::super::mf::online::online_update;
 use crate::lsh::OnlineHashState;
 use crate::metrics::Registry;
 use crate::rng::Rng;
 use crate::sparse::{Csr, Triples};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// A streaming event.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -42,6 +47,12 @@ pub struct StreamConfig {
     /// Reject instead of auto-flushing when the buffer fills (used to
     /// exercise backpressure; servers keep it false).
     pub reject_when_full: bool,
+    /// Hard ceiling on accepted row ids (`i < max_rows`). Without it one
+    /// malicious `RATE 4000000000 …` makes the next flush allocate
+    /// multi-GB parameter vectors.
+    pub max_rows: usize,
+    /// Hard ceiling on accepted column ids (`j < max_cols`).
+    pub max_cols: usize,
 }
 
 impl Default for StreamConfig {
@@ -51,6 +62,8 @@ impl Default for StreamConfig {
             batch_size: 1_024,
             online_epochs: 5,
             reject_when_full: false,
+            max_rows: 1 << 24,
+            max_cols: 1 << 24,
         }
     }
 }
@@ -61,17 +74,30 @@ pub enum IngestResult {
     Buffered,
     Flushed { applied: usize },
     Rejected,
+    /// Non-finite rating value (NaN/±inf) — never enters the buffer.
+    InvalidValue,
+    /// Row or column id at or beyond `max_rows`/`max_cols`.
+    OutOfBounds,
 }
 
 /// The streaming orchestrator: owns the model, the hash state, and the
 /// combined training matrix.
 pub struct StreamOrchestrator {
-    /// `Option` so flush() can move the model through `apply_online`.
+    /// `Option` so flush() can move the model through `online_update`.
     model: Option<CulshModel>,
     hash_state: OnlineHashState,
     combined_t: Triples,
-    combined: Csr,
+    /// `Arc` so the serving snapshot publish shares the flushed matrix
+    /// instead of deep-cloning it.
+    combined: Arc<Csr>,
+    /// Position of each stored cell in `combined_t`'s entry vec — the
+    /// last-write-wins re-rating index.
+    cells: HashMap<(u32, u32), u32>,
     buffer: Vec<(u32, u32, f32)>,
+    /// Column ids the most recent flush applied — the sharded snapshot
+    /// publish keys its dirty-band set off this, straight from the
+    /// source instead of re-deriving it from ingest ordering.
+    last_flush_cols: Vec<u32>,
     cfg: StreamConfig,
     train_cfg: CulshConfig,
     rng: Rng,
@@ -81,25 +107,60 @@ pub struct StreamOrchestrator {
 impl StreamOrchestrator {
     pub fn new(
         model: CulshModel,
-        hash_state: OnlineHashState,
-        base: Triples,
+        mut hash_state: OnlineHashState,
+        mut base: Triples,
         cfg: StreamConfig,
         train_cfg: CulshConfig,
         rng: Rng,
         metrics: Registry,
     ) -> Self {
-        let combined = Csr::from_triples(&base);
+        // Dedup pre-existing duplicate cells (last write wins, first
+        // position) so the re-rating index maps each cell to exactly one
+        // stored entry — otherwise a later re-rating would overwrite one
+        // duplicate and leave a stale sibling in the CSR. Dropped
+        // occurrences are retracted from the hash accumulators, which
+        // the caller built over the duplicated matrix.
+        let mut cells: HashMap<(u32, u32), u32> = HashMap::with_capacity(base.nnz());
+        let mut deduped: Vec<(u32, u32, f32)> = Vec::with_capacity(base.nnz());
+        let mut dropped: Vec<(u32, u32, f32)> = Vec::new();
+        for &(i, j, r) in base.entries() {
+            match cells.entry((i, j)) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    let pos = *e.get() as usize;
+                    dropped.push((i, j, deduped[pos].2));
+                    deduped[pos].2 = r;
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(deduped.len() as u32);
+                    deduped.push((i, j, r));
+                }
+            }
+        }
+        if !dropped.is_empty() {
+            for &(i, j, r) in &dropped {
+                hash_state.retract(i as usize, j as usize, r);
+            }
+            *base.entries_mut() = deduped;
+        }
+        let combined = Arc::new(Csr::from_triples(&base));
         StreamOrchestrator {
             model: Some(model),
             hash_state,
             combined_t: base,
             combined,
+            cells,
             buffer: Vec::new(),
+            last_flush_cols: Vec::new(),
             cfg,
             train_cfg,
             rng,
             metrics,
         }
+    }
+
+    /// Column ids applied by the most recent flush (empty before any).
+    pub fn last_flush_cols(&self) -> &[u32] {
+        &self.last_flush_cols
     }
 
     pub fn model(&self) -> &CulshModel {
@@ -108,6 +169,11 @@ impl StreamOrchestrator {
 
     pub fn matrix(&self) -> &Csr {
         &self.combined
+    }
+
+    /// Shared handle to the combined matrix (zero-copy snapshot publish).
+    pub fn matrix_arc(&self) -> Arc<Csr> {
+        Arc::clone(&self.combined)
     }
 
     pub fn buffered(&self) -> usize {
@@ -124,6 +190,14 @@ impl StreamOrchestrator {
             Event::Shutdown => IngestResult::Buffered,
             Event::Flush => IngestResult::Flushed { applied: self.flush() },
             Event::Rate(i, j, r) => {
+                if !r.is_finite() {
+                    self.metrics.counter("stream.invalid_value").inc();
+                    return IngestResult::InvalidValue;
+                }
+                if i as usize >= self.cfg.max_rows || j as usize >= self.cfg.max_cols {
+                    self.metrics.counter("stream.out_of_bounds").inc();
+                    return IngestResult::OutOfBounds;
+                }
                 if self.buffer.len() >= self.cfg.queue_capacity {
                     if self.cfg.reject_when_full {
                         self.metrics.counter("stream.rejected").inc();
@@ -145,46 +219,92 @@ impl StreamOrchestrator {
         }
     }
 
-    /// Apply all buffered events through Algorithm 4.
+    /// Apply all buffered events through Algorithm 4. Re-ratings of a
+    /// stored cell are last-write-wins: they overwrite the stored value
+    /// (stable `nnz`, unskewed `mean()`, no duplicate neighbourhood
+    /// contributions) and feed the hash accumulators a weight delta.
     pub fn flush(&mut self) -> usize {
         if self.buffer.is_empty() {
             return 0;
         }
-        let increment = std::mem::take(&mut self.buffer);
+        let raw = std::mem::take(&mut self.buffer);
+        // Within-batch dedup, last write wins: one surviving entry per
+        // cell, at its first position, carrying the final value.
+        let mut increment: Vec<(u32, u32, f32)> = Vec::with_capacity(raw.len());
+        let mut pos_of: HashMap<(u32, u32), usize> = HashMap::with_capacity(raw.len());
+        for (i, j, r) in raw {
+            match pos_of.entry((i, j)) {
+                std::collections::hash_map::Entry::Occupied(e) => increment[*e.get()].2 = r,
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(increment.len());
+                    increment.push((i, j, r));
+                }
+            }
+        }
+
+        let old_rows = self.combined_t.nrows();
+        let old_cols = self.combined_t.ncols();
         let new_rows = increment
             .iter()
             .map(|&(i, _, _)| i as usize + 1)
-            .chain(std::iter::once(self.combined_t.nrows()))
+            .chain(std::iter::once(old_rows))
             .max()
             .unwrap();
         let new_cols = increment
             .iter()
             .map(|&(_, j, _)| j as usize + 1)
-            .chain(std::iter::once(self.combined_t.ncols()))
+            .chain(std::iter::once(old_cols))
             .max()
             .unwrap();
 
+        // Fold the batch into the combined store and the hash
+        // accumulators: re-ratings overwrite in place, fresh cells
+        // append.
+        self.combined_t.grow_to(new_rows, new_cols);
+        let mut fresh: Vec<(u32, u32, f32)> = Vec::with_capacity(increment.len());
+        let mut rerated = 0u64;
+        for &(i, j, r) in &increment {
+            if let Some(&pos) = self.cells.get(&(i, j)) {
+                let old = self.combined_t.entries()[pos as usize].2;
+                self.combined_t.entries_mut()[pos as usize].2 = r;
+                self.hash_state.reabsorb(i as usize, j as usize, old, r);
+                rerated += 1;
+            } else {
+                self.cells.insert((i, j), self.combined_t.nnz() as u32);
+                self.combined_t.push(i as usize, j as usize, r);
+                fresh.push((i, j, r));
+            }
+        }
+        self.hash_state.apply_increment(&fresh, new_cols);
+        self.metrics.counter("stream.rerated").add(rerated);
+
+        let combined = Arc::new(Csr::from_triples(&self.combined_t));
         let model = self.model.take().expect("model present");
         let timer = self.metrics.histogram("stream.flush_seconds");
-        let outcome = timer.time(|| {
-            apply_online(
+        let hash_state = &mut self.hash_state;
+        let train_cfg = &self.train_cfg;
+        let epochs = self.cfg.online_epochs;
+        let rng = &mut self.rng;
+        // Train on the fresh cells only: a re-rated cell has both
+        // endpoints inside the old universe, so Algorithm 4 (which moves
+        // only NEW variables' parameters) would scan it `epochs` times
+        // for a provable no-op.
+        let updated = timer.time(|| {
+            online_update(
                 model,
-                &mut self.hash_state,
-                &self.combined_t,
-                &increment,
-                new_rows,
-                new_cols,
-                &self.train_cfg,
-                self.cfg.online_epochs,
-                &mut self.rng,
+                hash_state,
+                &combined,
+                &fresh,
+                old_rows,
+                old_cols,
+                train_cfg,
+                epochs,
+                rng,
             )
         });
-        self.model = Some(outcome.model);
-        self.combined = outcome.combined;
-        self.combined_t.grow_to(new_rows, new_cols);
-        for &(i, j, r) in &increment {
-            self.combined_t.push(i as usize, j as usize, r);
-        }
+        self.model = Some(updated);
+        self.combined = combined;
+        self.last_flush_cols = increment.iter().map(|&(_, j, _)| j).collect();
         self.metrics.counter("stream.flushes").inc();
         self.metrics
             .counter("stream.applied")
@@ -291,6 +411,125 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_ratings_are_refused() {
+        let mut rng = Rng::seeded(55);
+        let mut orch = setup(&mut rng);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(orch.ingest(Event::Rate(0, 1, bad)), IngestResult::InvalidValue);
+        }
+        assert_eq!(orch.buffered(), 0, "invalid values must not buffer");
+        // sane traffic still flows
+        assert_eq!(orch.ingest(Event::Rate(0, 1, 3.0)), IngestResult::Buffered);
+    }
+
+    #[test]
+    fn out_of_bounds_ids_are_refused() {
+        let mut rng = Rng::seeded(56);
+        let mut orch = setup(&mut rng);
+        orch.cfg.max_rows = 100;
+        orch.cfg.max_cols = 50;
+        assert_eq!(orch.ingest(Event::Rate(100, 0, 3.0)), IngestResult::OutOfBounds);
+        assert_eq!(orch.ingest(Event::Rate(0, 50, 3.0)), IngestResult::OutOfBounds);
+        assert_eq!(
+            orch.ingest(Event::Rate(4_000_000_000, 4_000_000_000, 5.0)),
+            IngestResult::OutOfBounds
+        );
+        assert_eq!(orch.buffered(), 0);
+        // the boundary itself is accepted
+        assert_eq!(orch.ingest(Event::Rate(99, 49, 3.0)), IngestResult::Buffered);
+        orch.ingest(Event::Flush);
+        assert_eq!(orch.dims(), (100, 50));
+    }
+
+    #[test]
+    fn rerating_is_last_write_wins() {
+        let mut rng = Rng::seeded(57);
+        let mut orch = setup(&mut rng);
+        orch.ingest(Event::Rate(1, 2, 2.0));
+        orch.ingest(Event::Flush);
+        let nnz0 = orch.matrix().nnz();
+        // re-rate the same cell 100× across many flushes: nnz stays
+        // stable (no duplicate CSR entries, no leak) …
+        for k in 0..100u32 {
+            orch.ingest(Event::Rate(1, 2, 1.0 + (k % 5) as f32));
+            orch.ingest(Event::Flush);
+        }
+        assert_eq!(orch.matrix().nnz(), nnz0, "re-ratings must not grow nnz");
+        // … and the stored value is the last write
+        let stored = orch
+            .matrix()
+            .row(1)
+            .find(|&(j, _)| j == 2)
+            .map(|(_, r)| r)
+            .unwrap();
+        assert_eq!(stored, 1.0 + (99 % 5) as f32);
+    }
+
+    #[test]
+    fn within_batch_rerates_dedup_to_one_entry() {
+        let mut rng = Rng::seeded(58);
+        let mut orch = setup(&mut rng);
+        let nnz0 = orch.matrix().nnz();
+        for k in 0..5u32 {
+            assert_eq!(orch.ingest(Event::Rate(3, 4, k as f32)), IngestResult::Buffered);
+        }
+        // five buffered writes to one cell apply as a single entry
+        assert_eq!(orch.ingest(Event::Flush), IngestResult::Flushed { applied: 1 });
+        assert!(orch.matrix().nnz() <= nnz0 + 1);
+        let stored = orch
+            .matrix()
+            .row(3)
+            .find(|&(j, _)| j == 4)
+            .map(|(_, r)| r)
+            .unwrap();
+        assert_eq!(stored, 4.0);
+    }
+
+    /// A base matrix listing the same cell twice collapses to one stored
+    /// entry at construction (last write wins), so later re-ratings
+    /// cannot leave a stale duplicate sibling in the CSR.
+    #[test]
+    fn duplicate_base_cells_are_deduped_at_construction() {
+        let mut rng = Rng::seeded(59);
+        let (m, n) = (40usize, 20usize);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 200 {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        t.push(5, 6, 1.0);
+        t.push(5, 6, 4.0);
+        let unique = seen.len() + usize::from(!seen.contains(&(5, 6)));
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(2, 6, 8, 2);
+        let hash_state = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash_state.topk(4, &mut rng);
+        let cfg = CulshConfig { f: 4, k: 4, epochs: 2, ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut rng);
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig::default(),
+            cfg,
+            rng.split(99),
+            Registry::new(),
+        );
+        assert_eq!(orch.matrix().nnz(), unique, "duplicates collapsed");
+        let stored = orch
+            .matrix()
+            .row(5)
+            .find(|&(j, _)| j == 6)
+            .map(|(_, r)| r)
+            .unwrap();
+        assert_eq!(stored, 4.0, "last write wins");
+    }
+
+    #[test]
     fn channel_runner_drains_and_stops() {
         let mut rng = Rng::seeded(54);
         let orch = setup(&mut rng);
@@ -302,7 +541,7 @@ mod tests {
         tx.send(Event::Shutdown).unwrap();
         let orch = handle.join().unwrap();
         assert_eq!(orch.buffered(), 0);
-        assert_eq!(orch.metrics_snapshot_contains("stream.applied"), true);
+        assert!(orch.metrics_snapshot_contains("stream.applied"));
     }
 
     impl StreamOrchestrator {

@@ -50,6 +50,12 @@ impl OnlineHashState {
     /// Add one interaction's contribution to every base hash of column j.
     fn absorb(&mut self, i: usize, j: usize, r: f32) {
         let w = self.lsh.weight(r) as f64;
+        self.absorb_weight(i, j, w);
+    }
+
+    /// Add a pre-computed Ψ-weight contribution (the accumulators are
+    /// linear in Ψ(r), so signed weight deltas compose exactly).
+    fn absorb_weight(&mut self, i: usize, j: usize, w: f64) {
         for round in 0..self.lsh.q {
             for slot in 0..self.lsh.p {
                 let code = self.lsh.row_code(i, round as u64, slot);
@@ -60,6 +66,26 @@ impl OnlineHashState {
                 }
             }
         }
+    }
+
+    /// Replace a previously absorbed rating's contribution with a new
+    /// value — the last-write-wins re-rating path. Because every
+    /// accumulator is a linear sum of Ψ(r)·Φ(H_i) terms, adding the
+    /// weight delta `Ψ(r_new) − Ψ(r_old)` reproduces exactly the state a
+    /// from-scratch build over the re-rated matrix would hold.
+    pub fn reabsorb(&mut self, i: usize, j: usize, r_old: f32, r_new: f32) {
+        assert!(j < self.n_cols, "column {j} out of range");
+        let delta = self.lsh.weight(r_new) as f64 - self.lsh.weight(r_old) as f64;
+        self.absorb_weight(i, j, delta);
+    }
+
+    /// Remove one previously absorbed interaction's contribution
+    /// entirely (used when deduplicating a base matrix that listed the
+    /// same cell more than once).
+    pub fn retract(&mut self, i: usize, j: usize, r: f32) {
+        assert!(j < self.n_cols, "column {j} out of range");
+        let w = self.lsh.weight(r) as f64;
+        self.absorb_weight(i, j, -w);
     }
 
     /// Grow the state to `new_n_cols` columns (new columns start at zero
@@ -241,6 +267,36 @@ mod tests {
         let (topk, _) = online.topk(3, &mut rng);
         assert_eq!(topk.n(), 10);
         assert_eq!(topk.neighbours(9).len(), 3);
+    }
+
+    /// Re-rating through `reabsorb` must land on the same accumulators a
+    /// from-scratch build over the edited matrix holds (up to rounding at
+    /// near-zero accumulators, as with additive increments).
+    #[test]
+    fn reabsorb_matches_rebuild_with_new_value() {
+        let mut rng = Rng::seeded(27);
+        let base = random_triples(40, 10, 150, &mut rng);
+        let csc = Csc::from_triples(&base);
+        let mut online = OnlineHashState::build(lsh_small(), &csc);
+        let mut edited = base.clone();
+        let (i, j, r_old) = edited.entries()[0];
+        let r_new = 0.5f32;
+        edited.entries_mut()[0].2 = r_new;
+        online.reabsorb(i as usize, j as usize, r_old, r_new);
+        let scratch = OnlineHashState::build(lsh_small(), &Csc::from_triples(&edited));
+        let mut flips = 0;
+        let mut total = 0;
+        for round in 0..6 {
+            for slot in 0..2 {
+                for col in 0..10 {
+                    total += 1;
+                    if online.hash(round, slot, col) != scratch.hash(round, slot, col) {
+                        flips += 1;
+                    }
+                }
+            }
+        }
+        assert!(flips * 100 <= total, "{flips}/{total} hash mismatches after reabsorb");
     }
 
     #[test]

@@ -27,9 +27,9 @@ use super::{Baselines, LearningSchedule, MfModel, TrainLog};
 use crate::linalg::FactorMatrix;
 use crate::lsh::TopK;
 use crate::rng::Rng;
-use crate::sparse::{BlockGrid, Csr};
+use crate::sparse::{band_of, BlockGrid, Csr};
 use std::cell::UnsafeCell;
-use std::sync::Barrier;
+use std::sync::{Arc, Barrier};
 
 /// Hyper-parameters (defaults = paper Table 5, MovieLens column).
 #[derive(Clone, Debug)]
@@ -147,26 +147,16 @@ impl CulshModel {
         j: usize,
         scratch: &mut NeighbourScratch,
     ) {
-        scratch.explicit.clear();
-        scratch.implicit.clear();
         let (cols, vals) = csr.row_raw(i);
-        let neighbours = self.topk.neighbours(j);
-        // merge-walk: both `cols` and `neighbours` are sorted ascending
-        // (CSR rows by construction, neighbour rows since `init`), so one
-        // linear pass classifies every slot — O(K + |Ω_i|) instead of
-        // O(K log |Ω_i|).
-        let mut pos = 0usize;
-        for (slot, &j1) in neighbours.iter().enumerate() {
-            while pos < cols.len() && cols[pos] < j1 {
-                pos += 1;
-            }
-            if pos < cols.len() && cols[pos] == j1 {
-                let resid = vals[pos] - self.baselines.bbar(i, j1 as usize);
-                scratch.explicit.push((slot, resid));
-            } else {
-                scratch.implicit.push(slot);
-            }
-        }
+        let base = self.baselines.mu + self.baselines.bi[i];
+        scan_kernel(
+            cols,
+            vals,
+            self.topk.neighbours(j),
+            base,
+            |j1| self.baselines.bj[j1],
+            scratch,
+        );
     }
 
     /// Eq. (1) prediction (needs the training matrix for the explicit
@@ -179,32 +169,11 @@ impl CulshModel {
     /// Prediction given an existing scan.
     #[inline]
     pub fn predict_scanned(&self, i: usize, j: usize, scratch: &NeighbourScratch) -> f32 {
-        let mut pred = self.base.mu
+        let head = self.base.mu
             + self.base.bi[i]
             + self.base.bj[j]
             + crate::linalg::dot(self.base.u.row(i), self.base.v.row(j));
-        if !scratch.explicit.is_empty() {
-            let wj = self.w.row(j);
-            let scale = 1.0 / (scratch.explicit.len() as f32).sqrt();
-            let mut acc = 0f32;
-            for &(slot, resid) in &scratch.explicit {
-                acc += resid * wj[slot];
-            }
-            pred += scale * acc;
-        }
-        if !scratch.implicit.is_empty() {
-            let cj = self.c.row(j);
-            let scale = 1.0 / (scratch.implicit.len() as f32).sqrt();
-            let mut acc = 0f32;
-            for &slot in &scratch.implicit {
-                acc += cj[slot];
-            }
-            pred += scale * acc;
-        }
-        match self.base.clamp {
-            Some((lo, hi)) => pred.clamp(lo, hi),
-            None => pred,
-        }
+        predict_from_scan(head, self.w.row(j), self.c.row(j), self.base.clamp, scratch)
     }
 
     /// RMSE over a test set.
@@ -221,6 +190,248 @@ impl CulshModel {
     /// O(MF + NF + 3NK) spatial overhead claim.
     pub fn bytes(&self) -> usize {
         self.base.bytes() + self.w.bytes() + self.c.bytes() + self.topk.bytes()
+    }
+
+    /// Extract the row-side factors (sharded snapshot publish). The
+    /// online path freezes old rows, so a publish can reference-share
+    /// the previous [`RowFactors`] whenever no new row appeared.
+    pub fn row_factors(&self) -> RowFactors {
+        RowFactors {
+            mu: self.base.mu,
+            bi: self.base.bi.clone(),
+            baseline_bi: self.baselines.bi.clone(),
+            u: self.base.u.clone(),
+            clamp: self.base.clamp,
+        }
+    }
+
+    /// Extract the column band `[lo, hi)` (sharded snapshot publish).
+    pub fn col_band(&self, lo: usize, hi: usize) -> ColBand {
+        let k = self.topk.k();
+        let mut topk = Vec::with_capacity((hi - lo) * k);
+        for j in lo..hi {
+            topk.extend_from_slice(self.topk.neighbours(j));
+        }
+        ColBand {
+            lo,
+            hi,
+            k,
+            bj: self.base.bj[lo..hi].to_vec(),
+            baseline_bj: self.baselines.bj[lo..hi].to_vec(),
+            v: slice_rows(&self.base.v, lo, hi),
+            w: slice_rows(&self.w, lo, hi),
+            c: slice_rows(&self.c, lo, hi),
+            topk,
+        }
+    }
+
+    /// Does this model's neighbour table still match `band`'s slice
+    /// exactly? The sharded publish uses this to catch the LSH re-search
+    /// moving an otherwise-untouched column's neighbours (a touched
+    /// column changing buckets can reshuffle any column's Top-K row).
+    pub fn topk_band_matches(&self, band: &ColBand) -> bool {
+        if band.k != self.topk.k() || band.hi > self.topk.n() {
+            return false;
+        }
+        (band.lo..band.hi).all(|j| self.topk.neighbours(j) == band.neighbours(j))
+    }
+}
+
+/// Copy rows `[lo, hi)` of a factor matrix into a fresh matrix.
+fn slice_rows(m: &FactorMatrix, lo: usize, hi: usize) -> FactorMatrix {
+    let f = m.cols();
+    let mut out = FactorMatrix::zeros(hi - lo, f);
+    out.data_mut().copy_from_slice(&m.data()[lo * f..hi * f]);
+    out
+}
+
+/// The shared neighbour-classification kernel: merge-walk `neighbours`
+/// against the (sorted) row slices, splitting slots into R^K (rated →
+/// (slot, residual)) and N^K (unrated → slot). Both `cols` and
+/// `neighbours` are sorted ascending (CSR rows by construction,
+/// neighbour rows since `init`), so one linear pass classifies every
+/// slot — O(K + |Ω_i|) instead of O(K log |Ω_i|). `base` is `μ + b̄_i`;
+/// `bbj` supplies a neighbour column's frozen baseline deviation.
+///
+/// [`CulshModel`] and the sharded serving view both call this (and
+/// [`predict_from_scan`]) with their own storage, so the two serving
+/// paths cannot drift numerically.
+#[inline]
+fn scan_kernel(
+    cols: &[u32],
+    vals: &[f32],
+    neighbours: &[u32],
+    base: f32,
+    mut bbj: impl FnMut(usize) -> f32,
+    scratch: &mut NeighbourScratch,
+) {
+    scratch.explicit.clear();
+    scratch.implicit.clear();
+    let mut pos = 0usize;
+    for (slot, &j1) in neighbours.iter().enumerate() {
+        while pos < cols.len() && cols[pos] < j1 {
+            pos += 1;
+        }
+        if pos < cols.len() && cols[pos] == j1 {
+            scratch.explicit.push((slot, vals[pos] - (base + bbj(j1 as usize))));
+        } else {
+            scratch.implicit.push(slot);
+        }
+    }
+}
+
+/// The shared Eq. (1) accumulation over a completed scan: `head` is
+/// `μ + b_i + b̂_j + u_i·v_jᵀ`; `wj`/`cj` are column j's influence rows.
+#[inline]
+fn predict_from_scan(
+    head: f32,
+    wj: &[f32],
+    cj: &[f32],
+    clamp: Option<(f32, f32)>,
+    scratch: &NeighbourScratch,
+) -> f32 {
+    let mut pred = head;
+    if !scratch.explicit.is_empty() {
+        let scale = 1.0 / (scratch.explicit.len() as f32).sqrt();
+        let mut acc = 0f32;
+        for &(slot, resid) in &scratch.explicit {
+            acc += resid * wj[slot];
+        }
+        pred += scale * acc;
+    }
+    if !scratch.implicit.is_empty() {
+        let scale = 1.0 / (scratch.implicit.len() as f32).sqrt();
+        let mut acc = 0f32;
+        for &slot in &scratch.implicit {
+            acc += cj[slot];
+        }
+        pred += scale * acc;
+    }
+    match clamp {
+        Some((lo, hi)) => pred.clamp(lo, hi),
+        None => pred,
+    }
+}
+
+/// Row-side parameters of a [`CulshModel`], shared across every column
+/// band of a sharded serving snapshot (`coordinator/shared.rs`).
+#[derive(Clone, Debug)]
+pub struct RowFactors {
+    /// Global mean μ (identical in the trainable model and the frozen
+    /// baselines — set once at init, never retrained).
+    pub mu: f32,
+    /// Trainable row biases b_i.
+    pub bi: Vec<f32>,
+    /// Frozen baseline row deviations (the b̄ residual term).
+    pub baseline_bi: Vec<f32>,
+    /// Row factor matrix U.
+    pub u: FactorMatrix,
+    /// The model-level prediction clamp ([`MfModel::clamp`]).
+    pub clamp: Option<(f32, f32)>,
+}
+
+impl RowFactors {
+    pub fn nrows(&self) -> usize {
+        self.bi.len()
+    }
+
+    /// Bytes a publish pays to clone this state.
+    pub fn bytes(&self) -> usize {
+        self.u.bytes() + (self.bi.len() + self.baseline_bi.len()) * 4
+    }
+}
+
+/// One column band's slice of the column-side parameters `{b̂_j, v_j,
+/// w_j, c_j, S^K(j), baseline b̂_j}` — the unit the sharded snapshot
+/// publish clones (dirty) or reference-shares (clean).
+#[derive(Clone, Debug)]
+pub struct ColBand {
+    /// Global column range `[lo, hi)` this band owns.
+    pub lo: usize,
+    pub hi: usize,
+    /// Neighbourhood width K.
+    pub k: usize,
+    /// Trainable column biases b̂_j for the band.
+    pub bj: Vec<f32>,
+    /// Frozen baseline column deviations for the band.
+    pub baseline_bj: Vec<f32>,
+    /// Column factor rows V_{lo..hi}.
+    pub v: FactorMatrix,
+    /// Explicit influence rows W_{lo..hi}.
+    pub w: FactorMatrix,
+    /// Implicit influence rows C_{lo..hi}.
+    pub c: FactorMatrix,
+    /// Flattened `(hi-lo) × k` neighbour rows (global column ids, sorted
+    /// ascending per row — the merge-scan precondition).
+    pub topk: Vec<u32>,
+}
+
+impl ColBand {
+    pub fn ncols(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Neighbour row of global column `j` (must lie in `[lo, hi)`).
+    #[inline]
+    pub fn neighbours(&self, j: usize) -> &[u32] {
+        let local = j - self.lo;
+        &self.topk[local * self.k..(local + 1) * self.k]
+    }
+
+    /// Bytes a publish pays to clone this band.
+    pub fn bytes(&self) -> usize {
+        (self.bj.len() + self.baseline_bj.len() + self.topk.len()) * 4
+            + self.v.bytes()
+            + self.w.bytes()
+            + self.c.bytes()
+    }
+}
+
+/// A consistent read view over (row factors, column bands, training
+/// matrix) — the read side of the sharded serving snapshot. Band lookup
+/// uses the same [`band_of`] split the publish used, so every column id
+/// resolves to the shard that owns it.
+pub struct ShardedFactors<'a> {
+    pub rows: &'a RowFactors,
+    pub bands: &'a [Arc<ColBand>],
+    pub matrix: &'a Csr,
+}
+
+impl ShardedFactors<'_> {
+    #[inline]
+    fn band_for(&self, j: usize) -> &ColBand {
+        &self.bands[band_of(j, self.matrix.ncols(), self.bands.len())]
+    }
+
+    #[inline]
+    fn baseline_bj(&self, j: usize) -> f32 {
+        let b = self.band_for(j);
+        b.baseline_bj[j - b.lo]
+    }
+
+    /// Eq. (1) prediction, bit-identical to [`CulshModel::predict`] on
+    /// the model the bands were sliced from: both delegate to the same
+    /// [`scan_kernel`] / [`predict_from_scan`] pair, so the two serving
+    /// paths cannot drift — the parity property test in `tests/props.rs`
+    /// holds them to byte-equal replies.
+    pub fn predict(&self, i: usize, j: usize, scratch: &mut NeighbourScratch) -> f32 {
+        let band = self.band_for(j);
+        let local = j - band.lo;
+        let (cols, vals) = self.matrix.row_raw(i);
+        let base = self.rows.mu + self.rows.baseline_bi[i];
+        scan_kernel(
+            cols,
+            vals,
+            band.neighbours(j),
+            base,
+            |j1| self.baseline_bj(j1),
+            scratch,
+        );
+        let head = self.rows.mu
+            + self.rows.bi[i]
+            + band.bj[local]
+            + crate::linalg::dot(self.rows.u.row(i), band.v.row(local));
+        predict_from_scan(head, band.w.row(local), band.c.row(local), self.rows.clamp, scratch)
     }
 }
 

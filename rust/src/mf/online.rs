@@ -34,10 +34,13 @@ pub struct OnlineOutcome {
 ///
 /// `base_t` is the original training matrix (as triples), `increment` the
 /// new entries in the grown coordinate space (rows ≥ old M or cols ≥ old
-/// N allowed, as are new interactions of old×new variables).
+/// N allowed, as are new interactions of old×new variables). Entries must
+/// be fresh cells — the streaming path deduplicates re-ratings and uses
+/// [`online_update`] directly, maintaining the combined matrix and hash
+/// accumulators itself.
 #[allow(clippy::too_many_arguments)]
 pub fn apply_online(
-    mut model: CulshModel,
+    model: CulshModel,
     hash_state: &mut OnlineHashState,
     base_t: &Triples,
     increment: &[(u32, u32, f32)],
@@ -61,8 +64,50 @@ pub fn apply_online(
     }
     let combined = Csr::from_triples(&combined_t);
 
-    // (1) refresh hashes from saved accumulators and re-search Top-K.
+    // (1) refresh hashes from saved accumulators…
     hash_state.apply_increment(increment, new_cols);
+    // …then run the Algorithm-4 core over the prepared state.
+    let model = online_update(
+        model,
+        hash_state,
+        &combined,
+        increment,
+        old_rows,
+        old_cols,
+        cfg,
+        epochs,
+        rng,
+    );
+    OnlineOutcome { model, combined, seconds: t0.elapsed().as_secs_f64() }
+}
+
+/// The Algorithm-4 core, once the combined matrix and the hash
+/// accumulators are already current: re-search Top-K from the saved
+/// accumulators, grow parameters for the new variables, and train only
+/// their parameters on the increment.
+///
+/// Callers that maintain state incrementally (the streaming
+/// orchestrator, which folds last-write-wins re-ratings into both the
+/// matrix and the accumulators before flushing) enter here;
+/// [`apply_online`] wraps this for the batch base-plus-increment entry
+/// point.
+#[allow(clippy::too_many_arguments)]
+pub fn online_update(
+    mut model: CulshModel,
+    hash_state: &mut OnlineHashState,
+    combined: &Csr,
+    increment: &[(u32, u32, f32)],
+    old_rows: usize,
+    old_cols: usize,
+    cfg: &CulshConfig,
+    epochs: usize,
+    rng: &mut Rng,
+) -> CulshModel {
+    let new_rows = combined.nrows();
+    let new_cols = combined.ncols();
+    assert!(new_rows >= old_rows && new_cols >= old_cols);
+
+    // Re-search Top-K over the refreshed hashes.
     let (mut topk, _) = hash_state.topk(model.k(), rng);
     topk.sort_rows(); // merge-scan precondition (see CulshModel::init)
 
@@ -119,7 +164,7 @@ pub fn apply_online(
         let gamma_wc = schedule_wc.rate(epoch);
         for &(i, j, r) in increment {
             let (i, j) = (i as usize, j as usize);
-            model.scan_neighbours(&combined, i, j, &mut scratch);
+            model.scan_neighbours(combined, i, j, &mut scratch);
             let pred = model.predict_scanned(i, j, &scratch);
             let e = r - pred;
             let new_row = i >= old_rows;
@@ -159,7 +204,7 @@ pub fn apply_online(
         }
     }
 
-    OnlineOutcome { model, combined, seconds: t0.elapsed().as_secs_f64() }
+    model
 }
 
 #[cfg(test)]

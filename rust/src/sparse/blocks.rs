@@ -81,8 +81,12 @@ impl BlockGrid {
     }
 }
 
+/// Band owning index `idx` of an axis of `extent` indices split into `d`
+/// contiguous bands. Public because the sharded serving snapshot keys its
+/// per-shard dirty sets off the same assignment the rotation schedule
+/// uses (`coordinator/shared.rs`).
 #[inline]
-fn band_of(idx: usize, extent: usize, d: usize) -> usize {
+pub fn band_of(idx: usize, extent: usize, d: usize) -> usize {
     if extent == 0 {
         return 0;
     }
@@ -90,8 +94,9 @@ fn band_of(idx: usize, extent: usize, d: usize) -> usize {
     ((idx as u64 * d as u64) / extent as u64) as usize
 }
 
+/// Index range `[lo, hi)` of band `b` under the same split as [`band_of`].
 #[inline]
-fn band_range(b: usize, extent: usize, d: usize) -> (usize, usize) {
+pub fn band_range(b: usize, extent: usize, d: usize) -> (usize, usize) {
     let lo = (b as u64 * extent as u64).div_ceil(d as u64) as usize;
     let hi = ((b as u64 + 1) * extent as u64).div_ceil(d as u64) as usize;
     (lo, hi.min(extent))

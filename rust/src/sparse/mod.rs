@@ -16,7 +16,7 @@
 mod blocks;
 mod matrix;
 
-pub use blocks::{Block, BlockGrid};
+pub use blocks::{band_of, band_range, Block, BlockGrid};
 pub use matrix::{Csc, Csr, Triples};
 
 #[cfg(test)]

@@ -2,9 +2,17 @@
 //! in-repo `lshmf::prop` mini-framework (proptest is unavailable offline).
 
 use lshmf::coordinator::rotation::RotationPlan;
+use lshmf::coordinator::server::handle_line;
+use lshmf::coordinator::shared::SharedEngine;
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
 use lshmf::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
 use lshmf::prop::{check, Gen};
+use lshmf::rng::Rng;
 use lshmf::sparse::{BlockGrid, Csc, Csr, Triples};
+use std::sync::Mutex;
 
 fn gen_triples(g: &mut Gen, max_m: usize, max_n: usize, max_nnz: usize) -> Triples {
     let m = g.usize(2..=max_m);
@@ -120,6 +128,98 @@ fn prop_online_hash_matches_rebuild() {
             }
         }
         flips * 50 <= total // ≤ 2% near-zero sign flips tolerated
+    });
+}
+
+/// Small trained serving engine (mirrors `tests/serving.rs`'s fixture).
+fn serving_engine(seed: u64, stream_cfg: StreamConfig) -> Engine {
+    let mut rng = Rng::seeded(seed);
+    let (m, n) = (30, 15);
+    let mut t = Triples::new(m, n);
+    let mut seen = std::collections::HashSet::new();
+    while t.nnz() < 180 {
+        let (i, j) = (rng.below(m), rng.below(n));
+        if seen.insert((i, j)) {
+            t.push(i, j, 1.0 + rng.f32() * 4.0);
+        }
+    }
+    let csr = Csr::from_triples(&t);
+    let csc = Csc::from_triples(&t);
+    let lsh = SimLsh::new(1, 5, 8, 2);
+    let hash_state = OnlineHashState::build(lsh, &csc);
+    let (topk, _) = hash_state.topk(4, &mut rng);
+    let cfg = CulshConfig { f: 4, k: 4, epochs: 4, ..Default::default() };
+    let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut rng);
+    let metrics = Registry::new();
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        t,
+        stream_cfg,
+        cfg,
+        rng.split(1),
+        metrics.clone(),
+    );
+    Engine::new(orch, (1.0, 5.0), metrics)
+}
+
+/// Serving parity: across randomized rate/flush interleavings — with
+/// growth, re-ratings, NaN values and out-of-bounds ids mixed in — the
+/// sharded concurrent engine's `PREDICT`/`MPREDICT`/`TOPN`/`RATE`/`FLUSH`
+/// replies are byte-identical to the `Mutex<Engine>` flavour, for any
+/// shard count. Extends the `shared_engine_protocol_parity` unit test to
+/// arbitrary interleavings.
+#[test]
+fn prop_sharded_serving_matches_mutex_engine() {
+    check("sharded serving parity", 8, |g| {
+        let seed = 4600 + g.usize(0..=40) as u64;
+        let stream_cfg = StreamConfig {
+            batch_size: g.usize(2..=10),
+            max_rows: 200,
+            max_cols: 200,
+            ..Default::default()
+        };
+        let single = Mutex::new(serving_engine(seed, stream_cfg.clone()));
+        let shards = g.usize(1..=6);
+        let (shared, writer) =
+            SharedEngine::spawn_sharded(serving_engine(seed, stream_cfg), shards);
+        let mut ok = true;
+        for _ in 0..g.usize(20..=50) {
+            let line = match g.usize(0..=4) {
+                0 => format!("PREDICT {} {}", g.usize(0..=35), g.usize(0..=20)),
+                1 => format!("TOPN {} {}", g.usize(0..=35), g.usize(1..=8)),
+                2 => format!(
+                    "MPREDICT {} {} {} {}",
+                    g.usize(0..=35),
+                    g.usize(0..=20),
+                    g.usize(0..=20),
+                    g.usize(0..=20)
+                ),
+                3 => {
+                    let r = match g.usize(0..=8) {
+                        0 => "NaN".to_string(),
+                        1 => "inf".to_string(),
+                        _ => format!("{:.1}", 1.0 + g.usize(0..=8) as f32 * 0.5),
+                    };
+                    let i = if g.usize(0..=9) == 0 {
+                        4_000_000_000u32
+                    } else {
+                        g.usize(0..=33) as u32
+                    };
+                    format!("RATE {i} {} {r}", g.usize(0..=18))
+                }
+                _ => "FLUSH".to_string(),
+            };
+            let a = handle_line(&single, &line);
+            let b = handle_line(&shared, &line);
+            if a != b {
+                eprintln!("serving parity mismatch on `{line}`: {a:?} vs {b:?}");
+                ok = false;
+                break;
+            }
+        }
+        writer.join();
+        ok
     });
 }
 

@@ -95,10 +95,17 @@ fn readers_progress_during_flushes() {
                         dims.0 >= last_dims.0 && dims.1 >= last_dims.1,
                         "dims shrank: {last_dims:?} -> {dims:?}"
                     );
-                    // the snapshot pair is internally consistent (the
-                    // model always covers the matrix dimensions)
-                    assert_eq!(snap.model.base.bi.len(), dims.0);
-                    assert_eq!(snap.model.base.bj.len(), dims.1);
+                    // the sharded snapshot is internally consistent:
+                    // row factors cover every row, the bands tile the
+                    // column axis exactly
+                    assert_eq!(snap.rows().nrows(), dims.0);
+                    let mut covered = 0usize;
+                    for shard in snap.shards() {
+                        assert_eq!(shard.lo, covered, "bands must tile contiguously");
+                        covered = shard.hi;
+                        assert_eq!(shard.v.rows(), shard.ncols());
+                    }
+                    assert_eq!(covered, dims.1, "bands must cover all columns");
                     last_version = snap.version;
                     last_dims = dims;
                 }
@@ -253,6 +260,60 @@ fn full_queue_auto_flushes_by_default() {
         other => panic!("expected auto-flush, got {other:?}"),
     }
     assert_eq!(e.buffered(), 1, "the triggering event stays buffered");
+}
+
+/// `STATS` must never pair a pre-flush version with a post-flush
+/// buffered count: both ride inside one published snapshot, so a single
+/// pointer load yields a coherent (version, buffered) pair.
+#[test]
+fn stats_reads_one_coherent_snapshot() {
+    let e = engine(46, StreamConfig { batch_size: 4, ..Default::default() });
+    let (shared, writer_handle) = SharedEngine::spawn(e);
+    // Sequential: the pair tracks the engine exactly.
+    for k in 0..3u32 {
+        assert_eq!(shared.rate(0, k, 3.0), IngestResult::Buffered);
+        let stats = shared.stats();
+        assert!(stats.contains(&format!("buffered {}", k + 1)), "{stats}");
+        assert!(stats.contains("version 0"), "{stats}");
+    }
+    // 4th rating triggers the batch flush: buffered and version move
+    // together in the very next snapshot.
+    assert!(matches!(shared.rate(0, 3, 3.0), IngestResult::Flushed { .. }));
+    let stats = shared.stats();
+    assert!(stats.contains("buffered 0"), "{stats}");
+    assert!(stats.contains("version 1"), "{stats}");
+
+    // Concurrent: a racing reader sees monotone versions and never a
+    // buffered count that one batch could not hold.
+    std::thread::scope(|scope| {
+        let reader = {
+            let shared = shared.clone();
+            scope.spawn(move || {
+                let mut last_version = 0u64;
+                for _ in 0..200 {
+                    let snap = shared.snapshot();
+                    assert!(snap.version >= last_version, "version went backwards");
+                    assert!(snap.buffered() < 4, "buffered {} exceeds batch", snap.buffered());
+                    last_version = snap.version;
+                }
+            })
+        };
+        let rater = {
+            let shared = shared.clone();
+            scope.spawn(move || {
+                for k in 0..64u32 {
+                    let r = shared.rate(k % 30, k % 15, 4.0);
+                    assert!(
+                        matches!(r, IngestResult::Buffered | IngestResult::Flushed { .. }),
+                        "{r:?}"
+                    );
+                }
+            })
+        };
+        reader.join().unwrap();
+        rater.join().unwrap();
+    });
+    writer_handle.join();
 }
 
 /// The writer-thread path applies exactly what the equivalent direct
