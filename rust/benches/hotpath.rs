@@ -9,6 +9,7 @@
 
 use lshmf::bench::exp::BenchEnv;
 use lshmf::bench::Bencher;
+use lshmf::coordinator::banded::BandedEngine;
 use lshmf::coordinator::shared::SharedEngine;
 use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
 use lshmf::coordinator::Engine;
@@ -158,6 +159,90 @@ fn main() {
              {cloned} vs {full_bytes}"
         );
         writer.join();
+    }
+
+    // --- multi-writer ingest throughput (1 vs 4 band writers)
+    {
+        // Pure ingest routing cost: batch_size is effectively infinite,
+        // so the timed section measures the RATE round-trip through the
+        // band writers, not flush work. Four client threads each rate
+        // into their own column band; with one writer every request
+        // serializes on a single queue, with four each band's writer
+        // drains its own.
+        let (m, n) = (512usize, 256usize);
+        let clients = 4usize;
+        let per_client = 2_000usize;
+        let mut results: Vec<(usize, f64)> = Vec::new();
+        for writers in [1usize, 4] {
+            let mut fix_rng = Rng::seeded(88);
+            let mut t = Triples::new(m, n);
+            let mut seen = std::collections::HashSet::new();
+            while t.nnz() < 20_000 {
+                let (i, j) = (fix_rng.below(m), fix_rng.below(n));
+                if seen.insert((i, j)) {
+                    t.push(i, j, 1.0 + fix_rng.f32() * 4.0);
+                }
+            }
+            let csr = Csr::from_triples(&t);
+            let csc = Csc::from_triples(&t);
+            let hash_state = OnlineHashState::build(SimLsh::new(2, 6, 8, 2), &csc);
+            let (topk, _) = hash_state.topk(8, &mut fix_rng);
+            let cfg = CulshConfig {
+                f: 16,
+                k: 8,
+                epochs: 1,
+                eval: Vec::new(),
+                ..Default::default()
+            };
+            let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut Rng::seeded(8));
+            let metrics = Registry::new();
+            let orch = StreamOrchestrator::new(
+                model,
+                hash_state,
+                t,
+                StreamConfig {
+                    batch_size: usize::MAX >> 1,
+                    queue_capacity: usize::MAX >> 1,
+                    online_epochs: 1,
+                    ..Default::default()
+                },
+                cfg,
+                Rng::seeded(9),
+                metrics.clone(),
+            );
+            let engine = Engine::new(orch, (1.0, 5.0), metrics);
+            let (banded, handle) = BandedEngine::spawn(engine, writers);
+            let mk = b.run(&format!("banded ingest writers={writers} clients=4"), || {
+                std::thread::scope(|s| {
+                    for c in 0..clients {
+                        let banded = banded.clone();
+                        s.spawn(move || {
+                            let (lo, hi) = lshmf::sparse::band_range(c, n, clients);
+                            let width = hi - lo;
+                            for k in 0..per_client {
+                                // few distinct cells per band so the
+                                // final drain flush stays cheap
+                                let i = (c * 8 + k % 8) as u32;
+                                let j = (lo + k % width.min(64)) as u32;
+                                banded.rate(i, j, 2.0 + (k % 3) as f32);
+                            }
+                        });
+                    }
+                })
+            });
+            let rate = (clients * per_client) as f64 / mk.p50.as_secs_f64();
+            println!("{}  |  {:.2}M ratings/s", mk.fmt_line(), rate / 1e6);
+            results.push((writers, rate));
+            handle.join();
+        }
+        if let [(_, one), (_, four)] = results[..] {
+            println!(
+                "ingest scaling 4 writers vs 1: {:.2}x ({:.2}M vs {:.2}M ratings/s)",
+                four / one,
+                four / 1e6,
+                one / 1e6
+            );
+        }
     }
 
     // --- PJRT step latency

@@ -234,6 +234,10 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let shards = args
         .get_usize("shards")?
         .unwrap_or(crate::coordinator::DEFAULT_SHARDS);
+    // `--writers` switches ingest to the multi-writer path: one write
+    // queue + writer thread per column band, with the band count
+    // doubling as the snapshot shard count (see coordinator::banded).
+    let writers = args.get_usize("writers")?;
     let mut rng = Rng::seeded(cfg.dataset.seed);
     let ds = build_dataset(&cfg, &mut rng)?;
     eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
@@ -262,13 +266,25 @@ pub fn serve(args: &mut Args) -> Result<()> {
     );
     let engine = Engine::new(orch, (ds.min_value, ds.max_value), metrics);
     let listener = std::net::TcpListener::bind(("0.0.0.0", port as u16))?;
-    eprintln!(
-        "# serving on port {port} with {threads} reader thread(s), \
-         {shards} snapshot shard(s) \
-         (PREDICT/MPREDICT/TOPN/RATE/FLUSH/STATS/QUIT)"
-    );
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    crate::coordinator::server::serve_sharded(engine, listener, stop, threads, shards)?;
+    match writers {
+        Some(w) => {
+            eprintln!(
+                "# serving on port {port} with {threads} reader thread(s), \
+                 {w} band writer(s)/shard(s) \
+                 (PREDICT/MPREDICT/TOPN/RATE/FLUSH/STATS/QUIT)"
+            );
+            crate::coordinator::server::serve_banded(engine, listener, stop, threads, w)?;
+        }
+        None => {
+            eprintln!(
+                "# serving on port {port} with {threads} reader thread(s), \
+                 {shards} snapshot shard(s) \
+                 (PREDICT/MPREDICT/TOPN/RATE/FLUSH/STATS/QUIT)"
+            );
+            crate::coordinator::server::serve_sharded(engine, listener, stop, threads, shards)?;
+        }
+    }
     Ok(())
 }
 

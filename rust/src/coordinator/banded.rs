@@ -1,0 +1,1079 @@
+//! Multi-writer ingest: one write queue + writer thread per column band.
+//!
+//! PR 2's sharded snapshot left the seam explicit: the per-shard dirty
+//! sets already follow the Latin-square column-band split the rotation
+//! schedule ([`super::rotation`]) uses, so the remaining step to
+//! horizontal write scale is splitting the single `mpsc` write queue
+//! into **one queue per band**. This module is that step, following the
+//! cuMF line of work (Tan et al.): factor updates partition cleanly
+//! along the block-rotation schedule because a rating `(i, j, r)`
+//! touches only column `j`'s parameters and hash accumulators — routing
+//! it to `band_of(j)` makes concurrent ingest conflict-free by
+//! construction.
+//!
+//! Structure:
+//!
+//! * [`BandedOrchestrator`] wraps the [`StreamOrchestrator`] internals
+//!   split per band: the **shared core** (model, combined matrix,
+//!   re-rating index, training rng) is only ever touched inside a flush
+//!   epoch, while each **band state** (that band's slice of the hash
+//!   accumulators — [`OnlineHashState::split_bands`] — plus its pending
+//!   write buffer) is owned by one band writer thread.
+//! * [`BandedEngine`] is the cloneable serving handle: reads are the
+//!   same lock-free [`Snapshot`] path the single-writer flavour uses
+//!   (both delegate to the [`Snapshot`] read helpers, so replies cannot
+//!   drift); `rate` routes to the owning band's queue and round-trips
+//!   through that band's writer — concurrent raters on different bands
+//!   are served by different threads in parallel.
+//! * A **flush is a cross-band barrier epoch**: the triggering writer
+//!   takes the flush lock, quiesces every band (acquiring the band
+//!   locks in order), merges the per-band buffers back into global
+//!   arrival order (each rating carries a sequence stamp), and runs
+//!   exactly the single-writer computation — same dedup, same
+//!   per-column absorb order, same Top-K re-search and rng draws — so
+//!   the multi-writer path's replies stay **bit-identical** to the
+//!   `Mutex<Engine>` reference (`tests/props.rs` holds 1, 2 and 4
+//!   writers to byte-equal replies).
+//! * **Universe growth** (a rating whose column id exceeds current
+//!   dims) widens the barrier: band boundaries move with `ncols`, so
+//!   the epoch assembles the banded accumulators back into one state
+//!   ([`assemble_bands`]), runs the monolithic growth path once (the
+//!   relayout is unavoidable there), and re-splits on the new
+//!   boundaries before the writers resume — the same epoch structure
+//!   the rotation schedule already encodes.
+//! * After the core flush, **each band's shard publishes
+//!   independently**: dirty shards (per the flush's rated-column and
+//!   moved-Top-K reports, O(report) — see [`super::shared::dirty_bands`])
+//!   are rebuilt concurrently on scoped builder threads, clean shards
+//!   are reference-shared, and one pointer swap installs the assembled
+//!   snapshot so readers never observe a torn mix of band versions.
+//!
+//! Buffer routing is *soft*: a rating buffered under pre-growth
+//! boundaries may sit in a neighbouring band's queue until the next
+//! epoch, which is harmless because every flush merges all buffers in
+//! global arrival order. Hash-accumulator ownership, by contrast, is
+//! exact at all times — deltas are applied only inside an epoch, after
+//! re-splitting.
+
+use super::engine::Engine;
+use super::shared::{dirty_bands, full_snapshot, PublishMetrics, Snapshot};
+use super::stream::{dedup_batch, IngestResult, StreamConfig, StreamOrchestrator, StreamParts};
+use crate::lsh::{assemble_bands, topk_banded, OnlineHashState};
+use crate::metrics::{Counter, Registry};
+use crate::mf::neighbourhood::{ColBand, CulshConfig, CulshModel};
+use crate::mf::online::online_update_with_topk;
+use crate::rng::Rng;
+use crate::sparse::{band_of, band_range, Csr, Triples};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A rating stamped with its global arrival order — the merge key that
+/// restores the single-writer batch order across band buffers.
+struct Stamped {
+    seq: u64,
+    i: u32,
+    j: u32,
+    r: f32,
+}
+
+/// One band writer's exclusively-owned state: its column range, its
+/// slice of the hash accumulators (column ids band-local), and its
+/// pending write buffer.
+struct BandState {
+    lo: usize,
+    hi: usize,
+    hash: OnlineHashState,
+    buffer: Vec<Stamped>,
+}
+
+/// The shared core a flush epoch mutates: today's
+/// [`StreamOrchestrator`] internals minus what moved into the per-band
+/// [`BandState`]s (the write buffer and the hash accumulators).
+struct Core {
+    /// `Option` so a flush can move the model through the online update.
+    model: Option<CulshModel>,
+    combined_t: Triples,
+    combined: Arc<Csr>,
+    /// Position of each stored cell — the last-write-wins re-rating
+    /// index (global, because rows span every band).
+    cells: HashMap<(u32, u32), u32>,
+    rng: Rng,
+    train_cfg: CulshConfig,
+    last_flush_cols: Vec<u32>,
+    last_topk_moved: Vec<u32>,
+    version: u64,
+}
+
+/// The multi-writer orchestrator: shared core + per-band states +
+/// published snapshot. Lock order is `flush` → `core` → `bands[0..d]`;
+/// the per-rate path takes only its own band lock (briefly, to push),
+/// so ingest on distinct bands never contends.
+pub struct BandedOrchestrator {
+    snap: RwLock<Arc<Snapshot>>,
+    core: Mutex<Core>,
+    bands: Vec<Mutex<BandState>>,
+    /// Serializes flush epochs.
+    flush: Mutex<()>,
+    /// Global un-flushed event count (the backpressure / batch trigger —
+    /// the same global thresholds the single-writer buffer enforces).
+    buffered: AtomicUsize,
+    /// Arrival-order stamp source.
+    seq: AtomicU64,
+    /// Column extent the routing layer resolves bands against; updated
+    /// at the growth barrier.
+    ncols: AtomicUsize,
+    cfg: StreamConfig,
+    metrics: Registry,
+    publish: PublishMetrics,
+}
+
+/// A write-path request for one band's writer thread.
+enum BandCmd {
+    Rate { i: u32, j: u32, r: f32, reply: Sender<IngestResult> },
+    Flush { reply: Sender<usize> },
+    Shutdown,
+}
+
+/// Per-band-writer ingest counter handles, resolved once at spawn: the
+/// per-rate hot path must not allocate metric-name strings.
+struct IngestMetrics {
+    ingested: Arc<Counter>,
+    invalid: Arc<Counter>,
+    oob: Arc<Counter>,
+    rejected: Arc<Counter>,
+}
+
+impl IngestMetrics {
+    fn new(metrics: &Registry) -> Self {
+        IngestMetrics {
+            ingested: metrics.counter("stream.ingested"),
+            invalid: metrics.counter("stream.invalid_value"),
+            oob: metrics.counter("stream.out_of_bounds"),
+            rejected: metrics.counter("stream.rejected"),
+        }
+    }
+}
+
+/// Cloneable handle to the multi-writer serving core. Reads are
+/// lock-free after an `Arc` clone (the same [`Snapshot`] machinery as
+/// [`super::shared::SharedEngine`]); writes round-trip through the
+/// owning band's writer thread.
+#[derive(Clone)]
+pub struct BandedEngine {
+    shared: Arc<BandedOrchestrator>,
+    txs: Vec<Sender<BandCmd>>,
+    clamp: (f32, f32),
+    metrics: Registry,
+}
+
+/// Owns the band writer threads; [`BandedHandle::join`] stops them,
+/// drains and republishes any buffered events, and reassembles the
+/// [`Engine`] for inspection.
+pub struct BandedHandle {
+    handles: Vec<JoinHandle<()>>,
+    txs: Vec<Sender<BandCmd>>,
+    shared: Arc<BandedOrchestrator>,
+    clamp: (f32, f32),
+}
+
+impl BandedEngine {
+    /// Split an [`Engine`] into a concurrent read handle plus one
+    /// writer thread per column band. `writers` is both the queue count
+    /// and the snapshot shard count — one band, one writer, one shard.
+    pub fn spawn(engine: Engine, writers: usize) -> (BandedEngine, BandedHandle) {
+        let d = writers.max(1);
+        let clamp = engine.clamp();
+        let metrics = engine.metrics().clone();
+        let initial = Arc::new(full_snapshot(&engine, d, 0));
+        let parts = engine.into_orchestrator().into_parts();
+        let ncols = parts.combined.ncols();
+        let mut bands: Vec<Mutex<BandState>> = parts
+            .hash_state
+            .split_bands(d)
+            .into_iter()
+            .enumerate()
+            .map(|(b, hash)| {
+                let (lo, hi) = band_range(b, ncols, d);
+                Mutex::new(BandState { lo, hi, hash, buffer: Vec::new() })
+            })
+            .collect();
+        // Carry any pre-spawn buffered events over, preserving arrival
+        // order through the sequence stamps.
+        let mut seq = 0u64;
+        for (i, j, r) in parts.buffer {
+            let b = route_col(j, ncols, d);
+            bands[b]
+                .get_mut()
+                .unwrap_or_else(|e| e.into_inner())
+                .buffer
+                .push(Stamped { seq, i, j, r });
+            seq += 1;
+        }
+        let buffered = seq as usize;
+        let shared = Arc::new(BandedOrchestrator {
+            snap: RwLock::new(initial),
+            core: Mutex::new(Core {
+                model: Some(parts.model),
+                combined_t: parts.combined_t,
+                combined: parts.combined,
+                cells: parts.cells,
+                rng: parts.rng,
+                train_cfg: parts.train_cfg,
+                last_flush_cols: parts.last_flush_cols,
+                last_topk_moved: parts.last_flush_topk_moved,
+                version: 0,
+            }),
+            bands,
+            flush: Mutex::new(()),
+            buffered: AtomicUsize::new(buffered),
+            seq: AtomicU64::new(seq),
+            ncols: AtomicUsize::new(ncols),
+            cfg: parts.cfg,
+            metrics: metrics.clone(),
+            publish: PublishMetrics::new(&metrics, d),
+        });
+        let mut txs = Vec::with_capacity(d);
+        let mut handles = Vec::with_capacity(d);
+        for b in 0..d {
+            let (tx, rx) = channel();
+            let shared2 = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || band_writer_loop(shared2, b, rx)));
+            txs.push(tx);
+        }
+        let handle = BandedHandle {
+            handles,
+            txs: txs.clone(),
+            shared: Arc::clone(&shared),
+            clamp,
+        };
+        (BandedEngine { shared, txs, clamp, metrics }, handle)
+    }
+
+    /// Clone the current snapshot out of the lock (held only for the
+    /// `Arc` clone; all computation afterwards is lock-free).
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        let t0 = Instant::now();
+        let guard = self.shared.snap.read().unwrap_or_else(|e| e.into_inner());
+        let snap = Arc::clone(&guard);
+        drop(guard);
+        let waited = t0.elapsed();
+        self.metrics.histogram("shared.read_wait").record(waited);
+        self.metrics.gauge("shared.read_wait_last_ns").set(waited.as_nanos() as f64);
+        snap
+    }
+
+    /// Dimensions of the last-published snapshot.
+    pub fn dims(&self) -> (usize, usize) {
+        self.snapshot().dims()
+    }
+
+    /// Version of the last-published snapshot (monotonic).
+    pub fn version(&self) -> u64 {
+        self.snapshot().version
+    }
+
+    /// Buffered-event count of the last-published snapshot.
+    pub fn buffered(&self) -> usize {
+        self.snapshot().buffered()
+    }
+
+    /// Number of band writers (== queues == snapshot shards).
+    pub fn writers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Predict the interaction value for (row, col) on the current
+    /// snapshot. `None` if out of range.
+    pub fn predict(&self, i: usize, j: usize) -> Option<f32> {
+        self.metrics.counter("server.predict").inc();
+        self.snapshot().predict_clamped(i, j, self.clamp)
+    }
+
+    /// Batched prediction — the whole batch reads one snapshot (the
+    /// `MPREDICT` consistency contract).
+    pub fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
+        self.metrics.counter("server.mpredict").inc();
+        self.snapshot().predict_many_clamped(i, cols, self.clamp)
+    }
+
+    /// Top-N highest-predicted unrated columns for a row, on the
+    /// current snapshot.
+    pub fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
+        self.metrics.counter("server.topn").inc();
+        self.snapshot().top_n_clamped(i, n_items, self.clamp)
+    }
+
+    /// Ingest a rating through the owning band's write queue. Blocks
+    /// until that band's writer replies, so backpressure, validation
+    /// and flush outcomes surface synchronously — protocol semantics
+    /// match the single-threaded engine exactly.
+    pub fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult {
+        self.metrics.counter("server.rate").inc();
+        let timer = self.metrics.timer("shared.write_wait");
+        let b = self.route(j);
+        let (reply_tx, reply_rx) = channel();
+        if self.txs[b].send(BandCmd::Rate { i, j, r, reply: reply_tx }).is_err() {
+            // Writers are gone (shutdown): surface as backpressure
+            // rather than panicking a connection thread.
+            return IngestResult::Rejected;
+        }
+        let result = reply_rx.recv().unwrap_or(IngestResult::Rejected);
+        drop(timer);
+        result
+    }
+
+    /// Force-apply buffered ratings across every band; returns the
+    /// number applied.
+    pub fn flush(&self) -> usize {
+        self.metrics.counter("server.flush").inc();
+        let (reply_tx, reply_rx) = channel();
+        if self.txs[0].send(BandCmd::Flush { reply: reply_tx }).is_err() {
+            return 0;
+        }
+        reply_rx.recv().unwrap_or(0)
+    }
+
+    /// Metrics snapshot (server `STATS` verb): the same coherent-header
+    /// contract as the single-writer flavour, plus a `writers` line.
+    pub fn stats(&self) -> String {
+        self.metrics.counter("server.stats").inc();
+        let snap = self.snapshot();
+        let (m, n) = snap.dims();
+        format!(
+            "dims {m}x{n}\nbuffered {}\nversion {}\nshards {}\nwriters {}\n{}",
+            snap.buffered(),
+            snap.version,
+            snap.shards().len(),
+            self.txs.len(),
+            self.metrics.snapshot()
+        )
+    }
+
+    /// Band owning column `j` under the current routing extent.
+    fn route(&self, j: u32) -> usize {
+        route_col(j, self.shared.ncols.load(Ordering::Relaxed), self.txs.len())
+    }
+}
+
+/// Band routing: out-of-universe columns (growth ratings) clamp to the
+/// last band — the flush merges every band's buffer globally, so soft
+/// routing never affects what a flush applies.
+fn route_col(j: u32, ncols: usize, d: usize) -> usize {
+    if ncols == 0 {
+        return 0;
+    }
+    band_of((j as usize).min(ncols - 1), ncols, d)
+}
+
+impl BandedHandle {
+    /// Stop every band writer, drain and republish buffered events
+    /// (the same (version, buffered) coherence contract as the
+    /// single-writer shutdown path), and reassemble the [`Engine`].
+    pub fn join(self) -> Engine {
+        for tx in &self.txs {
+            let _ = tx.send(BandCmd::Shutdown);
+        }
+        for h in self.handles {
+            h.join().expect("band writer panicked");
+        }
+        flush_epoch(&self.shared);
+        let metrics = self.shared.metrics.clone();
+        let cfg = self.shared.cfg.clone();
+        let mut core = self.shared.core.lock().unwrap_or_else(|e| e.into_inner());
+        let guards: Vec<MutexGuard<'_, BandState>> = self
+            .shared
+            .bands
+            .iter()
+            .map(|m| m.lock().unwrap_or_else(|e| e.into_inner()))
+            .collect();
+        let refs: Vec<&OnlineHashState> = guards.iter().map(|g| &g.hash).collect();
+        let hash_state = assemble_bands(&refs);
+        let parts = StreamParts {
+            model: core.model.take().expect("model present outside flush"),
+            hash_state,
+            combined_t: std::mem::replace(&mut core.combined_t, Triples::new(0, 0)),
+            combined: Arc::clone(&core.combined),
+            cells: std::mem::take(&mut core.cells),
+            buffer: Vec::new(),
+            last_flush_cols: std::mem::take(&mut core.last_flush_cols),
+            last_flush_topk_moved: std::mem::take(&mut core.last_topk_moved),
+            cfg,
+            train_cfg: core.train_cfg.clone(),
+            rng: core.rng.clone(),
+            metrics: metrics.clone(),
+        };
+        drop(guards);
+        drop(core);
+        Engine::new(StreamOrchestrator::from_parts(parts), self.clamp, metrics)
+    }
+}
+
+/// Band `b`'s writer: owns that band's queue; `Rate` commands validate,
+/// stamp and buffer into the band's own state, and any flush trigger
+/// (batch threshold, capacity, explicit `FLUSH`) runs the cross-band
+/// epoch on this thread.
+fn band_writer_loop(shared: Arc<BandedOrchestrator>, band: usize, rx: Receiver<BandCmd>) {
+    let im = IngestMetrics::new(&shared.metrics);
+    for cmd in rx {
+        match cmd {
+            BandCmd::Rate { i, j, r, reply } => {
+                let _ = reply.send(ingest_rate(&shared, &im, band, i, j, r));
+            }
+            BandCmd::Flush { reply } => {
+                let _ = reply.send(flush_epoch(&shared));
+            }
+            BandCmd::Shutdown => break,
+        }
+    }
+}
+
+/// The per-rate path, ordered exactly like
+/// [`StreamOrchestrator::ingest`]: validate, backpressure, buffer,
+/// batch trigger. Only this band's lock is taken (briefly, to push) —
+/// raters on other bands proceed in parallel.
+///
+/// Concurrent linearization: with `reject_when_full`, admission is an
+/// atomic reserve on the global count, so backpressure rejects exactly
+/// at `queue_capacity` even when raters race on different bands. A
+/// flush trigger that loses its race (another band's epoch already
+/// applied everything, so this epoch applies 0) answers `Buffered` —
+/// the truthful reply for the linearization in which this rating
+/// buffered and the *other* flush applied it — never `Flushed {0}`.
+fn ingest_rate(
+    shared: &BandedOrchestrator,
+    im: &IngestMetrics,
+    band: usize,
+    i: u32,
+    j: u32,
+    r: f32,
+) -> IngestResult {
+    let cfg = &shared.cfg;
+    if !r.is_finite() {
+        im.invalid.inc();
+        return IngestResult::InvalidValue;
+    }
+    if i as usize >= cfg.max_rows || j as usize >= cfg.max_cols {
+        im.oob.inc();
+        return IngestResult::OutOfBounds;
+    }
+    if cfg.reject_when_full {
+        // Atomically reserve a buffer slot: reject iff the count is
+        // already at capacity (check-then-act would let concurrent
+        // raters on other bands overshoot the limit).
+        let reserved = shared.buffered.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |n| if n >= cfg.queue_capacity { None } else { Some(n + 1) },
+        );
+        if reserved.is_err() {
+            im.rejected.inc();
+            return IngestResult::Rejected;
+        }
+        buffer_rating(shared, band, i, j, r, true);
+    } else {
+        if shared.buffered.load(Ordering::Relaxed) >= cfg.queue_capacity {
+            // Flush first, then retain the triggering event un-flushed
+            // — the single-writer capacity contract.
+            let applied = flush_epoch(shared);
+            buffer_rating(shared, band, i, j, r, false);
+            im.ingested.inc();
+            return if applied > 0 {
+                IngestResult::Flushed { applied }
+            } else {
+                IngestResult::Buffered
+            };
+        }
+        buffer_rating(shared, band, i, j, r, false);
+    }
+    im.ingested.inc();
+    if shared.buffered.load(Ordering::Relaxed) >= cfg.batch_size {
+        let applied = flush_epoch(shared);
+        if applied > 0 {
+            return IngestResult::Flushed { applied };
+        }
+    }
+    IngestResult::Buffered
+}
+
+/// Stamp and buffer one accepted rating into `band`, and keep the
+/// *current* snapshot's buffered counter fresh (one relaxed store — the
+/// same coherence discipline as the single-writer path). Everything
+/// happens **inside the band lock**: a flush epoch holds every band
+/// lock from steal through publish, so (a) each stolen entry's count
+/// increment has provably landed — the epoch's `fetch_sub` can never
+/// underflow — and (b) the snapshot read here is genuinely current —
+/// a stale count can never land on a snapshot published after the
+/// steal. (Holding the band lock across the snapshot read cannot
+/// deadlock: the only writer of `snap` is an epoch, which takes the
+/// write lock strictly after acquiring all band locks.) `reserved`
+/// says the caller already counted this event (the atomic-reserve
+/// backpressure path).
+fn buffer_rating(
+    shared: &BandedOrchestrator,
+    band: usize,
+    i: u32,
+    j: u32,
+    r: f32,
+    reserved: bool,
+) {
+    let seq = shared.seq.fetch_add(1, Ordering::Relaxed);
+    let mut state = shared.bands[band].lock().unwrap_or_else(|e| e.into_inner());
+    state.buffer.push(Stamped { seq, i, j, r });
+    let now = if reserved {
+        shared.buffered.load(Ordering::Relaxed)
+    } else {
+        shared.buffered.fetch_add(1, Ordering::Relaxed) + 1
+    };
+    shared
+        .snap
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .note_buffered(now);
+}
+
+/// The cross-band flush epoch. Lock order `flush` → `core` →
+/// `bands[0..d]`; per-rate paths only ever take a single band lock, so
+/// the orders cannot cycle. Steals every band's buffer, restores global
+/// arrival order via the sequence stamps, applies the batch through
+/// exactly the single-writer computation, and publishes the per-band
+/// shards. Returns the applied count.
+fn flush_epoch(shared: &BandedOrchestrator) -> usize {
+    let _epoch = shared.flush.lock().unwrap_or_else(|e| e.into_inner());
+    let mut core_guard = shared.core.lock().unwrap_or_else(|e| e.into_inner());
+    let core: &mut Core = &mut core_guard;
+    let mut guards: Vec<MutexGuard<'_, BandState>> = shared
+        .bands
+        .iter()
+        .map(|m| m.lock().unwrap_or_else(|e| e.into_inner()))
+        .collect();
+
+    let mut raw: Vec<Stamped> = Vec::new();
+    for g in guards.iter_mut() {
+        raw.append(&mut g.buffer);
+    }
+    if raw.is_empty() {
+        return 0;
+    }
+    shared.buffered.fetch_sub(raw.len(), Ordering::Relaxed);
+    raw.sort_unstable_by_key(|e| e.seq);
+    let batch: Vec<(u32, u32, f32)> = raw.iter().map(|e| (e.i, e.j, e.r)).collect();
+
+    let old_rows = core.combined_t.nrows();
+    let old_cols = core.combined_t.ncols();
+    let new_rows = batch
+        .iter()
+        .map(|&(i, _, _)| i as usize + 1)
+        .chain(std::iter::once(old_rows))
+        .max()
+        .unwrap();
+    let new_cols = batch
+        .iter()
+        .map(|&(_, j, _)| j as usize + 1)
+        .chain(std::iter::once(old_cols))
+        .max()
+        .unwrap();
+
+    let applied = if new_cols > old_cols {
+        grow_and_flush(shared, core, &mut guards, batch)
+    } else {
+        flush_in_place(shared, core, &mut guards, batch, old_rows, new_rows, old_cols)
+    };
+    if applied > 0 {
+        publish_banded(shared, core, &guards);
+    }
+    applied
+}
+
+/// The conflict-free in-place flush (no column growth, so band
+/// boundaries are stable and every hash delta lands in the band that
+/// owns the column). The computation is ordered exactly like
+/// [`StreamOrchestrator::flush`] — merge order, dedup, per-column
+/// absorb order, Top-K re-search, rng draws — which is what keeps
+/// multi-writer replies bit-identical to the single-writer reference.
+fn flush_in_place(
+    shared: &BandedOrchestrator,
+    core: &mut Core,
+    guards: &mut [MutexGuard<'_, BandState>],
+    batch: Vec<(u32, u32, f32)>,
+    old_rows: usize,
+    new_rows: usize,
+    old_cols: usize,
+) -> usize {
+    let d = guards.len();
+    let increment = dedup_batch(batch);
+    core.combined_t.grow_to(new_rows, old_cols);
+    let mut fresh: Vec<(u32, u32, f32)> = Vec::with_capacity(increment.len());
+    let mut rerated = 0u64;
+    for &(i, j, r) in &increment {
+        if let Some(&pos) = core.cells.get(&(i, j)) {
+            let old = core.combined_t.entries()[pos as usize].2;
+            core.combined_t.entries_mut()[pos as usize].2 = r;
+            let g: &mut BandState = &mut guards[band_of(j as usize, old_cols, d)];
+            let local_j = j as usize - g.lo;
+            g.hash.reabsorb(i as usize, local_j, old, r);
+            rerated += 1;
+        } else {
+            core.cells.insert((i, j), core.combined_t.nnz() as u32);
+            core.combined_t.push(i as usize, j as usize, r);
+            fresh.push((i, j, r));
+        }
+    }
+    // Fresh-cell absorption, band-local: each band takes its own
+    // columns' entries in batch order, so every accumulator receives
+    // exactly the delta sequence the monolithic `apply_increment`
+    // would feed it (per-column order is all that f64 summation needs).
+    for g in guards.iter_mut() {
+        let g: &mut BandState = g;
+        let (lo, hi) = (g.lo, g.hi);
+        let local: Vec<(u32, u32, f32)> = fresh
+            .iter()
+            .filter(|&&(_, j, _)| (j as usize) >= lo && (j as usize) < hi)
+            .map(|&(i, j, r)| (i, j - lo as u32, r))
+            .collect();
+        g.hash.apply_increment(&local, hi - lo);
+    }
+    shared.metrics.counter("stream.rerated").add(rerated);
+
+    let combined = Arc::new(Csr::from_triples(&core.combined_t));
+    let model = core.model.take().expect("model present outside flush");
+    let k = model.k();
+    let epochs = shared.cfg.online_epochs;
+    let timer = shared.metrics.histogram("stream.flush_seconds");
+    let refs: Vec<&OnlineHashState> = guards.iter().map(|g| &g.hash).collect();
+    let train_cfg = &core.train_cfg;
+    let rng = &mut core.rng;
+    let report = timer.time(|| {
+        let (topk, _) = topk_banded(&refs, k, rng);
+        online_update_with_topk(
+            model, topk, &combined, &fresh, old_rows, old_cols, train_cfg, epochs, rng,
+        )
+    });
+    core.model = Some(report.model);
+    core.combined = combined;
+    core.last_flush_cols = increment.iter().map(|&(_, j, _)| j).collect();
+    core.last_topk_moved = report.topk_moved_cols;
+    shared.metrics.counter("stream.flushes").inc();
+    shared
+        .metrics
+        .counter("stream.applied")
+        .add(increment.len() as u64);
+    increment.len()
+}
+
+/// The cross-band growth barrier: every band writer is already
+/// quiesced (the caller holds all band locks), the banded accumulators
+/// are assembled back into one monolithic state, the single-writer
+/// flush runs **verbatim** on a temporarily reassembled
+/// [`StreamOrchestrator`] (column growth must relayout the whole
+/// accumulator set anyway, so the assembly costs nothing extra
+/// asymptotically), and the state re-splits on the recomputed band
+/// boundaries before the writers resume.
+fn grow_and_flush(
+    shared: &BandedOrchestrator,
+    core: &mut Core,
+    guards: &mut [MutexGuard<'_, BandState>],
+    batch: Vec<(u32, u32, f32)>,
+) -> usize {
+    let d = guards.len();
+    let refs: Vec<&OnlineHashState> = guards.iter().map(|g| &g.hash).collect();
+    let hash_state = assemble_bands(&refs);
+    let parts = StreamParts {
+        model: core.model.take().expect("model present outside flush"),
+        hash_state,
+        combined_t: std::mem::replace(&mut core.combined_t, Triples::new(0, 0)),
+        combined: Arc::clone(&core.combined),
+        cells: std::mem::take(&mut core.cells),
+        buffer: batch,
+        last_flush_cols: Vec::new(),
+        last_flush_topk_moved: Vec::new(),
+        cfg: shared.cfg.clone(),
+        train_cfg: core.train_cfg.clone(),
+        rng: std::mem::replace(&mut core.rng, Rng::seeded(0)),
+        metrics: shared.metrics.clone(),
+    };
+    let mut orch = StreamOrchestrator::from_parts(parts);
+    let applied = orch.flush();
+    let parts = orch.into_parts();
+    core.model = Some(parts.model);
+    core.combined_t = parts.combined_t;
+    core.combined = parts.combined;
+    core.cells = parts.cells;
+    core.rng = parts.rng;
+    core.last_flush_cols = parts.last_flush_cols;
+    core.last_topk_moved = parts.last_flush_topk_moved;
+    let new_ncols = core.combined.ncols();
+    for (b, (g, hash)) in guards
+        .iter_mut()
+        .zip(parts.hash_state.split_bands(d))
+        .enumerate()
+    {
+        let (lo, hi) = band_range(b, new_ncols, d);
+        g.hash = hash;
+        g.lo = lo;
+        g.hi = hi;
+    }
+    shared.ncols.store(new_ncols, Ordering::Relaxed);
+    applied
+}
+
+/// Publish after a flush epoch: each band's shard is decided and built
+/// independently — clean shards (per the flush's O(report) dirty set)
+/// are reference-shared from the previous snapshot, dirty shards are
+/// rebuilt concurrently on scoped builder threads acting for their band
+/// — then one pointer swap installs the assembled snapshot.
+fn publish_banded(
+    shared: &BandedOrchestrator,
+    core: &mut Core,
+    guards: &[MutexGuard<'_, BandState>],
+) {
+    let prev = Arc::clone(&shared.snap.read().unwrap_or_else(|e| e.into_inner()));
+    let model = core.model.as_ref().expect("model present outside flush");
+    let matrix = Arc::clone(&core.combined);
+    let (nrows, ncols) = (matrix.nrows(), matrix.ncols());
+    let (prev_rows, prev_cols) = prev.dims();
+    let d = guards.len();
+    let mut bytes_cloned = 0usize;
+
+    let rows = if nrows != prev_rows {
+        let rf = model.row_factors();
+        bytes_cloned += rf.bytes();
+        Arc::new(rf)
+    } else {
+        prev.rows_arc()
+    };
+
+    let touched = dirty_bands(&core.last_flush_cols, &core.last_topk_moved, ncols, d);
+    let ranges: Vec<Option<(usize, usize)>> = (0..d)
+        .map(|b| {
+            let clean = ncols == prev_cols && !touched.contains(&b);
+            if clean {
+                None
+            } else {
+                Some((guards[b].lo, guards[b].hi))
+            }
+        })
+        .collect();
+    let dirty_count = ranges.iter().flatten().count();
+    let built: Vec<Option<ColBand>> = if dirty_count <= 1 {
+        ranges
+            .iter()
+            .copied()
+            .map(|r| r.map(|(lo, hi)| model.col_band(lo, hi)))
+            .collect()
+    } else {
+        std::thread::scope(|s| {
+            let builders: Vec<_> = ranges
+                .iter()
+                .copied()
+                .map(|r| r.map(|(lo, hi)| s.spawn(move || model.col_band(lo, hi))))
+                .collect();
+            builders
+                .into_iter()
+                .map(|h| h.map(|h| h.join().expect("shard builder panicked")))
+                .collect()
+        })
+    };
+    let mut cloned_bands = vec![false; d];
+    let shards: Vec<Arc<ColBand>> = built
+        .into_iter()
+        .enumerate()
+        .map(|(b, band)| match band {
+            Some(band) => {
+                bytes_cloned += band.bytes();
+                cloned_bands[b] = true;
+                Arc::new(band)
+            }
+            None => Arc::clone(&prev.shards()[b]),
+        })
+        .collect();
+
+    core.version += 1;
+    let snap = Arc::new(Snapshot::assemble(
+        rows,
+        shards.into(),
+        matrix,
+        core.version,
+        shared.buffered.load(Ordering::Relaxed),
+    ));
+    let swap = Instant::now();
+    let mut guard = shared.snap.write().unwrap_or_else(|e| e.into_inner());
+    *guard = snap;
+    drop(guard);
+    shared.publish.publish_wait().record(swap.elapsed());
+    shared.publish.record(&cloned_bands, bytes_cloned);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shared::SharedEngine;
+    use crate::coordinator::stream::StreamOrchestrator;
+    use crate::lsh::{OnlineHashState, SimLsh};
+    use crate::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+    use crate::rng::Rng;
+    use crate::sparse::{Csc, Csr, Triples};
+
+    fn engine(rng: &mut Rng, stream_cfg: StreamConfig) -> Engine {
+        let (m, n) = (25, 12);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 140 {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(1, 4, 8, 2);
+        let hash_state = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash_state.topk(3, rng);
+        let cfg = CulshConfig { f: 4, k: 3, epochs: 3, ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, rng);
+        let registry = Registry::new();
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            stream_cfg,
+            cfg,
+            rng.split(1),
+            registry.clone(),
+        );
+        Engine::new(orch, (1.0, 5.0), registry)
+    }
+
+    #[test]
+    fn reads_match_single_threaded_engine() {
+        let mut rng = Rng::seeded(91);
+        let e = engine(&mut rng, StreamConfig::default());
+        let want_p = e.predict(2, 3);
+        let want_top = e.top_n(2, 4);
+        let want_many = e.predict_many(2, &[0, 3, 99]);
+        for writers in [1usize, 2, 4] {
+            let mut rng2 = Rng::seeded(91);
+            let e = engine(&mut rng2, StreamConfig::default());
+            let (banded, handle) = BandedEngine::spawn(e, writers);
+            assert_eq!(banded.predict(2, 3), want_p, "writers={writers}");
+            assert_eq!(banded.top_n(2, 4), want_top, "writers={writers}");
+            assert_eq!(banded.predict_many(2, &[0, 3, 99]), want_many, "writers={writers}");
+            assert!(banded.predict(999, 0).is_none());
+            assert!(banded.top_n(999, 4).is_empty());
+            assert!(banded.predict_many(999, &[0]).is_none());
+            assert_eq!(banded.version(), 0);
+            assert_eq!(banded.writers(), writers);
+            handle.join();
+        }
+    }
+
+    /// Batch-triggered flush through a band writer: growth applies, a
+    /// snapshot publishes, and the joined engine holds the same state.
+    #[test]
+    fn rate_flush_publishes_new_snapshot() {
+        let mut rng = Rng::seeded(92);
+        let e = engine(&mut rng, StreamConfig { batch_size: 4, ..Default::default() });
+        let (banded, handle) = BandedEngine::spawn(e, 3);
+        let (m0, n0) = banded.dims();
+        assert!(banded.predict(0, n0 + 2).is_none());
+        for k in 0..3 {
+            assert_eq!(banded.rate(0, (n0 + k) as u32, 5.0), IngestResult::Buffered);
+        }
+        // 4th rating hits batch_size -> cross-band flush -> publish; it
+        // re-rates the 3rd cell, so last-write-wins dedup applies 3
+        let res = banded.rate(0, (n0 + 2) as u32, 4.0);
+        assert!(matches!(res, IngestResult::Flushed { applied: 3 }), "{res:?}");
+        assert_eq!(banded.version(), 1);
+        assert_eq!(banded.dims(), (m0, n0 + 3));
+        let p = banded.predict(0, n0 + 2).unwrap();
+        assert!((1.0..=5.0).contains(&p));
+        let engine = handle.join();
+        assert_eq!(engine.dims(), (m0, n0 + 3));
+    }
+
+    #[test]
+    fn explicit_flush_and_stats() {
+        let mut rng = Rng::seeded(93);
+        let e = engine(&mut rng, StreamConfig::default());
+        let (banded, handle) = BandedEngine::spawn(e, 2);
+        assert_eq!(banded.rate(1, 2, 4.0), IngestResult::Buffered);
+        let stats = banded.stats();
+        assert!(stats.contains("buffered 1"), "{stats}");
+        assert!(stats.contains("version 0"), "{stats}");
+        assert!(stats.contains("writers 2"), "{stats}");
+        assert_eq!(banded.flush(), 1);
+        assert_eq!(banded.flush(), 0, "nothing left to apply");
+        let stats = banded.stats();
+        assert!(stats.contains("buffered 0"), "{stats}");
+        assert!(stats.contains("version 1"), "{stats}");
+        assert!(stats.contains("server.rate"), "{stats}");
+        handle.join();
+    }
+
+    /// Backpressure is a *global* contract: the threshold counts
+    /// un-flushed events across every band's buffer, exactly like the
+    /// single shared buffer it replaces.
+    #[test]
+    fn backpressure_is_global_across_bands() {
+        let mut rng = Rng::seeded(94);
+        let e = engine(
+            &mut rng,
+            StreamConfig {
+                queue_capacity: 2,
+                batch_size: 100,
+                reject_when_full: true,
+                ..Default::default()
+            },
+        );
+        let (banded, handle) = BandedEngine::spawn(e, 4);
+        // two buffered events land in different bands (cols 1 and 11 of
+        // 12 at d=4), yet the third is rejected globally
+        assert_eq!(banded.rate(0, 1, 3.0), IngestResult::Buffered);
+        assert_eq!(banded.rate(0, 11, 3.0), IngestResult::Buffered);
+        assert_eq!(banded.rate(0, 5, 3.0), IngestResult::Rejected);
+        banded.flush();
+        assert_eq!(banded.rate(0, 5, 3.0), IngestResult::Buffered);
+        handle.join();
+    }
+
+    #[test]
+    fn validation_round_trips_through_band_writers() {
+        let mut rng = Rng::seeded(95);
+        let e = engine(
+            &mut rng,
+            StreamConfig { max_rows: 1000, max_cols: 1000, ..Default::default() },
+        );
+        let (banded, handle) = BandedEngine::spawn(e, 3);
+        assert_eq!(banded.rate(0, 1, f32::NAN), IngestResult::InvalidValue);
+        assert_eq!(banded.rate(4_000_000_000, 0, 5.0), IngestResult::OutOfBounds);
+        assert_eq!(banded.buffered(), 0);
+        handle.join();
+    }
+
+    /// The shutdown coherence contract holds for the multi-writer path
+    /// too: join drains, and the drained state is REPUBLISHED before the
+    /// buffered counter drops to zero.
+    #[test]
+    fn shutdown_drain_republishes_before_zeroing_buffered() {
+        let mut rng = Rng::seeded(97);
+        let e = engine(&mut rng, StreamConfig::default());
+        let (banded, handle) = BandedEngine::spawn(e, 4);
+        let (m0, n0) = banded.dims();
+        assert_eq!(banded.rate(0, n0 as u32, 5.0), IngestResult::Buffered);
+        assert_eq!(banded.buffered(), 1);
+        let engine = handle.join();
+        assert_eq!(engine.dims(), (m0, n0 + 1), "join drained the rating");
+        assert_eq!(banded.buffered(), 0);
+        assert_eq!(banded.version(), 1, "the drain must publish");
+        assert_eq!(banded.dims(), (m0, n0 + 1));
+        let p = banded.predict(0, n0).expect("drained rating must be servable");
+        assert!((1.0..=5.0).contains(&p));
+        // writers are gone: writes surface as backpressure, reads serve
+        assert_eq!(banded.rate(0, 0, 3.0), IngestResult::Rejected);
+        assert_eq!(banded.flush(), 0);
+    }
+
+    /// The growth barrier recomputes band boundaries: after a flush that
+    /// widens the universe, the published shards tile the new column
+    /// axis exactly and new columns route and serve.
+    #[test]
+    fn growth_barrier_recomputes_band_boundaries() {
+        let mut rng = Rng::seeded(98);
+        let e = engine(&mut rng, StreamConfig::default());
+        let (banded, handle) = BandedEngine::spawn(e, 4);
+        let (_, n0) = banded.dims();
+        // growth ratings spread across several bands plus new columns
+        for (i, j) in [(0u32, 0u32), (1, 5), (2, n0 as u32 + 6), (3, n0 as u32)] {
+            assert_eq!(banded.rate(i, j, 4.0), IngestResult::Buffered, "({i},{j})");
+        }
+        assert_eq!(banded.flush(), 4);
+        let snap = banded.snapshot();
+        assert_eq!(snap.dims().1, n0 + 7);
+        let mut covered = 0usize;
+        for shard in snap.shards() {
+            assert_eq!(shard.lo, covered, "bands must tile contiguously");
+            covered = shard.hi;
+        }
+        assert_eq!(covered, n0 + 7, "bands must cover the grown axis");
+        assert!(banded.predict(2, n0 + 6).is_some());
+        // post-growth traffic keeps flowing through the re-split bands
+        assert_eq!(banded.rate(0, (n0 + 6) as u32, 2.0), IngestResult::Buffered);
+        assert_eq!(banded.flush(), 1);
+        handle.join();
+    }
+
+    /// A flush that touches one band clones only the dirty shards (per
+    /// the O(report) dirty set); clean bands and the row factors
+    /// republish by reference.
+    #[test]
+    fn publish_shares_clean_shards() {
+        let mut rng = Rng::seeded(96);
+        let e = engine(&mut rng, StreamConfig::default());
+        let metrics = e.metrics().clone();
+        let full_bytes = e.model().bytes() + e.matrix().bytes();
+        let (banded, handle) = BandedEngine::spawn(e, 4);
+        let before = banded.snapshot();
+        // re-rate inside band 0 only (cols 0..3 of 12 at d=4)
+        assert_eq!(banded.rate(0, 0, 3.5), IngestResult::Buffered);
+        assert_eq!(banded.rate(1, 1, 2.5), IngestResult::Buffered);
+        assert_eq!(banded.flush(), 2);
+        let after = banded.snapshot();
+        assert_eq!(after.version, 1);
+        assert!(
+            !Arc::ptr_eq(&before.shards()[0], &after.shards()[0]),
+            "dirty band republished by reference"
+        );
+        assert!(
+            Arc::ptr_eq(&before.rows_arc(), &after.rows_arc()),
+            "row factors must be reference-shared when rows did not grow"
+        );
+        let cloned = metrics.gauge("shared.publish_bytes_cloned").get();
+        assert!(cloned > 0.0);
+        assert!(
+            cloned < full_bytes as f64,
+            "partial publish ({cloned}) must beat the full clone ({full_bytes})"
+        );
+        assert!(metrics.counter("shared.shard0.publishes").get() >= 1);
+        handle.join();
+    }
+
+    /// The multi-writer engine's full write/read protocol surface
+    /// matches the single-writer [`SharedEngine`] step for step on the
+    /// same seed (the randomized cross-check lives in `tests/props.rs`).
+    #[test]
+    fn banded_matches_shared_engine_sequence() {
+        let cfgs = StreamConfig { batch_size: 5, max_rows: 500, max_cols: 500, ..Default::default() };
+        let mut rng_a = Rng::seeded(99);
+        let (shared, shared_writer) =
+            SharedEngine::spawn_sharded(engine(&mut rng_a, cfgs.clone()), 3);
+        let mut rng_b = Rng::seeded(99);
+        let (banded, banded_handle) = BandedEngine::spawn(engine(&mut rng_b, cfgs), 3);
+        let script: Vec<(u32, u32, f32)> = vec![
+            (0, 0, 3.0),
+            (1, 11, 4.0),
+            (2, 6, 2.0),
+            (3, 14, 5.0), // growth: col 14 > 11
+            (4, 2, 1.5),  // 5th -> batch flush with growth
+            (0, 0, 2.0),
+            (5, 20, 4.5), // more growth
+        ];
+        for &(i, j, r) in &script {
+            assert_eq!(shared.rate(i, j, r), banded.rate(i, j, r), "rate({i},{j},{r})");
+        }
+        assert_eq!(shared.flush(), banded.flush());
+        assert_eq!(shared.dims(), banded.dims());
+        assert_eq!(shared.version(), banded.version());
+        for i in 0..26 {
+            for j in 0..21 {
+                assert_eq!(shared.predict(i, j), banded.predict(i, j), "predict({i},{j})");
+            }
+            assert_eq!(shared.top_n(i, 5), banded.top_n(i, 5), "top_n({i})");
+        }
+        let ea = shared_writer.join();
+        let eb = banded_handle.join();
+        assert_eq!(ea.dims(), eb.dims());
+    }
+}

@@ -119,6 +119,19 @@ impl Engine {
         self.orch.last_flush_cols()
     }
 
+    /// Old columns whose Top-K row the most recent flush's re-search
+    /// moved (the publish's other dirty-band source — O(report) clean-
+    /// band detection instead of an O(N·K) scan per publish).
+    pub fn last_flush_topk_moved(&self) -> &[u32] {
+        self.orch.last_flush_topk_moved()
+    }
+
+    /// Surrender the orchestrator (the multi-writer spawn dismantles it
+    /// into per-band state).
+    pub(crate) fn into_orchestrator(self) -> StreamOrchestrator {
+        self.orch
+    }
+
     /// Events buffered but not yet applied.
     pub fn buffered(&self) -> usize {
         self.orch.buffered()

@@ -14,15 +14,22 @@
 //!   `PREDICT`/`MPREDICT`/`TOPN`/`STATS` proceed lock-free while `RATE`
 //!   events stream through the online path — reads are never blocked by
 //!   a flush, and a flush republishes only the bands it dirtied.
+//! * [`banded`] — the multi-writer ingest core: one write queue +
+//!   writer thread per column band (conflict-free by the Latin-square
+//!   band split), cross-band barrier epochs for flush and universe
+//!   growth, per-band shard publishing — replies bit-identical to the
+//!   single-writer flavour.
 //! * [`server`] — a line-protocol TCP front end with a bounded
-//!   connection-thread pool over the concurrent core.
+//!   connection-thread pool over either concurrent core.
 
+pub mod banded;
 pub mod engine;
 pub mod rotation;
 pub mod server;
 pub mod shared;
 pub mod stream;
 
+pub use banded::{BandedEngine, BandedHandle, BandedOrchestrator};
 pub use engine::Engine;
 pub use rotation::{RotationPlan, VirtualClockReport};
 pub use shared::{SharedEngine, Snapshot, WriterHandle, DEFAULT_SHARDS};

@@ -17,6 +17,16 @@
 //!   single host with one core cannot show real multi-device scaling, so
 //!   the simulated clock is the reproduction vehicle (DESIGN.md
 //!   §Substitutions).
+//!
+//! The serving stack reuses this schedule's column-band partition
+//! (`sparse::band_of` — the same split [`BlockGrid`] uses): the sharded
+//! snapshot publish keys its dirty sets off it, and the multi-writer
+//! ingest path ([`super::banded`]) assigns one write queue + writer per
+//! column band. The Latin-square property is exactly why that split is
+//! conflict-free — no step of the schedule, and no band writer, ever
+//! shares a column with another — and the barrier between rotation
+//! sub-steps is the same epoch structure the banded path's cross-band
+//! growth barrier encodes.
 
 use crate::sparse::{BlockGrid, Triples};
 
@@ -274,6 +284,26 @@ mod tests {
                 assert!(visited.lock().unwrap().insert((rb, cb)), "block revisited");
             });
             assert_eq!(visited.lock().unwrap().len(), d * d);
+        }
+    }
+
+    /// The serving stack's band split (`sparse::band_of`) and the
+    /// rotation schedule's column bands are one partition: the band the
+    /// per-band write queues route column `j` to is exactly the column
+    /// band device `d` owns in the block grid. (This shared split is
+    /// the foundation of the multi-writer path's conflict-freedom.)
+    #[test]
+    fn rotation_col_bands_match_serving_band_split() {
+        use crate::sparse::{band_of, BlockGrid};
+        let mut rng = Rng::seeded(47);
+        for d in [1usize, 2, 3, 5] {
+            let t = random_triples(40, 37, 250, &mut rng);
+            let grid = BlockGrid::partition(&t, d);
+            for j in 0..t.ncols() {
+                let b = band_of(j, t.ncols(), d);
+                let (lo, hi) = grid.col_band_range(b);
+                assert!(lo <= j && j < hi, "d={d} col {j}: band {b} is [{lo},{hi})");
+            }
         }
     }
 

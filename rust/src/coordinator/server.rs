@@ -28,7 +28,14 @@
 //!   `PREDICT`/`TOPN`/`STATS` against lock-free snapshots while `RATE`
 //!   funnels through the writer thread, so reads proceed even during a
 //!   flush.
+//!
+//! [`serve_banded`] swaps in the third flavour,
+//! [`BandedEngine`](super::banded::BandedEngine): the same read path,
+//! but `RATE` traffic fans out over one write queue + writer thread per
+//! column band (`serve --writers`), with replies bit-identical to both
+//! flavours above.
 
+use super::banded::BandedEngine;
 use super::engine::Engine;
 use super::shared::SharedEngine;
 use super::stream::IngestResult;
@@ -81,6 +88,32 @@ impl Serving for Mutex<Engine> {
 
     fn stats(&self) -> String {
         self.lock().unwrap().stats()
+    }
+}
+
+impl Serving for BandedEngine {
+    fn predict(&self, i: usize, j: usize) -> Option<f32> {
+        BandedEngine::predict(self, i, j)
+    }
+
+    fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
+        BandedEngine::predict_many(self, i, cols)
+    }
+
+    fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
+        BandedEngine::top_n(self, i, n_items)
+    }
+
+    fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult {
+        BandedEngine::rate(self, i, j, r)
+    }
+
+    fn flush(&self) -> usize {
+        BandedEngine::flush(self)
+    }
+
+    fn stats(&self) -> String {
+        BandedEngine::stats(self)
     }
 }
 
@@ -184,6 +217,9 @@ pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String
                 IngestResult::Rejected => Some("ERR backpressure".into()),
                 IngestResult::InvalidValue => Some("ERR invalid-value".into()),
                 IngestResult::OutOfBounds => Some("ERR out-of-bounds".into()),
+                // RATE always carries a payload, so a serving engine
+                // never answers `Ignored`; keep the match exhaustive.
+                IngestResult::Ignored => Some("OK ignored".into()),
             }
         }
         "FLUSH" => {
@@ -232,8 +268,40 @@ pub fn serve_sharded(
     threads: usize,
     shards: usize,
 ) -> std::io::Result<Engine> {
-    let threads = threads.max(1);
     let (shared, writer) = SharedEngine::spawn_sharded(engine, shards);
+    run_pool(shared, listener, stop, threads)?;
+    Ok(writer.join())
+}
+
+/// [`serve`] over the multi-writer ingest core: one write queue +
+/// writer thread per column band (`writers` is both the queue count and
+/// the snapshot shard count — see
+/// [`BandedEngine::spawn`](super::banded::BandedEngine::spawn)).
+pub fn serve_banded(
+    engine: Engine,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    threads: usize,
+    writers: usize,
+) -> std::io::Result<Engine> {
+    let (banded, handle) = BandedEngine::spawn(engine, writers);
+    run_pool(banded, listener, stop, threads)?;
+    Ok(handle.join())
+}
+
+/// The accept loop + bounded connection-worker pool, generic over the
+/// serving core so the single-writer and multi-writer front ends share
+/// one implementation.
+fn run_pool<S>(
+    shared: S,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    threads: usize,
+) -> std::io::Result<()>
+where
+    S: Serving + Clone + Send + 'static,
+{
+    let threads = threads.max(1);
     let (conn_tx, conn_rx) = std::sync::mpsc::channel::<TcpStream>();
     let conn_rx = Arc::new(Mutex::new(conn_rx));
     let mut workers = Vec::with_capacity(threads);
@@ -279,7 +347,7 @@ pub fn serve_sharded(
     for w in workers {
         let _ = w.join();
     }
-    Ok(writer.join())
+    Ok(())
 }
 
 fn handle_conn<S: Serving + ?Sized>(engine: &S, stream: TcpStream) -> std::io::Result<()> {
@@ -473,5 +541,54 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
         let _ = TcpStream::connect(addr);
         handle.join().unwrap();
+    }
+
+    /// The multi-writer server answers the same protocol over TCP:
+    /// reads, a RATE through a band writer, a FLUSH across bands, and
+    /// STATS reporting the writer count.
+    #[test]
+    fn tcp_roundtrip_banded() {
+        use std::io::{BufRead, BufReader, Write};
+        let mut rng = Rng::seeded(77);
+        let e = engine_with(&mut rng, StreamConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            serve_banded(e, listener, stop2, 2, 3).unwrap()
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut reply = String::new();
+        client.write_all(b"PREDICT 0 0\n").unwrap();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("PRED "), "{reply}");
+        reply.clear();
+        client.write_all(b"RATE 0 5 4.5\n").unwrap();
+        reader.read_line(&mut reply).unwrap();
+        assert_eq!(reply.trim(), "OK buffered");
+        reply.clear();
+        client.write_all(b"FLUSH\n").unwrap();
+        reader.read_line(&mut reply).unwrap();
+        assert_eq!(reply.trim(), "OK flushed 1");
+        client.write_all(b"STATS\n").unwrap();
+        let mut stats = String::new();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let done = line.trim_end().ends_with("END");
+            stats.push_str(&line);
+            if done {
+                break;
+            }
+        }
+        assert!(stats.contains("writers 3"), "{stats}");
+        client.write_all(b"QUIT\n").unwrap();
+        drop(client);
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr);
+        let engine = handle.join().unwrap();
+        assert_eq!(engine.buffered(), 0, "band writers drained on shutdown");
     }
 }

@@ -20,16 +20,19 @@
 //! * **Writes** (`RATE` / `FLUSH`) are funnelled through an `mpsc`
 //!   channel into one writer thread that owns the [`Engine`], exactly
 //!   preserving the paper's single-writer online model. Each flush
-//!   reports the column ids it applied; `publish` keys the per-shard
-//!   dirty set off that report and clones **only the dirty bands** (plus
-//!   any band whose Top-K rows the LSH re-search moved),
-//!   reference-sharing the clean ones across versions. The matrix `Arc`
-//!   is shared with the orchestrator outright — publishing it copies
-//!   nothing.
+//!   reports the column ids it applied *and* the columns whose Top-K
+//!   row its LSH re-search moved; `publish` keys the per-shard dirty
+//!   set off those reports — O(report) per publish, no re-scan of the
+//!   previous snapshot's N·K neighbour ids — and clones **only the
+//!   dirty bands**, reference-sharing the clean ones across versions.
+//!   The matrix `Arc` is shared with the orchestrator outright —
+//!   publishing it copies nothing.
 //!
 //! The per-shard dirty sets follow the same band assignment the
-//! rotation schedule uses, which leaves the seam for the multi-writer
-//! follow-up: one write queue per band, conflict-free by construction.
+//! rotation schedule uses; [`super::banded`] completes that seam with
+//! one write queue + writer thread per band (this module stays the
+//! single-writer flavour, and both share [`Snapshot`] and the publish
+//! plumbing below).
 //!
 //! Metrics (all in the engine's [`Registry`]): per-verb counters
 //! (`server.predict`, `server.mpredict`, `server.topn`, `server.rate`,
@@ -37,11 +40,13 @@
 //! `shared.write_wait`, `shared.publish_wait`), the publish-cost gauges
 //! `shared.publish_bytes_cloned` / counter
 //! `shared.publish_bytes_cloned_total`, the per-shard counters
-//! `shared.shard<b>.publishes`, and `shared.shards_cloned`.
+//! `shared.shard<b>.publishes`, and `shared.shards_cloned`. The
+//! publish-path handles are resolved once at spawn ([`PublishMetrics`])
+//! so a flush never allocates metric-name strings under write load.
 
 use super::engine::{predict_many_by, rank_unrated_by, Engine};
 use super::stream::IngestResult;
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::mf::neighbourhood::{ColBand, NeighbourScratch, RowFactors, ShardedFactors};
 use crate::sparse::{band_of, band_range, Csr};
 use std::collections::HashSet;
@@ -74,6 +79,19 @@ pub struct Snapshot {
 }
 
 impl Snapshot {
+    /// Direct constructor for an already-built sharded state — the
+    /// multi-writer publish assembles its per-band shard contributions
+    /// through this.
+    pub(crate) fn assemble(
+        rows: Arc<RowFactors>,
+        shards: Arc<[Arc<ColBand>]>,
+        matrix: Arc<Csr>,
+        version: u64,
+        buffered: usize,
+    ) -> Snapshot {
+        Snapshot { rows, shards, matrix, version, buffered: AtomicUsize::new(buffered) }
+    }
+
     pub fn dims(&self) -> (usize, usize) {
         (self.matrix.nrows(), self.matrix.ncols())
     }
@@ -98,9 +116,120 @@ impl Snapshot {
         &self.matrix
     }
 
+    /// Shared handle to the row factors (reference-sharing publishes).
+    pub(crate) fn rows_arc(&self) -> Arc<RowFactors> {
+        Arc::clone(&self.rows)
+    }
+
+    /// Store a fresh buffered count into **this** snapshot's counter.
+    /// Callers must only ever do this on the currently-published
+    /// snapshot — superseded snapshots are never written again, which is
+    /// what keeps a reader's (version, buffered) pair coherent.
+    pub(crate) fn note_buffered(&self, n: usize) {
+        self.buffered.store(n, Ordering::Relaxed);
+    }
+
     /// Assemble the consistent sharded read view.
     fn view(&self) -> ShardedFactors<'_> {
         ShardedFactors { rows: &self.rows, bands: &self.shards, matrix: &self.matrix }
+    }
+
+    /// Clamped Eq. (1) prediction for `(i, j)` on this snapshot; `None`
+    /// out of range. Both serving front ends (single- and multi-writer)
+    /// read through these helpers, so their replies cannot drift.
+    pub(crate) fn predict_clamped(&self, i: usize, j: usize, clamp: (f32, f32)) -> Option<f32> {
+        let (m, n) = self.dims();
+        if i >= m || j >= n {
+            return None;
+        }
+        let mut scratch = NeighbourScratch::default();
+        Some(self.view().predict(i, j, &mut scratch).clamp(clamp.0, clamp.1))
+    }
+
+    /// Batched clamped prediction (the `MPREDICT` body) on this
+    /// snapshot; `None` for an out-of-range row.
+    pub(crate) fn predict_many_clamped(
+        &self,
+        i: usize,
+        cols: &[u32],
+        clamp: (f32, f32),
+    ) -> Option<Vec<Option<f32>>> {
+        let (m, n) = self.dims();
+        if i >= m {
+            return None;
+        }
+        let view = self.view();
+        let mut scratch = NeighbourScratch::default();
+        Some(predict_many_by(n, cols, |j| {
+            view.predict(i, j, &mut scratch).clamp(clamp.0, clamp.1)
+        }))
+    }
+
+    /// Top-N highest-predicted unrated columns for a row on this
+    /// snapshot (empty for an out-of-range row).
+    pub(crate) fn top_n_clamped(
+        &self,
+        i: usize,
+        n_items: usize,
+        clamp: (f32, f32),
+    ) -> Vec<(u32, f32)> {
+        let (m, _) = self.dims();
+        if i >= m {
+            return Vec::new();
+        }
+        let view = self.view();
+        let mut scratch = NeighbourScratch::default();
+        rank_unrated_by(&self.matrix, i, n_items, |j| {
+            view.predict(i, j, &mut scratch).clamp(clamp.0, clamp.1)
+        })
+    }
+}
+
+/// Publish-path metric handles, resolved once at spawn: the hot flush
+/// path must not allocate (`format!` shard names) or take the registry
+/// lock per publish.
+pub(crate) struct PublishMetrics {
+    publishes: Arc<Counter>,
+    shards_cloned: Arc<Counter>,
+    bytes_gauge: Arc<Gauge>,
+    bytes_total: Arc<Counter>,
+    publish_wait: Arc<Histogram>,
+    shard_publishes: Vec<Arc<Counter>>,
+}
+
+impl PublishMetrics {
+    pub(crate) fn new(metrics: &Registry, d: usize) -> Self {
+        PublishMetrics {
+            publishes: metrics.counter("shared.publishes"),
+            shards_cloned: metrics.counter("shared.shards_cloned"),
+            bytes_gauge: metrics.gauge("shared.publish_bytes_cloned"),
+            bytes_total: metrics.counter("shared.publish_bytes_cloned_total"),
+            publish_wait: metrics.histogram("shared.publish_wait"),
+            shard_publishes: (0..d)
+                .map(|b| metrics.counter(&format!("shared.shard{b}.publishes")))
+                .collect(),
+        }
+    }
+
+    /// Record one publish's cost: per-shard counters for each freshly
+    /// cloned band, plus the aggregate clone accounting.
+    pub(crate) fn record(&self, cloned_bands: &[bool], bytes_cloned: usize) {
+        let mut shards_cloned = 0u64;
+        for (b, &cloned) in cloned_bands.iter().enumerate() {
+            if cloned {
+                self.shard_publishes[b].inc();
+                shards_cloned += 1;
+            }
+        }
+        self.publishes.inc();
+        self.shards_cloned.add(shards_cloned);
+        self.bytes_gauge.set(bytes_cloned as f64);
+        self.bytes_total.add(bytes_cloned as u64);
+    }
+
+    /// The swap-wait histogram (publishers time the write-lock hold).
+    pub(crate) fn publish_wait(&self) -> &Histogram {
+        &self.publish_wait
     }
 }
 
@@ -157,7 +286,7 @@ impl SharedEngine {
         let handle = {
             let state = Arc::clone(&state);
             let metrics = metrics.clone();
-            std::thread::spawn(move || writer_loop(engine, rx, state, metrics))
+            std::thread::spawn(move || writer_loop(engine, rx, state, metrics, d))
         };
         let shared = SharedEngine { state, tx: tx.clone(), clamp, metrics };
         (shared, WriterHandle { handle, tx })
@@ -195,14 +324,7 @@ impl SharedEngine {
     /// snapshot. `None` if out of range.
     pub fn predict(&self, i: usize, j: usize) -> Option<f32> {
         self.metrics.counter("server.predict").inc();
-        let snap = self.snapshot();
-        let (m, n) = snap.dims();
-        if i >= m || j >= n {
-            return None;
-        }
-        let mut scratch = NeighbourScratch::default();
-        let raw = snap.view().predict(i, j, &mut scratch);
-        Some(raw.clamp(self.clamp.0, self.clamp.1))
+        self.snapshot().predict_clamped(i, j, self.clamp)
     }
 
     /// Batched prediction — the whole batch reads one snapshot, so every
@@ -210,32 +332,14 @@ impl SharedEngine {
     /// consistency contract).
     pub fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
         self.metrics.counter("server.mpredict").inc();
-        let snap = self.snapshot();
-        let (m, n) = snap.dims();
-        if i >= m {
-            return None;
-        }
-        let view = snap.view();
-        let mut scratch = NeighbourScratch::default();
-        Some(predict_many_by(n, cols, |j| {
-            view.predict(i, j, &mut scratch).clamp(self.clamp.0, self.clamp.1)
-        }))
+        self.snapshot().predict_many_clamped(i, cols, self.clamp)
     }
 
     /// Top-N highest-predicted unrated columns for a row, on the current
     /// snapshot.
     pub fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
         self.metrics.counter("server.topn").inc();
-        let snap = self.snapshot();
-        let (m, _) = snap.dims();
-        if i >= m {
-            return Vec::new();
-        }
-        let view = snap.view();
-        let mut scratch = NeighbourScratch::default();
-        rank_unrated_by(snap.matrix(), i, n_items, |j| {
-            view.predict(i, j, &mut scratch).clamp(self.clamp.0, self.clamp.1)
-        })
+        self.snapshot().top_n_clamped(i, n_items, self.clamp)
     }
 
     /// Ingest a rating through the single-writer online path. Blocks
@@ -286,8 +390,9 @@ impl SharedEngine {
     }
 }
 
-/// Build a complete snapshot (every shard fresh) — the spawn-time state.
-fn full_snapshot(engine: &Engine, d: usize, version: u64) -> Snapshot {
+/// Build a complete snapshot (every shard fresh) — the spawn-time state
+/// of both serving flavours.
+pub(crate) fn full_snapshot(engine: &Engine, d: usize, version: u64) -> Snapshot {
     let model = engine.model();
     let matrix = engine.matrix_arc();
     let ncols = matrix.ncols();
@@ -319,7 +424,9 @@ fn writer_loop(
     rx: Receiver<WriteCmd>,
     state: Arc<RwLock<Arc<Snapshot>>>,
     metrics: Registry,
+    shards: usize,
 ) -> Engine {
+    let pm = PublishMetrics::new(&metrics, shards);
     let mut version = 1u64;
     let mut current = Arc::clone(&state.read().unwrap_or_else(|e| e.into_inner()));
     for cmd in rx {
@@ -328,10 +435,10 @@ fn writer_loop(
                 let result = engine.rate(i, j, r);
                 match result {
                     IngestResult::Buffered => {
-                        current.buffered.store(engine.buffered(), Ordering::Relaxed);
+                        current.note_buffered(engine.buffered());
                     }
                     IngestResult::Flushed { .. } => {
-                        current = publish(&state, &engine, version, &metrics);
+                        current = publish(&state, &engine, version, &pm);
                         version += 1;
                     }
                     // Rejected / InvalidValue / OutOfBounds never enter
@@ -346,7 +453,7 @@ fn writer_loop(
                 // publish clones the dirty shards, which is wasteful
                 // when state hasn't changed.
                 if applied > 0 {
-                    current = publish(&state, &engine, version, &metrics);
+                    current = publish(&state, &engine, version, &pm);
                     version += 1;
                 }
                 let _ = reply.send(applied);
@@ -354,27 +461,55 @@ fn writer_loop(
             WriteCmd::Shutdown => break,
         }
     }
-    // Drain on shutdown so no accepted rating is silently dropped, and
-    // reflect the drained buffer in the published count.
-    engine.flush();
-    current.buffered.store(engine.buffered(), Ordering::Relaxed);
+    // Drain on shutdown so no accepted rating is silently dropped — and
+    // PUBLISH the drained state before the buffered counter drops:
+    // zeroing the counter on the superseded snapshot (the old behaviour)
+    // handed a reader holding it a (pre-drain factors, buffered 0) pair,
+    // violating the (version, buffered) coherence contract.
+    if engine.flush() > 0 {
+        current = publish(&state, &engine, version, &pm);
+    }
+    current.note_buffered(engine.buffered());
     engine
 }
 
-/// Swap in a fresh snapshot, cloning **only the dirty column bands**:
-/// a band is dirty when the just-applied flush rated one of its columns
-/// ([`Engine::last_flush_cols`]), when the column universe grew (band
-/// boundaries move), or when the LSH re-search moved one of its Top-K
-/// rows. Clean bands, the row factors (when no row appeared) and the
-/// matrix `Arc` are shared with the previous version. The (brief) write
-/// lock only covers the pointer swap — all cloning happens before
-/// taking it. Returns the published snapshot so the writer can keep its
-/// buffered counter fresh.
+/// The per-shard dirty set of one flush, in O(report): a band is dirty
+/// when the flush rated one of its columns ([`Engine::last_flush_cols`]),
+/// or when the flush's own Top-K re-search reported moving one of its
+/// rows ([`Engine::last_flush_topk_moved`]). A flush-rated band is
+/// treated as dirty even though today's Algorithm 4 freezes old columns'
+/// parameters (re-rated values live in the matrix, which is Arc-shared):
+/// the publish contract must not bake in that freeze, or a future online
+/// trainer that nudges a re-rated column's {b̂, v, w, c} would silently
+/// serve stale bands. (The moved-Top-K report replaced the previous
+/// O(N·K) `topk_band_matches` scan over every clean-candidate band —
+/// the report is computed where both tables are hot, inside the flush's
+/// re-search.)
+pub(crate) fn dirty_bands(
+    rated: &[u32],
+    topk_moved: &[u32],
+    ncols: usize,
+    d: usize,
+) -> HashSet<usize> {
+    rated
+        .iter()
+        .chain(topk_moved)
+        .map(|&j| band_of(j as usize, ncols, d))
+        .collect()
+}
+
+/// Swap in a fresh snapshot, cloning **only the dirty column bands**
+/// ([`dirty_bands`]; every band when the column universe grew, since
+/// band boundaries move). Clean bands, the row factors (when no row
+/// appeared) and the matrix `Arc` are shared with the previous version.
+/// The (brief) write lock only covers the pointer swap — all cloning
+/// happens before taking it. Returns the published snapshot so the
+/// writer can keep its buffered counter fresh.
 fn publish(
     state: &RwLock<Arc<Snapshot>>,
     engine: &Engine,
     version: u64,
-    metrics: &Registry,
+    pm: &PublishMetrics,
 ) -> Arc<Snapshot> {
     let prev = Arc::clone(&state.read().unwrap_or_else(|e| e.into_inner()));
     let model = engine.model();
@@ -392,32 +527,19 @@ fn publish(
         Arc::clone(&prev.rows)
     };
 
-    // A flush-rated band is treated as dirty even though today's
-    // Algorithm 4 freezes old columns' parameters (re-rated values live
-    // in the matrix, which is Arc-shared): the publish contract must not
-    // bake in that freeze, or a future online trainer that nudges a
-    // re-rated column's {b̂, v, w, c} would silently serve stale bands.
-    // The topk-equality check below covers the one way today's flush
-    // mutates an un-rated band.
-    let touched_bands: HashSet<usize> = engine
-        .last_flush_cols()
-        .iter()
-        .map(|&j| band_of(j as usize, ncols, d))
-        .collect();
-    let mut shards_cloned = 0u64;
+    let touched_bands =
+        dirty_bands(engine.last_flush_cols(), engine.last_flush_topk_moved(), ncols, d);
+    let mut cloned_bands = vec![false; d];
     let shards: Vec<Arc<ColBand>> = (0..d)
         .map(|b| {
-            let clean = ncols == prev_cols
-                && !touched_bands.contains(&b)
-                && model.topk_band_matches(&prev.shards[b]);
+            let clean = ncols == prev_cols && !touched_bands.contains(&b);
             if clean {
                 Arc::clone(&prev.shards[b])
             } else {
                 let (lo, hi) = band_range(b, ncols, d);
                 let band = model.col_band(lo, hi);
                 bytes_cloned += band.bytes();
-                shards_cloned += 1;
-                metrics.counter(&format!("shared.shard{b}.publishes")).inc();
+                cloned_bands[b] = true;
                 Arc::new(band)
             }
         })
@@ -430,17 +552,12 @@ fn publish(
         version,
         buffered: AtomicUsize::new(engine.buffered()),
     });
-    let timer = metrics.timer("shared.publish_wait");
+    let swap = Instant::now();
     let mut guard = state.write().unwrap_or_else(|e| e.into_inner());
     *guard = Arc::clone(&snap);
     drop(guard);
-    drop(timer);
-    metrics.counter("shared.publishes").inc();
-    metrics.counter("shared.shards_cloned").add(shards_cloned);
-    metrics.gauge("shared.publish_bytes_cloned").set(bytes_cloned as f64);
-    metrics
-        .counter("shared.publish_bytes_cloned_total")
-        .add(bytes_cloned as u64);
+    pm.publish_wait().record(swap.elapsed());
+    pm.record(&cloned_bands, bytes_cloned);
     snap
 }
 
@@ -544,6 +661,31 @@ mod tests {
         assert!(stats.contains("version 1"), "{stats}");
         assert!(stats.contains("server.rate"), "{stats}");
         writer.join();
+    }
+
+    /// Regression (shutdown coherence): `WriterHandle::join` drains the
+    /// buffer, and the drained state must be REPUBLISHED — the old code
+    /// zeroed `buffered` on the superseded snapshot without publishing,
+    /// so a reader holding a `SharedEngine` clone saw `buffered 0`
+    /// paired with pre-drain factors (stale dims, stale predictions).
+    #[test]
+    fn shutdown_drain_republishes_before_zeroing_buffered() {
+        let mut rng = Rng::seeded(97);
+        let e = engine(&mut rng, StreamConfig::default());
+        let (shared, writer) = SharedEngine::spawn(e);
+        let (m0, n0) = shared.dims();
+        assert_eq!(shared.rate(0, n0 as u32, 5.0), IngestResult::Buffered);
+        assert_eq!(shared.buffered(), 1);
+        assert!(shared.predict(0, n0).is_none(), "not applied before the drain");
+        let engine = writer.join();
+        assert_eq!(engine.dims(), (m0, n0 + 1), "join drained the rating");
+        // read back through the surviving handle: (version, buffered)
+        // must be coherent — buffered 0 only alongside the drained state
+        assert_eq!(shared.buffered(), 0);
+        assert_eq!(shared.version(), 1, "the drain must publish");
+        assert_eq!(shared.dims(), (m0, n0 + 1), "snapshot must hold the drained state");
+        let p = shared.predict(0, n0).expect("drained rating must be servable");
+        assert!((1.0..=5.0).contains(&p));
     }
 
     #[test]

@@ -78,6 +78,10 @@ pub enum IngestResult {
     InvalidValue,
     /// Row or column id at or beyond `max_rows`/`max_cols`.
     OutOfBounds,
+    /// The event carried nothing to ingest (e.g. [`Event::Shutdown`]
+    /// handed to the caller-driven orchestrator): nothing was buffered
+    /// and nothing was applied. Previously this lied `Buffered`.
+    Ignored,
 }
 
 /// The streaming orchestrator: owns the model, the hash state, and the
@@ -98,10 +102,50 @@ pub struct StreamOrchestrator {
     /// publish keys its dirty-band set off this, straight from the
     /// source instead of re-deriving it from ingest ordering.
     last_flush_cols: Vec<u32>,
+    /// Old columns whose Top-K row the most recent flush's re-search
+    /// moved ([`crate::mf::online::OnlineReport::topk_moved_cols`]) —
+    /// the publish's other dirty-band source, O(report) per publish.
+    last_flush_topk_moved: Vec<u32>,
     cfg: StreamConfig,
     train_cfg: CulshConfig,
     rng: Rng,
     metrics: Registry,
+}
+
+/// The orchestrator's owned state, dismantled — the multi-writer
+/// [`crate::coordinator::banded::BandedOrchestrator`] splits these
+/// internals per column band at spawn and reassembles them at shutdown.
+pub(crate) struct StreamParts {
+    pub model: CulshModel,
+    pub hash_state: OnlineHashState,
+    pub combined_t: Triples,
+    pub combined: Arc<Csr>,
+    pub cells: HashMap<(u32, u32), u32>,
+    pub buffer: Vec<(u32, u32, f32)>,
+    pub last_flush_cols: Vec<u32>,
+    pub last_flush_topk_moved: Vec<u32>,
+    pub cfg: StreamConfig,
+    pub train_cfg: CulshConfig,
+    pub rng: Rng,
+    pub metrics: Registry,
+}
+
+/// Within-batch dedup, last write wins: one surviving entry per cell, at
+/// its first position, carrying the final value. Shared by the single-
+/// and multi-writer flush paths so their batch semantics cannot drift.
+pub(crate) fn dedup_batch(raw: Vec<(u32, u32, f32)>) -> Vec<(u32, u32, f32)> {
+    let mut increment: Vec<(u32, u32, f32)> = Vec::with_capacity(raw.len());
+    let mut pos_of: HashMap<(u32, u32), usize> = HashMap::with_capacity(raw.len());
+    for (i, j, r) in raw {
+        match pos_of.entry((i, j)) {
+            std::collections::hash_map::Entry::Occupied(e) => increment[*e.get()].2 = r,
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(increment.len());
+                increment.push((i, j, r));
+            }
+        }
+    }
+    increment
 }
 
 impl StreamOrchestrator {
@@ -151,6 +195,7 @@ impl StreamOrchestrator {
             cells,
             buffer: Vec::new(),
             last_flush_cols: Vec::new(),
+            last_flush_topk_moved: Vec::new(),
             cfg,
             train_cfg,
             rng,
@@ -158,9 +203,52 @@ impl StreamOrchestrator {
         }
     }
 
+    /// Dismantle into the parts the multi-writer path splits per band.
+    pub(crate) fn into_parts(self) -> StreamParts {
+        StreamParts {
+            model: self.model.expect("model present outside flush"),
+            hash_state: self.hash_state,
+            combined_t: self.combined_t,
+            combined: self.combined,
+            cells: self.cells,
+            buffer: self.buffer,
+            last_flush_cols: self.last_flush_cols,
+            last_flush_topk_moved: self.last_flush_topk_moved,
+            cfg: self.cfg,
+            train_cfg: self.train_cfg,
+            rng: self.rng,
+            metrics: self.metrics,
+        }
+    }
+
+    /// Reassemble from [`StreamParts`] — a direct field constructor: no
+    /// re-dedup, no matrix rebuild (the parts are already coherent).
+    pub(crate) fn from_parts(p: StreamParts) -> Self {
+        StreamOrchestrator {
+            model: Some(p.model),
+            hash_state: p.hash_state,
+            combined_t: p.combined_t,
+            combined: p.combined,
+            cells: p.cells,
+            buffer: p.buffer,
+            last_flush_cols: p.last_flush_cols,
+            last_flush_topk_moved: p.last_flush_topk_moved,
+            cfg: p.cfg,
+            train_cfg: p.train_cfg,
+            rng: p.rng,
+            metrics: p.metrics,
+        }
+    }
+
     /// Column ids applied by the most recent flush (empty before any).
     pub fn last_flush_cols(&self) -> &[u32] {
         &self.last_flush_cols
+    }
+
+    /// Old columns whose Top-K row the most recent flush's re-search
+    /// moved (empty before any flush).
+    pub fn last_flush_topk_moved(&self) -> &[u32] {
+        &self.last_flush_topk_moved
     }
 
     pub fn model(&self) -> &CulshModel {
@@ -187,7 +275,7 @@ impl StreamOrchestrator {
     /// Ingest one event.
     pub fn ingest(&mut self, event: Event) -> IngestResult {
         match event {
-            Event::Shutdown => IngestResult::Buffered,
+            Event::Shutdown => IngestResult::Ignored,
             Event::Flush => IngestResult::Flushed { applied: self.flush() },
             Event::Rate(i, j, r) => {
                 if !r.is_finite() {
@@ -228,19 +316,7 @@ impl StreamOrchestrator {
             return 0;
         }
         let raw = std::mem::take(&mut self.buffer);
-        // Within-batch dedup, last write wins: one surviving entry per
-        // cell, at its first position, carrying the final value.
-        let mut increment: Vec<(u32, u32, f32)> = Vec::with_capacity(raw.len());
-        let mut pos_of: HashMap<(u32, u32), usize> = HashMap::with_capacity(raw.len());
-        for (i, j, r) in raw {
-            match pos_of.entry((i, j)) {
-                std::collections::hash_map::Entry::Occupied(e) => increment[*e.get()].2 = r,
-                std::collections::hash_map::Entry::Vacant(e) => {
-                    e.insert(increment.len());
-                    increment.push((i, j, r));
-                }
-            }
-        }
+        let increment = dedup_batch(raw);
 
         let old_rows = self.combined_t.nrows();
         let old_cols = self.combined_t.ncols();
@@ -289,7 +365,7 @@ impl StreamOrchestrator {
         // endpoints inside the old universe, so Algorithm 4 (which moves
         // only NEW variables' parameters) would scan it `epochs` times
         // for a provable no-op.
-        let updated = timer.time(|| {
+        let report = timer.time(|| {
             online_update(
                 model,
                 hash_state,
@@ -302,9 +378,10 @@ impl StreamOrchestrator {
                 rng,
             )
         });
-        self.model = Some(updated);
+        self.model = Some(report.model);
         self.combined = combined;
         self.last_flush_cols = increment.iter().map(|&(_, j, _)| j).collect();
+        self.last_flush_topk_moved = report.topk_moved_cols;
         self.metrics.counter("stream.flushes").inc();
         self.metrics
             .counter("stream.applied")
@@ -314,7 +391,11 @@ impl StreamOrchestrator {
 }
 
 /// Drive an orchestrator from an mpsc channel until [`Event::Shutdown`];
-/// returns the orchestrator for inspection.
+/// returns the orchestrator for inspection. The shutdown drain's
+/// outcome is not discarded: the number of events it applied lands in
+/// the `stream.drain_applied` counter, so a caller (or an operator
+/// reading `STATS`) can tell a clean drain from one that flushed a
+/// backlog.
 pub fn run_channel(
     mut orch: StreamOrchestrator,
     rx: std::sync::mpsc::Receiver<Event>,
@@ -325,7 +406,8 @@ pub fn run_channel(
         }
         orch.ingest(event);
     }
-    orch.flush();
+    let applied = orch.flush();
+    orch.metrics.counter("stream.drain_applied").add(applied as u64);
     orch
 }
 
@@ -542,6 +624,64 @@ mod tests {
         let orch = handle.join().unwrap();
         assert_eq!(orch.buffered(), 0);
         assert!(orch.metrics_snapshot_contains("stream.applied"));
+        // the drain outcome is asserted, not discarded: all 5 buffered
+        // events were applied by the shutdown flush
+        assert!(
+            orch.metrics_snapshot_contains("stream.drain_applied 5"),
+            "{}",
+            orch.metrics.snapshot()
+        );
+    }
+
+    /// `Shutdown` handed to the caller-driven orchestrator is a no-op
+    /// and says so — it used to claim `Buffered` with nothing buffered.
+    #[test]
+    fn shutdown_event_is_ignored_not_buffered() {
+        let mut rng = Rng::seeded(60);
+        let mut orch = setup(&mut rng);
+        assert_eq!(orch.ingest(Event::Shutdown), IngestResult::Ignored);
+        assert_eq!(orch.buffered(), 0);
+        // and it does not disturb a live buffer either
+        assert_eq!(orch.ingest(Event::Rate(0, 1, 3.0)), IngestResult::Buffered);
+        assert_eq!(orch.ingest(Event::Shutdown), IngestResult::Ignored);
+        assert_eq!(orch.buffered(), 1);
+    }
+
+    /// The flush's moved-Top-K report agrees exactly with the O(N·K)
+    /// band scan it replaces: a band passes `topk_band_matches` iff the
+    /// report names none of its columns.
+    #[test]
+    fn topk_moved_report_matches_band_scan() {
+        let mut rng = Rng::seeded(66);
+        let mut orch = setup(&mut rng);
+        let (_, n) = orch.dims();
+        let d = 4usize;
+        for _ in 0..3 {
+            // snapshot the bands before, then flush a batch of re-rates
+            // (no growth, so band boundaries are stable)
+            let bands: Vec<_> = (0..d)
+                .map(|b| {
+                    let (lo, hi) = crate::sparse::band_range(b, n, d);
+                    orch.model().col_band(lo, hi)
+                })
+                .collect();
+            for k in 0..4u32 {
+                orch.ingest(Event::Rate(k % 7, (k * 5) % n as u32, 1.5 + k as f32));
+            }
+            orch.ingest(Event::Flush);
+            let moved = orch.last_flush_topk_moved().to_vec();
+            assert!(moved.iter().all(|&j| (j as usize) < n), "{moved:?}");
+            for (b, band) in bands.iter().enumerate() {
+                let band_moved = moved
+                    .iter()
+                    .any(|&j| (j as usize) >= band.lo && (j as usize) < band.hi);
+                assert_eq!(
+                    orch.model().topk_band_matches(band),
+                    !band_moved,
+                    "band {b}: scan and report disagree (moved: {moved:?})"
+                );
+            }
+        }
     }
 
     impl StreamOrchestrator {

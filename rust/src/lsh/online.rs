@@ -14,7 +14,7 @@ use super::amplify::{collision_topk_sigs, combine};
 use super::simlsh::SimLsh;
 use super::{CostReport, TopK};
 use crate::rng::Rng;
-use crate::sparse::Csc;
+use crate::sparse::{band_range, Csc};
 
 /// Persistent accumulator state: `acc[round][slot][col][gbit]`, flattened.
 #[derive(Clone, Debug)]
@@ -167,6 +167,97 @@ impl OnlineHashState {
     pub fn bytes(&self) -> usize {
         self.acc.len() * 8
     }
+
+    /// Split the accumulator state into `d` contiguous column bands
+    /// (the same [`band_range`] tiling the rotation schedule and the
+    /// sharded snapshot publish use), each band's columns re-indexed
+    /// band-locally. This is the per-band ownership unit of the
+    /// multi-writer ingest path: band `b`'s writer absorbs only its own
+    /// columns' deltas. Accumulators are copied bit-for-bit, so a
+    /// search over the split ([`topk_banded`]) or over the re-assembled
+    /// state ([`assemble_bands`]) reproduces this state's search
+    /// exactly.
+    pub fn split_bands(&self, d: usize) -> Vec<OnlineHashState> {
+        let d = d.max(1);
+        let (q, p, g) = (self.lsh.q, self.lsh.p, self.lsh.g);
+        (0..d)
+            .map(|b| {
+                let (lo, hi) = band_range(b, self.n_cols, d);
+                let n = hi - lo;
+                let mut acc = vec![0f64; q * p * n * g];
+                for round in 0..q {
+                    for slot in 0..p {
+                        if n == 0 {
+                            continue;
+                        }
+                        let src = self.idx(round, slot, lo, 0);
+                        let dst = (round * p + slot) * n * g;
+                        acc[dst..dst + n * g].copy_from_slice(&self.acc[src..src + n * g]);
+                    }
+                }
+                OnlineHashState { lsh: self.lsh.clone(), n_cols: n, acc }
+            })
+            .collect()
+    }
+}
+
+/// Reassemble a [`OnlineHashState::split_bands`] partition into one
+/// monolithic state — the inverse operation, exact to the bit. The
+/// multi-writer path's cross-band growth barrier uses it: growing the
+/// column universe relays out the whole accumulator set, so the barrier
+/// assembles, runs the monolithic growth path once, and re-splits on
+/// the new band boundaries.
+pub fn assemble_bands(bands: &[&OnlineHashState]) -> OnlineHashState {
+    assert!(!bands.is_empty(), "assemble_bands needs at least one band");
+    let lsh = bands[0].lsh.clone();
+    let (q, p, g) = (lsh.q, lsh.p, lsh.g);
+    let n: usize = bands.iter().map(|b| b.n_cols).sum();
+    let mut acc = vec![0f64; q * p * n * g];
+    for round in 0..q {
+        for slot in 0..p {
+            let mut lo = 0usize;
+            for band in bands {
+                let nb = band.n_cols;
+                if nb > 0 {
+                    let src = (round * p + slot) * nb * g;
+                    let dst = ((round * p + slot) * n + lo) * g;
+                    acc[dst..dst + nb * g].copy_from_slice(&band.acc[src..src + nb * g]);
+                }
+                lo += nb;
+            }
+        }
+    }
+    OnlineHashState { lsh, n_cols: n, acc }
+}
+
+/// Top-K search across a banded split, bit-identical to
+/// [`OnlineHashState::topk`] on the assembled state: a round's
+/// signatures are the band signatures concatenated in band order
+/// (accumulators are partitioned by column, so each band computes its
+/// columns' signatures from exactly the state the monolithic search
+/// would read), and the collision search plus random supplement consume
+/// the caller's rng exactly as the monolithic search does.
+pub fn topk_banded(bands: &[&OnlineHashState], k: usize, rng: &mut Rng) -> (TopK, CostReport) {
+    assert!(!bands.is_empty(), "topk_banded needs at least one band");
+    let q = bands[0].lsh.q;
+    let n: usize = bands.iter().map(|b| b.n_cols).sum();
+    let mut cost_bytes: usize = bands.iter().map(|b| b.bytes()).sum();
+    let (topk, mut cost) = collision_topk_sigs(
+        n,
+        |round, _| {
+            let mut sigs = Vec::with_capacity(n);
+            for b in bands {
+                sigs.extend(b.signatures(round as usize));
+            }
+            sigs
+        },
+        k,
+        q,
+        rng,
+    );
+    cost_bytes += cost.bytes;
+    cost.bytes = cost_bytes;
+    (topk, cost)
 }
 
 #[cfg(test)]
@@ -297,6 +388,57 @@ mod tests {
             }
         }
         assert!(flips * 100 <= total, "{flips}/{total} hash mismatches after reabsorb");
+    }
+
+    /// Splitting into bands and re-assembling is the identity, and the
+    /// banded Top-K search reproduces the monolithic search exactly
+    /// (same accumulators, same signatures, same rng consumption).
+    #[test]
+    fn split_assemble_roundtrip_and_banded_topk_match() {
+        let mut rng = Rng::seeded(28);
+        let t = random_triples(50, 23, 300, &mut rng);
+        let csc = Csc::from_triples(&t);
+        let whole = OnlineHashState::build(lsh_small(), &csc);
+        for d in [1usize, 2, 3, 5] {
+            let bands = whole.split_bands(d);
+            assert_eq!(bands.len(), d);
+            assert_eq!(bands.iter().map(|b| b.n_cols).sum::<usize>(), 23);
+            let refs: Vec<&OnlineHashState> = bands.iter().collect();
+            let back = assemble_bands(&refs);
+            assert_eq!(back.n_cols, whole.n_cols);
+            assert_eq!(back.acc, whole.acc, "d={d}: accumulators must round-trip exactly");
+            let (a, _) = whole.topk(4, &mut Rng::seeded(5));
+            let (b, _) = topk_banded(&refs, 4, &mut Rng::seeded(5));
+            for j in 0..23 {
+                assert_eq!(a.neighbours(j), b.neighbours(j), "d={d} col {j}");
+            }
+        }
+    }
+
+    /// Band-local absorption is exact: an increment absorbed band-by-band
+    /// (each band taking its own columns' entries, order preserved)
+    /// matches the monolithic absorption bit-for-bit.
+    #[test]
+    fn per_band_absorb_matches_monolithic() {
+        let mut rng = Rng::seeded(29);
+        let base = random_triples(40, 12, 150, &mut rng);
+        let csc = Csc::from_triples(&base);
+        let mut whole = OnlineHashState::build(lsh_small(), &csc);
+        let mut bands = whole.split_bands(3);
+        let bounds: Vec<(usize, usize)> = (0..3).map(|b| band_range(b, 12, 3)).collect();
+        let inc = [(40u32, 2u32, 4.0f32), (41, 7, 2.0), (40, 11, 3.5), (5, 2, 1.5)];
+        whole.apply_increment(&inc, 12);
+        for (b, &(lo, hi)) in bounds.iter().enumerate() {
+            let local: Vec<(u32, u32, f32)> = inc
+                .iter()
+                .filter(|&&(_, j, _)| (j as usize) >= lo && (j as usize) < hi)
+                .map(|&(i, j, r)| (i, j - lo as u32, r))
+                .collect();
+            bands[b].apply_increment(&local, hi - lo);
+        }
+        let refs: Vec<&OnlineHashState> = bands.iter().collect();
+        let back = assemble_bands(&refs);
+        assert_eq!(back.acc, whole.acc, "banded absorb must equal monolithic absorb");
     }
 
     #[test]

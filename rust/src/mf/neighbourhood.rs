@@ -226,9 +226,13 @@ impl CulshModel {
     }
 
     /// Does this model's neighbour table still match `band`'s slice
-    /// exactly? The sharded publish uses this to catch the LSH re-search
-    /// moving an otherwise-untouched column's neighbours (a touched
-    /// column changing buckets can reshuffle any column's Top-K row).
+    /// exactly? An O(band·K) scan. The sharded publish used to call
+    /// this per clean-candidate band to catch the LSH re-search moving
+    /// an otherwise-untouched column's neighbours; it now keys dirty
+    /// bands off the flush's own moved-column report
+    /// ([`crate::mf::online::OnlineReport::topk_moved_cols`], O(report)
+    /// per publish), and this scan remains as the independent oracle the
+    /// report is tested against (`stream::tests`).
     pub fn topk_band_matches(&self, band: &ColBand) -> bool {
         if band.k != self.topk.k() || band.hi > self.topk.n() {
             return false;

@@ -26,8 +26,26 @@ pub struct OnlineOutcome {
     pub model: CulshModel,
     /// The combined training matrix (base + increment).
     pub combined: Csr,
+    /// Pre-existing columns whose Top-K row the re-search moved
+    /// (see [`OnlineReport::topk_moved_cols`]).
+    pub topk_moved_cols: Vec<u32>,
     /// Seconds spent on the incremental update (hash + training).
     pub seconds: f64,
+}
+
+/// Result of the Algorithm-4 core: the expanded model plus the
+/// re-search's change report.
+#[derive(Debug)]
+pub struct OnlineReport {
+    /// The expanded model (covers base + new variables).
+    pub model: CulshModel,
+    /// Pre-existing columns whose sorted Top-K neighbour row changed in
+    /// this update's re-search. New columns (`>= old_cols`) are omitted:
+    /// they are dirty by construction (they were just rated). The
+    /// serving publish keys its clean-band detection off this report —
+    /// O(report) per publish instead of re-scanning every band's N·K
+    /// neighbour ids against the previous snapshot.
+    pub topk_moved_cols: Vec<u32>,
 }
 
 /// Apply an increment to a trained CULSH-MF model.
@@ -67,7 +85,7 @@ pub fn apply_online(
     // (1) refresh hashes from saved accumulators…
     hash_state.apply_increment(increment, new_cols);
     // …then run the Algorithm-4 core over the prepared state.
-    let model = online_update(
+    let report = online_update(
         model,
         hash_state,
         &combined,
@@ -78,7 +96,12 @@ pub fn apply_online(
         epochs,
         rng,
     );
-    OnlineOutcome { model, combined, seconds: t0.elapsed().as_secs_f64() }
+    OnlineOutcome {
+        model: report.model,
+        combined,
+        topk_moved_cols: report.topk_moved_cols,
+        seconds: t0.elapsed().as_secs_f64(),
+    }
 }
 
 /// The Algorithm-4 core, once the combined matrix and the hash
@@ -93,7 +116,7 @@ pub fn apply_online(
 /// point.
 #[allow(clippy::too_many_arguments)]
 pub fn online_update(
-    mut model: CulshModel,
+    model: CulshModel,
     hash_state: &mut OnlineHashState,
     combined: &Csr,
     increment: &[(u32, u32, f32)],
@@ -102,14 +125,51 @@ pub fn online_update(
     cfg: &CulshConfig,
     epochs: usize,
     rng: &mut Rng,
-) -> CulshModel {
+) -> OnlineReport {
+    // Re-search Top-K over the refreshed hashes (this consumes rng for
+    // the random supplement *before* the parameter growth below — the
+    // multi-writer flush path preserves exactly this order).
+    let (topk, _) = hash_state.topk(model.k(), rng);
+    online_update_with_topk(
+        model, topk, combined, increment, old_rows, old_cols, cfg, epochs, rng,
+    )
+}
+
+/// The Algorithm-4 core with the Top-K re-search already done — the
+/// entry point for callers that search a differently-stored accumulator
+/// state (the per-band multi-writer flush uses
+/// [`crate::lsh::topk_banded`] over its band split, which is
+/// bit-identical to the monolithic search).
+#[allow(clippy::too_many_arguments)]
+pub fn online_update_with_topk(
+    mut model: CulshModel,
+    mut topk: crate::lsh::TopK,
+    combined: &Csr,
+    increment: &[(u32, u32, f32)],
+    old_rows: usize,
+    old_cols: usize,
+    cfg: &CulshConfig,
+    epochs: usize,
+    rng: &mut Rng,
+) -> OnlineReport {
     let new_rows = combined.nrows();
     let new_cols = combined.ncols();
     assert!(new_rows >= old_rows && new_cols >= old_cols);
 
-    // Re-search Top-K over the refreshed hashes.
-    let (mut topk, _) = hash_state.topk(model.k(), rng);
     topk.sort_rows(); // merge-scan precondition (see CulshModel::init)
+
+    // Diff the sorted re-search result against the outgoing table while
+    // both are in hand: the report of *which* old columns moved is what
+    // lets the snapshot publish prove a band clean in O(report) instead
+    // of re-scanning N·K neighbour ids per publish. (Rows are sorted on
+    // both sides — `init` and this function sort — so slice equality is
+    // exact set equality.)
+    let mut topk_moved_cols = Vec::new();
+    for j in 0..model.topk.n().min(old_cols) {
+        if model.topk.neighbours(j) != topk.neighbours(j) {
+            topk_moved_cols.push(j as u32);
+        }
+    }
 
     // (2)+(3) grow parameters for the new variables.
     model.base.u.grow_rows(new_rows - old_rows, rng);
@@ -204,7 +264,7 @@ pub fn online_update(
         }
     }
 
-    model
+    OnlineReport { model, topk_moved_cols }
 }
 
 #[cfg(test)]
@@ -326,6 +386,7 @@ mod tests {
         let (model, _) = train_culsh_logged(&base_csr, topk, &cfg, &mut Rng::seeded(18));
         let u0 = model.base.u.row(0).to_vec();
         let v0 = model.base.v.row(0).to_vec();
+        let topk_before = model.topk.clone();
         let out = apply_online(
             model,
             &mut hash_state,
@@ -339,5 +400,14 @@ mod tests {
         );
         assert_eq!(out.model.base.u.row(0), &u0[..]);
         assert_eq!(out.model.base.v.row(0), &v0[..]);
+        // the moved-Top-K report is exact: an old column is reported iff
+        // its sorted neighbour row actually changed in the re-search
+        for j in 0..split.base.ncols() {
+            assert_eq!(
+                topk_before.neighbours(j) != out.model.topk.neighbours(j),
+                out.topk_moved_cols.contains(&(j as u32)),
+                "col {j} report mismatch"
+            );
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! Property tests on coordinator and substrate invariants, via the
 //! in-repo `lshmf::prop` mini-framework (proptest is unavailable offline).
 
+use lshmf::coordinator::banded::BandedEngine;
 use lshmf::coordinator::rotation::RotationPlan;
 use lshmf::coordinator::server::handle_line;
 use lshmf::coordinator::shared::SharedEngine;
@@ -219,6 +220,81 @@ fn prop_sharded_serving_matches_mutex_engine() {
             }
         }
         writer.join();
+        ok
+    });
+}
+
+/// Multi-writer serving parity: across randomized rate/flush/growth
+/// interleavings — universe-growth ratings spread across bands, NaN
+/// values, out-of-bounds ids and re-ratings mixed in — the per-band
+/// multi-writer engine's replies are byte-identical to the
+/// `Mutex<Engine>` reference at 1, 2 and 4 writers. The flush epoch
+/// merges per-band buffers back into arrival order and runs the exact
+/// single-writer computation, so equality must be bit-exact, not
+/// approximate.
+#[test]
+fn prop_banded_multi_writer_matches_mutex_engine() {
+    check("banded multi-writer parity", 6, |g| {
+        let seed = 5200 + g.usize(0..=40) as u64;
+        let stream_cfg = StreamConfig {
+            batch_size: g.usize(2..=10),
+            max_rows: 200,
+            max_cols: 200,
+            ..Default::default()
+        };
+        let single = Mutex::new(serving_engine(seed, stream_cfg.clone()));
+        let writers = [1usize, 2, 4][g.usize(0..=2)];
+        let (banded, handle) =
+            BandedEngine::spawn(serving_engine(seed, stream_cfg), writers);
+        let mut ok = true;
+        let mut grow_step = 0u32;
+        for _ in 0..g.usize(25..=55) {
+            let line = match g.usize(0..=5) {
+                0 => format!("PREDICT {} {}", g.usize(0..=35), g.usize(0..=40)),
+                1 => format!("TOPN {} {}", g.usize(0..=35), g.usize(1..=8)),
+                2 => format!(
+                    "MPREDICT {} {} {} {}",
+                    g.usize(0..=35),
+                    g.usize(0..=40),
+                    g.usize(0..=40),
+                    g.usize(0..=40)
+                ),
+                3 => {
+                    let r = match g.usize(0..=8) {
+                        0 => "NaN".to_string(),
+                        1 => "inf".to_string(),
+                        _ => format!("{:.1}", 1.0 + g.usize(0..=8) as f32 * 0.5),
+                    };
+                    let i = if g.usize(0..=9) == 0 {
+                        4_000_000_000u32
+                    } else {
+                        g.usize(0..=33) as u32
+                    };
+                    format!("RATE {i} {} {r}", g.usize(0..=18))
+                }
+                4 => {
+                    // universe growth: column ids walk beyond the
+                    // current extent, landing in different bands
+                    grow_step += 1;
+                    format!(
+                        "RATE {} {} 4.5",
+                        30 + grow_step % 7,
+                        15 + (grow_step * 5) % 23
+                    )
+                }
+                _ => "FLUSH".to_string(),
+            };
+            let a = handle_line(&single, &line);
+            let b = handle_line(&banded, &line);
+            if a != b {
+                eprintln!(
+                    "banded parity mismatch (writers={writers}) on `{line}`: {a:?} vs {b:?}"
+                );
+                ok = false;
+                break;
+            }
+        }
+        handle.join();
         ok
     });
 }

@@ -4,6 +4,7 @@
 //! never going backwards), and the streaming backpressure contract must
 //! hold exactly at `queue_capacity`.
 
+use lshmf::coordinator::banded::BandedEngine;
 use lshmf::coordinator::server::{self, handle_line};
 use lshmf::coordinator::shared::SharedEngine;
 use lshmf::coordinator::stream::{IngestResult, StreamConfig, StreamOrchestrator};
@@ -202,6 +203,83 @@ fn tcp_concurrent_readers_and_writer() {
     let _ = TcpStream::connect(addr);
     let engine = server_thread.join().unwrap();
     assert_eq!(engine.buffered(), 0, "writer drained on shutdown");
+}
+
+/// Multi-writer flavour of the acceptance scenario: reader threads
+/// stream protocol lines while one client thread per column band RATEs
+/// concurrently into its own band (with universe growth sprinkled in).
+/// No deadlock, no torn reads, versions and dims monotone, bands always
+/// tile the column axis, and the joined engine drained every accepted
+/// rating.
+#[test]
+fn banded_readers_progress_during_concurrent_band_writes() {
+    let writers = 3usize;
+    let e = engine(47, StreamConfig { batch_size: 8, ..Default::default() });
+    let (banded, handle) = BandedEngine::spawn(e, writers);
+
+    std::thread::scope(|scope| {
+        for reader in 0..4usize {
+            let banded = banded.clone();
+            scope.spawn(move || {
+                let mut last_version = 0u64;
+                let mut last_dims = (0usize, 0usize);
+                for k in 0..100usize {
+                    let line = match k % 3 {
+                        0 => format!("PREDICT {} {}", (k + reader) % 30, k % 15),
+                        1 => format!("TOPN {} 5", (k * 7 + reader) % 30),
+                        _ => "STATS".to_string(),
+                    };
+                    let reply = handle_line(&banded, &line).expect("no QUIT here");
+                    assert!(
+                        reply.starts_with("PRED ")
+                            || reply.starts_with("TOPN")
+                            || reply.ends_with("END"),
+                        "reader {reader}: {line} -> {reply}"
+                    );
+                    let snap = banded.snapshot();
+                    assert!(snap.version >= last_version, "version went backwards");
+                    let dims = snap.dims();
+                    assert!(
+                        dims.0 >= last_dims.0 && dims.1 >= last_dims.1,
+                        "dims shrank: {last_dims:?} -> {dims:?}"
+                    );
+                    let mut covered = 0usize;
+                    for shard in snap.shards() {
+                        assert_eq!(shard.lo, covered, "bands must tile contiguously");
+                        covered = shard.hi;
+                    }
+                    assert_eq!(covered, dims.1, "bands must cover all columns");
+                    last_version = snap.version;
+                    last_dims = dims;
+                }
+            });
+        }
+        // one rater per band: 60 ratings each into its own column band,
+        // with a growth rating every 15th — concurrent ingest across
+        // every band writer plus cross-band growth barriers
+        for band in 0..writers as u32 {
+            let banded = banded.clone();
+            scope.spawn(move || {
+                for k in 0u32..60 {
+                    let (i, j) = if k % 15 == 14 {
+                        (30 + k / 15, 15 + band * 4 + k / 15)
+                    } else {
+                        ((k + band) % 30, (band * 5 + k % 5) % 15)
+                    };
+                    let reply =
+                        handle_line(&banded, &format!("RATE {i} {j} 3.5")).unwrap();
+                    assert!(reply.starts_with("OK"), "band {band}: {reply}");
+                }
+            });
+        }
+    });
+
+    let engine = handle.join();
+    assert_eq!(engine.buffered(), 0, "join drains every band");
+    let (m, n) = engine.dims();
+    assert!(m >= 31 && n >= 16, "growth applied: {m}x{n}");
+    assert_eq!(banded.dims(), (m, n), "drained state republished");
+    assert!(banded.version() >= 1);
 }
 
 /// `StreamConfig::reject_when_full` contract, at the exact boundary:
