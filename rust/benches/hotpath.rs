@@ -10,6 +10,9 @@
 use lshmf::bench::exp::BenchEnv;
 use lshmf::bench::Bencher;
 use lshmf::coordinator::banded::BandedEngine;
+use lshmf::coordinator::client::{ClientCodec, LshmfClient};
+use lshmf::coordinator::protocol::Request;
+use lshmf::coordinator::server;
 use lshmf::coordinator::shared::SharedEngine;
 use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
 use lshmf::coordinator::Engine;
@@ -243,6 +246,121 @@ fn main() {
                 one / 1e6
             );
         }
+    }
+
+    // --- wire codecs: pipelined binary MRATE/MPREDICT vs
+    //     one-verb-per-round-trip text, same workload, same server
+    {
+        // The transfer-format experiment (cuMF's lesson applied to the
+        // serving path): the same 2048-rating / 2048-prediction workload
+        // against one auto-codec server, first as a text client paying a
+        // full round-trip per verb, then as a binary client shipping
+        // 256-element MRATE/MPREDICT frames with all frames in flight.
+        let (m, n) = (512usize, 256usize);
+        let mut fix_rng = Rng::seeded(99);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 20_000 {
+            let (i, j) = (fix_rng.below(m), fix_rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + fix_rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let hash_state = OnlineHashState::build(SimLsh::new(2, 6, 8, 2), &csc);
+        let (topk, _) = hash_state.topk(8, &mut fix_rng);
+        let cfg = CulshConfig { f: 16, k: 8, epochs: 1, eval: Vec::new(), ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut Rng::seeded(8));
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            // ingest-only in the timed loops: no flush noise
+            StreamConfig {
+                batch_size: usize::MAX >> 1,
+                queue_capacity: usize::MAX >> 1,
+                online_epochs: 1,
+                ..Default::default()
+            },
+            cfg,
+            Rng::seeded(9),
+            Registry::new(),
+        );
+        let engine = Engine::new(orch, (1.0, 5.0), Registry::new());
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let server_thread = {
+            let stop = stop.clone();
+            std::thread::spawn(move || server::serve(engine, listener, stop, 2).unwrap())
+        };
+
+        let events: Vec<(u32, u32, f32)> = (0..2048u32)
+            .map(|k| (k / 32, k % 32, 2.0 + (k % 3) as f32))
+            .collect();
+        let frame = 256usize;
+
+        let mut text = LshmfClient::connect(addr, ClientCodec::Text).unwrap();
+        let m_text = b.run("text RATE x2048 (1 verb/round-trip)", || {
+            for &(i, j, r) in &events {
+                text.rate(i, j, r).unwrap();
+            }
+        });
+        let text_ingest = events.len() as f64 / m_text.p50.as_secs_f64();
+        println!("{}  |  {:.2}M ratings/s", m_text.fmt_line(), text_ingest / 1e6);
+
+        let mut binary = LshmfClient::connect(addr, ClientCodec::Binary).unwrap();
+        let m_bin = b.run("binary MRATE x2048 (256/frame, pipelined)", || {
+            let mut pipe = binary.pipeline();
+            for chunk in events.chunks(frame) {
+                pipe.push(&Request::MRate { ratings: chunk.to_vec() }).unwrap();
+            }
+            pipe.finish().unwrap()
+        });
+        let bin_ingest = events.len() as f64 / m_bin.p50.as_secs_f64();
+        println!("{}  |  {:.2}M ratings/s", m_bin.fmt_line(), bin_ingest / 1e6);
+
+        let m_text_read = b.run("text PREDICT x2048 (1 verb/round-trip)", || {
+            for k in 0..2048usize {
+                text.predict(k % m, k % n).unwrap();
+            }
+        });
+        let text_read = 2048.0 / m_text_read.p50.as_secs_f64();
+        println!("{}  |  {:.2}M preds/s", m_text_read.fmt_line(), text_read / 1e6);
+
+        let cols: Vec<u32> = (0..frame as u32).collect();
+        let m_bin_read = b.run("binary MPREDICT x2048 (256/frame, pipelined)", || {
+            let mut pipe = binary.pipeline();
+            for row in 0..(2048 / frame) {
+                pipe.push(&Request::MPredict { row, cols: cols.clone() }).unwrap();
+            }
+            pipe.finish().unwrap()
+        });
+        let bin_read = 2048.0 / m_bin_read.p50.as_secs_f64();
+        println!("{}  |  {:.2}M preds/s", m_bin_read.fmt_line(), bin_read / 1e6);
+
+        println!(
+            "pipelined binary vs per-verb text: ingest {:.1}x, read {:.1}x",
+            bin_ingest / text_ingest,
+            bin_read / text_read
+        );
+        assert!(
+            bin_ingest > text_ingest,
+            "pipelined binary MRATE must beat per-verb text RATE \
+             ({bin_ingest:.0} vs {text_ingest:.0} ratings/s)"
+        );
+        assert!(
+            bin_read > text_read,
+            "pipelined binary MPREDICT must beat per-verb text PREDICT \
+             ({bin_read:.0} vs {text_read:.0} preds/s)"
+        );
+
+        text.shutdown().unwrap();
+        binary.shutdown().unwrap();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = std::net::TcpStream::connect(addr);
+        server_thread.join().unwrap();
     }
 
     // --- PJRT step latency

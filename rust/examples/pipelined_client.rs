@@ -1,0 +1,159 @@
+//! The typed protocol client, end to end: train CULSH-MF, stand the
+//! auto-codec TCP server up on a local port, then drive it three ways —
+//!
+//! 1. a **text** client, one verb per round-trip (the legacy wire
+//!    usage every `telnet`/`nc` session gets);
+//! 2. a **binary** client making the same calls synchronously (typed
+//!    replies, no string parsing, still one round-trip per call);
+//! 3. a **binary pipelined** client shipping 256-rating `MRATE` frames
+//!    and 256-column `MPREDICT` frames with every frame in flight —
+//!    the transfer format doing the work, per the cuMF lesson that
+//!    batching and wire design decide end-to-end throughput.
+//!
+//! Run with: `cargo run --release --example pipelined_client`
+
+use lshmf::coordinator::client::{ClientCodec, LshmfClient};
+use lshmf::coordinator::protocol::{OkBody, Request, Response};
+use lshmf::coordinator::server;
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
+use lshmf::data::synth::{generate, SynthConfig};
+use lshmf::lsh::{OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::rng::Rng;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const RATINGS: usize = 4096;
+const FRAME: usize = 256;
+
+fn main() {
+    let mut rng = Rng::seeded(17);
+    let ds = generate(&SynthConfig::movielens_like().scaled(0.02), &mut rng);
+    println!("catalog: {} users × {} items", ds.nrows(), ds.ncols());
+
+    let lsh = SimLsh::new(2, 16, 8, 2);
+    let hash_state = OnlineHashState::build(lsh, &ds.train_csc);
+    let (topk, _) = hash_state.topk(16, &mut rng);
+    let cfg = CulshConfig { f: 16, k: 16, epochs: 10, beta: 0.02, ..Default::default() };
+    let (model, _) = train_culsh_logged(&ds.train, topk, &cfg, &mut rng);
+
+    let metrics = Registry::new();
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        ds.train.to_triples(),
+        StreamConfig { batch_size: 8192, ..Default::default() },
+        cfg,
+        rng.split(3),
+        metrics.clone(),
+    );
+    let engine = Engine::new(orch, (ds.min_value, ds.max_value), metrics);
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let stop = stop.clone();
+        std::thread::spawn(move || server::serve(engine, listener, stop, 2))
+    };
+    println!("serving on {addr} (codec auto: text and binary on one port)\n");
+
+    let (nrows, ncols) = (ds.nrows(), ds.ncols());
+    let events: Vec<(u32, u32, f32)> = (0..RATINGS)
+        .map(|k| (((k * 7) % nrows) as u32, ((k * 11) % ncols) as u32, 4.0))
+        .collect();
+
+    // 1) text, one verb per round-trip
+    let mut text = LshmfClient::connect(addr, ClientCodec::Text).expect("connect");
+    let t0 = Instant::now();
+    for &(i, j, r) in &events {
+        let reply = text.rate(i, j, r).expect("rate");
+        assert!(matches!(reply, Response::Ok(_)), "{reply:?}");
+    }
+    let text_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "text   RATE  one-per-round-trip: {RATINGS} ratings in {text_secs:.3}s \
+         ({:.0}k ratings/s)",
+        RATINGS as f64 / text_secs / 1e3
+    );
+
+    // 2) binary, synchronous (typed replies, still one round-trip each)
+    let mut binary = LshmfClient::connect(addr, ClientCodec::Binary).expect("connect");
+    let t0 = Instant::now();
+    for &(i, j, r) in &events {
+        binary.rate(i, j, r).expect("rate");
+    }
+    let sync_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "binary RATE  one-per-round-trip: {RATINGS} ratings in {sync_secs:.3}s \
+         ({:.0}k ratings/s)",
+        RATINGS as f64 / sync_secs / 1e3
+    );
+
+    // 3) binary, pipelined MRATE frames — every frame in flight
+    let t0 = Instant::now();
+    let mut pipe = binary.pipeline();
+    for chunk in events.chunks(FRAME) {
+        pipe.push(&Request::MRate { ratings: chunk.to_vec() }).expect("push");
+    }
+    let replies = pipe.finish().expect("finish");
+    let pipe_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(replies.len(), RATINGS / FRAME);
+    println!(
+        "binary MRATE pipelined ({FRAME}/frame): {RATINGS} ratings in {pipe_secs:.3}s \
+         ({:.0}k ratings/s) — {:.1}x the text client",
+        RATINGS as f64 / pipe_secs / 1e3,
+        text_secs / pipe_secs
+    );
+
+    // pipelined batched reads from one snapshot per frame
+    let cols: Vec<u32> = (0..FRAME.min(ncols) as u32).collect();
+    let t0 = Instant::now();
+    let mut pipe = binary.pipeline();
+    for row in 0..16usize {
+        pipe.push(&Request::MPredict { row: row % nrows, cols: cols.clone() }).expect("push");
+    }
+    let preds = pipe.finish().expect("finish");
+    let read_secs = t0.elapsed().as_secs_f64();
+    let scored: usize = preds
+        .iter()
+        .map(|r| match r {
+            Response::Preds(ps) => ps.len(),
+            other => panic!("{other:?}"),
+        })
+        .sum();
+    println!(
+        "binary MPREDICT pipelined: {scored} predictions in {read_secs:.3}s \
+         ({:.0}k preds/s)",
+        scored as f64 / read_secs / 1e3
+    );
+
+    // flush through the typed API and read the applied count
+    match binary.flush().expect("flush") {
+        Response::Ok(OkBody::Flushed { applied }) => {
+            println!("FLUSH applied {applied} buffered ratings");
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // one typed stats read; show the protocol counters
+    if let Response::Stats(body) = binary.stats().expect("stats") {
+        println!("--- server counters ---");
+        for line in body.lines() {
+            if line.contains("server.") {
+                println!("{line}");
+            }
+        }
+    }
+
+    text.shutdown().expect("quit");
+    binary.shutdown().expect("bye");
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    let engine = server_thread.join().unwrap().expect("server");
+    println!("\nserver stopped cleanly; final dims {:?}", engine.dims());
+}

@@ -51,6 +51,19 @@ impl Args {
             .transpose()
     }
 
+    /// Value of `--key`, constrained to one of `allowed` — a typed CLI
+    /// error (naming the choices) instead of a downstream mismatch.
+    pub fn get_choice(&self, key: &str, allowed: &[&str]) -> Result<Option<&str>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) if allowed.contains(&v) => Ok(Some(v)),
+            Some(v) => Err(Error::Config(format!(
+                "--{key} must be one of {} (got `{v}`)",
+                allowed.join("|")
+            ))),
+        }
+    }
+
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         self.get(key)
             .map(|v| {
@@ -127,6 +140,18 @@ mod tests {
         assert!(Args::parse(&sv(&["--f", "64"])).is_err());
         let a = Args::parse(&sv(&["train", "--f", "lots"])).unwrap();
         assert!(a.get_usize("f").is_err());
+    }
+
+    #[test]
+    fn get_choice_constrains_values() {
+        let a = Args::parse(&sv(&["serve", "--codec", "binary"])).unwrap();
+        assert_eq!(
+            a.get_choice("codec", &["text", "binary", "auto"]).unwrap(),
+            Some("binary")
+        );
+        assert_eq!(a.get_choice("missing", &["x"]).unwrap(), None);
+        let a = Args::parse(&sv(&["serve", "--codec", "morse"])).unwrap();
+        assert!(a.get_choice("codec", &["text", "binary", "auto"]).is_err());
     }
 
     #[test]

@@ -238,6 +238,13 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // queue + writer thread per column band, with the band count
     // doubling as the snapshot shard count (see coordinator::banded).
     let writers = args.get_usize("writers")?;
+    // `--codec` pins the wire codec; `auto` (default) detects per
+    // connection from the first byte (see coordinator::protocol).
+    let codec = match args.get_choice("codec", &["text", "binary", "auto"])? {
+        Some("text") => crate::coordinator::protocol::CodecChoice::Text,
+        Some("binary") => crate::coordinator::protocol::CodecChoice::Binary,
+        _ => crate::coordinator::protocol::CodecChoice::Auto,
+    };
     let mut rng = Rng::seeded(cfg.dataset.seed);
     let ds = build_dataset(&cfg, &mut rng)?;
     eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
@@ -271,18 +278,24 @@ pub fn serve(args: &mut Args) -> Result<()> {
         Some(w) => {
             eprintln!(
                 "# serving on port {port} with {threads} reader thread(s), \
-                 {w} band writer(s)/shard(s) \
-                 (PREDICT/MPREDICT/TOPN/RATE/FLUSH/STATS/QUIT)"
+                 {w} band writer(s)/shard(s), codec {} \
+                 (PREDICT/MPREDICT/TOPN/RATE/MRATE/FLUSH/STATS/QUIT)",
+                codec.name()
             );
-            crate::coordinator::server::serve_banded(engine, listener, stop, threads, w)?;
+            crate::coordinator::server::serve_banded_with(
+                engine, listener, stop, threads, w, codec,
+            )?;
         }
         None => {
             eprintln!(
                 "# serving on port {port} with {threads} reader thread(s), \
-                 {shards} snapshot shard(s) \
-                 (PREDICT/MPREDICT/TOPN/RATE/FLUSH/STATS/QUIT)"
+                 {shards} snapshot shard(s), codec {} \
+                 (PREDICT/MPREDICT/TOPN/RATE/MRATE/FLUSH/STATS/QUIT)",
+                codec.name()
             );
-            crate::coordinator::server::serve_sharded(engine, listener, stop, threads, shards)?;
+            crate::coordinator::server::serve_sharded_with(
+                engine, listener, stop, threads, shards, codec,
+            )?;
         }
     }
     Ok(())

@@ -8,9 +8,12 @@
 //! lshmf online    [--config exp.toml] — Table 9 protocol: base train,
 //!                 increment via Algorithm 4, report the RMSE delta
 //! lshmf serve     [--config exp.toml] [--port 7878] [--threads 4]
-//!                 [--shards 8] — train, then serve TCP with a bounded
-//!                 reader pool (writes are single-writer; snapshots are
-//!                 sharded by column band; see coordinator::shared)
+//!                 [--shards 8] [--writers N] [--codec text|binary|auto]
+//!                 — train, then serve TCP with a bounded reader pool
+//!                 (snapshots sharded by column band, writes
+//!                 single-writer or per-band multi-writer; the wire
+//!                 protocol is typed Request/Response over a text or
+//!                 pipelined binary codec — see coordinator::protocol)
 //! lshmf info      — artifact bundle status (PJRT graphs available?)
 //! ```
 //!
@@ -80,6 +83,9 @@ COMMON FLAGS:
                        uses it as the connection-pool width)
   --port <int>         serve: TCP port (default 7878)
   --shards <int>       serve: snapshot column-band shard count (default 8)
+  --writers <int>      serve: per-band multi-writer ingest (N queues == N shards)
+  --codec <name>       serve: text | binary | auto (default auto — per-
+                       connection detection by first byte)
   --out <file>         gen-data: output path
 ";
 

@@ -134,6 +134,7 @@ pub struct BandedOrchestrator {
 /// A write-path request for one band's writer thread.
 enum BandCmd {
     Rate { i: u32, j: u32, r: f32, reply: Sender<IngestResult> },
+    RateMany { batch: Vec<(u32, u32, f32)>, reply: Sender<IngestResult> },
     Flush { reply: Sender<usize> },
     Shutdown,
 }
@@ -253,6 +254,12 @@ impl BandedEngine {
         (BandedEngine { shared, txs, clamp, metrics }, handle)
     }
 
+    /// The engine's metric registry (shared with the band writers and
+    /// the TCP front end).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
     /// Clone the current snapshot out of the lock (held only for the
     /// `Arc` clone; all computation afterwards is lock-free).
     pub fn snapshot(&self) -> Arc<Snapshot> {
@@ -319,6 +326,33 @@ impl BandedEngine {
         if self.txs[b].send(BandCmd::Rate { i, j, r, reply: reply_tx }).is_err() {
             // Writers are gone (shutdown): surface as backpressure
             // rather than panicking a connection thread.
+            return IngestResult::Rejected;
+        }
+        let result = reply_rx.recv().unwrap_or(IngestResult::Rejected);
+        drop(timer);
+        result
+    }
+
+    /// Batch-ingest ratings (the `MRATE` verb): one round-trip through
+    /// a single band writer, which validates and admits the whole batch
+    /// as one unit (backpressure reserved once — see `ingest_batch`)
+    /// and distributes the events to their owning bands' buffers. The
+    /// carrying queue is the first event's band, so clients that shard
+    /// their batches by band keep the per-band queue distribution. An
+    /// empty batch answers [`IngestResult::Ignored`] without touching a
+    /// queue — the same no-payload contract as the single-writer path.
+    pub fn rate_many(&self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        self.metrics.counter("server.mrate").inc();
+        if batch.is_empty() {
+            return IngestResult::Ignored;
+        }
+        let timer = self.metrics.timer("shared.write_wait");
+        let b = self.route(batch[0].1);
+        let (reply_tx, reply_rx) = channel();
+        if self.txs[b]
+            .send(BandCmd::RateMany { batch: batch.to_vec(), reply: reply_tx })
+            .is_err()
+        {
             return IngestResult::Rejected;
         }
         let result = reply_rx.recv().unwrap_or(IngestResult::Rejected);
@@ -422,6 +456,9 @@ fn band_writer_loop(shared: Arc<BandedOrchestrator>, band: usize, rx: Receiver<B
         match cmd {
             BandCmd::Rate { i, j, r, reply } => {
                 let _ = reply.send(ingest_rate(&shared, &im, band, i, j, r));
+            }
+            BandCmd::RateMany { batch, reply } => {
+                let _ = reply.send(ingest_batch(&shared, &im, &batch));
             }
             BandCmd::Flush { reply } => {
                 let _ = reply.send(flush_epoch(&shared));
@@ -535,8 +572,117 @@ fn buffer_rating(
         .note_buffered(now);
 }
 
+/// The vectorized ingest path (`MRATE`), mirroring
+/// [`StreamOrchestrator::ingest_batch`] step for step so batch replies
+/// stay identical to the single-writer reference: all-or-nothing
+/// validation in the same per-event value-then-bounds order, one atomic
+/// backpressure reservation for the whole batch, then admission and the
+/// batch-size trigger.
+fn ingest_batch(
+    shared: &BandedOrchestrator,
+    im: &IngestMetrics,
+    batch: &[(u32, u32, f32)],
+) -> IngestResult {
+    let cfg = &shared.cfg;
+    if batch.is_empty() {
+        return IngestResult::Ignored;
+    }
+    for &(i, j, r) in batch {
+        if !r.is_finite() {
+            im.invalid.inc();
+            return IngestResult::InvalidValue;
+        }
+        if i as usize >= cfg.max_rows || j as usize >= cfg.max_cols {
+            im.oob.inc();
+            return IngestResult::OutOfBounds;
+        }
+    }
+    let mut applied = 0usize;
+    if cfg.reject_when_full {
+        // One atomic reserve for the whole batch: reject unless the
+        // buffer can hold all of it (no partial admission, and the
+        // capacity stays exact under concurrent raters on other bands).
+        let reserved = shared.buffered.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+            if n + batch.len() > cfg.queue_capacity {
+                None
+            } else {
+                Some(n + batch.len())
+            }
+        });
+        if reserved.is_err() {
+            im.rejected.inc();
+            return IngestResult::Rejected;
+        }
+        buffer_batch(shared, batch, true);
+    } else {
+        if shared.buffered.load(Ordering::Relaxed) + batch.len() > cfg.queue_capacity {
+            // Flush the backlog first, then admit the batch un-flushed —
+            // the single-writer capacity contract, batch-wide.
+            applied += flush_epoch(shared);
+        }
+        buffer_batch(shared, batch, false);
+    }
+    im.ingested.add(batch.len() as u64);
+    if shared.buffered.load(Ordering::Relaxed) >= cfg.batch_size {
+        applied += flush_epoch(shared);
+    }
+    if applied > 0 {
+        IngestResult::Flushed { applied }
+    } else {
+        IngestResult::Buffered
+    }
+}
+
+/// Stamp and distribute one admitted batch into its owning bands'
+/// buffers, then refresh the current snapshot's buffered counter once.
+/// The locks of every band **the batch touches** are held together —
+/// acquired in ascending index order, the same order a flush epoch
+/// uses, so the orders cannot cycle — which gives the batch the same
+/// atomicity the single-writer path gets for free: an epoch acquires
+/// *all* band locks before stealing, so it must wait on the touched
+/// bands and can never steal half a batch, and every pushed entry's
+/// count increment has provably landed before an epoch's `fetch_sub`
+/// runs. Untouched bands stay unlocked, so batch ingest on disjoint
+/// band sets proceeds in parallel. `reserved` says the caller already
+/// counted the batch (the atomic-reserve backpressure path).
+fn buffer_batch(shared: &BandedOrchestrator, batch: &[(u32, u32, f32)], reserved: bool) {
+    let d = shared.bands.len();
+    let ncols = shared.ncols.load(Ordering::Relaxed);
+    let mut touched: Vec<usize> =
+        batch.iter().map(|&(_, j, _)| route_col(j, ncols, d)).collect();
+    touched.sort_unstable();
+    touched.dedup();
+    // slot[b] = index into `guards` for touched band b
+    let mut slot = vec![usize::MAX; d];
+    let mut guards: Vec<MutexGuard<'_, BandState>> = Vec::with_capacity(touched.len());
+    for (idx, &b) in touched.iter().enumerate() {
+        slot[b] = idx;
+        guards.push(shared.bands[b].lock().unwrap_or_else(|e| e.into_inner()));
+    }
+    for &(i, j, r) in batch {
+        let seq = shared.seq.fetch_add(1, Ordering::Relaxed);
+        guards[slot[route_col(j, ncols, d)]].buffer.push(Stamped { seq, i, j, r });
+    }
+    let now = if reserved {
+        shared.buffered.load(Ordering::Relaxed)
+    } else {
+        shared.buffered.fetch_add(batch.len(), Ordering::Relaxed) + batch.len()
+    };
+    // As in `buffer_rating`: reading `snap` under the band locks cannot
+    // deadlock (the only writer of `snap` is an epoch, which takes the
+    // write lock strictly after acquiring all band locks — including at
+    // least one this batch holds), and it guarantees the count lands on
+    // a snapshot that precedes any post-steal publish.
+    shared
+        .snap
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .note_buffered(now);
+}
+
 /// The cross-band flush epoch. Lock order `flush` → `core` →
-/// `bands[0..d]`; per-rate paths only ever take a single band lock, so
+/// `bands[0..d]`; per-rate paths take a single band lock and
+/// `buffer_batch` takes the band locks in the same ascending order, so
 /// the orders cannot cycle. Steals every band's buffer, restores global
 /// arrival order via the sequence stamps, applies the batch through
 /// exactly the single-writer computation, and publishes the per-band
@@ -911,6 +1057,96 @@ mod tests {
         assert!(stats.contains("version 1"), "{stats}");
         assert!(stats.contains("server.rate"), "{stats}");
         handle.join();
+    }
+
+    /// `MRATE` through a band writer: one round-trip admits the whole
+    /// batch, events land in their owning bands, growth widens the
+    /// barrier, and the reply matches the single-writer flavour.
+    #[test]
+    fn rate_many_distributes_across_bands() {
+        let mut rng = Rng::seeded(90);
+        let e = engine(&mut rng, StreamConfig { batch_size: 100, ..Default::default() });
+        let (banded, handle) = BandedEngine::spawn(e, 4);
+        let (_, n0) = banded.dims();
+        assert_eq!(banded.rate_many(&[]), IngestResult::Ignored);
+        assert_eq!(
+            banded.rate_many(&[(0, 0, 3.0), (0, 5, f32::NAN)]),
+            IngestResult::InvalidValue,
+            "one bad value refuses the whole batch"
+        );
+        assert_eq!(banded.buffered(), 0);
+        // a batch spanning every band plus a growth column
+        let batch: Vec<(u32, u32, f32)> =
+            vec![(0, 0, 3.0), (1, 5, 4.0), (2, 11, 2.0), (3, n0 as u32 + 2, 5.0)];
+        assert_eq!(banded.rate_many(&batch), IngestResult::Buffered);
+        assert_eq!(banded.buffered(), 4);
+        assert_eq!(banded.flush(), 4);
+        assert_eq!(banded.dims().1, n0 + 3, "growth applied through the barrier");
+        let p = banded.predict(3, n0 + 2).expect("grown column must serve");
+        assert!((1.0..=5.0).contains(&p));
+        handle.join();
+    }
+
+    /// Batch backpressure stays global and batch-atomic across bands:
+    /// the reservation covers the whole batch or rejects it whole, even
+    /// though its events would land in different bands' buffers.
+    #[test]
+    fn rate_many_backpressure_is_batch_atomic_across_bands() {
+        let mut rng = Rng::seeded(89);
+        let e = engine(
+            &mut rng,
+            StreamConfig {
+                queue_capacity: 3,
+                batch_size: 100,
+                reject_when_full: true,
+                ..Default::default()
+            },
+        );
+        let (banded, handle) = BandedEngine::spawn(e, 4);
+        // cols 1 and 11 live in different bands (12 cols at d=4)
+        assert_eq!(banded.rate_many(&[(0, 1, 3.0), (0, 11, 3.0)]), IngestResult::Buffered);
+        assert_eq!(
+            banded.rate_many(&[(0, 5, 3.0), (0, 7, 3.0)]),
+            IngestResult::Rejected,
+            "2 buffered + 2 > 3: reject the whole batch"
+        );
+        assert_eq!(banded.buffered(), 2, "no partial admission into any band");
+        assert_eq!(banded.rate_many(&[(0, 5, 3.0)]), IngestResult::Buffered);
+        banded.flush();
+        handle.join();
+    }
+
+    /// `MRATE` replies match the single-writer flavour on the same
+    /// sequential script (batches spanning bands, growth, a flush
+    /// trigger) — the vectorized path is a transport optimization, not
+    /// a semantic fork.
+    #[test]
+    fn rate_many_matches_shared_engine_sequence() {
+        let cfgs = StreamConfig { batch_size: 5, max_rows: 500, max_cols: 500, ..Default::default() };
+        let mut rng_a = Rng::seeded(88);
+        let (shared, shared_writer) =
+            SharedEngine::spawn_sharded(engine(&mut rng_a, cfgs.clone()), 3);
+        let mut rng_b = Rng::seeded(88);
+        let (banded, banded_handle) = BandedEngine::spawn(engine(&mut rng_b, cfgs), 3);
+        let batches: Vec<Vec<(u32, u32, f32)>> = vec![
+            vec![(0, 0, 3.0), (1, 11, 4.0)],
+            vec![(2, 6, 2.0), (3, 14, 5.0), (4, 2, 1.5)], // 5th event -> flush + growth
+            vec![(0, 0, 2.0)],
+            vec![(5, 20, 4.5), (6, 1, 3.5)], // more growth
+        ];
+        for batch in &batches {
+            assert_eq!(shared.rate_many(batch), banded.rate_many(batch), "{batch:?}");
+        }
+        assert_eq!(shared.flush(), banded.flush());
+        assert_eq!(shared.dims(), banded.dims());
+        for i in 0..26 {
+            for j in 0..21 {
+                assert_eq!(shared.predict(i, j), banded.predict(i, j), "predict({i},{j})");
+            }
+        }
+        let ea = shared_writer.join();
+        let eb = banded_handle.join();
+        assert_eq!(ea.dims(), eb.dims());
     }
 
     /// Backpressure is a *global* contract: the threshold counts

@@ -1,0 +1,518 @@
+//! `LshmfClient` — the typed protocol client, on either codec.
+//!
+//! Synchronous calls round-trip one [`Request`] per call;
+//! [`LshmfClient::pipeline`] batches: push any number of requests (they
+//! encode into the pipeline's local buffer), then [`Pipeline::finish`]
+//! ships them in bounded in-flight windows — draining replies between
+//! windows, so even an arbitrarily large pipeline cannot wedge the
+//! duplex socket — and returns every reply in push order. Dropping an
+//! unfinished pipeline abandons its requests without touching the
+//! socket, so the connection stays usable.
+//! On the binary codec each reply frame is checked against its
+//! request's sequence id; on the text codec ordering *is* the framing
+//! (the server answers a connection's requests in order), and the
+//! pipeline tracks which replies are multi-line (`STATS`).
+//!
+//! Pipelining is where the binary codec earns its keep: a
+//! one-verb-per-round-trip text client pays a full network round-trip
+//! plus two syscalls per rating, while a pipelined `MRATE` client ships
+//! hundreds of ratings per frame with many frames in flight —
+//! `benches/hotpath.rs` quantifies the gap on the same workload.
+//!
+//! ```no_run
+//! use lshmf::coordinator::client::{ClientCodec, LshmfClient};
+//! use lshmf::coordinator::protocol::{Request, Response};
+//!
+//! # let ratings: Vec<(u32, u32, f32)> = vec![(0, 1, 4.5), (2, 3, 3.0)];
+//! let mut client = LshmfClient::connect("127.0.0.1:7878", ClientCodec::Binary)?;
+//! // sync call
+//! let _pred = client.predict(3, 7)?;
+//! // pipelined batch ingest: many requests in flight, one flush
+//! let mut pipe = client.pipeline();
+//! for chunk in ratings.chunks(256) {
+//!     pipe.push(&Request::MRate { ratings: chunk.to_vec() })?;
+//! }
+//! let _replies: Vec<Response> = pipe.finish()?;
+//! # Ok::<(), std::io::Error>(())
+//! ```
+
+use super::protocol::{read_frame, FrameRead, Request, Response};
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Which codec the client speaks. There is no `Auto` on the client
+/// side: the client decides, and a server in auto mode follows from the
+/// first byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientCodec {
+    Text,
+    Binary,
+}
+
+/// A connected protocol client.
+pub struct LshmfClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    codec: ClientCodec,
+    next_seq: u32,
+}
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+fn eof(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::UnexpectedEof, msg.to_string())
+}
+
+impl LshmfClient {
+    /// Connect to a server. Works against any `serve --codec` mode that
+    /// admits `codec` (`auto` admits both).
+    pub fn connect(addr: impl ToSocketAddrs, codec: ClientCodec) -> io::Result<LshmfClient> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        Ok(LshmfClient { reader, writer, codec, next_seq: 0 })
+    }
+
+    /// The codec this client speaks.
+    pub fn codec(&self) -> ClientCodec {
+        self.codec
+    }
+
+    /// Start a pipelined batch: push requests, then
+    /// [`Pipeline::finish`] to flush and collect every reply in order.
+    /// A pipeline buffers locally — nothing touches the socket until
+    /// `finish` — so dropping one abandons its requests cleanly and the
+    /// connection stays usable.
+    pub fn pipeline(&mut self) -> Pipeline<'_> {
+        Pipeline { client: self, buf: Vec::new(), pending: Vec::new() }
+    }
+
+    /// One synchronous round-trip (a pipeline of one).
+    pub fn request(&mut self, req: &Request) -> io::Result<Response> {
+        let mut pipe = self.pipeline();
+        pipe.push(req)?;
+        let mut replies = pipe.finish()?;
+        replies.pop().ok_or_else(|| eof("no reply"))
+    }
+
+    /// `PREDICT <row> <col>`.
+    pub fn predict(&mut self, row: usize, col: usize) -> io::Result<Response> {
+        self.request(&Request::Predict { row, col })
+    }
+
+    /// `MPREDICT <row> <col>...` — one consistent snapshot answers the
+    /// whole batch.
+    pub fn predict_many(&mut self, row: usize, cols: &[u32]) -> io::Result<Response> {
+        self.request(&Request::MPredict { row, cols: cols.to_vec() })
+    }
+
+    /// `TOPN <row> <n>`.
+    pub fn top_n(&mut self, row: usize, n: usize) -> io::Result<Response> {
+        self.request(&Request::TopN { row, n })
+    }
+
+    /// `RATE <row> <col> <value>`.
+    pub fn rate(&mut self, row: u32, col: u32, value: f32) -> io::Result<Response> {
+        self.request(&Request::Rate { row, col, value })
+    }
+
+    /// `MRATE` — batch ingest, admitted by the server as one unit.
+    pub fn rate_many(&mut self, ratings: &[(u32, u32, f32)]) -> io::Result<Response> {
+        self.request(&Request::MRate { ratings: ratings.to_vec() })
+    }
+
+    /// `FLUSH`.
+    pub fn flush(&mut self) -> io::Result<Response> {
+        self.request(&Request::Flush)
+    }
+
+    /// `STATS` (multi-line on the text codec; handled transparently).
+    pub fn stats(&mut self) -> io::Result<Response> {
+        self.request(&Request::Stats)
+    }
+
+    /// Close the connection. Binary connections are acked with
+    /// [`Response::Bye`] before the server closes; text connections
+    /// close silently on `QUIT` (the legacy wire behaviour).
+    pub fn shutdown(mut self) -> io::Result<()> {
+        let seq = self.send(&Request::Shutdown)?;
+        self.writer.flush()?;
+        match self.codec {
+            ClientCodec::Text => Ok(()),
+            ClientCodec::Binary => match self.read_binary_response(seq)? {
+                Response::Bye => Ok(()),
+                other => Err(invalid(format!("expected BYE, got {other:?}"))),
+            },
+        }
+    }
+
+    /// Encode one request into `out`; returns the sequence id it was
+    /// stamped with (meaningful on the binary codec).
+    fn encode_into(&mut self, req: &Request, out: &mut Vec<u8>) -> u32 {
+        let seq = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        match self.codec {
+            ClientCodec::Text => {
+                out.extend_from_slice(req.encode_text().as_bytes());
+                out.push(b'\n');
+            }
+            ClientCodec::Binary => {
+                out.extend_from_slice(&req.encode_frame(seq));
+            }
+        }
+        seq
+    }
+
+    /// Encode and write one request straight to the socket buffer (the
+    /// synchronous, non-pipelined path).
+    fn send(&mut self, req: &Request) -> io::Result<u32> {
+        let mut bytes = Vec::new();
+        let seq = self.encode_into(req, &mut bytes);
+        self.writer.write_all(&bytes)?;
+        Ok(seq)
+    }
+
+    /// Read one text reply. `stats` replies span multiple lines up to
+    /// the `END` terminator; everything else is one line.
+    fn read_text_response(&mut self, stats: bool) -> io::Result<Response> {
+        if !stats {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(eof("connection closed mid-reply"));
+            }
+            let trimmed = line.trim_end_matches('\n').trim_end_matches('\r');
+            return Response::decode_text(trimmed).map_err(invalid);
+        }
+        let mut text = String::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(eof("connection closed mid-stats"));
+            }
+            let done = line.trim_end().ends_with("END");
+            text.push_str(&line);
+            if done {
+                break;
+            }
+        }
+        // the wire reply is `{body}END\n`; decode wants `{body}END`
+        let text = text.strip_suffix('\n').unwrap_or(&text);
+        Response::decode_text(text).map_err(invalid)
+    }
+
+    /// Read one binary reply frame and check it answers `want_seq` —
+    /// the server replies in request order, so a mismatch means the
+    /// stream is desynchronized and the connection is unusable.
+    fn read_binary_response(&mut self, want_seq: u32) -> io::Result<Response> {
+        match read_frame(&mut self.reader)? {
+            FrameRead::Eof => Err(eof("connection closed mid-reply")),
+            FrameRead::Malformed(detail) => {
+                Err(invalid(format!("malformed response frame: {detail}")))
+            }
+            FrameRead::Frame(frame) => {
+                if frame.seq != want_seq {
+                    return Err(invalid(format!(
+                        "out-of-order response: got seq {}, want {}",
+                        frame.seq, want_seq
+                    )));
+                }
+                Response::decode_frame(&frame)
+                    .map_err(|e| invalid(format!("undecodable response: {e}")))
+            }
+        }
+    }
+}
+
+/// Most requests one `finish` write phase keeps in flight before
+/// draining their replies. The server answers strictly one request at
+/// a time, so an unbounded write-everything-then-read strategy can
+/// wedge both TCP directions once the kernel buffers fill (client
+/// blocked writing requests, server blocked writing replies). With a
+/// window of 8 the outstanding reply volume stays far below any
+/// kernel's socket buffering (worst non-`STATS` reply is ~2.3 KiB), so
+/// the server never blocks on its replies and the client's writes
+/// always drain — deadlock-free for pipelines of any size. `STATS`
+/// replies are unbounded, so a window also ends right after one.
+const PIPELINE_WINDOW: usize = 8;
+
+/// An in-flight request batch. Requests are encoded into the
+/// pipeline's own buffer on push; [`Pipeline::finish`] writes them in
+/// bounded in-flight windows (draining replies between windows) and
+/// returns every reply in push order. Dropping a pipeline without
+/// `finish` abandons its requests without ever writing them — the
+/// connection stays in sync.
+pub struct Pipeline<'c> {
+    client: &'c mut LshmfClient,
+    /// Encoded wire bytes, written at `finish`.
+    buf: Vec<u8>,
+    /// (sequence id, reply-is-multi-line, end offset in `buf`) per
+    /// pushed request.
+    pending: Vec<(u32, bool, usize)>,
+}
+
+impl Pipeline<'_> {
+    /// Buffer one request. `Shutdown` is refused — it closes the
+    /// connection mid-pipeline; use [`LshmfClient::shutdown`].
+    pub fn push(&mut self, req: &Request) -> io::Result<()> {
+        if matches!(req, Request::Shutdown) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "Shutdown in a pipeline; use LshmfClient::shutdown",
+            ));
+        }
+        let is_stats = matches!(req, Request::Stats);
+        let seq = self.client.encode_into(req, &mut self.buf);
+        self.pending.push((seq, is_stats, self.buf.len()));
+        Ok(())
+    }
+
+    /// Requests pushed so far.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Write the buffered requests and collect every reply, in push
+    /// order. Writes proceed in [`PIPELINE_WINDOW`]-sized in-flight
+    /// windows with the replies drained between windows, so a pipeline
+    /// of any size is deadlock-free against the one-reply-per-request
+    /// server loop.
+    pub fn finish(self) -> io::Result<Vec<Response>> {
+        let Pipeline { client, buf, pending } = self;
+        let mut replies = Vec::with_capacity(pending.len());
+        let mut off = 0usize;
+        let mut sent = 0usize;
+        while sent < pending.len() {
+            // write phase: up to a window of requests (ending early
+            // after a STATS, whose reply size is unbounded)
+            let phase_start = sent;
+            while sent < pending.len() && sent - phase_start < PIPELINE_WINDOW {
+                let (_, is_stats, end) = pending[sent];
+                client.writer.write_all(&buf[off..end])?;
+                off = end;
+                sent += 1;
+                if is_stats {
+                    break;
+                }
+            }
+            client.writer.flush()?;
+            // drain phase: read every reply the window produced
+            for &(seq, is_stats, _) in &pending[phase_start..sent] {
+                let response = match client.codec {
+                    ClientCodec::Text => client.read_text_response(is_stats)?,
+                    ClientCodec::Binary => client.read_binary_response(seq)?,
+                };
+                replies.push(response);
+            }
+        }
+        Ok(replies)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{ErrorKind, OkBody};
+    use crate::coordinator::server;
+    use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
+    use crate::coordinator::Engine;
+    use crate::lsh::{OnlineHashState, SimLsh};
+    use crate::metrics::Registry;
+    use crate::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+    use crate::rng::Rng;
+    use crate::sparse::{Csc, Csr, Triples};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    fn engine(seed: u64) -> Engine {
+        let mut rng = Rng::seeded(seed);
+        let (m, n) = (20, 10);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 100 {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(1, 4, 8, 2);
+        let hash_state = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash_state.topk(3, &mut rng);
+        let cfg = CulshConfig { f: 4, k: 3, epochs: 3, ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut rng);
+        let metrics = Registry::new();
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig::default(),
+            cfg,
+            rng.split(1),
+            metrics.clone(),
+        );
+        Engine::new(orch, (1.0, 5.0), metrics)
+    }
+
+    /// Stand a server up on a loopback port; returns (addr, stop, join).
+    fn spawn_server(
+        seed: u64,
+    ) -> (
+        std::net::SocketAddr,
+        Arc<AtomicBool>,
+        std::thread::JoinHandle<Engine>,
+    ) {
+        let e = engine(seed);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle =
+            std::thread::spawn(move || server::serve(e, listener, stop2, 2).unwrap());
+        (addr, stop, handle)
+    }
+
+    fn stop_server(
+        addr: std::net::SocketAddr,
+        stop: Arc<AtomicBool>,
+        handle: std::thread::JoinHandle<Engine>,
+    ) -> Engine {
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr);
+        handle.join().unwrap()
+    }
+
+    /// Both codecs drive the same auto-detecting server and agree on
+    /// every typed reply.
+    #[test]
+    fn both_codecs_roundtrip_against_auto_server() {
+        let (addr, stop, handle) = spawn_server(101);
+        for codec in [ClientCodec::Text, ClientCodec::Binary] {
+            let mut client = LshmfClient::connect(addr, codec).unwrap();
+            let pred = client.predict(0, 0).unwrap();
+            assert!(matches!(pred, Response::Pred(_)), "{codec:?}: {pred:?}");
+            assert_eq!(
+                client.predict(999, 0).unwrap(),
+                Response::Error(ErrorKind::OutOfRange),
+                "{codec:?}"
+            );
+            let preds = client.predict_many(0, &[0, 1, 999]).unwrap();
+            match preds {
+                Response::Preds(ps) => {
+                    assert_eq!(ps.len(), 3);
+                    assert!(ps[0].is_some() && ps[1].is_some() && ps[2].is_none());
+                }
+                other => panic!("{codec:?}: {other:?}"),
+            }
+            let top = client.top_n(0, 3).unwrap();
+            assert!(matches!(top, Response::TopN(ref recs) if recs.len() <= 3), "{top:?}");
+            assert_eq!(
+                client.rate(0, 5, 4.5).unwrap(),
+                Response::Ok(OkBody::Buffered),
+                "{codec:?}"
+            );
+            assert_eq!(
+                client.rate_many(&[(1, 2, 3.0), (2, 3, 2.0)]).unwrap(),
+                Response::Ok(OkBody::Buffered),
+                "{codec:?}"
+            );
+            assert_eq!(
+                client.flush().unwrap(),
+                Response::Ok(OkBody::Flushed { applied: 3 }),
+                "{codec:?}"
+            );
+            match client.stats().unwrap() {
+                Response::Stats(body) => {
+                    assert!(body.contains("dims"), "{codec:?}: {body}");
+                    assert!(body.contains("version"), "{codec:?}: {body}");
+                }
+                other => panic!("{codec:?}: {other:?}"),
+            }
+            client.shutdown().unwrap();
+        }
+        stop_server(addr, stop, handle);
+    }
+
+    /// A pipeline much larger than the in-flight window completes (the
+    /// windowed finish crosses many write/drain phases) with every
+    /// reply in push order.
+    #[test]
+    fn pipeline_larger_than_window_completes_in_order() {
+        let (addr, stop, handle) = spawn_server(103);
+        for codec in [ClientCodec::Text, ClientCodec::Binary] {
+            let mut client = LshmfClient::connect(addr, codec).unwrap();
+            let n = PIPELINE_WINDOW * 12 + 3;
+            let mut pipe = client.pipeline();
+            for k in 0..n {
+                // alternate verbs so drained replies must line up with
+                // their requests, not just count out
+                if k % 2 == 0 {
+                    pipe.push(&Request::Predict { row: k % 20, col: k % 10 }).unwrap();
+                } else {
+                    pipe.push(&Request::TopN { row: k % 20, n: 3 }).unwrap();
+                }
+            }
+            let replies = pipe.finish().unwrap();
+            assert_eq!(replies.len(), n);
+            for (k, reply) in replies.iter().enumerate() {
+                if k % 2 == 0 {
+                    assert!(matches!(reply, Response::Pred(_)), "{codec:?} #{k}: {reply:?}");
+                } else {
+                    assert!(matches!(reply, Response::TopN(_)), "{codec:?} #{k}: {reply:?}");
+                }
+            }
+            client.shutdown().unwrap();
+        }
+        stop_server(addr, stop, handle);
+    }
+
+    /// Pipelining: many requests written before any reply is read, all
+    /// replies collected in order (binary additionally seq-checked).
+    #[test]
+    fn pipeline_collects_replies_in_order() {
+        let (addr, stop, handle) = spawn_server(102);
+        for codec in [ClientCodec::Text, ClientCodec::Binary] {
+            let mut client = LshmfClient::connect(addr, codec).unwrap();
+            let mut pipe = client.pipeline();
+            for k in 0..10u32 {
+                pipe.push(&Request::Rate { row: k % 5, col: k % 7, value: 3.0 }).unwrap();
+            }
+            pipe.push(&Request::Stats).unwrap();
+            pipe.push(&Request::Predict { row: 0, col: 1 }).unwrap();
+            assert_eq!(pipe.len(), 12);
+            let replies = pipe.finish().unwrap();
+            assert_eq!(replies.len(), 12);
+            for reply in &replies[..10] {
+                assert!(matches!(reply, Response::Ok(_)), "{codec:?}: {reply:?}");
+            }
+            assert!(matches!(replies[10], Response::Stats(_)), "{codec:?}");
+            assert!(matches!(replies[11], Response::Pred(_)), "{codec:?}");
+            // a Shutdown cannot ride inside a pipeline
+            let mut pipe = client.pipeline();
+            assert!(pipe.push(&Request::Shutdown).is_err());
+            drop(pipe);
+            // abandoning a pipeline mid-build must not desynchronize
+            // the connection: pushes buffer locally until finish()
+            let mut pipe = client.pipeline();
+            for k in 0..3u32 {
+                pipe.push(&Request::Rate { row: k, col: k, value: 2.0 }).unwrap();
+            }
+            drop(pipe); // never finished: nothing reached the socket
+            let reply = client.predict(0, 1).unwrap();
+            assert!(
+                matches!(reply, Response::Pred(_)),
+                "{codec:?}: abandoned pipeline desynchronized the stream: {reply:?}"
+            );
+            client.flush().unwrap();
+            client.shutdown().unwrap();
+        }
+        stop_server(addr, stop, handle);
+    }
+}

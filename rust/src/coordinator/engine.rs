@@ -195,6 +195,13 @@ impl Engine {
         self.orch.ingest(Event::Rate(i, j, r))
     }
 
+    /// Vectorized ingest (the `MRATE` verb): the whole batch is
+    /// validated and admitted as one unit, with backpressure capacity
+    /// reserved once — see [`StreamOrchestrator::ingest_batch`].
+    pub fn rate_many(&mut self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        self.orch.ingest_batch(batch)
+    }
+
     /// Force-apply buffered ratings.
     pub fn flush(&mut self) -> usize {
         self.orch.flush()

@@ -19,18 +19,31 @@
 //!   band split), cross-band barrier epochs for flush and universe
 //!   growth, per-band shard publishing — replies bit-identical to the
 //!   single-writer flavour.
-//! * [`server`] — a line-protocol TCP front end with a bounded
-//!   connection-thread pool over either concurrent core.
+//! * [`protocol`] — the typed wire layer: [`Request`]/[`Response`]
+//!   enums with two interchangeable codecs (the wire-compatible text
+//!   line protocol, and a length-prefixed binary codec with sequence
+//!   ids that supports pipelining), plus typed [`ErrorKind`]s.
+//! * [`server`] — the TCP front end: a bounded connection-thread pool
+//!   over any serving flavour, decoding wire messages into `Request`
+//!   once and dispatching through one `Serving`-generic path
+//!   (`serve --codec text|binary|auto`, auto-detected per connection
+//!   by first byte).
+//! * [`client`] — [`LshmfClient`]: synchronous calls plus `pipeline()`
+//!   batching (many requests in flight per connection) on either codec.
 
 pub mod banded;
+pub mod client;
 pub mod engine;
+pub mod protocol;
 pub mod rotation;
 pub mod server;
 pub mod shared;
 pub mod stream;
 
 pub use banded::{BandedEngine, BandedHandle, BandedOrchestrator};
+pub use client::{ClientCodec, LshmfClient, Pipeline};
 pub use engine::Engine;
+pub use protocol::{CodecChoice, ErrorKind, OkBody, Request, Response};
 pub use rotation::{RotationPlan, VirtualClockReport};
 pub use shared::{SharedEngine, Snapshot, WriterHandle, DEFAULT_SHARDS};
 pub use stream::{StreamConfig, StreamOrchestrator};

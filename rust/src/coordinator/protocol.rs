@@ -1,0 +1,1149 @@
+//! The typed wire protocol: one [`Request`] / [`Response`] pair over two
+//! interchangeable codecs.
+//!
+//! Before this module the wire API lived as ad-hoc string matching
+//! inside `server.rs:handle_line` — one verb per round-trip, replies
+//! hand-formatted at every call site. Following the cuMF line of work
+//! (Tan et al.), where transfer-format and batching design decide
+//! end-to-end throughput as much as kernel speed, the protocol is now a
+//! first-class layer:
+//!
+//! * [`Request`] / [`Response`] are the single source of truth for the
+//!   protocol surface. The server parses a wire message into a
+//!   `Request` exactly once, dispatches it generically over the
+//!   [`Serving`](super::server::Serving) trait, and encodes the typed
+//!   `Response` back — a new verb is added in exactly one place.
+//! * The **text codec** is the original line protocol, kept
+//!   wire-compatible byte for byte (`PREDICT 3 7\n` → `PRED 3.4000\n`):
+//!   every reply string existing clients or tests depend on is produced
+//!   by [`Response::encode_text`], and round-trip property tests in
+//!   `tests/props.rs` pin `parse_text ∘ encode_text = id`.
+//! * The **binary codec** is a length-prefixed frame format that
+//!   supports *pipelining*: many requests in flight per connection,
+//!   each response tagged with its request's sequence id. A frame is
+//!   `[0xB1][opcode u8][seq u32 le][len u32 le][payload]`; the first
+//!   byte can never be the start of a text verb (all verbs are ASCII
+//!   uppercase), so a server in `auto` codec mode detects the codec per
+//!   connection from the first byte.
+//! * [`ErrorKind`] types every protocol error — out-of-range,
+//!   too-many-cols, backpressure, invalid-value, out-of-bounds, unknown
+//!   verb, malformed frame, … — with one text form and one binary code
+//!   per kind, so error handling is uniform across codecs and serving
+//!   flavours.
+//!
+//! Batch ingest rides on [`Request::MRate`]: up to [`MAX_MRATE_EVENTS`]
+//! ratings per message, validated and admitted as one unit (backpressure
+//! capacity is reserved once per batch — see
+//! [`StreamOrchestrator::ingest_batch`](super::stream::StreamOrchestrator::ingest_batch)).
+//!
+//! The client side of this layer lives in [`super::client`].
+
+use super::stream::IngestResult;
+use std::io::{self, Read};
+
+/// Most columns one `MPREDICT` request may score. Bounds the work and
+/// allocation a single request can demand — the read-side analogue of
+/// the `RATE` path's `max_rows`/`max_cols` hardening.
+pub const MAX_MPREDICT_COLS: usize = 256;
+
+/// Most items one `TOPN` request may ask for. Oversized `n` used to be
+/// silently satisfied (scoring every column); it is now a typed
+/// [`ErrorKind::TooManyItems`] error.
+pub const MAX_TOPN_ITEMS: usize = 256;
+
+/// Most ratings one `MRATE` batch may carry.
+pub const MAX_MRATE_EVENTS: usize = 256;
+
+/// First byte of every binary frame. Deliberately ≥ 0x80: no text verb
+/// (ASCII uppercase) can start with it, so codec auto-detection needs
+/// exactly one byte.
+pub const BINARY_FRAME_BYTE: u8 = 0xB1;
+
+/// Hard ceiling on a binary frame's payload length. A frame announcing
+/// more is malformed — the decoder must never allocate unbounded memory
+/// on behalf of one length field.
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 20;
+
+/// Usage strings, shared by the text parser and the dispatcher so both
+/// codecs report identical [`ErrorKind::Usage`] errors.
+pub const PREDICT_USAGE: &str = "PREDICT <row> <col>";
+pub const MPREDICT_USAGE: &str = "MPREDICT <row> <col> [<col> ...]";
+pub const TOPN_USAGE: &str = "TOPN <row> <n>";
+pub const RATE_USAGE: &str = "RATE <row> <col> <value>";
+pub const MRATE_USAGE: &str = "MRATE <row> <col> <value> [<row> <col> <value> ...]";
+
+/// Which codec a server endpoint speaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecChoice {
+    /// Text line protocol only.
+    Text,
+    /// Binary framed protocol only (a text greeting is a malformed frame).
+    Binary,
+    /// Detect per connection from the first byte (the default):
+    /// [`BINARY_FRAME_BYTE`] → binary, anything else → text.
+    Auto,
+}
+
+impl CodecChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecChoice::Text => "text",
+            CodecChoice::Binary => "binary",
+            CodecChoice::Auto => "auto",
+        }
+    }
+}
+
+/// A parsed protocol request — every verb of the serving API.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// `PREDICT <row> <col>`
+    Predict { row: usize, col: usize },
+    /// `MPREDICT <row> <col> [<col> ...]` — batched prediction against
+    /// one consistent snapshot.
+    MPredict { row: usize, cols: Vec<u32> },
+    /// `TOPN <row> <n>` — top-n unrated columns (`1 ≤ n ≤ MAX_TOPN_ITEMS`).
+    TopN { row: usize, n: usize },
+    /// `RATE <row> <col> <value>` — single-event online ingest.
+    Rate { row: u32, col: u32, value: f32 },
+    /// `MRATE <row> <col> <value> ...` — batch ingest, admitted as one
+    /// unit (validation and backpressure reservation happen once for
+    /// the whole batch).
+    MRate { ratings: Vec<(u32, u32, f32)> },
+    /// `FLUSH` — force-apply buffered ratings.
+    Flush,
+    /// `STATS` — metrics snapshot.
+    Stats,
+    /// `QUIT` / `SHUTDOWN` — close the connection (binary connections
+    /// receive a [`Response::Bye`] ack first).
+    Shutdown,
+}
+
+/// Typed protocol errors. One text form and one binary code per kind;
+/// both codecs and all serving flavours report errors through this enum.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ErrorKind {
+    /// Row (or row+col) outside the served universe.
+    OutOfRange,
+    /// `MPREDICT` with more than [`MAX_MPREDICT_COLS`] columns.
+    TooManyCols,
+    /// `TOPN` asking for more than [`MAX_TOPN_ITEMS`] items.
+    TooManyItems,
+    /// `MRATE` with more than [`MAX_MRATE_EVENTS`] ratings.
+    TooManyEvents,
+    /// Ingest queue full (`reject_when_full` backpressure).
+    Backpressure,
+    /// Non-finite rating value.
+    InvalidValue,
+    /// Rating ids at or beyond the configured `max_rows`/`max_cols`.
+    OutOfBounds,
+    /// Empty request line.
+    Empty,
+    /// Unrecognized verb (text) or opcode (binary).
+    UnknownVerb(String),
+    /// Malformed arguments; carries the verb's usage string.
+    Usage(String),
+    /// Unreadable binary frame (bad frame byte, truncated or oversized
+    /// frame, undecodable payload). Fatal per connection: framing is
+    /// lost, so the server replies once and closes.
+    MalformedFrame(String),
+}
+
+impl ErrorKind {
+    /// The text wire form (the exact legacy `ERR …` strings).
+    pub fn to_line(&self) -> String {
+        match self {
+            ErrorKind::OutOfRange => "ERR out-of-range".into(),
+            ErrorKind::TooManyCols => "ERR too-many-cols".into(),
+            ErrorKind::TooManyItems => "ERR too-many-items".into(),
+            ErrorKind::TooManyEvents => "ERR too-many-events".into(),
+            ErrorKind::Backpressure => "ERR backpressure".into(),
+            ErrorKind::InvalidValue => "ERR invalid-value".into(),
+            ErrorKind::OutOfBounds => "ERR out-of-bounds".into(),
+            ErrorKind::Empty => "ERR empty".into(),
+            ErrorKind::UnknownVerb(verb) => format!("ERR unknown verb `{verb}`"),
+            ErrorKind::Usage(usage) => format!("ERR usage: {usage}"),
+            ErrorKind::MalformedFrame(detail) => format!("ERR malformed-frame: {detail}"),
+        }
+    }
+
+    /// Inverse of [`ErrorKind::to_line`]; `None` if `line` is not an
+    /// `ERR` form this layer produces.
+    pub fn parse_line(line: &str) -> Option<ErrorKind> {
+        let body = line.strip_prefix("ERR ")?;
+        Some(match body {
+            "out-of-range" => ErrorKind::OutOfRange,
+            "too-many-cols" => ErrorKind::TooManyCols,
+            "too-many-items" => ErrorKind::TooManyItems,
+            "too-many-events" => ErrorKind::TooManyEvents,
+            "backpressure" => ErrorKind::Backpressure,
+            "invalid-value" => ErrorKind::InvalidValue,
+            "out-of-bounds" => ErrorKind::OutOfBounds,
+            "empty" => ErrorKind::Empty,
+            _ => {
+                if let Some(usage) = body.strip_prefix("usage: ") {
+                    ErrorKind::Usage(usage.to_string())
+                } else if let Some(detail) = body.strip_prefix("malformed-frame: ") {
+                    ErrorKind::MalformedFrame(detail.to_string())
+                } else if let Some(verb) = body
+                    .strip_prefix("unknown verb `")
+                    .and_then(|v| v.strip_suffix('`'))
+                {
+                    ErrorKind::UnknownVerb(verb.to_string())
+                } else {
+                    return None;
+                }
+            }
+        })
+    }
+
+    /// The binary wire code (payload byte 0 of an error response).
+    fn code(&self) -> u8 {
+        match self {
+            ErrorKind::OutOfRange => 1,
+            ErrorKind::TooManyCols => 2,
+            ErrorKind::TooManyItems => 3,
+            ErrorKind::TooManyEvents => 4,
+            ErrorKind::Backpressure => 5,
+            ErrorKind::InvalidValue => 6,
+            ErrorKind::OutOfBounds => 7,
+            ErrorKind::Empty => 8,
+            ErrorKind::UnknownVerb(_) => 9,
+            ErrorKind::Usage(_) => 10,
+            ErrorKind::MalformedFrame(_) => 11,
+        }
+    }
+
+    /// The detail string carried after the code byte (empty for
+    /// detail-free kinds).
+    fn detail(&self) -> &str {
+        match self {
+            ErrorKind::UnknownVerb(s) | ErrorKind::Usage(s) | ErrorKind::MalformedFrame(s) => s,
+            _ => "",
+        }
+    }
+
+    fn from_code(code: u8, detail: String) -> Option<ErrorKind> {
+        Some(match code {
+            1 => ErrorKind::OutOfRange,
+            2 => ErrorKind::TooManyCols,
+            3 => ErrorKind::TooManyItems,
+            4 => ErrorKind::TooManyEvents,
+            5 => ErrorKind::Backpressure,
+            6 => ErrorKind::InvalidValue,
+            7 => ErrorKind::OutOfBounds,
+            8 => ErrorKind::Empty,
+            9 => ErrorKind::UnknownVerb(detail),
+            10 => ErrorKind::Usage(detail),
+            11 => ErrorKind::MalformedFrame(detail),
+            _ => return None,
+        })
+    }
+}
+
+/// The non-error body of an ingest reply (`RATE` / `MRATE` / `FLUSH`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OkBody {
+    /// Accepted into the buffer; will apply at the next flush.
+    Buffered,
+    /// A flush ran; `applied` events landed in the model.
+    Flushed { applied: u64 },
+    /// The request carried nothing to ingest (empty batch): nothing was
+    /// buffered and nothing was applied — both write paths answer this
+    /// identically.
+    Ignored,
+}
+
+/// A typed protocol response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// `PRED <value>` — a single clamped prediction.
+    Pred(f32),
+    /// `PREDS <v|-> ...` — batched predictions; `None` per
+    /// out-of-range column.
+    Preds(Vec<Option<f32>>),
+    /// `TOPN <col>:<score> ...`
+    TopN(Vec<(u32, f32)>),
+    /// `OK buffered` | `OK flushed <n>` | `OK ignored`.
+    Ok(OkBody),
+    /// Multi-line stats body, text-terminated by `END`.
+    Stats(String),
+    /// `ERR …` — any [`ErrorKind`].
+    Error(ErrorKind),
+    /// Shutdown ack. Binary connections receive it before the server
+    /// closes; text connections close silently on `QUIT` (legacy wire
+    /// behaviour), so `BYE` never appears on a text socket.
+    Bye,
+}
+
+/// Map an ingest outcome onto the wire.
+impl From<IngestResult> for Response {
+    fn from(result: IngestResult) -> Response {
+        match result {
+            IngestResult::Buffered => Response::Ok(OkBody::Buffered),
+            IngestResult::Flushed { applied } => {
+                Response::Ok(OkBody::Flushed { applied: applied as u64 })
+            }
+            IngestResult::Rejected => Response::Error(ErrorKind::Backpressure),
+            IngestResult::InvalidValue => Response::Error(ErrorKind::InvalidValue),
+            IngestResult::OutOfBounds => Response::Error(ErrorKind::OutOfBounds),
+            IngestResult::Ignored => Response::Ok(OkBody::Ignored),
+        }
+    }
+}
+
+fn parse<T: std::str::FromStr>(s: Option<&str>) -> Option<T> {
+    s.and_then(|x| x.parse().ok())
+}
+
+impl Request {
+    /// Parse one text protocol line. Exactly the legacy `handle_line`
+    /// grammar: unknown trailing tokens on fixed-arity verbs are
+    /// ignored, `MPREDICT` caps its column list while parsing (a flood
+    /// line cannot demand unbounded allocation), and every malformed
+    /// form maps to the same `ERR` reply the string matcher produced.
+    pub fn parse_text(line: &str) -> Result<Request, ErrorKind> {
+        let mut parts = line.split_whitespace();
+        let verb = parts.next().unwrap_or("");
+        match verb {
+            "PREDICT" => {
+                let (Some(row), Some(col)) = (parse(parts.next()), parse(parts.next())) else {
+                    return Err(ErrorKind::Usage(PREDICT_USAGE.into()));
+                };
+                Ok(Request::Predict { row, col })
+            }
+            "MPREDICT" => {
+                let Some(row) = parse::<usize>(parts.next()) else {
+                    return Err(ErrorKind::Usage(MPREDICT_USAGE.into()));
+                };
+                let mut cols: Vec<u32> = Vec::new();
+                for p in parts {
+                    if cols.len() >= MAX_MPREDICT_COLS {
+                        return Err(ErrorKind::TooManyCols);
+                    }
+                    match p.parse::<u32>() {
+                        Ok(j) => cols.push(j),
+                        Err(_) => return Err(ErrorKind::Usage(MPREDICT_USAGE.into())),
+                    }
+                }
+                if cols.is_empty() {
+                    return Err(ErrorKind::Usage(MPREDICT_USAGE.into()));
+                }
+                Ok(Request::MPredict { row, cols })
+            }
+            "TOPN" => {
+                let (Some(row), Some(n)) = (parse(parts.next()), parse(parts.next())) else {
+                    return Err(ErrorKind::Usage(TOPN_USAGE.into()));
+                };
+                Ok(Request::TopN { row, n })
+            }
+            "RATE" => {
+                let (Some(row), Some(col), Some(value)) = (
+                    parse::<u32>(parts.next()),
+                    parse::<u32>(parts.next()),
+                    parse::<f32>(parts.next()),
+                ) else {
+                    return Err(ErrorKind::Usage(RATE_USAGE.into()));
+                };
+                Ok(Request::Rate { row, col, value })
+            }
+            "MRATE" => {
+                let mut ratings: Vec<(u32, u32, f32)> = Vec::new();
+                let mut parts = parts.peekable();
+                while parts.peek().is_some() {
+                    if ratings.len() >= MAX_MRATE_EVENTS {
+                        return Err(ErrorKind::TooManyEvents);
+                    }
+                    let (Some(i), Some(j), Some(r)) = (
+                        parse::<u32>(parts.next()),
+                        parse::<u32>(parts.next()),
+                        parse::<f32>(parts.next()),
+                    ) else {
+                        return Err(ErrorKind::Usage(MRATE_USAGE.into()));
+                    };
+                    ratings.push((i, j, r));
+                }
+                if ratings.is_empty() {
+                    return Err(ErrorKind::Usage(MRATE_USAGE.into()));
+                }
+                Ok(Request::MRate { ratings })
+            }
+            "FLUSH" => Ok(Request::Flush),
+            "STATS" => Ok(Request::Stats),
+            "QUIT" | "SHUTDOWN" => Ok(Request::Shutdown),
+            "" => Err(ErrorKind::Empty),
+            other => Err(ErrorKind::UnknownVerb(other.to_string())),
+        }
+    }
+
+    /// Encode as one text protocol line (no trailing newline). Floats
+    /// use `Display`, whose shortest-round-trip form re-parses to the
+    /// identical bits, so `parse_text ∘ encode_text = id` for every
+    /// finite-valued request.
+    pub fn encode_text(&self) -> String {
+        match self {
+            Request::Predict { row, col } => format!("PREDICT {row} {col}"),
+            Request::MPredict { row, cols } => {
+                let mut s = format!("MPREDICT {row}");
+                for j in cols {
+                    s.push(' ');
+                    s.push_str(&j.to_string());
+                }
+                s
+            }
+            Request::TopN { row, n } => format!("TOPN {row} {n}"),
+            Request::Rate { row, col, value } => format!("RATE {row} {col} {value}"),
+            Request::MRate { ratings } => {
+                let mut s = String::from("MRATE");
+                for (i, j, r) in ratings {
+                    s.push_str(&format!(" {i} {j} {r}"));
+                }
+                s
+            }
+            Request::Flush => "FLUSH".into(),
+            Request::Stats => "STATS".into(),
+            Request::Shutdown => "QUIT".into(),
+        }
+    }
+
+    /// Encode as one binary frame (header + payload).
+    pub fn encode_frame(&self, seq: u32) -> Vec<u8> {
+        let mut payload = Vec::new();
+        let opcode = match self {
+            Request::Predict { row, col } => {
+                put_u64(&mut payload, *row as u64);
+                put_u64(&mut payload, *col as u64);
+                op::PREDICT
+            }
+            Request::MPredict { row, cols } => {
+                put_u64(&mut payload, *row as u64);
+                put_u32(&mut payload, cols.len() as u32);
+                for j in cols {
+                    put_u32(&mut payload, *j);
+                }
+                op::MPREDICT
+            }
+            Request::TopN { row, n } => {
+                put_u64(&mut payload, *row as u64);
+                put_u64(&mut payload, *n as u64);
+                op::TOPN
+            }
+            Request::Rate { row, col, value } => {
+                put_u32(&mut payload, *row);
+                put_u32(&mut payload, *col);
+                put_f32(&mut payload, *value);
+                op::RATE
+            }
+            Request::MRate { ratings } => {
+                put_u32(&mut payload, ratings.len() as u32);
+                for (i, j, r) in ratings {
+                    put_u32(&mut payload, *i);
+                    put_u32(&mut payload, *j);
+                    put_f32(&mut payload, *r);
+                }
+                op::MRATE
+            }
+            Request::Flush => op::FLUSH,
+            Request::Stats => op::STATS,
+            Request::Shutdown => op::SHUTDOWN,
+        };
+        frame(opcode, seq, payload)
+    }
+
+    /// Decode a binary request frame. Count fields are validated against
+    /// both the protocol caps and the actual payload length before any
+    /// allocation.
+    pub fn decode_frame(f: &Frame) -> Result<Request, ErrorKind> {
+        let mut c = Cur::new(&f.payload);
+        let req = match f.opcode {
+            op::PREDICT => Request::Predict {
+                row: c.u64().ok_or_else(|| malformed("PREDICT"))? as usize,
+                col: c.u64().ok_or_else(|| malformed("PREDICT"))? as usize,
+            },
+            op::MPREDICT => {
+                let row = c.u64().ok_or_else(|| malformed("MPREDICT"))? as usize;
+                let count = c.u32().ok_or_else(|| malformed("MPREDICT"))? as usize;
+                if count > MAX_MPREDICT_COLS {
+                    return Err(ErrorKind::TooManyCols);
+                }
+                if count * 4 > c.remaining() {
+                    return Err(malformed("MPREDICT"));
+                }
+                let mut cols = Vec::with_capacity(count);
+                for _ in 0..count {
+                    cols.push(c.u32().ok_or_else(|| malformed("MPREDICT"))?);
+                }
+                Request::MPredict { row, cols }
+            }
+            op::TOPN => Request::TopN {
+                row: c.u64().ok_or_else(|| malformed("TOPN"))? as usize,
+                n: c.u64().ok_or_else(|| malformed("TOPN"))? as usize,
+            },
+            op::RATE => Request::Rate {
+                row: c.u32().ok_or_else(|| malformed("RATE"))?,
+                col: c.u32().ok_or_else(|| malformed("RATE"))?,
+                value: c.f32().ok_or_else(|| malformed("RATE"))?,
+            },
+            op::MRATE => {
+                let count = c.u32().ok_or_else(|| malformed("MRATE"))? as usize;
+                if count > MAX_MRATE_EVENTS {
+                    return Err(ErrorKind::TooManyEvents);
+                }
+                if count * 12 > c.remaining() {
+                    return Err(malformed("MRATE"));
+                }
+                let mut ratings = Vec::with_capacity(count);
+                for _ in 0..count {
+                    let i = c.u32().ok_or_else(|| malformed("MRATE"))?;
+                    let j = c.u32().ok_or_else(|| malformed("MRATE"))?;
+                    let r = c.f32().ok_or_else(|| malformed("MRATE"))?;
+                    ratings.push((i, j, r));
+                }
+                Request::MRate { ratings }
+            }
+            op::FLUSH => Request::Flush,
+            op::STATS => Request::Stats,
+            op::SHUTDOWN => Request::Shutdown,
+            other => return Err(ErrorKind::UnknownVerb(format!("opcode {other:#04x}"))),
+        };
+        if !c.done() {
+            return Err(ErrorKind::MalformedFrame("trailing payload bytes".into()));
+        }
+        Ok(req)
+    }
+}
+
+impl Response {
+    /// Encode as text — the exact legacy reply strings (`{:.4}` floats,
+    /// `-` placeholders, `END`-terminated stats).
+    pub fn encode_text(&self) -> String {
+        match self {
+            Response::Pred(p) => format!("PRED {p:.4}"),
+            Response::Preds(preds) => {
+                let body: Vec<String> = preds
+                    .iter()
+                    .map(|p| match p {
+                        Some(v) => format!("{v:.4}"),
+                        None => "-".into(),
+                    })
+                    .collect();
+                format!("PREDS {}", body.join(" "))
+            }
+            Response::TopN(recs) => {
+                let body: Vec<String> =
+                    recs.iter().map(|(j, s)| format!("{j}:{s:.4}")).collect();
+                format!("TOPN {}", body.join(" "))
+            }
+            Response::Ok(OkBody::Buffered) => "OK buffered".into(),
+            Response::Ok(OkBody::Flushed { applied }) => format!("OK flushed {applied}"),
+            Response::Ok(OkBody::Ignored) => "OK ignored".into(),
+            Response::Stats(body) => format!("{body}END"),
+            Response::Error(kind) => kind.to_line(),
+            // Never sent on a text socket (QUIT closes silently); the
+            // form exists so every Response round-trips on both codecs.
+            Response::Bye => "BYE".into(),
+        }
+    }
+
+    /// Decode a text reply. For `STATS`, pass the full multi-line body
+    /// including the trailing `END` (the client accumulates lines until
+    /// the terminator — see [`super::client`]).
+    pub fn decode_text(text: &str) -> Result<Response, String> {
+        if let Some(rest) = text.strip_prefix("PRED ") {
+            let v: f32 = rest.parse().map_err(|_| format!("bad PRED value `{rest}`"))?;
+            return Ok(Response::Pred(v));
+        }
+        if let Some(rest) = text.strip_prefix("PREDS") {
+            let mut preds = Vec::new();
+            for tok in rest.split_whitespace() {
+                if tok == "-" {
+                    preds.push(None);
+                } else {
+                    let v: f32 =
+                        tok.parse().map_err(|_| format!("bad PREDS value `{tok}`"))?;
+                    preds.push(Some(v));
+                }
+            }
+            return Ok(Response::Preds(preds));
+        }
+        if let Some(rest) = text.strip_prefix("TOPN") {
+            let mut recs = Vec::new();
+            for tok in rest.split_whitespace() {
+                let (j, s) = tok
+                    .split_once(':')
+                    .ok_or_else(|| format!("bad TOPN entry `{tok}`"))?;
+                let j: u32 = j.parse().map_err(|_| format!("bad TOPN col `{tok}`"))?;
+                let s: f32 = s.parse().map_err(|_| format!("bad TOPN score `{tok}`"))?;
+                recs.push((j, s));
+            }
+            return Ok(Response::TopN(recs));
+        }
+        if text == "OK buffered" {
+            return Ok(Response::Ok(OkBody::Buffered));
+        }
+        if text == "OK ignored" {
+            return Ok(Response::Ok(OkBody::Ignored));
+        }
+        if let Some(rest) = text.strip_prefix("OK flushed ") {
+            let applied: u64 =
+                rest.parse().map_err(|_| format!("bad flush count `{rest}`"))?;
+            return Ok(Response::Ok(OkBody::Flushed { applied }));
+        }
+        if text == "BYE" {
+            return Ok(Response::Bye);
+        }
+        if let Some(kind) = ErrorKind::parse_line(text) {
+            return Ok(Response::Error(kind));
+        }
+        if let Some(body) = text.strip_suffix("END") {
+            return Ok(Response::Stats(body.to_string()));
+        }
+        Err(format!("undecodable reply `{text}`"))
+    }
+
+    /// Encode as one binary frame tagged with the request's `seq`.
+    pub fn encode_frame(&self, seq: u32) -> Vec<u8> {
+        let mut payload = Vec::new();
+        let opcode = match self {
+            Response::Pred(v) => {
+                put_f32(&mut payload, *v);
+                op::R_PRED
+            }
+            Response::Preds(preds) => {
+                put_u32(&mut payload, preds.len() as u32);
+                for p in preds {
+                    match p {
+                        Some(v) => {
+                            payload.push(1);
+                            put_f32(&mut payload, *v);
+                        }
+                        None => payload.push(0),
+                    }
+                }
+                op::R_PREDS
+            }
+            Response::TopN(recs) => {
+                put_u32(&mut payload, recs.len() as u32);
+                for (j, s) in recs {
+                    put_u32(&mut payload, *j);
+                    put_f32(&mut payload, *s);
+                }
+                op::R_TOPN
+            }
+            Response::Ok(OkBody::Buffered) => {
+                payload.push(0);
+                op::R_OK
+            }
+            Response::Ok(OkBody::Flushed { applied }) => {
+                payload.push(1);
+                put_u64(&mut payload, *applied);
+                op::R_OK
+            }
+            Response::Ok(OkBody::Ignored) => {
+                payload.push(2);
+                op::R_OK
+            }
+            Response::Stats(body) => {
+                payload.extend_from_slice(body.as_bytes());
+                op::R_STATS
+            }
+            Response::Error(kind) => {
+                payload.push(kind.code());
+                payload.extend_from_slice(kind.detail().as_bytes());
+                op::R_ERR
+            }
+            Response::Bye => op::R_BYE,
+        };
+        frame(opcode, seq, payload)
+    }
+
+    /// Decode a binary response frame (client side).
+    pub fn decode_frame(f: &Frame) -> Result<Response, String> {
+        let mut c = Cur::new(&f.payload);
+        let short = || "truncated response payload".to_string();
+        let resp = match f.opcode {
+            op::R_PRED => Response::Pred(c.f32().ok_or_else(short)?),
+            op::R_PREDS => {
+                let count = c.u32().ok_or_else(short)? as usize;
+                if count > c.remaining() {
+                    return Err("PREDS count exceeds payload".into());
+                }
+                let mut preds = Vec::with_capacity(count);
+                for _ in 0..count {
+                    match c.u8().ok_or_else(short)? {
+                        0 => preds.push(None),
+                        1 => preds.push(Some(c.f32().ok_or_else(short)?)),
+                        t => return Err(format!("bad PREDS tag {t}")),
+                    }
+                }
+                Response::Preds(preds)
+            }
+            op::R_TOPN => {
+                let count = c.u32().ok_or_else(short)? as usize;
+                if count * 8 > c.remaining() {
+                    return Err("TOPN count exceeds payload".into());
+                }
+                let mut recs = Vec::with_capacity(count);
+                for _ in 0..count {
+                    let j = c.u32().ok_or_else(short)?;
+                    let s = c.f32().ok_or_else(short)?;
+                    recs.push((j, s));
+                }
+                Response::TopN(recs)
+            }
+            op::R_OK => match c.u8().ok_or_else(short)? {
+                0 => Response::Ok(OkBody::Buffered),
+                1 => Response::Ok(OkBody::Flushed { applied: c.u64().ok_or_else(short)? }),
+                2 => Response::Ok(OkBody::Ignored),
+                t => return Err(format!("bad OK tag {t}")),
+            },
+            op::R_STATS => {
+                let body = String::from_utf8(c.rest().to_vec())
+                    .map_err(|_| "non-utf8 stats body".to_string())?;
+                return Ok(Response::Stats(body));
+            }
+            op::R_ERR => {
+                let code = c.u8().ok_or_else(short)?;
+                let detail = String::from_utf8(c.rest().to_vec())
+                    .map_err(|_| "non-utf8 error detail".to_string())?;
+                return Ok(Response::Error(
+                    ErrorKind::from_code(code, detail)
+                        .ok_or_else(|| format!("bad error code {code}"))?,
+                ));
+            }
+            op::R_BYE => Response::Bye,
+            other => return Err(format!("unknown response opcode {other:#04x}")),
+        };
+        if !c.done() {
+            return Err("trailing response payload bytes".into());
+        }
+        Ok(resp)
+    }
+}
+
+fn malformed(what: &str) -> ErrorKind {
+    ErrorKind::MalformedFrame(format!("truncated {what} payload"))
+}
+
+/// Binary opcodes. Requests are < 0x80, responses ≥ 0x80.
+mod op {
+    pub const PREDICT: u8 = 0x01;
+    pub const MPREDICT: u8 = 0x02;
+    pub const TOPN: u8 = 0x03;
+    pub const RATE: u8 = 0x04;
+    pub const MRATE: u8 = 0x05;
+    pub const FLUSH: u8 = 0x06;
+    pub const STATS: u8 = 0x07;
+    pub const SHUTDOWN: u8 = 0x08;
+
+    pub const R_PRED: u8 = 0x81;
+    pub const R_PREDS: u8 = 0x82;
+    pub const R_TOPN: u8 = 0x83;
+    pub const R_OK: u8 = 0x84;
+    pub const R_STATS: u8 = 0x85;
+    pub const R_ERR: u8 = 0x86;
+    pub const R_BYE: u8 = 0x87;
+}
+
+/// One decoded binary frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub opcode: u8,
+    pub seq: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Assemble a full frame: `[0xB1][opcode][seq le][len le][payload]`.
+fn frame(opcode: u8, seq: u32, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(10 + payload.len());
+    out.push(BINARY_FRAME_BYTE);
+    out.push(opcode);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Outcome of reading one frame off a stream.
+#[derive(Debug)]
+pub enum FrameRead {
+    Frame(Frame),
+    /// Clean EOF on the frame boundary (peer closed).
+    Eof,
+    /// Unreadable framing: bad frame byte, truncated header/payload, or
+    /// an oversized length field. Framing is lost — the caller should
+    /// report once and close.
+    Malformed(String),
+}
+
+/// Read one binary frame. EOF *between* frames is a clean close; EOF
+/// inside a frame is malformed.
+pub fn read_frame(r: &mut impl Read) -> io::Result<FrameRead> {
+    let mut magic = [0u8; 1];
+    match r.read(&mut magic) {
+        Ok(0) => return Ok(FrameRead::Eof),
+        Ok(_) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(FrameRead::Eof),
+        Err(e) => return Err(e),
+    }
+    if magic[0] != BINARY_FRAME_BYTE {
+        return Ok(FrameRead::Malformed(format!(
+            "bad frame byte {:#04x} (expected {BINARY_FRAME_BYTE:#04x})",
+            magic[0]
+        )));
+    }
+    let mut head = [0u8; 9];
+    if !try_read_exact(r, &mut head)? {
+        return Ok(FrameRead::Malformed("truncated frame header".into()));
+    }
+    let opcode = head[0];
+    let seq = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
+    let len = u32::from_le_bytes([head[5], head[6], head[7], head[8]]) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Ok(FrameRead::Malformed(format!(
+            "oversized frame payload ({len} > {MAX_FRAME_PAYLOAD} bytes)"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    if !try_read_exact(r, &mut payload)? {
+        return Ok(FrameRead::Malformed("truncated frame payload".into()));
+    }
+    Ok(FrameRead::Frame(Frame { opcode, seq, payload }))
+}
+
+fn try_read_exact(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(true),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => Ok(false),
+        Err(e) => Err(e),
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Payload cursor: every read is bounds-checked, `done` enforces exact
+/// consumption.
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.b.len() < n {
+            return None;
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Some(head)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8)
+            .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Option<f32> {
+        self.take(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        std::mem::take(&mut self.b)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len()
+    }
+
+    fn done(&self) -> bool {
+        self.b.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_binary_req(req: &Request) -> Request {
+        let bytes = req.encode_frame(7);
+        let mut cursor = &bytes[..];
+        match read_frame(&mut cursor).unwrap() {
+            FrameRead::Frame(f) => {
+                assert_eq!(f.seq, 7);
+                Request::decode_frame(&f).unwrap()
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    fn roundtrip_binary_resp(resp: &Response) -> Response {
+        let bytes = resp.encode_frame(42);
+        let mut cursor = &bytes[..];
+        match read_frame(&mut cursor).unwrap() {
+            FrameRead::Frame(f) => {
+                assert_eq!(f.seq, 42);
+                Response::decode_frame(&f).unwrap()
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn text_request_grammar_matches_legacy_strings() {
+        assert_eq!(
+            Request::parse_text("PREDICT 3 7"),
+            Ok(Request::Predict { row: 3, col: 7 })
+        );
+        assert_eq!(
+            Request::parse_text("MPREDICT 1 2 3"),
+            Ok(Request::MPredict { row: 1, cols: vec![2, 3] })
+        );
+        assert_eq!(Request::parse_text("TOPN 0 5"), Ok(Request::TopN { row: 0, n: 5 }));
+        assert_eq!(
+            Request::parse_text("RATE 0 5 4.5"),
+            Ok(Request::Rate { row: 0, col: 5, value: 4.5 })
+        );
+        assert_eq!(
+            Request::parse_text("MRATE 0 1 2.5 3 4 1.0"),
+            Ok(Request::MRate { ratings: vec![(0, 1, 2.5), (3, 4, 1.0)] })
+        );
+        assert_eq!(Request::parse_text("FLUSH"), Ok(Request::Flush));
+        assert_eq!(Request::parse_text("STATS"), Ok(Request::Stats));
+        assert_eq!(Request::parse_text("QUIT"), Ok(Request::Shutdown));
+        assert_eq!(Request::parse_text("SHUTDOWN"), Ok(Request::Shutdown));
+        // legacy grammar: trailing tokens on fixed-arity verbs ignored
+        assert_eq!(
+            Request::parse_text("PREDICT 1 2 junk"),
+            Ok(Request::Predict { row: 1, col: 2 })
+        );
+        // malformed forms
+        assert_eq!(
+            Request::parse_text("PREDICT x y"),
+            Err(ErrorKind::Usage(PREDICT_USAGE.into()))
+        );
+        assert_eq!(
+            Request::parse_text("MPREDICT 0"),
+            Err(ErrorKind::Usage(MPREDICT_USAGE.into()))
+        );
+        assert_eq!(
+            Request::parse_text("MRATE 1 2"),
+            Err(ErrorKind::Usage(MRATE_USAGE.into()))
+        );
+        assert_eq!(Request::parse_text(""), Err(ErrorKind::Empty));
+        assert_eq!(
+            Request::parse_text("BOGUS"),
+            Err(ErrorKind::UnknownVerb("BOGUS".into()))
+        );
+        // parse-time caps: a flood line never allocates past the limit
+        let flood = format!("MPREDICT 0{}", " 1".repeat(MAX_MPREDICT_COLS + 1));
+        assert_eq!(Request::parse_text(&flood), Err(ErrorKind::TooManyCols));
+        let flood = format!("MRATE{}", " 1 1 1.0".repeat(MAX_MRATE_EVENTS + 1));
+        assert_eq!(Request::parse_text(&flood), Err(ErrorKind::TooManyEvents));
+    }
+
+    #[test]
+    fn response_text_forms_match_legacy_strings() {
+        assert_eq!(Response::Pred(3.25).encode_text(), "PRED 3.2500");
+        assert_eq!(
+            Response::Preds(vec![Some(1.5), None, Some(2.0)]).encode_text(),
+            "PREDS 1.5000 - 2.0000"
+        );
+        assert_eq!(
+            Response::TopN(vec![(7, 4.5), (2, 3.0)]).encode_text(),
+            "TOPN 7:4.5000 2:3.0000"
+        );
+        // an empty TOPN keeps the legacy trailing space
+        assert_eq!(Response::TopN(vec![]).encode_text(), "TOPN ");
+        assert_eq!(Response::Ok(OkBody::Buffered).encode_text(), "OK buffered");
+        assert_eq!(
+            Response::Ok(OkBody::Flushed { applied: 12 }).encode_text(),
+            "OK flushed 12"
+        );
+        assert_eq!(Response::Ok(OkBody::Ignored).encode_text(), "OK ignored");
+        assert_eq!(
+            Response::Stats("dims 3x4\n".into()).encode_text(),
+            "dims 3x4\nEND"
+        );
+        assert_eq!(Response::Error(ErrorKind::OutOfRange).encode_text(), "ERR out-of-range");
+        assert_eq!(
+            Response::Error(ErrorKind::UnknownVerb("BOGUS".into())).encode_text(),
+            "ERR unknown verb `BOGUS`"
+        );
+        assert_eq!(
+            Response::Error(ErrorKind::Usage(RATE_USAGE.into())).encode_text(),
+            "ERR usage: RATE <row> <col> <value>"
+        );
+    }
+
+    #[test]
+    fn every_error_kind_roundtrips_on_both_codecs() {
+        let kinds = [
+            ErrorKind::OutOfRange,
+            ErrorKind::TooManyCols,
+            ErrorKind::TooManyItems,
+            ErrorKind::TooManyEvents,
+            ErrorKind::Backpressure,
+            ErrorKind::InvalidValue,
+            ErrorKind::OutOfBounds,
+            ErrorKind::Empty,
+            ErrorKind::UnknownVerb("FROB".into()),
+            ErrorKind::Usage(TOPN_USAGE.into()),
+            ErrorKind::MalformedFrame("truncated frame header".into()),
+        ];
+        for kind in kinds {
+            let line = kind.to_line();
+            assert_eq!(ErrorKind::parse_line(&line), Some(kind.clone()), "{line}");
+            let resp = Response::Error(kind.clone());
+            assert_eq!(roundtrip_binary_resp(&resp), resp, "{line}");
+            assert_eq!(Response::decode_text(&line), Ok(resp), "{line}");
+        }
+    }
+
+    #[test]
+    fn binary_request_roundtrip() {
+        let reqs = [
+            Request::Predict { row: 3, col: 7_000_000 },
+            Request::MPredict { row: 9, cols: vec![0, 1, u32::MAX] },
+            Request::TopN { row: 2, n: 256 },
+            Request::Rate { row: 1, col: 2, value: -3.75 },
+            Request::MRate { ratings: vec![(0, 1, 2.5), (u32::MAX, 0, 1e-20)] },
+            Request::Flush,
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            assert_eq!(roundtrip_binary_req(&req), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn binary_response_roundtrip() {
+        let resps = [
+            Response::Pred(2.125),
+            Response::Preds(vec![Some(1.0), None]),
+            Response::TopN(vec![(3, 0.5)]),
+            Response::TopN(vec![]),
+            Response::Ok(OkBody::Buffered),
+            Response::Ok(OkBody::Flushed { applied: u64::MAX }),
+            Response::Ok(OkBody::Ignored),
+            Response::Stats("dims 2x2\ncounter server.rate 3\n".into()),
+            Response::Bye,
+        ];
+        for resp in resps {
+            assert_eq!(roundtrip_binary_resp(&resp), resp, "{resp:?}");
+        }
+    }
+
+    #[test]
+    fn text_decode_inverts_encode() {
+        // quantized floats: exact at 4 decimals, so the lossy `{:.4}`
+        // reply forms round-trip bit-exactly
+        let resps = [
+            Response::Pred(3.0625),
+            Response::Preds(vec![Some(-2.5), None, Some(0.0625)]),
+            Response::TopN(vec![(9, 4.9375), (0, -1.5)]),
+            Response::TopN(vec![]),
+            Response::Ok(OkBody::Flushed { applied: 7 }),
+            Response::Stats("dims 30x15\nbuffered 2\ncounter stream.flushes 4\n".into()),
+            Response::Bye,
+        ];
+        for resp in resps {
+            assert_eq!(
+                Response::decode_text(&resp.encode_text()),
+                Ok(resp.clone()),
+                "{resp:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn frame_reader_rejects_bad_framing() {
+        // bad frame byte
+        let mut cursor = &b"PREDICT 0 0\n"[..];
+        assert!(matches!(read_frame(&mut cursor).unwrap(), FrameRead::Malformed(_)));
+        // clean EOF between frames
+        let mut cursor = &b""[..];
+        assert!(matches!(read_frame(&mut cursor).unwrap(), FrameRead::Eof));
+        // truncated header
+        let mut cursor = &[BINARY_FRAME_BYTE, 0x01, 0x00][..];
+        assert!(matches!(read_frame(&mut cursor).unwrap(), FrameRead::Malformed(_)));
+        // oversized length field never allocates
+        let mut bytes = vec![BINARY_FRAME_BYTE, 0x01];
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cursor = &bytes[..];
+        assert!(matches!(read_frame(&mut cursor).unwrap(), FrameRead::Malformed(_)));
+        // truncated payload
+        let full = Request::Predict { row: 1, col: 2 }.encode_frame(0);
+        let mut cursor = &full[..full.len() - 3];
+        assert!(matches!(read_frame(&mut cursor).unwrap(), FrameRead::Malformed(_)));
+    }
+
+    #[test]
+    fn decode_rejects_bad_payloads() {
+        // unknown request opcode
+        let f = Frame { opcode: 0x66, seq: 0, payload: vec![] };
+        assert!(matches!(
+            Request::decode_frame(&f),
+            Err(ErrorKind::UnknownVerb(_))
+        ));
+        // truncated PREDICT payload
+        let f = Frame { opcode: 0x01, seq: 0, payload: vec![1, 2, 3] };
+        assert!(matches!(
+            Request::decode_frame(&f),
+            Err(ErrorKind::MalformedFrame(_))
+        ));
+        // MPREDICT count exceeding the cap is a typed protocol error
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0);
+        put_u32(&mut payload, (MAX_MPREDICT_COLS + 1) as u32);
+        let f = Frame { opcode: 0x02, seq: 0, payload };
+        assert_eq!(Request::decode_frame(&f), Err(ErrorKind::TooManyCols));
+        // MRATE count exceeding the cap likewise
+        let mut payload = Vec::new();
+        put_u32(&mut payload, (MAX_MRATE_EVENTS + 1) as u32);
+        let f = Frame { opcode: 0x05, seq: 0, payload };
+        assert_eq!(Request::decode_frame(&f), Err(ErrorKind::TooManyEvents));
+        // a count field larger than the actual payload is malformed,
+        // not an allocation
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0);
+        put_u32(&mut payload, 100);
+        let f = Frame { opcode: 0x02, seq: 0, payload };
+        assert!(matches!(
+            Request::decode_frame(&f),
+            Err(ErrorKind::MalformedFrame(_))
+        ));
+        // trailing bytes are malformed
+        let mut bytes = Vec::new();
+        put_u64(&mut bytes, 1);
+        put_u64(&mut bytes, 2);
+        bytes.push(0xFF);
+        let f = Frame { opcode: 0x01, seq: 0, payload: bytes };
+        assert!(matches!(
+            Request::decode_frame(&f),
+            Err(ErrorKind::MalformedFrame(_))
+        ));
+    }
+}

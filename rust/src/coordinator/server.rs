@@ -1,57 +1,62 @@
-//! Line-protocol TCP front end over the serving engines.
+//! TCP front end over the serving engines, speaking the typed protocol
+//! of [`super::protocol`] on either codec.
 //!
-//! Verbs (one request per line, `\n`-terminated):
+//! Wire messages decode into [`Request`] exactly once (text lines via
+//! [`Request::parse_text`], binary frames via [`Request::decode_frame`]),
+//! then flow through **one** [`dispatch`] generic over the [`Serving`]
+//! trait, and the typed [`Response`] encodes back per codec — reply
+//! formatting lives in the protocol layer, not per serving flavour, so
+//! a new verb is added in exactly one place. See the protocol module
+//! for the verb table; the text codec is wire-compatible with the
+//! legacy line protocol byte for byte.
 //!
-//! ```text
-//! PREDICT <row> <col>       -> "PRED <value>" | "ERR out-of-range"
-//! MPREDICT <row> <col>...   -> "PREDS <v1> <v2> ..." ("-" per out-of-range col;
-//!                              at most MAX_MPREDICT_COLS columns, else
-//!                              "ERR too-many-cols")
-//! TOPN <row> <n>            -> "TOPN <col>:<score> ..."
-//! RATE <row> <col> <value>  -> "OK buffered" | "OK flushed <n>"
-//!                              | "ERR backpressure" | "ERR invalid-value"
-//!                              | "ERR out-of-bounds"
-//! FLUSH                     -> "OK flushed <n>"
-//! STATS                     -> multi-line stats terminated by "END"
-//! QUIT                      -> closes the connection
-//! ```
-//!
-//! Two serving flavours implement the same [`Serving`] protocol surface:
+//! Three serving flavours implement the same [`Serving`] surface:
 //!
 //! * `Mutex<Engine>` — the original fully-serialized engine, still used
-//!   by tests and in-process embedding (`handle_line` is generic over
-//!   both, so single-connection protocol semantics are identical for
-//!   every verb except `STATS`, whose free-form body additionally
-//!   carries a `version <n>` line on the concurrent engine);
+//!   by tests and in-process embedding (`handle_line`/`dispatch` are
+//!   generic over all flavours, so single-connection protocol semantics
+//!   are identical for every verb except `STATS`, whose free-form body
+//!   additionally carries a `version <n>` line on the concurrent
+//!   engines);
 //! * [`SharedEngine`] — the concurrent read / single-writer core that
 //!   [`serve`] uses: a bounded pool of connection threads executes
 //!   `PREDICT`/`TOPN`/`STATS` against lock-free snapshots while `RATE`
 //!   funnels through the writer thread, so reads proceed even during a
-//!   flush.
+//!   flush;
+//! * [`BandedEngine`](super::banded::BandedEngine) via [`serve_banded`]:
+//!   the same read path, but write traffic fans out over one write
+//!   queue + writer thread per column band (`serve --writers`), with
+//!   replies bit-identical to both flavours above.
 //!
-//! [`serve_banded`] swaps in the third flavour,
-//! [`BandedEngine`](super::banded::BandedEngine): the same read path,
-//! but `RATE` traffic fans out over one write queue + writer thread per
-//! column band (`serve --writers`), with replies bit-identical to both
-//! flavours above.
+//! Codec selection (`serve --codec`): `text` and `binary` pin one
+//! codec; `auto` (the default) detects per connection from the first
+//! byte — [`BINARY_FRAME_BYTE`] can never start a text verb. Binary
+//! connections are pipelined: a client may keep many frames in flight;
+//! the server answers in order, each response tagged with its request's
+//! sequence id. Unknown verbs/opcodes count into `server.unknown_verb`,
+//! unreadable frames into `server.malformed_frames` (the server replies
+//! [`ErrorKind::MalformedFrame`] once and closes, since framing is
+//! lost).
 
 use super::banded::BandedEngine;
 use super::engine::Engine;
+pub use super::protocol::MAX_MPREDICT_COLS;
+use super::protocol::{
+    read_frame, CodecChoice, ErrorKind, FrameRead, OkBody, Request, Response,
+    BINARY_FRAME_BYTE, MAX_MRATE_EVENTS, MAX_TOPN_ITEMS, MPREDICT_USAGE, MRATE_USAGE,
+    TOPN_USAGE,
+};
 use super::shared::SharedEngine;
 use super::stream::IngestResult;
+use crate::metrics::Registry;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Most columns one `MPREDICT` line may request. Bounds the work and
-/// allocation a single request line can demand — the read-side analogue
-/// of the `RATE` path's `max_rows`/`max_cols` hardening.
-pub const MAX_MPREDICT_COLS: usize = 256;
-
 /// The protocol surface a serving engine must expose. `&self` receivers
 /// throughout: implementations provide their own interior
-/// synchronization (a mutex, or snapshots + a writer channel).
+/// synchronization (a mutex, or snapshots + writer channels).
 pub trait Serving {
     fn predict(&self, i: usize, j: usize) -> Option<f32>;
     /// Batched prediction against one consistent state; `None` for an
@@ -59,8 +64,16 @@ pub trait Serving {
     fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>>;
     fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)>;
     fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult;
+    /// Batch ingest (`MRATE`): the whole batch is validated and
+    /// admitted as one unit with backpressure capacity reserved once;
+    /// an empty batch is [`IngestResult::Ignored`] on every flavour.
+    fn rate_many(&self, batch: &[(u32, u32, f32)]) -> IngestResult;
     fn flush(&self) -> usize;
     fn stats(&self) -> String;
+    /// The engine's metric registry — the server layer counts protocol
+    /// events (`server.unknown_verb`, `server.malformed_frames`) into
+    /// the same registry `STATS` dumps.
+    fn registry(&self) -> Registry;
 }
 
 impl Serving for Mutex<Engine> {
@@ -82,12 +95,22 @@ impl Serving for Mutex<Engine> {
         self.lock().unwrap().rate(i, j, r)
     }
 
+    fn rate_many(&self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        // One lock for the whole batch — the single-flavour analogue of
+        // the writer paths' one-round-trip admission.
+        self.lock().unwrap().rate_many(batch)
+    }
+
     fn flush(&self) -> usize {
         self.lock().unwrap().flush()
     }
 
     fn stats(&self) -> String {
         self.lock().unwrap().stats()
+    }
+
+    fn registry(&self) -> Registry {
+        self.lock().unwrap().metrics().clone()
     }
 }
 
@@ -108,12 +131,20 @@ impl Serving for BandedEngine {
         BandedEngine::rate(self, i, j, r)
     }
 
+    fn rate_many(&self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        BandedEngine::rate_many(self, batch)
+    }
+
     fn flush(&self) -> usize {
         BandedEngine::flush(self)
     }
 
     fn stats(&self) -> String {
         BandedEngine::stats(self)
+    }
+
+    fn registry(&self) -> Registry {
+        BandedEngine::metrics(self).clone()
     }
 }
 
@@ -134,6 +165,10 @@ impl Serving for SharedEngine {
         SharedEngine::rate(self, i, j, r)
     }
 
+    fn rate_many(&self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        SharedEngine::rate_many(self, batch)
+    }
+
     fn flush(&self) -> usize {
         SharedEngine::flush(self)
     }
@@ -141,103 +176,79 @@ impl Serving for SharedEngine {
     fn stats(&self) -> String {
         SharedEngine::stats(self)
     }
-}
 
-/// Handle one already-parsed request line. Exposed for tests (no socket
-/// needed to verify protocol semantics) and generic over the serving
-/// flavour so both answer identically.
-pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String> {
-    let mut parts = line.split_whitespace();
-    let verb = parts.next().unwrap_or("");
-    match verb {
-        "PREDICT" => {
-            let (Some(i), Some(j)) = (parse(parts.next()), parse(parts.next())) else {
-                return Some("ERR usage: PREDICT <row> <col>".into());
-            };
-            match engine.predict(i, j) {
-                Some(p) => Some(format!("PRED {p:.4}")),
-                None => Some("ERR out-of-range".into()),
-            }
-        }
-        "MPREDICT" => {
-            let Some(i) = parse::<usize>(parts.next()) else {
-                return Some("ERR usage: MPREDICT <row> <col> [<col> ...]".into());
-            };
-            let mut cols: Vec<u32> = Vec::new();
-            for p in parts {
-                if cols.len() >= MAX_MPREDICT_COLS {
-                    return Some("ERR too-many-cols".into());
-                }
-                match p.parse::<u32>() {
-                    Ok(j) => cols.push(j),
-                    Err(_) => {
-                        return Some("ERR usage: MPREDICT <row> <col> [<col> ...]".into())
-                    }
-                }
-            }
-            if cols.is_empty() {
-                return Some("ERR usage: MPREDICT <row> <col> [<col> ...]".into());
-            }
-            match engine.predict_many(i, &cols) {
-                None => Some("ERR out-of-range".into()),
-                Some(preds) => {
-                    let body: Vec<String> = preds
-                        .iter()
-                        .map(|p| match p {
-                            Some(v) => format!("{v:.4}"),
-                            None => "-".into(),
-                        })
-                        .collect();
-                    Some(format!("PREDS {}", body.join(" ")))
-                }
-            }
-        }
-        "TOPN" => {
-            let (Some(i), Some(n)) = (parse(parts.next()), parse(parts.next())) else {
-                return Some("ERR usage: TOPN <row> <n>".into());
-            };
-            let recs = engine.top_n(i, n);
-            let body: Vec<String> = recs
-                .iter()
-                .map(|(j, s)| format!("{j}:{s:.4}"))
-                .collect();
-            Some(format!("TOPN {}", body.join(" ")))
-        }
-        "RATE" => {
-            let (Some(i), Some(j), Some(r)) = (
-                parse::<u32>(parts.next()),
-                parse::<u32>(parts.next()),
-                parse::<f32>(parts.next()),
-            ) else {
-                return Some("ERR usage: RATE <row> <col> <value>".into());
-            };
-            match engine.rate(i, j, r) {
-                IngestResult::Buffered => Some("OK buffered".into()),
-                IngestResult::Flushed { applied } => Some(format!("OK flushed {applied}")),
-                IngestResult::Rejected => Some("ERR backpressure".into()),
-                IngestResult::InvalidValue => Some("ERR invalid-value".into()),
-                IngestResult::OutOfBounds => Some("ERR out-of-bounds".into()),
-                // RATE always carries a payload, so a serving engine
-                // never answers `Ignored`; keep the match exhaustive.
-                IngestResult::Ignored => Some("OK ignored".into()),
-            }
-        }
-        "FLUSH" => {
-            let n = engine.flush();
-            Some(format!("OK flushed {n}"))
-        }
-        "STATS" => {
-            let stats = engine.stats();
-            Some(format!("{stats}END"))
-        }
-        "QUIT" => None,
-        "" => Some("ERR empty".into()),
-        other => Some(format!("ERR unknown verb `{other}`")),
+    fn registry(&self) -> Registry {
+        SharedEngine::metrics(self).clone()
     }
 }
 
-fn parse<T: std::str::FromStr>(s: Option<&str>) -> Option<T> {
-    s.and_then(|x| x.parse().ok())
+/// The single request dispatcher: every verb of every codec against
+/// every serving flavour funnels through here, so reply semantics are
+/// defined exactly once. Request-level validation that the text parser
+/// cannot express (a binary frame can carry `n = 0` or an oversized
+/// count) also lives here: `TOPN` with `n == 0` is a typed usage error
+/// and `n > MAX_TOPN_ITEMS` a typed cap error — previously both were
+/// silently satisfied.
+pub fn dispatch<S: Serving + ?Sized>(engine: &S, req: &Request) -> Response {
+    match req {
+        Request::Predict { row, col } => match engine.predict(*row, *col) {
+            Some(p) => Response::Pred(p),
+            None => Response::Error(ErrorKind::OutOfRange),
+        },
+        Request::MPredict { row, cols } => {
+            if cols.is_empty() {
+                return Response::Error(ErrorKind::Usage(MPREDICT_USAGE.into()));
+            }
+            if cols.len() > MAX_MPREDICT_COLS {
+                return Response::Error(ErrorKind::TooManyCols);
+            }
+            match engine.predict_many(*row, cols) {
+                Some(preds) => Response::Preds(preds),
+                None => Response::Error(ErrorKind::OutOfRange),
+            }
+        }
+        Request::TopN { row, n } => {
+            if *n == 0 {
+                return Response::Error(ErrorKind::Usage(TOPN_USAGE.into()));
+            }
+            if *n > MAX_TOPN_ITEMS {
+                return Response::Error(ErrorKind::TooManyItems);
+            }
+            Response::TopN(engine.top_n(*row, *n))
+        }
+        Request::Rate { row, col, value } => engine.rate(*row, *col, *value).into(),
+        Request::MRate { ratings } => {
+            if ratings.is_empty() {
+                return Response::Error(ErrorKind::Usage(MRATE_USAGE.into()));
+            }
+            if ratings.len() > MAX_MRATE_EVENTS {
+                return Response::Error(ErrorKind::TooManyEvents);
+            }
+            engine.rate_many(ratings).into()
+        }
+        Request::Flush => Response::Ok(OkBody::Flushed { applied: engine.flush() as u64 }),
+        Request::Stats => Response::Stats(engine.stats()),
+        Request::Shutdown => Response::Bye,
+    }
+}
+
+/// Handle one text request line. Exposed for tests (no socket needed to
+/// verify protocol semantics) and generic over the serving flavour so
+/// all answer identically; `None` means "close the connection" (`QUIT`).
+/// Thin composition over the typed layer: parse once, [`dispatch`]
+/// once, encode once.
+pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String> {
+    let response = match Request::parse_text(line) {
+        Ok(Request::Shutdown) => return None,
+        Ok(req) => dispatch(engine, &req),
+        Err(kind) => {
+            if matches!(kind, ErrorKind::UnknownVerb(_)) {
+                engine.registry().counter("server.unknown_verb").inc();
+            }
+            Response::Error(kind)
+        }
+    };
+    Some(response.encode_text())
 }
 
 /// Serve until `stop` flips true (checked between accepts; poke the
@@ -260,7 +271,8 @@ pub fn serve(
 }
 
 /// [`serve`] with an explicit column-band shard count for the snapshot
-/// publish (see [`SharedEngine::spawn_sharded`]).
+/// publish (see [`SharedEngine::spawn_sharded`]). Codec auto-detected
+/// per connection.
 pub fn serve_sharded(
     engine: Engine,
     listener: TcpListener,
@@ -268,15 +280,28 @@ pub fn serve_sharded(
     threads: usize,
     shards: usize,
 ) -> std::io::Result<Engine> {
+    serve_sharded_with(engine, listener, stop, threads, shards, CodecChoice::Auto)
+}
+
+/// [`serve_sharded`] with an explicit codec policy (`serve --codec`).
+pub fn serve_sharded_with(
+    engine: Engine,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    threads: usize,
+    shards: usize,
+    codec: CodecChoice,
+) -> std::io::Result<Engine> {
     let (shared, writer) = SharedEngine::spawn_sharded(engine, shards);
-    run_pool(shared, listener, stop, threads)?;
+    run_pool(shared, listener, stop, threads, codec)?;
     Ok(writer.join())
 }
 
 /// [`serve`] over the multi-writer ingest core: one write queue +
 /// writer thread per column band (`writers` is both the queue count and
 /// the snapshot shard count — see
-/// [`BandedEngine::spawn`](super::banded::BandedEngine::spawn)).
+/// [`BandedEngine::spawn`](super::banded::BandedEngine::spawn)). Codec
+/// auto-detected per connection.
 pub fn serve_banded(
     engine: Engine,
     listener: TcpListener,
@@ -284,8 +309,20 @@ pub fn serve_banded(
     threads: usize,
     writers: usize,
 ) -> std::io::Result<Engine> {
+    serve_banded_with(engine, listener, stop, threads, writers, CodecChoice::Auto)
+}
+
+/// [`serve_banded`] with an explicit codec policy (`serve --codec`).
+pub fn serve_banded_with(
+    engine: Engine,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    threads: usize,
+    writers: usize,
+    codec: CodecChoice,
+) -> std::io::Result<Engine> {
     let (banded, handle) = BandedEngine::spawn(engine, writers);
-    run_pool(banded, listener, stop, threads)?;
+    run_pool(banded, listener, stop, threads, codec)?;
     Ok(handle.join())
 }
 
@@ -297,6 +334,7 @@ fn run_pool<S>(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
     threads: usize,
+    codec: CodecChoice,
 ) -> std::io::Result<()>
 where
     S: Serving + Clone + Send + 'static,
@@ -318,7 +356,7 @@ where
             // silently shrink the pool until accepted connections hang
             // with no worker left to serve them.
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                handle_conn(&shared, stream)
+                handle_conn(&shared, stream, codec)
             }));
             match outcome {
                 Ok(Ok(())) => {}
@@ -350,20 +388,180 @@ where
     Ok(())
 }
 
-fn handle_conn<S: Serving + ?Sized>(engine: &S, stream: TcpStream) -> std::io::Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        match handle_line(engine, &line) {
-            Some(reply) => {
-                writer.write_all(reply.as_bytes())?;
-                writer.write_all(b"\n")?;
+/// Serve one connection on the configured codec. `Auto` peeks the first
+/// byte through the `BufReader` (nothing is consumed, so both codec
+/// loops start from byte zero): [`BINARY_FRAME_BYTE`] can never begin a
+/// text verb, so one byte decides.
+fn handle_conn<S: Serving + ?Sized>(
+    engine: &S,
+    stream: TcpStream,
+    codec: CodecChoice,
+) -> std::io::Result<()> {
+    let writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    match codec {
+        CodecChoice::Text => text_conn(engine, reader, writer),
+        CodecChoice::Binary => binary_conn(engine, reader, writer),
+        CodecChoice::Auto => {
+            let first = reader.fill_buf()?;
+            if first.is_empty() {
+                return Ok(()); // closed before the first byte
             }
-            None => break, // QUIT
+            if first[0] == BINARY_FRAME_BYTE {
+                binary_conn(engine, reader, writer)
+            } else {
+                text_conn(engine, reader, writer)
+            }
         }
     }
-    Ok(())
+}
+
+/// Most bytes one text request line may occupy — an order of magnitude
+/// above the longest legitimate line (a 256-triple `MRATE` is ~7 KiB),
+/// the text-side analogue of the binary codec's
+/// [`MAX_FRAME_PAYLOAD`](super::protocol::MAX_FRAME_PAYLOAD) cap. A
+/// newline-less flood used to accumulate without bound before the
+/// parser's caps could run.
+pub const MAX_TEXT_LINE_BYTES: usize = 64 * 1024;
+
+/// One capped text-line read.
+enum TextRead {
+    Line(String),
+    Eof,
+    /// The line outgrew [`MAX_TEXT_LINE_BYTES`] before a newline
+    /// arrived. Fatal per connection: the rest of the line cannot be
+    /// skipped without buffering it, so the server replies once and
+    /// closes.
+    Oversized,
+}
+
+/// Read one `\n`-terminated line (at most [`MAX_TEXT_LINE_BYTES`]
+/// bytes, trailing `\r` stripped) without ever buffering more than the
+/// cap — unlike `BufRead::lines`, which accumulates an unbounded line
+/// in memory first.
+fn read_text_line(reader: &mut impl BufRead, buf: &mut Vec<u8>) -> std::io::Result<TextRead> {
+    buf.clear();
+    loop {
+        let used;
+        let mut found = false;
+        {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                if buf.is_empty() {
+                    return Ok(TextRead::Eof);
+                }
+                break; // EOF mid-line: serve the partial final line
+            }
+            if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+                buf.extend_from_slice(&chunk[..pos]);
+                used = pos + 1;
+                found = true;
+            } else {
+                buf.extend_from_slice(chunk);
+                used = chunk.len();
+            }
+        }
+        reader.consume(used);
+        if found {
+            break;
+        }
+        if buf.len() > MAX_TEXT_LINE_BYTES {
+            return Ok(TextRead::Oversized);
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    match String::from_utf8(std::mem::take(buf)) {
+        Ok(line) => Ok(TextRead::Line(line)),
+        Err(_) => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "stream did not contain valid UTF-8",
+        )),
+    }
+}
+
+/// The text codec loop: one request line, one reply line, until `QUIT`
+/// or EOF. An oversized line (no newline within the cap) is counted
+/// into `server.malformed_frames`, answered with one typed error, and
+/// closes the connection.
+fn text_conn<S: Serving + ?Sized>(
+    engine: &S,
+    mut reader: impl BufRead,
+    mut writer: impl Write,
+) -> std::io::Result<()> {
+    let mut buf = Vec::new();
+    loop {
+        match read_text_line(&mut reader, &mut buf)? {
+            TextRead::Eof => return Ok(()),
+            TextRead::Oversized => {
+                engine.registry().counter("server.malformed_frames").inc();
+                let resp = Response::Error(ErrorKind::MalformedFrame(format!(
+                    "text line exceeds {MAX_TEXT_LINE_BYTES} bytes"
+                )));
+                writer.write_all(resp.encode_text().as_bytes())?;
+                writer.write_all(b"\n")?;
+                return Ok(());
+            }
+            TextRead::Line(line) => match handle_line(engine, &line) {
+                Some(reply) => {
+                    writer.write_all(reply.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                }
+                None => return Ok(()), // QUIT
+            },
+        }
+    }
+}
+
+/// The binary codec loop: length-prefixed frames, pipelined — the
+/// client may keep many requests in flight; replies go back in order,
+/// each tagged with its request's sequence id. An unreadable frame is
+/// fatal for the connection (framing is lost): the server counts it,
+/// replies [`ErrorKind::MalformedFrame`] once with sequence id 0, and
+/// closes. A `SHUTDOWN` request is acked with [`Response::Bye`] before
+/// the close.
+fn binary_conn<S: Serving + ?Sized>(
+    engine: &S,
+    mut reader: impl BufRead,
+    mut writer: impl Write,
+) -> std::io::Result<()> {
+    let registry = engine.registry();
+    loop {
+        match read_frame(&mut reader)? {
+            FrameRead::Eof => return Ok(()),
+            FrameRead::Malformed(detail) => {
+                registry.counter("server.malformed_frames").inc();
+                let resp = Response::Error(ErrorKind::MalformedFrame(detail));
+                writer.write_all(&resp.encode_frame(0))?;
+                writer.flush()?;
+                return Ok(());
+            }
+            FrameRead::Frame(frame) => {
+                let response = match Request::decode_frame(&frame) {
+                    Ok(req) => dispatch(engine, &req),
+                    Err(kind) => {
+                        match &kind {
+                            ErrorKind::UnknownVerb(_) => {
+                                registry.counter("server.unknown_verb").inc();
+                            }
+                            ErrorKind::MalformedFrame(_) => {
+                                registry.counter("server.malformed_frames").inc();
+                            }
+                            _ => {}
+                        }
+                        Response::Error(kind)
+                    }
+                };
+                let bye = matches!(response, Response::Bye);
+                writer.write_all(&response.encode_frame(frame.seq))?;
+                if bye {
+                    writer.flush()?;
+                    return Ok(());
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -444,6 +642,122 @@ mod tests {
         assert_eq!(handle_line(&e, &flood).unwrap(), "ERR too-many-cols");
         let full = format!("MPREDICT 0{}", " 1".repeat(MAX_MPREDICT_COLS));
         assert!(handle_line(&e, &full).unwrap().starts_with("PREDS "));
+    }
+
+    /// `TOPN` no longer silently satisfies degenerate `n`: zero is a
+    /// typed usage error, an oversized ask a typed cap error — a single
+    /// request line cannot demand a full-catalog ranking.
+    #[test]
+    fn topn_rejects_zero_and_oversized_n() {
+        let mut rng = Rng::seeded(78);
+        let e = engine(&mut rng);
+        assert_eq!(handle_line(&e, "TOPN 0 0").unwrap(), "ERR usage: TOPN <row> <n>");
+        assert_eq!(
+            handle_line(&e, &format!("TOPN 0 {}", MAX_TOPN_ITEMS + 1)).unwrap(),
+            "ERR too-many-items"
+        );
+        // the cap itself is fine
+        let reply = handle_line(&e, &format!("TOPN 0 {MAX_TOPN_ITEMS}")).unwrap();
+        assert!(reply.starts_with("TOPN "), "{reply}");
+    }
+
+    /// The `MRATE` batch verb over text: one line, one reply for the
+    /// whole batch, with the same `OK`/`ERR` vocabulary as `RATE`.
+    #[test]
+    fn mrate_verb_batches_on_one_line() {
+        let mut rng = Rng::seeded(79);
+        let e = engine(&mut rng);
+        assert_eq!(handle_line(&e, "MRATE 0 1 4.5 1 2 3.0").unwrap(), "OK buffered");
+        assert_eq!(handle_line(&e, "FLUSH").unwrap(), "OK flushed 2");
+        // one bad value refuses the whole batch
+        assert_eq!(handle_line(&e, "MRATE 0 1 4.5 0 2 NaN").unwrap(), "ERR invalid-value");
+        assert_eq!(
+            handle_line(&e, "MRATE 0 1 4.5 4000000000 0 3.0").unwrap(),
+            "ERR out-of-bounds"
+        );
+        assert_eq!(handle_line(&e, "FLUSH").unwrap(), "OK flushed 0");
+        // malformed: a trailing partial triple
+        assert!(handle_line(&e, "MRATE 0 1").unwrap().starts_with("ERR usage: MRATE"));
+        assert!(handle_line(&e, "MRATE").unwrap().starts_with("ERR usage: MRATE"));
+        // the batch cap is typed
+        let flood = format!("MRATE{}", " 1 1 1.0".repeat(MAX_MRATE_EVENTS + 1));
+        assert_eq!(handle_line(&e, &flood).unwrap(), "ERR too-many-events");
+    }
+
+    /// `dispatch` is the single reply-semantics authority: the same
+    /// request arriving as a typed value (the binary path) against one
+    /// twin engine answers exactly what the text line answers against
+    /// the other — including the stateful verbs.
+    #[test]
+    fn dispatch_matches_handle_line() {
+        let mut rng_a = Rng::seeded(80);
+        let typed = engine(&mut rng_a);
+        let mut rng_b = Rng::seeded(80);
+        let texted = engine(&mut rng_b);
+        let cases: Vec<(Request, &str)> = vec![
+            (Request::Predict { row: 0, col: 0 }, "PREDICT 0 0"),
+            (Request::Predict { row: 999, col: 0 }, "PREDICT 999 0"),
+            (Request::MPredict { row: 0, cols: vec![0, 1, 999] }, "MPREDICT 0 0 1 999"),
+            (Request::TopN { row: 0, n: 3 }, "TOPN 0 3"),
+            (Request::Rate { row: 0, col: 5, value: 4.5 }, "RATE 0 5 4.5"),
+            (
+                Request::MRate { ratings: vec![(0, 6, 2.0), (1, 7, 3.0)] },
+                "MRATE 0 6 2 1 7 3",
+            ),
+            (Request::Flush, "FLUSH"),
+            (Request::Stats, "STATS"),
+            (Request::Predict { row: 0, col: 6 }, "PREDICT 0 6"),
+        ];
+        for (req, line) in cases {
+            assert_eq!(
+                dispatch(&typed, &req).encode_text(),
+                handle_line(&texted, line).unwrap(),
+                "{line}"
+            );
+        }
+        // SHUTDOWN: the typed reply is Bye; the text loop closes instead
+        assert_eq!(dispatch(&typed, &Request::Shutdown), Response::Bye);
+        assert!(handle_line(&texted, "QUIT").is_none());
+        assert!(handle_line(&texted, "SHUTDOWN").is_none());
+    }
+
+    /// Unknown verbs are counted — operators can see protocol abuse in
+    /// `STATS`.
+    #[test]
+    fn unknown_verbs_are_counted() {
+        let mut rng = Rng::seeded(81);
+        let e = engine(&mut rng);
+        assert!(handle_line(&e, "FROBNICATE 1 2").unwrap().starts_with("ERR unknown"));
+        assert!(handle_line(&e, "BOGUS").unwrap().starts_with("ERR unknown"));
+        let stats = handle_line(&e, "STATS").unwrap();
+        assert!(stats.contains("counter server.unknown_verb 2"), "{stats}");
+    }
+
+    /// A newline-less flood cannot make the text loop buffer without
+    /// bound: the line is refused at [`MAX_TEXT_LINE_BYTES`] with one
+    /// typed error, the connection closes (the request after it never
+    /// runs), and the abuse is counted.
+    #[test]
+    fn oversized_text_line_is_refused_and_closes() {
+        let mut rng = Rng::seeded(82);
+        let e = engine(&mut rng);
+        let mut input = vec![b'A'; MAX_TEXT_LINE_BYTES + 100];
+        input.extend_from_slice(b"\nPREDICT 0 0\n");
+        let mut out = Vec::new();
+        text_conn(&e, &input[..], &mut out).unwrap();
+        let reply = String::from_utf8(out).unwrap();
+        assert!(
+            reply.starts_with("ERR malformed-frame: text line exceeds"),
+            "{reply}"
+        );
+        assert_eq!(reply.lines().count(), 1, "connection closed after the error");
+        let stats = handle_line(&e, "STATS").unwrap();
+        assert!(stats.contains("counter server.malformed_frames 1"), "{stats}");
+        // a legitimate long-but-capped line still serves
+        let full = format!("MPREDICT 0{}", " 1".repeat(MAX_MPREDICT_COLS));
+        let mut out = Vec::new();
+        text_conn(&e, format!("{full}\nQUIT\n").as_bytes(), &mut out).unwrap();
+        assert!(String::from_utf8(out).unwrap().starts_with("PREDS "));
     }
 
     /// A NaN wire value parses but is refused before it can poison the

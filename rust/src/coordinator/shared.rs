@@ -236,6 +236,7 @@ impl PublishMetrics {
 /// A write-path request for the single writer thread.
 enum WriteCmd {
     Rate { i: u32, j: u32, r: f32, reply: Sender<IngestResult> },
+    RateMany { batch: Vec<(u32, u32, f32)>, reply: Sender<IngestResult> },
     Flush { reply: Sender<usize> },
     Shutdown,
 }
@@ -290,6 +291,12 @@ impl SharedEngine {
         };
         let shared = SharedEngine { state, tx: tx.clone(), clamp, metrics };
         (shared, WriterHandle { handle, tx })
+    }
+
+    /// The engine's metric registry (shared with the writer thread and
+    /// the TCP front end).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 
     /// Clone the current snapshot out of the lock (held only for the
@@ -354,6 +361,28 @@ impl SharedEngine {
         if self.tx.send(WriteCmd::Rate { i, j, r, reply: reply_tx }).is_err() {
             // Writer is gone (shutdown): surface as backpressure rather
             // than panicking a connection thread.
+            return IngestResult::Rejected;
+        }
+        let result = reply_rx.recv().unwrap_or(IngestResult::Rejected);
+        drop(timer);
+        result
+    }
+
+    /// Batch-ingest ratings through the single-writer online path (the
+    /// `MRATE` verb): one writer round-trip for the whole batch, which
+    /// is validated and admitted as a unit with backpressure capacity
+    /// reserved once ([`Engine::rate_many`]). An empty batch answers
+    /// [`IngestResult::Ignored`] — the same no-payload contract as the
+    /// multi-writer path.
+    pub fn rate_many(&self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        self.metrics.counter("server.mrate").inc();
+        let timer = self.metrics.timer("shared.write_wait");
+        let (reply_tx, reply_rx) = channel();
+        if self
+            .tx
+            .send(WriteCmd::RateMany { batch: batch.to_vec(), reply: reply_tx })
+            .is_err()
+        {
             return IngestResult::Rejected;
         }
         let result = reply_rx.recv().unwrap_or(IngestResult::Rejected);
@@ -443,6 +472,22 @@ fn writer_loop(
                     }
                     // Rejected / InvalidValue / OutOfBounds never enter
                     // the buffer: nothing to track or republish.
+                    _ => {}
+                }
+                let _ = reply.send(result);
+            }
+            WriteCmd::RateMany { batch, reply } => {
+                let result = engine.rate_many(&batch);
+                match result {
+                    IngestResult::Buffered => {
+                        current.note_buffered(engine.buffered());
+                    }
+                    IngestResult::Flushed { .. } => {
+                        current = publish(&state, &engine, version, &pm);
+                        version += 1;
+                    }
+                    // Rejected / InvalidValue / OutOfBounds / Ignored
+                    // leave the buffer untouched: nothing to publish.
                     _ => {}
                 }
                 let _ = reply.send(result);
@@ -686,6 +731,65 @@ mod tests {
         assert_eq!(shared.dims(), (m0, n0 + 1), "snapshot must hold the drained state");
         let p = shared.predict(0, n0).expect("drained rating must be servable");
         assert!((1.0..=5.0).contains(&p));
+    }
+
+    /// `MRATE` through the writer: the batch is one round-trip, one
+    /// validation unit, one backpressure reservation — and a flush it
+    /// triggers publishes exactly like the single-event path.
+    #[test]
+    fn rate_many_round_trips_and_publishes() {
+        let mut rng = Rng::seeded(98);
+        let e = engine(&mut rng, StreamConfig { batch_size: 4, ..Default::default() });
+        let (shared, writer) = SharedEngine::spawn(e);
+        assert_eq!(shared.rate_many(&[]), IngestResult::Ignored);
+        assert_eq!(shared.buffered(), 0);
+        assert_eq!(
+            shared.rate_many(&[(0, 0, 3.0), (0, 1, f32::NAN)]),
+            IngestResult::InvalidValue,
+            "one bad value refuses the whole batch"
+        );
+        assert_eq!(shared.buffered(), 0);
+        assert_eq!(
+            shared.rate_many(&[(0, 0, 3.0), (1, 1, 4.0)]),
+            IngestResult::Buffered
+        );
+        assert_eq!(shared.buffered(), 2);
+        assert_eq!(shared.version(), 0);
+        // crossing batch_size inside one batch flushes and publishes
+        assert_eq!(
+            shared.rate_many(&[(2, 2, 2.0), (3, 3, 5.0)]),
+            IngestResult::Flushed { applied: 4 }
+        );
+        assert_eq!(shared.version(), 1);
+        assert_eq!(shared.buffered(), 0);
+        writer.join();
+    }
+
+    /// Batch backpressure through the writer: reserved once, rejected
+    /// whole.
+    #[test]
+    fn rate_many_backpressure_is_batch_atomic() {
+        let mut rng = Rng::seeded(99);
+        let e = engine(
+            &mut rng,
+            StreamConfig {
+                queue_capacity: 3,
+                batch_size: 100,
+                reject_when_full: true,
+                ..Default::default()
+            },
+        );
+        let (shared, writer) = SharedEngine::spawn(e);
+        assert_eq!(shared.rate_many(&[(0, 1, 3.0), (0, 2, 3.0)]), IngestResult::Buffered);
+        assert_eq!(
+            shared.rate_many(&[(0, 3, 3.0), (0, 4, 3.0)]),
+            IngestResult::Rejected,
+            "2 buffered + 2 > 3: the whole batch must reject"
+        );
+        assert_eq!(shared.buffered(), 2, "no partial admission");
+        assert_eq!(shared.rate_many(&[(0, 3, 3.0)]), IngestResult::Buffered);
+        shared.flush();
+        writer.join();
     }
 
     #[test]

@@ -307,6 +307,50 @@ impl StreamOrchestrator {
         }
     }
 
+    /// Vectorized ingest (the `MRATE` verb): admit a whole batch as one
+    /// unit. Validation is all-or-nothing — one non-finite value or
+    /// out-of-bounds id refuses the entire batch with nothing buffered
+    /// (per-event checks run in the same value-then-bounds order as
+    /// [`StreamOrchestrator::ingest`], so a batch's reply matches the
+    /// first single-event reply its events would produce) — and
+    /// backpressure capacity is reserved **once per batch**: with
+    /// `reject_when_full`, the batch is rejected unless the buffer can
+    /// hold all of it. An empty batch is [`IngestResult::Ignored`] —
+    /// nothing buffered, nothing applied — on every write path.
+    pub fn ingest_batch(&mut self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        if batch.is_empty() {
+            return IngestResult::Ignored;
+        }
+        for &(i, j, r) in batch {
+            if !r.is_finite() {
+                self.metrics.counter("stream.invalid_value").inc();
+                return IngestResult::InvalidValue;
+            }
+            if i as usize >= self.cfg.max_rows || j as usize >= self.cfg.max_cols {
+                self.metrics.counter("stream.out_of_bounds").inc();
+                return IngestResult::OutOfBounds;
+            }
+        }
+        let mut applied = 0usize;
+        if self.buffer.len() + batch.len() > self.cfg.queue_capacity {
+            if self.cfg.reject_when_full {
+                self.metrics.counter("stream.rejected").inc();
+                return IngestResult::Rejected;
+            }
+            applied += self.flush();
+        }
+        self.buffer.extend_from_slice(batch);
+        self.metrics.counter("stream.ingested").add(batch.len() as u64);
+        if self.buffer.len() >= self.cfg.batch_size {
+            applied += self.flush();
+        }
+        if applied > 0 {
+            IngestResult::Flushed { applied }
+        } else {
+            IngestResult::Buffered
+        }
+    }
+
     /// Apply all buffered events through Algorithm 4. Re-ratings of a
     /// stored cell are last-write-wins: they overwrite the stored value
     /// (stable `nnz`, unskewed `mean()`, no duplicate neighbourhood
@@ -609,6 +653,121 @@ mod tests {
             .map(|(_, r)| r)
             .unwrap();
         assert_eq!(stored, 4.0, "last write wins");
+    }
+
+    /// `ingest_batch` admits a batch as one unit: all-or-nothing
+    /// validation, capacity reserved once, and a reply equivalent to the
+    /// event-by-event sequence when nothing rejects.
+    #[test]
+    fn batch_ingest_is_all_or_nothing() {
+        let mut rng = Rng::seeded(61);
+        let mut orch = setup(&mut rng);
+        // empty batch: nothing to ingest, and it says so
+        assert_eq!(orch.ingest_batch(&[]), IngestResult::Ignored);
+        // one bad value poisons the whole batch — nothing buffers
+        assert_eq!(
+            orch.ingest_batch(&[(0, 1, 3.0), (0, 2, f32::NAN)]),
+            IngestResult::InvalidValue
+        );
+        assert_eq!(orch.buffered(), 0);
+        orch.cfg.max_cols = 50;
+        assert_eq!(
+            orch.ingest_batch(&[(0, 1, 3.0), (0, 50, 3.0)]),
+            IngestResult::OutOfBounds
+        );
+        assert_eq!(orch.buffered(), 0);
+        // value check wins over the bounds check, per-event in order,
+        // exactly like the single-event path
+        assert_eq!(
+            orch.ingest_batch(&[(0, 50, f32::NAN), (0, 1, 3.0)]),
+            IngestResult::InvalidValue
+        );
+        // a clean batch buffers wholesale (batch_size 8 not yet hit)
+        assert_eq!(
+            orch.ingest_batch(&[(0, 1, 3.0), (0, 2, 4.0), (0, 3, 5.0)]),
+            IngestResult::Buffered
+        );
+        assert_eq!(orch.buffered(), 3);
+        // crossing batch_size flushes everything buffered
+        let batch: Vec<(u32, u32, f32)> = (0..5).map(|k| (1, k, 2.0)).collect();
+        assert_eq!(orch.ingest_batch(&batch), IngestResult::Flushed { applied: 8 });
+        assert_eq!(orch.buffered(), 0);
+    }
+
+    /// Backpressure is reserved once per batch: a batch that cannot fit
+    /// in its entirety is rejected in its entirety.
+    #[test]
+    fn batch_ingest_reserves_capacity_once() {
+        let mut rng = Rng::seeded(62);
+        let mut orch = setup(&mut rng);
+        orch.cfg.reject_when_full = true;
+        orch.cfg.queue_capacity = 4;
+        orch.cfg.batch_size = 100;
+        assert_eq!(orch.ingest_batch(&[(0, 0, 3.0), (0, 1, 3.0)]), IngestResult::Buffered);
+        // 3 more would make 5 > 4: whole batch rejected, nothing partial
+        assert_eq!(
+            orch.ingest_batch(&[(0, 2, 3.0), (0, 3, 3.0), (0, 4, 3.0)]),
+            IngestResult::Rejected
+        );
+        assert_eq!(orch.buffered(), 2);
+        // exactly filling the remaining capacity is accepted
+        assert_eq!(orch.ingest_batch(&[(0, 2, 3.0), (0, 3, 3.0)]), IngestResult::Buffered);
+        assert_eq!(orch.buffered(), 4);
+        assert_eq!(orch.ingest_batch(&[(0, 9, 3.0)]), IngestResult::Rejected);
+        orch.ingest(Event::Flush);
+        assert_eq!(orch.ingest_batch(&[(0, 9, 3.0)]), IngestResult::Buffered);
+    }
+
+    /// Without `reject_when_full`, an oversized batch flushes the
+    /// backlog first (the capacity contract) and reports the total it
+    /// caused to apply.
+    #[test]
+    fn batch_ingest_auto_flushes_at_capacity() {
+        let mut rng = Rng::seeded(63);
+        let mut orch = setup(&mut rng);
+        orch.cfg.queue_capacity = 4;
+        orch.cfg.batch_size = 100;
+        assert_eq!(
+            orch.ingest_batch(&[(0, 0, 3.0), (0, 1, 3.0), (0, 2, 3.0)]),
+            IngestResult::Buffered
+        );
+        // 3 buffered + 2 new > 4: the backlog flushes, the batch buffers
+        assert_eq!(
+            orch.ingest_batch(&[(0, 3, 3.0), (1, 0, 2.0)]),
+            IngestResult::Flushed { applied: 3 }
+        );
+        assert_eq!(orch.buffered(), 2);
+    }
+
+    /// A batch applies identically to the equivalent event sequence
+    /// (same dims, same flush totals) — `MRATE` is a transport
+    /// optimization, not a semantic fork.
+    #[test]
+    fn batch_ingest_matches_event_sequence() {
+        let script: Vec<(u32, u32, f32)> =
+            (0..12).map(|k| (k % 5, (k * 3) % 25, 1.0 + (k % 4) as f32)).collect();
+        let applied_of = |r: IngestResult| match r {
+            IngestResult::Flushed { applied } => applied,
+            _ => 0,
+        };
+        let mut rng_a = Rng::seeded(64);
+        let mut one = setup(&mut rng_a);
+        let mut total_one = 0usize;
+        for &(i, j, r) in &script {
+            total_one += applied_of(one.ingest(Event::Rate(i, j, r)));
+        }
+        total_one += one.flush();
+        let mut rng_b = Rng::seeded(64);
+        let mut batched = setup(&mut rng_b);
+        let mut total_batch = applied_of(batched.ingest_batch(&script));
+        total_batch += batched.flush();
+        // 12 distinct cells at batch_size 8: the single path flushes
+        // mid-stream (8) then on drain (4), the batch path at admission
+        // (12); totals and resulting universes must agree
+        assert_eq!(total_one, 12);
+        assert_eq!(total_batch, 12);
+        assert_eq!(one.dims(), batched.dims());
+        assert_eq!(one.matrix().nnz(), batched.matrix().nnz());
     }
 
     #[test]

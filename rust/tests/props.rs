@@ -2,6 +2,11 @@
 //! in-repo `lshmf::prop` mini-framework (proptest is unavailable offline).
 
 use lshmf::coordinator::banded::BandedEngine;
+use lshmf::coordinator::protocol::{
+    read_frame, ErrorKind, FrameRead, OkBody, Request, Response, MAX_MPREDICT_COLS,
+    MAX_MRATE_EVENTS, MAX_TOPN_ITEMS, MPREDICT_USAGE, MRATE_USAGE, PREDICT_USAGE,
+    RATE_USAGE, TOPN_USAGE,
+};
 use lshmf::coordinator::rotation::RotationPlan;
 use lshmf::coordinator::server::handle_line;
 use lshmf::coordinator::shared::SharedEngine;
@@ -186,7 +191,7 @@ fn prop_sharded_serving_matches_mutex_engine() {
             SharedEngine::spawn_sharded(serving_engine(seed, stream_cfg), shards);
         let mut ok = true;
         for _ in 0..g.usize(20..=50) {
-            let line = match g.usize(0..=4) {
+            let line = match g.usize(0..=5) {
                 0 => format!("PREDICT {} {}", g.usize(0..=35), g.usize(0..=20)),
                 1 => format!("TOPN {} {}", g.usize(0..=35), g.usize(1..=8)),
                 2 => format!(
@@ -208,6 +213,24 @@ fn prop_sharded_serving_matches_mutex_engine() {
                         g.usize(0..=33) as u32
                     };
                     format!("RATE {i} {} {r}", g.usize(0..=18))
+                }
+                4 => {
+                    // MRATE batches (occasionally poisoned) must answer
+                    // identically too: one admission unit per line
+                    let mut line = "MRATE".to_string();
+                    for _ in 0..g.usize(1..=4) {
+                        let r = if g.usize(0..=11) == 0 {
+                            "NaN".to_string()
+                        } else {
+                            format!("{:.1}", 1.0 + g.usize(0..=8) as f32 * 0.5)
+                        };
+                        line.push_str(&format!(
+                            " {} {} {r}",
+                            g.usize(0..=33),
+                            g.usize(0..=18)
+                        ));
+                    }
+                    line
                 }
                 _ => "FLUSH".to_string(),
             };
@@ -249,7 +272,7 @@ fn prop_banded_multi_writer_matches_mutex_engine() {
         let mut ok = true;
         let mut grow_step = 0u32;
         for _ in 0..g.usize(25..=55) {
-            let line = match g.usize(0..=5) {
+            let line = match g.usize(0..=6) {
                 0 => format!("PREDICT {} {}", g.usize(0..=35), g.usize(0..=40)),
                 1 => format!("TOPN {} {}", g.usize(0..=35), g.usize(1..=8)),
                 2 => format!(
@@ -282,6 +305,26 @@ fn prop_banded_multi_writer_matches_mutex_engine() {
                         15 + (grow_step * 5) % 23
                     )
                 }
+                5 => {
+                    // MRATE batches spanning bands (and occasionally
+                    // growing the universe) must stay bit-identical:
+                    // the batch is one cross-band admission unit
+                    grow_step += 1;
+                    let mut line = "MRATE".to_string();
+                    for k in 0..g.usize(1..=4) {
+                        let j = if k == 0 && g.usize(0..=3) == 0 {
+                            15 + (grow_step * 3) % 23 // growth column
+                        } else {
+                            g.usize(0..=18) as u32
+                        };
+                        line.push_str(&format!(
+                            " {} {j} {:.1}",
+                            g.usize(0..=33),
+                            1.0 + g.usize(0..=8) as f32 * 0.5
+                        ));
+                    }
+                    line
+                }
                 _ => "FLUSH".to_string(),
             };
             let a = handle_line(&single, &line);
@@ -296,6 +339,146 @@ fn prop_banded_multi_writer_matches_mutex_engine() {
         }
         handle.join();
         ok
+    });
+}
+
+// ---------------------------------------------------------- protocol codecs
+
+/// A finite f32 whose `Display` form round-trips exactly (any finite
+/// float does — Rust prints the shortest decimal that re-parses to the
+/// same bits).
+fn gen_finite_f32(g: &mut Gen) -> f32 {
+    g.f32(-1e6, 1e6)
+}
+
+/// A float exactly representable in 4 decimal digits (k/16), so the
+/// text codec's lossy `{:.4}` reply forms round-trip bit-exactly.
+fn gen_quantized_f32(g: &mut Gen) -> f32 {
+    (g.u32(0..160_001) as f32) / 16.0 - 5000.0
+}
+
+fn gen_request(g: &mut Gen) -> Request {
+    match g.usize(0..=7) {
+        0 => Request::Predict { row: g.usize(0..=1 << 20), col: g.usize(0..=1 << 20) },
+        1 => Request::MPredict {
+            row: g.usize(0..=1 << 20),
+            cols: g.vec(1..=MAX_MPREDICT_COLS.min(48), |g| g.u32(0..1 << 24)),
+        },
+        2 => Request::TopN { row: g.usize(0..=1 << 20), n: g.usize(1..=MAX_TOPN_ITEMS) },
+        3 => Request::Rate {
+            row: g.u32(0..1 << 24),
+            col: g.u32(0..1 << 24),
+            value: gen_finite_f32(g),
+        },
+        4 => Request::MRate {
+            ratings: g.vec(1..=MAX_MRATE_EVENTS.min(48), |g| {
+                (g.u32(0..1 << 24), g.u32(0..1 << 24), gen_finite_f32(g))
+            }),
+        },
+        5 => Request::Flush,
+        6 => Request::Stats,
+        _ => Request::Shutdown,
+    }
+}
+
+fn gen_error_kind(g: &mut Gen) -> ErrorKind {
+    let words = ["flood", "verb", "frame", "cap", "probe"];
+    match g.usize(0..=10) {
+        0 => ErrorKind::OutOfRange,
+        1 => ErrorKind::TooManyCols,
+        2 => ErrorKind::TooManyItems,
+        3 => ErrorKind::TooManyEvents,
+        4 => ErrorKind::Backpressure,
+        5 => ErrorKind::InvalidValue,
+        6 => ErrorKind::OutOfBounds,
+        7 => ErrorKind::Empty,
+        8 => ErrorKind::UnknownVerb(g.choose(&words).to_string()),
+        9 => {
+            let usages = [PREDICT_USAGE, MPREDICT_USAGE, TOPN_USAGE, RATE_USAGE, MRATE_USAGE];
+            ErrorKind::Usage(g.choose(&usages).to_string())
+        }
+        _ => ErrorKind::MalformedFrame(format!("truncated {} payload", g.choose(&words))),
+    }
+}
+
+fn gen_response(g: &mut Gen) -> Response {
+    match g.usize(0..=6) {
+        0 => Response::Pred(gen_quantized_f32(g)),
+        1 => Response::Preds(g.vec(1..=48, |g| {
+            if g.bool() {
+                Some(gen_quantized_f32(g))
+            } else {
+                None
+            }
+        })),
+        2 => Response::TopN(g.vec(0..=24, |g| (g.u32(0..1 << 24), gen_quantized_f32(g)))),
+        3 => Response::Ok(match g.usize(0..=2) {
+            0 => OkBody::Buffered,
+            1 => OkBody::Flushed { applied: g.usize(0..=1 << 20) as u64 },
+            _ => OkBody::Ignored,
+        }),
+        // a realistic stats body: starts with `dims` (never colliding
+        // with a structured reply prefix), newline-terminated lines
+        4 => Response::Stats(format!(
+            "dims {}x{}\nbuffered {}\nversion {}\ncounter server.rate {}\n",
+            g.usize(1..=4096),
+            g.usize(1..=4096),
+            g.usize(0..=65536),
+            g.usize(0..=1 << 20),
+            g.usize(0..=1 << 20),
+        )),
+        5 => Response::Error(gen_error_kind(g)),
+        _ => Response::Bye,
+    }
+}
+
+fn binary_roundtrip_request(req: &Request) -> Option<Request> {
+    let bytes = req.encode_frame(123);
+    let mut cursor = &bytes[..];
+    match read_frame(&mut cursor).ok()? {
+        FrameRead::Frame(f) if f.seq == 123 => Request::decode_frame(&f).ok(),
+        _ => None,
+    }
+}
+
+fn binary_roundtrip_response(resp: &Response) -> Option<Response> {
+    let bytes = resp.encode_frame(321);
+    let mut cursor = &bytes[..];
+    match read_frame(&mut cursor).ok()? {
+        FrameRead::Frame(f) if f.seq == 321 => Response::decode_frame(&f).ok(),
+        _ => None,
+    }
+}
+
+/// Codec round-trip: an arbitrary `Request` survives encode → decode on
+/// both codecs. Text `Display` floats re-parse to identical bits; the
+/// binary codec is bit-exact by construction.
+#[test]
+fn prop_request_roundtrips_on_both_codecs() {
+    check("request codec roundtrip", 200, |g| {
+        let req = gen_request(g);
+        let text_ok = Request::parse_text(&req.encode_text()) == Ok(req.clone());
+        let binary_ok = binary_roundtrip_request(&req) == Some(req.clone());
+        if !(text_ok && binary_ok) {
+            eprintln!("codec roundtrip failed (text {text_ok}, binary {binary_ok}): {req:?}");
+        }
+        text_ok && binary_ok
+    });
+}
+
+/// Codec round-trip for responses, including every `ErrorKind` wire
+/// form, multi-line stats bodies, and the `{:.4}`-quantized reply
+/// floats the text codec can carry exactly.
+#[test]
+fn prop_response_roundtrips_on_both_codecs() {
+    check("response codec roundtrip", 200, |g| {
+        let resp = gen_response(g);
+        let text_ok = Response::decode_text(&resp.encode_text()) == Ok(resp.clone());
+        let binary_ok = binary_roundtrip_response(&resp) == Some(resp.clone());
+        if !(text_ok && binary_ok) {
+            eprintln!("codec roundtrip failed (text {text_ok}, binary {binary_ok}): {resp:?}");
+        }
+        text_ok && binary_ok
     });
 }
 

@@ -5,7 +5,12 @@
 //! hold exactly at `queue_capacity`.
 
 use lshmf::coordinator::banded::BandedEngine;
-use lshmf::coordinator::server::{self, handle_line};
+use lshmf::coordinator::client::{ClientCodec, LshmfClient};
+use lshmf::coordinator::protocol::{
+    read_frame, CodecChoice, ErrorKind, FrameRead, OkBody, Request, Response,
+    BINARY_FRAME_BYTE, MAX_MPREDICT_COLS, MAX_MRATE_EVENTS, MAX_TOPN_ITEMS,
+};
+use lshmf::coordinator::server::{self, dispatch, handle_line, Serving};
 use lshmf::coordinator::shared::SharedEngine;
 use lshmf::coordinator::stream::{IngestResult, StreamConfig, StreamOrchestrator};
 use lshmf::coordinator::Engine;
@@ -280,6 +285,333 @@ fn banded_readers_progress_during_concurrent_band_writes() {
     assert!(m >= 31 && n >= 16, "growth applied: {m}x{n}");
     assert_eq!(banded.dims(), (m, n), "drained state republished");
     assert!(banded.version() >= 1);
+}
+
+/// Every [`ErrorKind`] wire form, on both codecs, against all three
+/// serving flavours. The text form must be the exact legacy `ERR`
+/// string; the binary form must round-trip encode → decode to the same
+/// typed kind; and the three flavours must agree on every reply.
+#[test]
+fn error_kinds_cover_both_codecs_and_all_flavours() {
+    // capacity 1 + reject_when_full so backpressure is reachable; the
+    // default max_rows/max_cols (1<<24) make 4e9 out-of-bounds
+    let cfg = StreamConfig {
+        queue_capacity: 1,
+        batch_size: 100,
+        reject_when_full: true,
+        ..Default::default()
+    };
+    let mutex_engine = std::sync::Mutex::new(engine(31, cfg.clone()));
+    let (shared, shared_writer) = SharedEngine::spawn(engine(31, cfg.clone()));
+    let (banded, banded_handle) = BandedEngine::spawn(engine(31, cfg), 3);
+    let flavours: Vec<(&str, &dyn Serving)> =
+        vec![("mutex", &mutex_engine), ("shared", &shared), ("banded", &banded)];
+
+    // (request line, typed request if expressible, expected kind)
+    let flood_cols = format!("MPREDICT 0{}", " 1".repeat(MAX_MPREDICT_COLS + 1));
+    let flood_events = format!("MRATE{}", " 1 1 1.0".repeat(MAX_MRATE_EVENTS + 1));
+    let cases: Vec<(String, Option<Request>, ErrorKind)> = vec![
+        (
+            "PREDICT 999 0".into(),
+            Some(Request::Predict { row: 999, col: 0 }),
+            ErrorKind::OutOfRange,
+        ),
+        (
+            "MPREDICT 999 0 1".into(),
+            Some(Request::MPredict { row: 999, cols: vec![0, 1] }),
+            ErrorKind::OutOfRange,
+        ),
+        (
+            flood_cols,
+            Some(Request::MPredict { row: 0, cols: vec![1; MAX_MPREDICT_COLS + 1] }),
+            ErrorKind::TooManyCols,
+        ),
+        (
+            "TOPN 0 0".into(),
+            Some(Request::TopN { row: 0, n: 0 }),
+            ErrorKind::Usage("TOPN <row> <n>".into()),
+        ),
+        (
+            format!("TOPN 0 {}", MAX_TOPN_ITEMS + 1),
+            Some(Request::TopN { row: 0, n: MAX_TOPN_ITEMS + 1 }),
+            ErrorKind::TooManyItems,
+        ),
+        (
+            "RATE 0 0 NaN".into(),
+            Some(Request::Rate { row: 0, col: 0, value: f32::NAN }),
+            ErrorKind::InvalidValue,
+        ),
+        (
+            "RATE 4000000000 0 3.0".into(),
+            Some(Request::Rate { row: 4_000_000_000, col: 0, value: 3.0 }),
+            ErrorKind::OutOfBounds,
+        ),
+        (
+            "MRATE 0 1 NaN 0 2 3.0".into(),
+            Some(Request::MRate { ratings: vec![(0, 1, f32::NAN), (0, 2, 3.0)] }),
+            ErrorKind::InvalidValue,
+        ),
+        (
+            flood_events,
+            Some(Request::MRate { ratings: vec![(1, 1, 1.0); MAX_MRATE_EVENTS + 1] }),
+            ErrorKind::TooManyEvents,
+        ),
+        ("BOGUS".into(), None, ErrorKind::UnknownVerb("BOGUS".into())),
+        ("".into(), None, ErrorKind::Empty),
+    ];
+
+    for (name, flavour) in &flavours {
+        for (line, request, kind) in &cases {
+            // text codec: the exact legacy string
+            assert_eq!(
+                handle_line(*flavour, line),
+                Some(kind.to_line()),
+                "{name}: `{line}`"
+            );
+            // binary codec: the typed response survives its frame
+            if let Some(req) = request {
+                let resp = dispatch(*flavour, req);
+                assert_eq!(resp, Response::Error(kind.clone()), "{name}: {req:?}");
+                let bytes = resp.encode_frame(9);
+                let mut cursor = &bytes[..];
+                let FrameRead::Frame(frame) = read_frame(&mut cursor).unwrap() else {
+                    panic!("{name}: bad frame for {kind:?}");
+                };
+                assert_eq!(
+                    Response::decode_frame(&frame),
+                    Ok(Response::Error(kind.clone())),
+                    "{name}: {kind:?}"
+                );
+            }
+        }
+        // backpressure needs a full buffer: fill, hit it on RATE and
+        // MRATE, then flush to recover
+        assert_eq!(
+            handle_line(*flavour, "RATE 0 0 3.0"),
+            Some("OK buffered".into()),
+            "{name}"
+        );
+        assert_eq!(
+            handle_line(*flavour, "RATE 0 1 3.0"),
+            Some(ErrorKind::Backpressure.to_line()),
+            "{name}"
+        );
+        assert_eq!(
+            dispatch(*flavour, &Request::MRate { ratings: vec![(0, 1, 3.0)] }),
+            Response::Error(ErrorKind::Backpressure),
+            "{name}"
+        );
+        assert_eq!(handle_line(*flavour, "FLUSH"), Some("OK flushed 1".into()), "{name}");
+    }
+
+    // malformed frames are binary-only: the typed kind decodes from a
+    // truncated payload and an unknown opcode counts as unknown verb
+    let full = Request::Predict { row: 1, col: 2 }.encode_frame(0);
+    let mut cursor = &full[..full.len() - 3];
+    assert!(matches!(read_frame(&mut cursor).unwrap(), FrameRead::Malformed(_)));
+
+    shared_writer.join();
+    banded_handle.join();
+}
+
+/// Empty-payload ingest answers `Ignored` → `OK ignored` consistently
+/// on both concurrent write paths (and the mutex flavour) — previously
+/// only the caller-driven orchestrator had the `Ignored` contract.
+#[test]
+fn empty_batch_is_ignored_on_every_write_path() {
+    let cfg = StreamConfig::default();
+    let mutex_engine = std::sync::Mutex::new(engine(32, cfg.clone()));
+    let (shared, shared_writer) = SharedEngine::spawn(engine(32, cfg.clone()));
+    let (banded, banded_handle) = BandedEngine::spawn(engine(32, cfg), 2);
+    let flavours: Vec<(&str, &dyn Serving)> =
+        vec![("mutex", &mutex_engine), ("shared", &shared), ("banded", &banded)];
+    for (name, flavour) in &flavours {
+        assert_eq!(flavour.rate_many(&[]), IngestResult::Ignored, "{name}");
+        assert_eq!(
+            Response::from(flavour.rate_many(&[])).encode_text(),
+            "OK ignored",
+            "{name}"
+        );
+    }
+    shared_writer.join();
+    banded_handle.join();
+}
+
+/// The binary codec over real sockets: pipelined frames against the
+/// auto-detecting server, responses tagged by sequence id, and the
+/// `server.malformed_frames` / `server.unknown_verb` metrics asserted
+/// through `STATS`.
+#[test]
+fn binary_tcp_pipelining_and_abuse_metrics() {
+    let e = engine(33, StreamConfig { batch_size: 1000, ..Default::default() });
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let stop = stop.clone();
+        std::thread::spawn(move || server::serve(e, listener, stop, 3).unwrap())
+    };
+
+    // 1) a pipelined binary client: MRATE batches + MPREDICT + FLUSH in
+    // flight together, replies in order
+    {
+        let mut client = LshmfClient::connect(addr, ClientCodec::Binary).unwrap();
+        let mut pipe = client.pipeline();
+        for base in 0..4u32 {
+            let batch: Vec<(u32, u32, f32)> =
+                (0..8).map(|k| (base * 7 + k, (base + k) % 15, 3.0)).collect();
+            pipe.push(&Request::MRate { ratings: batch }).unwrap();
+        }
+        pipe.push(&Request::MPredict { row: 0, cols: (0..15).collect() }).unwrap();
+        pipe.push(&Request::Flush).unwrap();
+        let replies = pipe.finish().unwrap();
+        assert_eq!(replies.len(), 6);
+        for reply in &replies[..4] {
+            assert_eq!(reply, &Response::Ok(OkBody::Buffered), "{reply:?}");
+        }
+        assert!(matches!(&replies[4], Response::Preds(ps) if ps.len() == 15));
+        assert!(matches!(replies[5], Response::Ok(OkBody::Flushed { .. })));
+        client.shutdown().unwrap();
+    }
+
+    // 2) protocol abuse on raw sockets: a well-framed unknown opcode,
+    // then (separate connection) an unframed byte stream
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut frame = vec![BINARY_FRAME_BYTE, 0x7E]; // unknown opcode
+        frame.extend_from_slice(&5u32.to_le_bytes()); // seq
+        frame.extend_from_slice(&0u32.to_le_bytes()); // empty payload
+        stream.write_all(&frame).unwrap();
+        let FrameRead::Frame(reply) = read_frame(&mut stream).unwrap() else {
+            panic!("expected an error frame");
+        };
+        assert_eq!(reply.seq, 5, "tagged with the offending request's seq");
+        assert!(matches!(
+            Response::decode_frame(&reply),
+            Ok(Response::Error(ErrorKind::UnknownVerb(_)))
+        ));
+        drop(stream);
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // first byte claims binary, second frame byte is garbage: the
+        // server replies a typed malformed-frame error and closes
+        stream.write_all(&Request::Flush.encode_frame(0)).unwrap();
+        let FrameRead::Frame(first) = read_frame(&mut stream).unwrap() else {
+            panic!("expected the FLUSH reply");
+        };
+        assert!(matches!(Response::decode_frame(&first), Ok(Response::Ok(_))));
+        stream.write_all(&[0xFF, 0x00, 0x01]).unwrap();
+        let FrameRead::Frame(err) = read_frame(&mut stream).unwrap() else {
+            panic!("expected a malformed-frame error");
+        };
+        assert!(matches!(
+            Response::decode_frame(&err),
+            Ok(Response::Error(ErrorKind::MalformedFrame(_)))
+        ));
+        // connection is closed after the error
+        assert!(matches!(read_frame(&mut stream).unwrap(), FrameRead::Eof));
+    }
+
+    // 3) a text connection (same auto server) sees the abuse counters
+    {
+        let mut client = LshmfClient::connect(addr, ClientCodec::Text).unwrap();
+        // also drive the text-side unknown-verb counter
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"FROBNICATE\n").unwrap();
+        let mut reply = String::new();
+        BufReader::new(raw.try_clone().unwrap()).read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("ERR unknown verb"), "{reply}");
+        drop(raw);
+        let Response::Stats(body) = client.stats().unwrap() else {
+            panic!("expected stats");
+        };
+        assert!(body.contains("counter server.malformed_frames 1"), "{body}");
+        assert!(body.contains("counter server.unknown_verb 2"), "{body}");
+        assert!(body.contains("counter server.mrate 4"), "{body}");
+        client.shutdown().unwrap();
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    let engine = server_thread.join().unwrap();
+    assert_eq!(engine.buffered(), 0, "drained on shutdown");
+}
+
+/// Codec policy: a `--codec binary` server refuses a text greeting with
+/// a typed malformed-frame error, while `--codec text` and `auto`
+/// behave as before for text clients.
+#[test]
+fn binary_only_server_rejects_text_greeting() {
+    let e = engine(34, StreamConfig::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            server::serve_sharded_with(e, listener, stop, 2, 4, CodecChoice::Binary).unwrap()
+        })
+    };
+    // binary works
+    let mut client = LshmfClient::connect(addr, ClientCodec::Binary).unwrap();
+    assert!(matches!(client.predict(0, 0).unwrap(), Response::Pred(_)));
+    client.shutdown().unwrap();
+    // a text line is a malformed frame (first byte 'P' != frame byte)
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"PREDICT 0 0\n").unwrap();
+    let FrameRead::Frame(err) = read_frame(&mut stream).unwrap() else {
+        panic!("expected a malformed-frame error frame");
+    };
+    assert!(matches!(
+        Response::decode_frame(&err),
+        Ok(Response::Error(ErrorKind::MalformedFrame(_)))
+    ));
+    assert!(matches!(read_frame(&mut stream).unwrap(), FrameRead::Eof));
+    drop(stream);
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    server_thread.join().unwrap();
+}
+
+/// Both codecs agree verb by verb against one auto server — the typed
+/// reply a binary client decodes equals what a text client decodes for
+/// the same request sequence (read-only verbs, so the two passes see
+/// identical state).
+#[test]
+fn text_and_binary_clients_decode_identical_replies() {
+    let e = engine(35, StreamConfig::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let stop = stop.clone();
+        std::thread::spawn(move || server::serve(e, listener, stop, 2).unwrap())
+    };
+    let requests: Vec<Request> = vec![
+        Request::Predict { row: 0, col: 0 },
+        Request::Predict { row: 999, col: 0 },
+        Request::MPredict { row: 2, cols: vec![0, 3, 999] },
+        Request::TopN { row: 1, n: 4 },
+        Request::TopN { row: 999, n: 4 },
+        Request::TopN { row: 0, n: 0 },
+    ];
+    let run = |codec: ClientCodec| -> Vec<Response> {
+        let mut client = LshmfClient::connect(addr, codec).unwrap();
+        let replies: Vec<Response> =
+            requests.iter().map(|r| client.request(r).unwrap()).collect();
+        client.shutdown().unwrap();
+        replies
+    };
+    let text = run(ClientCodec::Text);
+    let binary = run(ClientCodec::Binary);
+    for ((t, b), req) in text.iter().zip(&binary).zip(&requests) {
+        // text replies carry {:.4}-quantized floats; compare through
+        // the text encoding, which is the wire-compat contract
+        assert_eq!(t.encode_text(), b.encode_text(), "{req:?}");
+    }
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    server_thread.join().unwrap();
 }
 
 /// `StreamConfig::reject_when_full` contract, at the exact boundary:
