@@ -1,9 +1,9 @@
 #!/usr/bin/env sh
-# Tier-1 gate plus lints. Build + tests are hard failures; fmt/clippy
-# gate too (STRICT_LINTS defaults to 1; set STRICT_LINTS=0 to demote
-# them to advisory, e.g. while paying down newly introduced drift —
-# `cargo fmt` the tree and commit the mechanical diff instead where
-# possible).
+# Tier-1 gate plus lints. Build + tests + docs are hard failures;
+# fmt/clippy gate too (STRICT_LINTS defaults to 1; set STRICT_LINTS=0
+# to demote them to advisory, e.g. while paying down newly introduced
+# drift — `cargo fmt` the tree and commit the mechanical diff instead
+# where possible).
 set -eu
 
 echo "==> cargo build --release"
@@ -14,6 +14,12 @@ cargo test -q
 
 echo "==> cargo build --examples --release"
 cargo build --examples --release
+
+# Doc gate: broken intra-doc links (and any other rustdoc warning) fail
+# tier-1 — the coordinator modules' invariants live in rustdoc now, and
+# a doc that drifts from the code is worse than none.
+echo "==> cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 lint_status=0
 echo "==> cargo fmt --check"

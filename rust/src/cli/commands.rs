@@ -245,6 +245,15 @@ pub fn serve(args: &mut Args) -> Result<()> {
         Some("binary") => crate::coordinator::protocol::CodecChoice::Binary,
         _ => crate::coordinator::protocol::CodecChoice::Auto,
     };
+    // `--flush-mode` picks the flush's training execution: `exact`
+    // (default) keeps replies bit-identical across all three serving
+    // flavours; `relaxed` trains band-parallel inside the flush epoch
+    // (bounded divergence, lower flush latency — see
+    // coordinator::stream::FlushMode and README).
+    let flush_mode = match args.get_choice("flush-mode", &["exact", "relaxed"])? {
+        Some("relaxed") => crate::coordinator::FlushMode::Relaxed,
+        _ => crate::coordinator::FlushMode::Exact,
+    };
     let mut rng = Rng::seeded(cfg.dataset.seed);
     let ds = build_dataset(&cfg, &mut rng)?;
     eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
@@ -262,11 +271,20 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // verb reports the whole pipeline (per-verb counters, lock waits,
     // flush timings) in one dump.
     let metrics = Registry::new();
+    // Relaxed rotation width on the single-writer path (and the banded
+    // growth barrier): the band-writer count when --writers is given,
+    // otherwise the trainer's thread width — both are the natural
+    // "lanes available" measure for their path.
+    let stream_cfg = StreamConfig {
+        flush_mode,
+        flush_bands: writers.unwrap_or(threads).max(1),
+        ..StreamConfig::default()
+    };
     let orch = StreamOrchestrator::new(
         model,
         hash_state,
         ds.train.to_triples(),
-        StreamConfig::default(),
+        stream_cfg,
         culsh_cfg,
         rng.split(7),
         metrics.clone(),
@@ -278,9 +296,10 @@ pub fn serve(args: &mut Args) -> Result<()> {
         Some(w) => {
             eprintln!(
                 "# serving on port {port} with {threads} reader thread(s), \
-                 {w} band writer(s)/shard(s), codec {} \
+                 {w} band writer(s)/shard(s), codec {}, flush mode {} \
                  (PREDICT/MPREDICT/TOPN/RATE/MRATE/FLUSH/STATS/QUIT)",
-                codec.name()
+                codec.name(),
+                flush_mode.name()
             );
             crate::coordinator::server::serve_banded_with(
                 engine, listener, stop, threads, w, codec,
@@ -289,9 +308,10 @@ pub fn serve(args: &mut Args) -> Result<()> {
         None => {
             eprintln!(
                 "# serving on port {port} with {threads} reader thread(s), \
-                 {shards} snapshot shard(s), codec {} \
+                 {shards} snapshot shard(s), codec {}, flush mode {} \
                  (PREDICT/MPREDICT/TOPN/RATE/MRATE/FLUSH/STATS/QUIT)",
-                codec.name()
+                codec.name(),
+                flush_mode.name()
             );
             crate::coordinator::server::serve_sharded_with(
                 engine, listener, stop, threads, shards, codec,

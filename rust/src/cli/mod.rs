@@ -9,11 +9,14 @@
 //!                 increment via Algorithm 4, report the RMSE delta
 //! lshmf serve     [--config exp.toml] [--port 7878] [--threads 4]
 //!                 [--shards 8] [--writers N] [--codec text|binary|auto]
+//!                 [--flush-mode exact|relaxed]
 //!                 — train, then serve TCP with a bounded reader pool
 //!                 (snapshots sharded by column band, writes
 //!                 single-writer or per-band multi-writer; the wire
 //!                 protocol is typed Request/Response over a text or
-//!                 pipelined binary codec — see coordinator::protocol)
+//!                 pipelined binary codec — see coordinator::protocol;
+//!                 relaxed flush mode trains band-parallel inside the
+//!                 epoch — see coordinator::stream::FlushMode)
 //! lshmf info      — artifact bundle status (PJRT graphs available?)
 //! ```
 //!
@@ -86,6 +89,10 @@ COMMON FLAGS:
   --writers <int>      serve: per-band multi-writer ingest (N queues == N shards)
   --codec <name>       serve: text | binary | auto (default auto — per-
                        connection detection by first byte)
+  --flush-mode <name>  serve: exact | relaxed (default exact — bit-identical
+                       replies; relaxed trains band-parallel inside the
+                       flush epoch, trading bit-identity for a bounded,
+                       property-tested divergence and lower flush latency)
   --out <file>         gen-data: output path
 ";
 

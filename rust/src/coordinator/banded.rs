@@ -34,6 +34,22 @@
 //!   the multi-writer path's replies stay **bit-identical** to the
 //!   `Mutex<Engine>` reference (`tests/props.rs` holds 1, 2 and 4
 //!   writers to byte-equal replies).
+//! * Under `serve --flush-mode relaxed`
+//!   ([`FlushMode::Relaxed`]), the epoch's **training core itself goes
+//!   band-parallel**: the Top-K re-search derives each band's
+//!   signatures on a thread acting for that band
+//!   ([`topk_banded_parallel`], still bit-identical to the monolithic
+//!   search), and the Algorithm-4 updates run on one rotation lane per
+//!   band under the Latin-square schedule
+//!   ([`crate::mf::online::online_update_relaxed_with_topk`]) —
+//!   new-row lanes rotate across barrier-separated sub-steps so no two
+//!   lanes ever touch a new row's parameters concurrently. Relaxed
+//!   epochs are
+//!   deterministic and race-free but reorder f32 SGD updates, so
+//!   factors carry bounded rounding-scale divergence from the exact
+//!   reference instead of bit-identity (property-tested); per-band
+//!   training time lands in the `flush.band<b>.train_micros` metrics
+//!   and each relaxed epoch counts into `flush.relaxed_epochs`.
 //! * **Universe growth** (a rating whose column id exceeds current
 //!   dims) widens the barrier: band boundaries move with `ncols`, so
 //!   the epoch assembles the banded accumulators back into one state
@@ -43,7 +59,7 @@
 //!   the rotation schedule already encodes.
 //! * After the core flush, **each band's shard publishes
 //!   independently**: dirty shards (per the flush's rated-column and
-//!   moved-Top-K reports, O(report) — see [`super::shared::dirty_bands`])
+//!   moved-Top-K reports, O(report) — see `super::shared::dirty_bands`)
 //!   are rebuilt concurrently on scoped builder threads, clean shards
 //!   are reference-shared, and one pointer swap installs the assembled
 //!   snapshot so readers never observe a torn mix of band versions.
@@ -54,14 +70,37 @@
 //! global arrival order. Hash-accumulator ownership, by contrast, is
 //! exact at all times — deltas are applied only inside an epoch, after
 //! re-splitting.
+//!
+//! # Invariants
+//!
+//! * **Lock order is `flush` → `core` → `bands[0..d]`** (band locks in
+//!   ascending index order). The per-rate path takes a single band
+//!   lock; `buffer_batch` takes only its touched bands' locks in the
+//!   same ascending order — no acquisition order can cycle.
+//! * **Seq-merge restores arrival order.** Every accepted rating gets a
+//!   global sequence stamp at buffering time; an epoch steals all band
+//!   buffers and sorts by stamp, so the flush computation sees exactly
+//!   the order a single shared buffer would have held.
+//! * **Dirty-band keying is O(report).** A publish clones band `b` iff
+//!   the flush rated one of `b`'s columns or the re-search moved one of
+//!   `b`'s Top-K rows (or the column universe grew, which moves every
+//!   band boundary); clean bands are `Arc`-shared from the previous
+//!   snapshot.
+//! * **Epochs are the only cross-band writers.** Between epochs each
+//!   band's hash-accumulator slice is owned by its writer alone;
+//!   growth re-splits ownership only inside the barrier with every
+//!   band lock held.
 
 use super::engine::Engine;
 use super::shared::{dirty_bands, full_snapshot, PublishMetrics, Snapshot};
-use super::stream::{dedup_batch, IngestResult, StreamConfig, StreamOrchestrator, StreamParts};
-use crate::lsh::{assemble_bands, topk_banded, OnlineHashState};
+use super::stream::{
+    dedup_batch, record_relaxed_flush_metrics, FlushMode, IngestResult, StreamConfig,
+    StreamOrchestrator, StreamParts,
+};
+use crate::lsh::{assemble_bands, topk_banded, topk_banded_parallel, OnlineHashState};
 use crate::metrics::{Counter, Registry};
 use crate::mf::neighbourhood::{ColBand, CulshConfig, CulshModel};
-use crate::mf::online::online_update_with_topk;
+use crate::mf::online::{online_update_relaxed_with_topk, online_update_with_topk};
 use crate::rng::Rng;
 use crate::sparse::{band_of, band_range, Csr, Triples};
 use std::collections::HashMap;
@@ -788,16 +827,35 @@ fn flush_in_place(
     let model = core.model.take().expect("model present outside flush");
     let k = model.k();
     let epochs = shared.cfg.online_epochs;
+    let flush_mode = shared.cfg.flush_mode;
     let timer = shared.metrics.histogram("stream.flush_seconds");
     let refs: Vec<&OnlineHashState> = guards.iter().map(|g| &g.hash).collect();
     let train_cfg = &core.train_cfg;
     let rng = &mut core.rng;
-    let report = timer.time(|| {
-        let (topk, _) = topk_banded(&refs, k, rng);
-        online_update_with_topk(
-            model, topk, &combined, &fresh, old_rows, old_cols, train_cfg, epochs, rng,
-        )
+    // Exact mode runs the single-threaded reference computation (bit-
+    // identical replies); relaxed mode fans the re-search's signature
+    // phase out band-locally and runs the training epochs on one
+    // rotation lane per band — the training core finally executes
+    // *inside* the epoch on band threads instead of one orchestrator
+    // thread. Both modes consume the rng identically.
+    let report = timer.time(|| match flush_mode {
+        FlushMode::Exact => {
+            let (topk, _) = topk_banded(&refs, k, rng);
+            online_update_with_topk(
+                model, topk, &combined, &fresh, old_rows, old_cols, train_cfg, epochs, rng,
+            )
+        }
+        FlushMode::Relaxed => {
+            let (topk, _) = topk_banded_parallel(&refs, k, rng);
+            online_update_relaxed_with_topk(
+                model, topk, &combined, &fresh, old_rows, old_cols, train_cfg, epochs, d,
+                rng,
+            )
+        }
     });
+    if flush_mode == FlushMode::Relaxed {
+        record_relaxed_flush_metrics(&shared.metrics, &report.band_train_micros);
+    }
     core.model = Some(report.model);
     core.combined = combined;
     core.last_flush_cols = increment.iter().map(|&(_, j, _)| j).collect();
@@ -1273,6 +1331,50 @@ mod tests {
             "partial publish ({cloned}) must beat the full clone ({full_bytes})"
         );
         assert!(metrics.counter("shared.shard0.publishes").get() >= 1);
+        handle.join();
+    }
+
+    /// Relaxed flush mode on the multi-writer path: the in-place epoch
+    /// trains on band threads (the `flush.relaxed_epochs` counter and
+    /// every band's `flush.band<b>.train_micros` appear in the shared
+    /// registry — the `STATS` contract), the snapshot publishes, and
+    /// reads serve the grown universe.
+    #[test]
+    fn relaxed_flush_epoch_trains_on_band_threads() {
+        let mut rng = Rng::seeded(86);
+        let e = engine(
+            &mut rng,
+            StreamConfig {
+                batch_size: 1_000,
+                flush_mode: FlushMode::Relaxed,
+                flush_bands: 4,
+                ..Default::default()
+            },
+        );
+        let metrics = e.metrics().clone();
+        let (banded, handle) = BandedEngine::spawn(e, 4);
+        let (m0, n0) = banded.dims();
+        // 24 distinct new-row cells over every column band — enough
+        // trainable entries to clear the rotation cutoff, no column
+        // growth, so the band-parallel in-place epoch runs.
+        for q in 0..24u32 {
+            let (i, j) = (m0 as u32 + q / 12, q % 12);
+            assert_eq!(banded.rate(i, j, 2.0 + (q % 3) as f32), IngestResult::Buffered);
+        }
+        assert_eq!(banded.flush(), 24);
+        assert_eq!(banded.version(), 1);
+        assert_eq!(banded.dims(), (m0 + 2, n0));
+        let p = banded.predict(m0, 3).expect("new row must serve after the epoch");
+        assert!((1.0..=5.0).contains(&p));
+        let stats = banded.stats();
+        assert!(stats.contains("flush.relaxed_epochs 1"), "{stats}");
+        for b in 0..4 {
+            assert!(
+                stats.contains(&format!("flush.band{b}.train_micros")),
+                "band {b} timing missing:\n{stats}"
+            );
+        }
+        assert_eq!(metrics.counter("flush.relaxed_epochs").get(), 1);
         handle.join();
     }
 

@@ -278,7 +278,7 @@ impl Pipeline<'_> {
     }
 
     /// Write the buffered requests and collect every reply, in push
-    /// order. Writes proceed in [`PIPELINE_WINDOW`]-sized in-flight
+    /// order. Writes proceed in `PIPELINE_WINDOW`-sized in-flight
     /// windows with the replies drained between windows, so a pipeline
     /// of any size is deadlock-free against the one-reply-per-request
     /// server loop.

@@ -30,6 +30,14 @@
 //!   by first byte).
 //! * [`client`] — [`LshmfClient`]: synchronous calls plus `pipeline()`
 //!   batching (many requests in flight per connection) on either codec.
+//!
+//! Flushes run the Algorithm-4 training core in one of two modes
+//! ([`FlushMode`], `serve --flush-mode exact|relaxed`): `exact` is the
+//! single-threaded bit-pinned reference; `relaxed` parallelizes the
+//! core *inside* the flush epoch on band threads under the
+//! [`rotation`] schedule, trading bit-identity for a property-tested
+//! bounded divergence. `ARCHITECTURE.md` at the repository root walks
+//! the whole request path through these modules.
 
 pub mod banded;
 pub mod client;
@@ -46,4 +54,4 @@ pub use engine::Engine;
 pub use protocol::{CodecChoice, ErrorKind, OkBody, Request, Response};
 pub use rotation::{RotationPlan, VirtualClockReport};
 pub use shared::{SharedEngine, Snapshot, WriterHandle, DEFAULT_SHARDS};
-pub use stream::{StreamConfig, StreamOrchestrator};
+pub use stream::{FlushMode, StreamConfig, StreamOrchestrator};

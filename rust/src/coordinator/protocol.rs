@@ -37,6 +37,28 @@
 //! [`StreamOrchestrator::ingest_batch`](super::stream::StreamOrchestrator::ingest_batch)).
 //!
 //! The client side of this layer lives in [`super::client`].
+//!
+//! # Invariants
+//!
+//! * **One decode, one dispatch, one encode.** Every wire message
+//!   becomes a [`Request`] exactly once and every reply is an encoded
+//!   [`Response`]; reply semantics live in the server's single
+//!   `dispatch`, never per codec or per serving flavour.
+//! * **Both codecs are total inverses on the protocol surface**:
+//!   `parse_text ∘ encode_text = id` and `decode_frame ∘ encode_frame =
+//!   id`, property-tested over randomized requests, responses and every
+//!   [`ErrorKind`] wire form (`tests/props.rs`).
+//! * **Resource caps are parse-time.** A binary frame's payload is
+//!   capped at [`MAX_FRAME_PAYLOAD`] (1 MiB) before any allocation; a
+//!   text request line is capped symmetrically at 64 KiB by the server's
+//!   bounded line reader (`server::MAX_TEXT_LINE_BYTES`); per-verb item
+//!   caps ([`MAX_MPREDICT_COLS`], [`MAX_TOPN_ITEMS`],
+//!   [`MAX_MRATE_EVENTS`]) bound the work one request can demand.
+//! * **Replies preserve request order.** Pipelined binary responses
+//!   carry their request's sequence id and the server answers strictly
+//!   in order; the client's `Pipeline` bounds its in-flight window so
+//!   both TCP directions can always drain (the window bound lives in
+//!   `client::PIPELINE_WINDOW`).
 
 use super::stream::IngestResult;
 use std::io::{self, Read};

@@ -26,7 +26,24 @@
 //! conflict-free — no step of the schedule, and no band writer, ever
 //! shares a column with another — and the barrier between rotation
 //! sub-steps is the same epoch structure the banded path's cross-band
-//! growth barrier encodes.
+//! growth barrier encodes. The relaxed flush mode
+//! ([`super::stream::FlushMode::Relaxed`]) runs this exact schedule
+//! *inside* a flush epoch: lane thread `b` trains its share of the
+//! new columns while the new-row lanes rotate through `(b + s) mod D`
+//! across barrier-separated sub-steps, so the online update's
+//! row-parameter coupling is resolved by scheduling instead of locks
+//! ([`crate::mf::online::online_update_relaxed_with_topk`]).
+//!
+//! # Invariants
+//!
+//! * **The schedule is a Latin square** ([`RotationPlan::validate`],
+//!   property-tested): every step touches each row band and each column
+//!   band exactly once, and an epoch covers all D² blocks exactly once.
+//! * **The column split is the serving split**: `band_of(j, n, d)`
+//!   resolves column `j` to the same band in the block grid, the
+//!   sharded snapshot, the per-band write queues, and the relaxed
+//!   flush's rotation lanes (pinned by
+//!   `rotation_col_bands_match_serving_band_split` below).
 
 use crate::sparse::{BlockGrid, Triples};
 

@@ -28,6 +28,15 @@
 //!   queue + writer thread per column band (`serve --writers`), with
 //!   replies bit-identical to both flavours above.
 //!
+//! Flush execution is orthogonal to the flavour choice: the engine's
+//! [`StreamConfig`](super::stream::StreamConfig) carries the
+//! `serve --flush-mode exact|relaxed` policy
+//! ([`FlushMode`](super::stream::FlushMode)), so all three flavours
+//! serve the same protocol whether a flush trains single-threaded
+//! (exact, bit-pinned replies) or band-parallel inside the epoch
+//! (relaxed, bounded divergence; `STATS` then carries
+//! `flush.relaxed_epochs` and `flush.band<b>.train_micros`).
+//!
 //! Codec selection (`serve --codec`): `text` and `binary` pin one
 //! codec; `auto` (the default) detects per connection from the first
 //! byte — [`BINARY_FRAME_BYTE`] can never start a text verb. Binary

@@ -41,8 +41,32 @@
 //! `shared.publish_bytes_cloned` / counter
 //! `shared.publish_bytes_cloned_total`, the per-shard counters
 //! `shared.shard<b>.publishes`, and `shared.shards_cloned`. The
-//! publish-path handles are resolved once at spawn ([`PublishMetrics`])
+//! publish-path handles are resolved once at spawn (`PublishMetrics`)
 //! so a flush never allocates metric-name strings under write load.
+//! Relaxed-mode flushes (`serve --flush-mode relaxed`, see
+//! [`super::stream::FlushMode`]) additionally count
+//! `flush.relaxed_epochs` and per-band `flush.band<b>.train_micros` —
+//! their reports merge into the same dirty-shard keying below, so the
+//! publish path is mode-agnostic.
+//!
+//! # Invariants
+//!
+//! * **A snapshot is immutable and complete.** Readers compute on one
+//!   `Arc<Snapshot>`; the only post-publish mutation is the relaxed
+//!   `buffered` counter, which is written solely while its snapshot is
+//!   the currently-published one — a reader's (version, buffered) pair
+//!   is always coherent, and torn reads are impossible by construction.
+//! * **Versions are monotonic**: one writer thread owns the version
+//!   counter; every publish is a single pointer swap under the write
+//!   lock, held only for the swap.
+//! * **Dirty-band keying is O(report)**: the per-shard dirty set comes
+//!   from the flush's own applied-column and moved-Top-K reports
+//!   (`dirty_bands` documents the exact rule), never from re-scanning
+//!   the previous snapshot. This holds for both flush modes — exact and
+//!   relaxed flushes emit the same report shape.
+//! * **Superseded snapshots are never written again** — the shutdown
+//!   drain republishes the drained state *before* the buffered counter
+//!   zeroes (the PR 3 coherence fix, regression-tested below).
 
 use super::engine::{predict_many_by, rank_unrated_by, Engine};
 use super::stream::IngestResult;

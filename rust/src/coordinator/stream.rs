@@ -13,9 +13,40 @@
 //!
 //! The design is caller-driven (deterministic, testable); [`run_channel`]
 //! adapts it to a `std::sync::mpsc` feed for the threaded serving path.
+//!
+//! # Invariants
+//!
+//! * **Buffer order is arrival order.** `flush` applies the buffered
+//!   events exactly in the order `ingest` accepted them; the
+//!   multi-writer path reproduces this by merging its per-band buffers
+//!   on sequence stamps before entering the same flush computation.
+//! * **Validation precedes buffering.** A non-finite value or an id at
+//!   or beyond `max_rows`/`max_cols` never enters the buffer, in the
+//!   fixed value-then-bounds order (batch ingest checks per event in
+//!   that same order, all-or-nothing).
+//! * **Re-rating is last-write-wins.** The `cells` index maps every
+//!   stored cell to exactly one CSR entry; re-rates overwrite in place
+//!   and feed the hash accumulators a weight delta, so `nnz` is stable
+//!   under re-rating traffic.
+//! * **Flush-mode contract** ([`FlushMode`]): `Exact` (the default)
+//!   runs the Algorithm-4 core single-threaded in batch order — the
+//!   bit-pinned reference all serving-parity property tests compare
+//!   against. `Relaxed` runs the same update rule on `flush_bands`
+//!   threads under the Latin-square rotation (see
+//!   [`crate::mf::online::online_update_relaxed_with_topk`]):
+//!   deterministic and race-free, but entry order changes, so factors
+//!   carry f32-rounding-scale divergence from the exact reference —
+//!   bounded by the property test in `tests/props.rs`. Both modes
+//!   consume the training rng identically, so switching modes never
+//!   desynchronizes the stream of Top-K random supplements.
+//! * **The flush report feeds the publish.** `last_flush_cols` ∪
+//!   `last_flush_topk_moved` is exactly the set of columns whose served
+//!   state may have changed; the sharded snapshot publish keys its
+//!   dirty-band set off this report (O(report) per publish) in both
+//!   flush modes.
 
 use super::super::mf::neighbourhood::{CulshConfig, CulshModel};
-use super::super::mf::online::online_update;
+use super::super::mf::online::{online_update, online_update_relaxed_with_topk};
 use crate::lsh::OnlineHashState;
 use crate::metrics::Registry;
 use crate::rng::Rng;
@@ -33,6 +64,31 @@ pub enum Event {
     Flush,
     /// Stop a channel-driven run.
     Shutdown,
+}
+
+/// How a flush executes the Algorithm-4 training core
+/// (`serve --flush-mode`). See the module invariants for the full
+/// contract.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FlushMode {
+    /// Single-threaded, batch order — bit-identical across all three
+    /// serving flavours (the default).
+    #[default]
+    Exact,
+    /// Band-parallel under the Latin-square rotation — deterministic,
+    /// but factors diverge from the exact reference at f32-rounding
+    /// scale (bounded-divergence property-tested).
+    Relaxed,
+}
+
+impl FlushMode {
+    /// CLI / log name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlushMode::Exact => "exact",
+            FlushMode::Relaxed => "relaxed",
+        }
+    }
 }
 
 /// Orchestrator tuning.
@@ -53,6 +109,14 @@ pub struct StreamConfig {
     pub max_rows: usize,
     /// Hard ceiling on accepted column ids (`j < max_cols`).
     pub max_cols: usize,
+    /// Flush execution mode (`serve --flush-mode`, default exact).
+    pub flush_mode: FlushMode,
+    /// Rotation width for relaxed-mode training on the single-writer
+    /// path — and on the multi-writer *growth* barrier, which runs the
+    /// single-writer flush on a reassembled orchestrator. The
+    /// multi-writer in-place flush uses its band-writer count instead
+    /// (one rotation lane per band).
+    pub flush_bands: usize,
 }
 
 impl Default for StreamConfig {
@@ -64,6 +128,8 @@ impl Default for StreamConfig {
             reject_when_full: false,
             max_rows: 1 << 24,
             max_cols: 1 << 24,
+            flush_mode: FlushMode::Exact,
+            flush_bands: 4,
         }
     }
 }
@@ -128,6 +194,23 @@ pub(crate) struct StreamParts {
     pub train_cfg: CulshConfig,
     pub rng: Rng,
     pub metrics: Registry,
+}
+
+/// Record one relaxed flush epoch's metrics — the `flush.relaxed_epochs`
+/// counter plus every band's `flush.band<b>.train_micros` — shared by
+/// the single-writer and multi-writer flush paths so the metric names
+/// cannot drift. Unlike the publish path's pre-resolved handles
+/// (`PublishMetrics`), these lookups may allocate: a relaxed flush just
+/// ran full training epochs, so the `format!` is noise, and the band
+/// count can change at a growth barrier, which pre-resolution would
+/// have to chase.
+pub(crate) fn record_relaxed_flush_metrics(metrics: &Registry, band_train_micros: &[u64]) {
+    metrics.counter("flush.relaxed_epochs").inc();
+    for (b, micros) in band_train_micros.iter().enumerate() {
+        metrics
+            .counter(&format!("flush.band{b}.train_micros"))
+            .add(*micros);
+    }
 }
 
 /// Within-batch dedup, last write wins: one surviving entry per cell, at
@@ -400,17 +483,22 @@ impl StreamOrchestrator {
 
         let combined = Arc::new(Csr::from_triples(&self.combined_t));
         let model = self.model.take().expect("model present");
+        let k = model.k();
         let timer = self.metrics.histogram("stream.flush_seconds");
         let hash_state = &mut self.hash_state;
         let train_cfg = &self.train_cfg;
         let epochs = self.cfg.online_epochs;
+        let flush_mode = self.cfg.flush_mode;
+        let flush_bands = self.cfg.flush_bands;
         let rng = &mut self.rng;
         // Train on the fresh cells only: a re-rated cell has both
         // endpoints inside the old universe, so Algorithm 4 (which moves
         // only NEW variables' parameters) would scan it `epochs` times
-        // for a provable no-op.
-        let report = timer.time(|| {
-            online_update(
+        // for a provable no-op. Both modes run the Top-K re-search and
+        // the parameter growth in the same rng order, so the mode choice
+        // never desynchronizes later random supplements.
+        let report = timer.time(|| match flush_mode {
+            FlushMode::Exact => online_update(
                 model,
                 hash_state,
                 &combined,
@@ -420,8 +508,26 @@ impl StreamOrchestrator {
                 train_cfg,
                 epochs,
                 rng,
-            )
+            ),
+            FlushMode::Relaxed => {
+                let (topk, _) = hash_state.topk(k, rng);
+                online_update_relaxed_with_topk(
+                    model,
+                    topk,
+                    &combined,
+                    &fresh,
+                    old_rows,
+                    old_cols,
+                    train_cfg,
+                    epochs,
+                    flush_bands,
+                    rng,
+                )
+            }
         });
+        if flush_mode == FlushMode::Relaxed {
+            record_relaxed_flush_metrics(&self.metrics, &report.band_train_micros);
+        }
         self.model = Some(report.model);
         self.combined = combined;
         self.last_flush_cols = increment.iter().map(|&(_, j, _)| j).collect();
@@ -804,6 +910,61 @@ mod tests {
         assert_eq!(orch.ingest(Event::Rate(0, 1, 3.0)), IngestResult::Buffered);
         assert_eq!(orch.ingest(Event::Shutdown), IngestResult::Ignored);
         assert_eq!(orch.buffered(), 1);
+    }
+
+    /// Relaxed flush mode: the same events apply (dims and nnz agree
+    /// with an exact twin), predictions stay within the bounded-
+    /// divergence contract, and the `flush.relaxed_epochs` /
+    /// `flush.band<b>.train_micros` metrics surface in the registry —
+    /// the `STATS` documentation contract for the new mode.
+    #[test]
+    fn relaxed_flush_mode_applies_and_reports_metrics() {
+        let mut rng_a = Rng::seeded(67);
+        let mut exact = setup(&mut rng_a);
+        let mut rng_b = Rng::seeded(67);
+        let mut relaxed = setup(&mut rng_b);
+        for orch in [&mut exact, &mut relaxed] {
+            orch.cfg.batch_size = 1_000;
+            orch.cfg.queue_capacity = 100_000;
+        }
+        relaxed.cfg.flush_mode = FlushMode::Relaxed;
+        relaxed.cfg.flush_bands = 3;
+        // One growth batch well above the rotation cutoff, spread over
+        // new rows and a mix of old/new columns in every band.
+        let script: Vec<(u32, u32, f32)> = (0..24u32)
+            .map(|q| (40 + q % 6, (q * 7) % 26, 1.0 + (q % 5) as f32))
+            .collect();
+        for &(i, j, r) in &script {
+            assert_eq!(exact.ingest(Event::Rate(i, j, r)), relaxed.ingest(Event::Rate(i, j, r)));
+        }
+        assert_eq!(exact.flush(), relaxed.flush());
+        assert_eq!(exact.dims(), relaxed.dims());
+        assert_eq!(exact.matrix().nnz(), relaxed.matrix().nnz());
+        let mut sa = crate::mf::neighbourhood::NeighbourScratch::default();
+        let mut sb = crate::mf::neighbourhood::NeighbourScratch::default();
+        let (m, n) = exact.dims();
+        for i in (0..m).step_by(5) {
+            for j in (0..n).step_by(3) {
+                let a = exact.model().predict(exact.matrix(), i, j, &mut sa);
+                let b = relaxed.model().predict(relaxed.matrix(), i, j, &mut sb);
+                assert!(
+                    (a - b).abs() < 0.05,
+                    "predict({i},{j}): exact {a} vs relaxed {b}"
+                );
+            }
+        }
+        assert!(relaxed.metrics_snapshot_contains("flush.relaxed_epochs 1"));
+        for b in 0..3 {
+            assert!(
+                relaxed.metrics_snapshot_contains(&format!("flush.band{b}.train_micros")),
+                "{}",
+                relaxed.metrics.snapshot()
+            );
+        }
+        assert!(
+            !exact.metrics_snapshot_contains("flush.relaxed_epochs"),
+            "exact mode must leave the relaxed metrics (and STATS) untouched"
+        );
     }
 
     /// The flush's moved-Top-K report agrees exactly with the O(N·K)

@@ -26,7 +26,7 @@ pub mod simlsh;
 
 pub use amplify::{collision_topk, collision_topk_sigs, RoundHasher};
 pub use minhash::MinHash;
-pub use online::{assemble_bands, topk_banded, OnlineHashState};
+pub use online::{assemble_bands, topk_banded, topk_banded_parallel, OnlineHashState};
 pub use rand_topk::RandNeighbours;
 pub use rp_cos::RpCos;
 pub use simlsh::SimLsh;

@@ -260,6 +260,55 @@ pub fn topk_banded(bands: &[&OnlineHashState], k: usize, rng: &mut Rng) -> (TopK
     (topk, cost)
 }
 
+/// [`topk_banded`] with the signature computation fanned out on one
+/// scoped thread per band — the relaxed flush mode's band-local
+/// re-search. Each band derives **all q rounds'** signatures from its
+/// own accumulator slice (signatures are pure functions of the
+/// accumulators, no rng), the per-round signature vectors concatenate
+/// in band order, and the collision search + random supplement then
+/// consume the caller's rng exactly as the monolithic search does — so
+/// the result is **bit-identical** to [`topk_banded`] and
+/// [`OnlineHashState::topk`] on the assembled state; only the wall
+/// clock changes. (Exact-mode flushes keep the sequential search so
+/// their thread profile stays untouched.)
+pub fn topk_banded_parallel(
+    bands: &[&OnlineHashState],
+    k: usize,
+    rng: &mut Rng,
+) -> (TopK, CostReport) {
+    assert!(!bands.is_empty(), "topk_banded_parallel needs at least one band");
+    let q = bands[0].lsh.q;
+    let n: usize = bands.iter().map(|b| b.n_cols).sum();
+    let per_band: Vec<Vec<Vec<u64>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = bands
+            .iter()
+            .map(|b| {
+                let b: &OnlineHashState = b;
+                s.spawn(move || (0..q).map(|round| b.signatures(round)).collect::<Vec<_>>())
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("signature worker panicked"))
+            .collect()
+    });
+    let sigs: Vec<Vec<u64>> = (0..q)
+        .map(|round| {
+            let mut v = Vec::with_capacity(n);
+            for pb in &per_band {
+                v.extend_from_slice(&pb[round]);
+            }
+            v
+        })
+        .collect();
+    let mut cost_bytes: usize = bands.iter().map(|b| b.bytes()).sum();
+    let (topk, mut cost) =
+        collision_topk_sigs(n, |round, _| sigs[round as usize].clone(), k, q, rng);
+    cost_bytes += cost.bytes;
+    cost.bytes = cost_bytes;
+    (topk, cost)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -412,6 +461,28 @@ mod tests {
             for j in 0..23 {
                 assert_eq!(a.neighbours(j), b.neighbours(j), "d={d} col {j}");
             }
+        }
+    }
+
+    /// The parallel band-local search is a wall-clock optimization, not
+    /// a semantic one: for every band count it reproduces the
+    /// sequential banded search (and hence the monolithic search) bit
+    /// for bit, including the rng-consuming random supplement.
+    #[test]
+    fn parallel_banded_topk_is_bit_identical() {
+        let mut rng = Rng::seeded(30);
+        let t = random_triples(60, 29, 350, &mut rng);
+        let csc = Csc::from_triples(&t);
+        let whole = OnlineHashState::build(lsh_small(), &csc);
+        for d in [1usize, 2, 4, 6] {
+            let bands = whole.split_bands(d);
+            let refs: Vec<&OnlineHashState> = bands.iter().collect();
+            let (a, cost_a) = topk_banded(&refs, 5, &mut Rng::seeded(9));
+            let (b, cost_b) = topk_banded_parallel(&refs, 5, &mut Rng::seeded(9));
+            for j in 0..t.ncols() {
+                assert_eq!(a.neighbours(j), b.neighbours(j), "d={d} col {j}");
+            }
+            assert_eq!(cost_a.bytes, cost_b.bytes, "d={d}: same accounting");
         }
     }
 

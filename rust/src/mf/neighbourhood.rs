@@ -225,6 +225,48 @@ impl CulshModel {
         }
     }
 
+    /// Frobenius norm over every trainable parameter family
+    /// (`u, v, w, c, b_i, b̂_j`) — the scale reference for the relaxed
+    /// flush mode's bounded-divergence contract.
+    pub fn frobenius_norm(&self) -> f64 {
+        self.param_families()
+            .iter()
+            .flat_map(|xs| xs.iter())
+            .map(|&x| (x as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Frobenius distance to `other` across every trainable parameter
+    /// family. Panics if the shapes differ — compare models over the
+    /// same universe only. Zero iff the factors agree bit for bit
+    /// (modulo `-0.0 == 0.0`), which is how the relaxed-mode tests pin
+    /// both the divergence bound and the cross-flavour bit-identity.
+    pub fn frobenius_distance(&self, other: &CulshModel) -> f64 {
+        let a = self.param_families();
+        let b = other.param_families();
+        let mut acc = 0f64;
+        for (xa, xb) in a.iter().zip(&b) {
+            assert_eq!(xa.len(), xb.len(), "parameter shapes must agree");
+            for (x, y) in xa.iter().zip(xb.iter()) {
+                acc += (*x as f64 - *y as f64).powi(2);
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// The six trainable parameter families, as flat slices.
+    fn param_families(&self) -> [&[f32]; 6] {
+        [
+            self.base.u.data(),
+            self.base.v.data(),
+            self.w.data(),
+            self.c.data(),
+            &self.base.bi,
+            &self.base.bj,
+        ]
+    }
+
     /// Does this model's neighbour table still match `band`'s slice
     /// exactly? An O(band·K) scan. The sharded publish used to call
     /// this per clean-candidate band to catch the LSH re-search moving

@@ -10,11 +10,11 @@ use lshmf::coordinator::protocol::{
 use lshmf::coordinator::rotation::RotationPlan;
 use lshmf::coordinator::server::handle_line;
 use lshmf::coordinator::shared::SharedEngine;
-use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::stream::{FlushMode, StreamConfig, StreamOrchestrator};
 use lshmf::coordinator::Engine;
 use lshmf::lsh::{NeighbourSearch, OnlineHashState, SimLsh};
 use lshmf::metrics::Registry;
-use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig, CulshModel};
 use lshmf::prop::{check, Gen};
 use lshmf::rng::Rng;
 use lshmf::sparse::{BlockGrid, Csc, Csr, Triples};
@@ -339,6 +339,98 @@ fn prop_banded_multi_writer_matches_mutex_engine() {
         }
         handle.join();
         ok
+    });
+}
+
+/// The relaxed-flush acceptance property, across randomized multi-round
+/// scripts with row and column growth at 1, 2 and 4 writers:
+///
+/// * **Bounded divergence** — after the same script, the relaxed-mode
+///   banded engine's factors sit within ε (Frobenius, relative to the
+///   parameter norm) of the exact sequential reference; at one writer
+///   the relaxed epoch is the sequential straggler path and the match
+///   is bit-exact.
+/// * **Relaxed cross-flavour bit-identity** — the relaxed banded engine
+///   and a relaxed single-writer orchestrator with `flush_bands ==
+///   writers` run the *same* deterministic rotation, so their factors
+///   agree bit for bit (relaxation trades exactness against the exact
+///   reference, not determinism or flavour agreement).
+/// * `--flush-mode exact` stays the default: the exact-mode parity
+///   property tests above keep pinning its replies byte-identical to
+///   the `Mutex<Engine>` oracle.
+#[test]
+fn prop_relaxed_flush_bounded_divergence() {
+    check("relaxed flush bounded divergence", 4, |g| {
+        let seed = 6100 + g.usize(0..=30) as u64;
+        let writers = [1usize, 2, 4][g.usize(0..=2)];
+        // Explicit flushes only: a huge batch_size keeps flush
+        // boundaries identical across the three engines.
+        let exact_cfg = StreamConfig {
+            batch_size: 1 << 20,
+            max_rows: 400,
+            max_cols: 400,
+            flush_mode: FlushMode::Exact,
+            ..Default::default()
+        };
+        let relaxed_cfg = StreamConfig {
+            flush_mode: FlushMode::Relaxed,
+            flush_bands: writers,
+            ..exact_cfg.clone()
+        };
+        let mut exact = serving_engine(seed, exact_cfg);
+        let mut relaxed_single = serving_engine(seed, relaxed_cfg.clone());
+        let (banded, handle) = BandedEngine::spawn(serving_engine(seed, relaxed_cfg), writers);
+        for _round in 0..g.usize(2..=3) {
+            // a flush-worth of ratings: growth rows/cols mixed with
+            // in-universe traffic and re-rates, spread over every band
+            for _ in 0..g.usize(30..=60) {
+                let i = g.usize(0..=45) as u32; // fixture is 30x15: ≥ 30 grows rows
+                let j = g.usize(0..=25) as u32; // ≥ 15 grows columns
+                let r = 1.0 + g.usize(0..=8) as f32 * 0.5;
+                let a = exact.rate(i, j, r);
+                let b = relaxed_single.rate(i, j, r);
+                let c = banded.rate(i, j, r);
+                if a != b || a != c {
+                    eprintln!("ingest replies diverged on ({i},{j},{r}): {a:?} {b:?} {c:?}");
+                    return false;
+                }
+            }
+            let (fa, fb, fc) = (exact.flush(), relaxed_single.flush(), banded.flush());
+            if fa != fb || fa != fc {
+                eprintln!("flush counts diverged: {fa} {fb} {fc}");
+                return false;
+            }
+        }
+        let banded_engine = handle.join();
+        if exact.dims() != banded_engine.dims() || exact.dims() != relaxed_single.dims() {
+            eprintln!(
+                "dims diverged: exact {:?} banded {:?} single {:?}",
+                exact.dims(),
+                banded_engine.dims(),
+                relaxed_single.dims()
+            );
+            return false;
+        }
+        let dist = exact.model().frobenius_distance(banded_engine.model());
+        let scale = exact.model().frobenius_norm().max(1.0);
+        if writers == 1 && dist != 0.0 {
+            eprintln!("one-writer relaxed must be bit-identical to exact, drifted {dist}");
+            return false;
+        }
+        if dist > 0.02 * scale {
+            eprintln!(
+                "writers={writers}: relaxed drifted {dist} vs parameter norm {scale}"
+            );
+            return false;
+        }
+        let flavour_gap = relaxed_single.model().frobenius_distance(banded_engine.model());
+        if flavour_gap != 0.0 {
+            eprintln!(
+                "writers={writers}: relaxed flavours disagree by {flavour_gap} (must be 0)"
+            );
+            return false;
+        }
+        true
     });
 }
 

@@ -414,6 +414,59 @@ fn error_kinds_cover_both_codecs_and_all_flavours() {
     banded_handle.join();
 }
 
+/// Regression pin for `--flush-mode exact` (the default): the reply
+/// strings of every verb and error, byte for byte, against all three
+/// serving flavours. These are the exact wire strings PR 4's typed
+/// protocol layer froze; the relaxed flush mode must never leak into
+/// them (it only changes *how* a flush trains, plus metrics lines that
+/// appear in `STATS` solely when relaxed mode runs).
+#[test]
+fn exact_mode_wire_strings_stay_pinned() {
+    // (request line, exact expected reply) in execution order — the
+    // stateful verbs are sequenced so applied counts are deterministic.
+    let script: Vec<(&str, &str)> = vec![
+        ("RATE 0 5 4.5", "OK buffered"),
+        ("FLUSH", "OK flushed 1"),
+        ("FLUSH", "OK flushed 0"),
+        ("MRATE 0 1 4.5 1 2 3.0", "OK buffered"),
+        ("FLUSH", "OK flushed 2"),
+        ("RATE 0 0 NaN", "ERR invalid-value"),
+        ("RATE 0 0 inf", "ERR invalid-value"),
+        ("RATE 4000000000 0 3.0", "ERR out-of-bounds"),
+        ("PREDICT 999 0", "ERR out-of-range"),
+        ("MPREDICT 0 999", "PREDS -"),
+        ("MPREDICT 0", "ERR usage: MPREDICT <row> <col> [<col> ...]"),
+        ("TOPN 0 0", "ERR usage: TOPN <row> <n>"),
+        ("TOPN 0 257", "ERR too-many-items"),
+        ("MRATE 0 1", "ERR usage: MRATE <row> <col> <value> [<row> <col> <value> ...]"),
+        ("BOGUS", "ERR unknown verb `BOGUS`"),
+        ("", "ERR empty"),
+    ];
+    fn run_script<S: Serving + ?Sized>(e: &S, flavour: &str, script: &[(&str, &str)]) {
+        for (line, want) in script {
+            let got = handle_line(e, line).unwrap();
+            assert_eq!(got, *want, "{flavour}: `{line}`");
+        }
+        // PREDICT replies are model-dependent; pin the wire *shape*:
+        // `PRED ` + a {:.4}-formatted float.
+        let pred = handle_line(e, "PREDICT 0 0").unwrap();
+        let value = pred.strip_prefix("PRED ").unwrap_or_else(|| {
+            panic!("{flavour}: PREDICT reply `{pred}` lost its prefix")
+        });
+        let decimals = value.split('.').nth(1).unwrap_or("");
+        assert_eq!(decimals.len(), 4, "{flavour}: `{pred}` is not {{:.4}}-formatted");
+        assert!(handle_line(e, "QUIT").is_none(), "{flavour}: QUIT must close");
+    }
+    let mutexed = std::sync::Mutex::new(engine(70, StreamConfig::default()));
+    run_script(&mutexed, "mutex", &script);
+    let (shared, writer) = SharedEngine::spawn(engine(70, StreamConfig::default()));
+    run_script(&shared, "shared", &script);
+    writer.join();
+    let (banded, handle) = BandedEngine::spawn(engine(70, StreamConfig::default()), 3);
+    run_script(&banded, "banded", &script);
+    handle.join();
+}
+
 /// Empty-payload ingest answers `Ignored` → `OK ignored` consistently
 /// on both concurrent write paths (and the mutex flavour) — previously
 /// only the caller-driven orchestrator had the `Ignored` contract.
