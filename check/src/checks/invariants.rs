@@ -1,0 +1,38 @@
+//! Invariant-doc presence: the concurrency modules must keep their
+//! `//! # Invariants` rustdoc sections. The other checks enforce a few
+//! of those invariants mechanically; the prose is the contract readers
+//! and reviewers hold the rest against, so deleting it is a gate
+//! failure, not a docs nit.
+
+use crate::lexer::SourceFile;
+use crate::Diagnostic;
+
+/// Modules required to carry a `//! # Invariants` section.
+pub const INVARIANT_MODULES: [&str; 5] = [
+    "coordinator/stream.rs",
+    "coordinator/banded.rs",
+    "coordinator/shared.rs",
+    "coordinator/protocol.rs",
+    "coordinator/rotation.rs",
+];
+
+const CHECK: &str = "invariant-docs";
+
+pub fn run(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for f in files {
+        if !INVARIANT_MODULES.contains(&f.rel.as_str()) {
+            continue;
+        }
+        let has = f.raw.lines().any(|l| l.trim() == "//! # Invariants");
+        if !has {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: 1,
+                check: CHECK,
+                message: "module is missing its `//! # Invariants` rustdoc section".into(),
+            });
+        }
+    }
+    diags
+}

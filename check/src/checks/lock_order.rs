@@ -1,0 +1,203 @@
+//! Lock-order analysis: `.lock()` acquisitions inside any one function
+//! must respect the declared partial order `flush → core → bands`, with
+//! band locks taken in ascending index order.
+//!
+//! The analysis is intraprocedural and textual: for every function body
+//! it records the sequence of *tracked* `.lock()` calls — those whose
+//! receiver (or enclosing statement) names one of the ordered lock
+//! fields — and flags any acquisition whose rank precedes an already-
+//! acquired rank. Locks it cannot attribute to a tracked field
+//! (`self.lock()`, `conn_rx.lock()`, test scaffolding) are ignored:
+//! the gate exists for the `BandedOrchestrator` hierarchy, whose field
+//! names are stable and load-bearing (banded.rs `# Invariants`).
+//!
+//! Known approximation: a guard dropped before a later, lower-ranked
+//! acquisition would still be flagged. That pattern is forbidden here
+//! anyway — an epoch holds its guards for its full extent — so the
+//! false positive is the conservative direction.
+
+use crate::lexer::{matching_open, tokenize, SourceFile, Tok, TokKind};
+use crate::Diagnostic;
+
+/// The ordered lock classes, lowest rank acquired first.
+pub const LOCK_ORDER: [&str; 3] = ["flush", "core", "bands"];
+
+const CHECK: &str = "lock-order";
+
+struct FnFrame {
+    name: String,
+    /// Brace depth at which the body opened.
+    depth: usize,
+    /// Highest rank acquired so far: (rank, line, class name).
+    max_rank: Option<(usize, usize, &'static str)>,
+    /// Last constant band index acquired: (index, line).
+    last_band: Option<(u64, usize)>,
+}
+
+pub fn run(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for f in files {
+        scan_file(f, &mut diags);
+    }
+    diags
+}
+
+fn scan_file(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    let toks = tokenize(&f.code);
+    let mut depth = 0usize;
+    let mut pending_fn: Option<String> = None;
+    let mut stack: Vec<FnFrame> = Vec::new();
+
+    let mut k = 0usize;
+    while k < toks.len() {
+        let t = &toks[k];
+        match t.kind {
+            TokKind::Ident if t.text == "fn" => {
+                if let Some(name) = toks.get(k + 1).filter(|n| n.kind == TokKind::Ident) {
+                    pending_fn = Some(name.text.clone());
+                }
+            }
+            TokKind::Punct(b'{') => {
+                depth += 1;
+                if let Some(name) = pending_fn.take() {
+                    stack.push(FnFrame { name, depth, max_rank: None, last_band: None });
+                }
+            }
+            TokKind::Punct(b'}') => {
+                if stack.last().is_some_and(|fr| fr.depth == depth) {
+                    stack.pop();
+                }
+                depth = depth.saturating_sub(1);
+            }
+            TokKind::Punct(b';') => {
+                // A `fn name(...);` signature (trait decl) has no body.
+                pending_fn = None;
+            }
+            TokKind::Punct(b'.')
+                if toks.get(k + 1).is_some_and(|n| n.is_ident("lock"))
+                    && toks.get(k + 2).is_some_and(|n| n.is_punct(b'(')) =>
+            {
+                if let Some((class, band_idx)) = classify(&toks, k) {
+                    let line = toks[k + 1].line;
+                    record(f, &mut stack, class, band_idx, line, diags);
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+}
+
+/// Attribute the `.lock()` whose dot sits at `dot` to a tracked class,
+/// plus a constant band index when the receiver is `bands[<const>]`.
+fn classify(toks: &[Tok], dot: usize) -> Option<(&'static str, Option<u64>)> {
+    // 1. Immediate receiver: the identifier directly before the dot,
+    //    looking through one `[...]` index group.
+    if dot > 0 {
+        let mut j = dot - 1;
+        let mut band_idx = None;
+        if toks[j].is_punct(b']') {
+            if let Some(open) = matching_open(toks, j) {
+                band_idx = const_index(&toks[open + 1..j]);
+                if open == 0 {
+                    return None;
+                }
+                j = open - 1;
+            }
+        }
+        if toks[j].kind == TokKind::Ident {
+            if let Some(class) = LOCK_ORDER.iter().copied().find(|c| toks[j].text == *c) {
+                return Some((class, band_idx));
+            }
+        }
+    }
+
+    // 2. Statement scan: `shared.bands.iter().map(|m| m.lock()…)` — the
+    //    receiver is a closure variable, but the statement names the
+    //    field. Walk back to the statement start and take the last
+    //    tracked identifier that is not a call (`flush()` the method
+    //    must not count as `flush` the lock).
+    let mut s = dot;
+    while s > 0 {
+        let t = &toks[s - 1];
+        if t.is_punct(b';') || t.is_punct(b'{') || t.is_punct(b'}') {
+            break;
+        }
+        s -= 1;
+    }
+    let mut found: Option<(&'static str, Option<u64>)> = None;
+    for j in s..dot {
+        if toks[j].kind != TokKind::Ident {
+            continue;
+        }
+        if toks.get(j + 1).is_some_and(|n| n.is_punct(b'(')) {
+            continue; // a call, not a field
+        }
+        if let Some(class) = LOCK_ORDER.iter().copied().find(|c| toks[j].text == *c) {
+            let idx = toks
+                .get(j + 1)
+                .filter(|n| n.is_punct(b'['))
+                .and_then(|_| crate::lexer::matching_close(toks, j + 1))
+                .and_then(|close| const_index(&toks[j + 2..close]));
+            found = Some((class, idx));
+        }
+    }
+    found
+}
+
+/// `Some(i)` when the bracketed index tokens are a single integer
+/// literal.
+fn const_index(inner: &[Tok]) -> Option<u64> {
+    match inner {
+        [t] if t.kind == TokKind::Num => t.text.parse().ok(),
+        _ => None,
+    }
+}
+
+fn record(
+    f: &SourceFile,
+    stack: &mut [FnFrame],
+    class: &'static str,
+    band_idx: Option<u64>,
+    line: usize,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let Some(frame) = stack.last_mut() else { return };
+    let rank = LOCK_ORDER.iter().position(|c| *c == class).unwrap();
+    if let Some((max, at, prev)) = frame.max_rank {
+        if rank < max {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line,
+                check: CHECK,
+                message: format!(
+                    "`{}` lock acquired after `{}` (line {}) in `fn {}`; declared order \
+                     is flush -> core -> bands",
+                    class, prev, at, frame.name
+                ),
+            });
+        }
+    }
+    if frame.max_rank.is_none() || rank > frame.max_rank.unwrap().0 {
+        frame.max_rank = Some((rank, line, class));
+    }
+    if class == "bands" {
+        if let Some(idx) = band_idx {
+            if let Some((prev_idx, at)) = frame.last_band {
+                if idx < prev_idx {
+                    diags.push(Diagnostic {
+                        file: f.rel.clone(),
+                        line,
+                        check: CHECK,
+                        message: format!(
+                            "band locks acquired out of ascending order in `fn {}`: \
+                             bands[{}] after bands[{}] (line {})",
+                            frame.name, idx, prev_idx, at
+                        ),
+                    });
+                }
+            }
+            frame.last_band = Some((idx, line));
+        }
+    }
+}

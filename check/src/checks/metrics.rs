@@ -1,0 +1,184 @@
+//! Metrics-name audit: collect every metric name registered through the
+//! `Registry` call surface (`.counter(…)`, `.gauge(…)`, `.histogram(…)`,
+//! `.timer(…)`), enforce `dotted.snake` naming, and refuse one name
+//! registered under two different kinds — a `counter("x")` in one module
+//! silently aliasing a `gauge("x")` in another is exactly the class of
+//! drift a grep cannot catch once the name is assembled via `format!`.
+//!
+//! `format!` templates are audited too: `{…}` placeholders are
+//! substituted with `0` (`"shared.shard{b}.publishes"` is checked as
+//! `shared.shard0.publishes`). `#[cfg(test)]` modules are skipped —
+//! test scaffolding names like `"a"` are not part of the exported
+//! surface. A `timer` records into the histogram of the same name, so
+//! it counts as a histogram for kind-conflict purposes.
+
+use crate::lexer::{matching_close, tokenize, SourceFile, Tok, TokKind};
+use crate::Diagnostic;
+use std::collections::HashMap;
+
+const CHECK: &str = "metrics-names";
+const KINDS: [&str; 4] = ["counter", "gauge", "histogram", "timer"];
+
+pub fn run(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    // name -> (canonical kind, file, line)
+    let mut seen: HashMap<String, (&'static str, String, usize)> = HashMap::new();
+    for f in files {
+        scan_file(f, &mut seen, &mut diags);
+    }
+    diags
+}
+
+fn scan_file(
+    f: &SourceFile,
+    seen: &mut HashMap<String, (&'static str, String, usize)>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let toks = tokenize(&f.code);
+    let skip = cfg_test_ranges(&toks);
+
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let Some(kind) = KINDS.iter().copied().find(|s| t.text == *s) else {
+            continue;
+        };
+        // Method call only: `.counter(` — skips the Registry definitions
+        // themselves (`pub fn counter(...)`).
+        if k == 0 || !toks[k - 1].is_punct(b'.') {
+            continue;
+        }
+        let Some(open) = toks.get(k + 1).filter(|n| n.is_punct(b'(')) else {
+            continue;
+        };
+        if skip.iter().any(|&(lo, hi)| k >= lo && k <= hi) {
+            continue;
+        }
+        let open_idx = k + 1;
+        let Some(close_idx) = matching_close(&toks, open_idx) else {
+            continue;
+        };
+        let (lo, hi) = (open.start, toks[close_idx].start);
+        // First literal inside the argument list: the name, or the
+        // `format!` template of the name.
+        let Some(lit) = f.strings.iter().find(|s| s.start > lo && s.start < hi) else {
+            continue; // dynamic name (a pass-through like `self.histogram(name)`)
+        };
+        let name = substitute_placeholders(&lit.text);
+        let canonical: &'static str = if kind == "timer" { "histogram" } else {
+            KINDS.iter().copied().find(|s| *s == kind).unwrap()
+        };
+
+        if !is_dotted_snake(&name) {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: lit.line,
+                check: CHECK,
+                message: format!(
+                    "metric name `{name}` is not dotted.snake \
+                     (lowercase segments separated by `.`)"
+                ),
+            });
+        }
+        match seen.get(&name) {
+            Some((prev_kind, prev_file, prev_line)) if *prev_kind != canonical => {
+                diags.push(Diagnostic {
+                    file: f.rel.clone(),
+                    line: lit.line,
+                    check: CHECK,
+                    message: format!(
+                        "metric `{name}` registered as {canonical} but previously \
+                         as {prev_kind} at {prev_file}:{prev_line}"
+                    ),
+                });
+            }
+            Some(_) => {}
+            None => {
+                seen.insert(name, (canonical, f.rel.clone(), lit.line));
+            }
+        }
+    }
+}
+
+/// Token index ranges covered by `#[cfg(test)] mod … { … }`.
+fn cfg_test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    for k in 0..toks.len() {
+        let is_cfg_test = toks[k].is_punct(b'#')
+            && toks.get(k + 1).is_some_and(|t| t.is_punct(b'['))
+            && toks.get(k + 2).is_some_and(|t| t.is_ident("cfg"))
+            && toks.get(k + 3).is_some_and(|t| t.is_punct(b'('))
+            && toks.get(k + 4).is_some_and(|t| t.is_ident("test"))
+            && toks.get(k + 5).is_some_and(|t| t.is_punct(b')'))
+            && toks.get(k + 6).is_some_and(|t| t.is_punct(b']'));
+        if !is_cfg_test {
+            continue;
+        }
+        // Walk past any further attributes to the item; only `mod`
+        // bodies are treated as test-only regions.
+        let mut j = k + 7;
+        while toks.get(j).is_some_and(|t| t.is_punct(b'#'))
+            && toks.get(j + 1).is_some_and(|t| t.is_punct(b'['))
+        {
+            match matching_close(toks, j + 1) {
+                Some(end) => j = end + 1,
+                None => break,
+            }
+        }
+        if !toks.get(j).is_some_and(|t| t.is_ident("mod")) {
+            continue;
+        }
+        let mut open = j + 1;
+        while open < toks.len() && !toks[open].is_punct(b'{') && !toks[open].is_punct(b';') {
+            open += 1;
+        }
+        if open < toks.len() && toks[open].is_punct(b'{') {
+            if let Some(close) = matching_close(toks, open) {
+                ranges.push((k, close));
+            }
+        }
+    }
+    ranges
+}
+
+/// Replace `{…}` format placeholders with `0`.
+fn substitute_placeholders(template: &str) -> String {
+    let mut out = String::with_capacity(template.len());
+    let mut chars = template.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '{' {
+            if chars.peek() == Some(&'{') {
+                chars.next(); // escaped `{{`
+                out.push('{');
+                continue;
+            }
+            for d in chars.by_ref() {
+                if d == '}' {
+                    break;
+                }
+            }
+            out.push('0');
+        } else if c == '}' {
+            if chars.peek() == Some(&'}') {
+                chars.next(); // escaped `}}`
+            }
+            out.push('}');
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// `segment(.segment)+` where a segment is `[a-z][a-z0-9_]*`.
+fn is_dotted_snake(name: &str) -> bool {
+    let segments: Vec<&str> = name.split('.').collect();
+    segments.len() >= 2
+        && segments.iter().all(|s| {
+            let mut chars = s.chars();
+            matches!(chars.next(), Some(c) if c.is_ascii_lowercase())
+                && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        })
+}

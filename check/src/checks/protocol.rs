@@ -1,0 +1,157 @@
+//! Protocol exhaustiveness: every `Request` variant must appear in
+//! `server.rs::dispatch`, and every `ErrorKind` variant in both codec
+//! encoders (`to_line` for the text codec, `code` for the binary one).
+//! A new verb or error kind that only lands in the enum is flagged
+//! before it can silently fall into a catch-all at runtime.
+
+use crate::lexer::{matching_close, tokenize, SourceFile, Tok, TokKind};
+use crate::Diagnostic;
+
+const CHECK: &str = "protocol-exhaustiveness";
+const PROTOCOL: &str = "coordinator/protocol.rs";
+const SERVER: &str = "coordinator/server.rs";
+
+pub fn run(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let Some(proto) = files.iter().find(|f| f.rel == PROTOCOL) else {
+        return diags; // tree without a protocol layer: nothing to check
+    };
+    let proto_toks = tokenize(&proto.code);
+
+    let requests = enum_variants(&proto_toks, "Request");
+    let errors = enum_variants(&proto_toks, "ErrorKind");
+    for (name, vs) in [("Request", &requests), ("ErrorKind", &errors)] {
+        if vs.is_none() {
+            diags.push(Diagnostic {
+                file: PROTOCOL.into(),
+                line: 1,
+                check: CHECK,
+                message: format!("`enum {name}` not found; the exhaustiveness gate cannot run"),
+            });
+        }
+    }
+
+    if let Some(requests) = &requests {
+        match files.iter().find(|f| f.rel == SERVER) {
+            Some(server) => {
+                let server_toks = tokenize(&server.code);
+                require_variants_in_fn(
+                    &server_toks,
+                    "dispatch",
+                    SERVER,
+                    "Request",
+                    requests,
+                    &mut diags,
+                );
+            }
+            None => diags.push(Diagnostic {
+                file: SERVER.into(),
+                line: 1,
+                check: CHECK,
+                message: "coordinator/server.rs not found; cannot audit `dispatch`".into(),
+            }),
+        }
+    }
+    if let Some(errors) = &errors {
+        for encoder in ["to_line", "code"] {
+            require_variants_in_fn(&proto_toks, encoder, PROTOCOL, "ErrorKind", errors, &mut diags);
+        }
+    }
+    diags
+}
+
+/// Variant names of `enum <name>`, or `None` if the enum is absent.
+fn enum_variants(toks: &[Tok], name: &str) -> Option<Vec<String>> {
+    let mut k = 0usize;
+    let open = loop {
+        if k + 2 >= toks.len() {
+            return None;
+        }
+        if toks[k].is_ident("enum") && toks[k + 1].is_ident(name) && toks[k + 2].is_punct(b'{') {
+            break k + 2;
+        }
+        k += 1;
+    };
+    let close = matching_close(toks, open)?;
+    let mut variants = Vec::new();
+    let mut depth = 0isize; // bracket depth inside the enum body
+    let mut expecting = true;
+    let mut j = open + 1;
+    while j < close {
+        let t = &toks[j];
+        match t.kind {
+            TokKind::Punct(b'(') | TokKind::Punct(b'[') | TokKind::Punct(b'{') => depth += 1,
+            TokKind::Punct(b')') | TokKind::Punct(b']') | TokKind::Punct(b'}') => depth -= 1,
+            TokKind::Punct(b'#') if depth == 0 => {
+                // Skip a `#[...]` attribute without touching `expecting`.
+                if toks.get(j + 1).is_some_and(|n| n.is_punct(b'[')) {
+                    if let Some(end) = matching_close(toks, j + 1) {
+                        j = end;
+                    }
+                }
+            }
+            TokKind::Punct(b',') if depth == 0 => expecting = true,
+            TokKind::Ident if depth == 0 && expecting => {
+                variants.push(t.text.clone());
+                expecting = false;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    Some(variants)
+}
+
+/// Every `<enum_name>::<variant>` must be mentioned in `fn <fn_name>`.
+fn require_variants_in_fn(
+    toks: &[Tok],
+    fn_name: &str,
+    file: &str,
+    enum_name: &str,
+    variants: &[String],
+    diags: &mut Vec<Diagnostic>,
+) {
+    let Some((line, body)) = fn_body(toks, fn_name) else {
+        diags.push(Diagnostic {
+            file: file.into(),
+            line: 1,
+            check: CHECK,
+            message: format!("`fn {fn_name}` not found; cannot audit {enum_name} coverage"),
+        });
+        return;
+    };
+    for v in variants {
+        let mentioned = body.windows(4).any(|w| {
+            w[0].is_ident(enum_name)
+                && w[1].is_punct(b':')
+                && w[2].is_punct(b':')
+                && w[3].is_ident(v)
+        });
+        if !mentioned {
+            diags.push(Diagnostic {
+                file: file.into(),
+                line,
+                check: CHECK,
+                message: format!("`{enum_name}::{v}` has no arm in `fn {fn_name}`"),
+            });
+        }
+    }
+}
+
+/// Line of `fn <name>` plus its body tokens (first such fn in the file).
+fn fn_body<'t>(toks: &'t [Tok], name: &str) -> Option<(usize, &'t [Tok])> {
+    for k in 0..toks.len().saturating_sub(1) {
+        if toks[k].is_ident("fn") && toks[k + 1].is_ident(name) {
+            let mut j = k + 2;
+            while j < toks.len() && !toks[j].is_punct(b'{') && !toks[j].is_punct(b';') {
+                j += 1;
+            }
+            if j >= toks.len() || toks[j].is_punct(b';') {
+                continue; // a bodiless signature; keep looking
+            }
+            let close = matching_close(toks, j)?;
+            return Some((toks[k].line, &toks[j..=close]));
+        }
+    }
+    None
+}

@@ -1,0 +1,106 @@
+//! Unsafe hygiene: every `unsafe` site must carry a `// SAFETY:`
+//! comment (same line or the contiguous `//` block directly above), and
+//! `unsafe impl` / `UnsafeCell` may only appear in the allowlisted
+//! SharedModel modules. The crate root must also pin
+//! `#![deny(unsafe_op_in_unsafe_fn)]`.
+
+use crate::lexer::{tokenize, SourceFile, TokKind};
+use crate::Diagnostic;
+
+/// The only modules allowed to hold `unsafe impl` / `UnsafeCell`: the
+/// four SharedModel training cores, whose disjointness argument lives
+/// in their rustdoc.
+pub const UNSAFE_ALLOWLIST: [&str; 4] = [
+    "mf/parallel.rs",
+    "mf/neighbourhood.rs",
+    "mf/online.rs",
+    "mf/hogwild.rs",
+];
+
+const CHECK: &str = "unsafe-hygiene";
+
+pub fn run(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for f in files {
+        scan_file(f, &mut diags);
+    }
+    if let Some(lib) = files.iter().find(|f| f.rel == "lib.rs") {
+        let squashed: String = lib.raw.chars().filter(|c| !c.is_whitespace()).collect();
+        if !squashed.contains("#![deny(unsafe_op_in_unsafe_fn)]") {
+            diags.push(Diagnostic {
+                file: lib.rel.clone(),
+                line: 1,
+                check: CHECK,
+                message: "crate root is missing `#![deny(unsafe_op_in_unsafe_fn)]`".into(),
+            });
+        }
+    }
+    diags
+}
+
+fn scan_file(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    let toks = tokenize(&f.code);
+    let raw_lines = f.raw_lines();
+    let allowlisted = UNSAFE_ALLOWLIST.contains(&f.rel.as_str());
+
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident && t.text == "UnsafeCell" && !allowlisted {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: t.line,
+                check: CHECK,
+                message: "`UnsafeCell` outside the SharedModel allowlist \
+                          (mf/{parallel,neighbourhood,online,hogwild}.rs)"
+                    .into(),
+            });
+        }
+        if !t.is_ident("unsafe") {
+            continue;
+        }
+        let form = match toks.get(k + 1) {
+            Some(n) if n.is_punct(b'{') => "unsafe block",
+            Some(n) if n.is_ident("impl") => "unsafe impl",
+            Some(n) if n.is_ident("fn") => "unsafe fn",
+            _ => "unsafe item",
+        };
+        if form == "unsafe impl" && !allowlisted {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: t.line,
+                check: CHECK,
+                message: "`unsafe impl` outside the SharedModel allowlist \
+                          (mf/{parallel,neighbourhood,online,hogwild}.rs)"
+                    .into(),
+            });
+        }
+        if !has_safety_comment(&raw_lines, t.line) {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: t.line,
+                check: CHECK,
+                message: format!("{form} without a `// SAFETY:` comment"),
+            });
+        }
+    }
+}
+
+/// `SAFETY:` on the site's own line, or anywhere in the contiguous run
+/// of `//` comment lines directly above it.
+fn has_safety_comment(raw_lines: &[&str], line: usize) -> bool {
+    let idx = line.saturating_sub(1); // to 0-based
+    if raw_lines.get(idx).is_some_and(|l| l.contains("SAFETY:")) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let trimmed = raw_lines[k].trim_start();
+        if !trimmed.starts_with("//") {
+            return false;
+        }
+        if trimmed.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}

@@ -1,0 +1,448 @@
+//! A purpose-built Rust lexer — just enough structure for the checks.
+//!
+//! Full parsing is neither needed nor wanted here: the invariants the
+//! gate enforces are lexical (acquisition order of `.lock()` calls,
+//! `SAFETY:` comments, enum variant mentions, metric string literals).
+//! The lexer therefore does exactly two things:
+//!
+//! 1. **Sanitize**: produce a `code` buffer the same length as the raw
+//!    source in which every comment and every string/char literal body
+//!    is blanked to spaces (newlines preserved), so token scans can
+//!    never be fooled by `// .lock()` in prose or `"unsafe"` in a
+//!    string. Raw text is kept alongside for comment-sensitive checks.
+//! 2. **Tokenize** the sanitized buffer into identifiers, numbers and
+//!    single-byte punctuation, each carrying its line number.
+//!
+//! Handled literal forms: line comments, nested block comments, plain
+//! and raw strings (`r"…"`, `r#"…"#`, byte variants), char and byte
+//! literals, and the char-vs-lifetime ambiguity (`'a'` vs `&'a`).
+
+/// A string literal lifted out of the source: where it started and its
+/// (unescaped-as-written) body text.
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    /// 1-based line of the opening quote.
+    pub line: usize,
+    /// Byte offset of the opening quote in `raw`/`code`.
+    pub start: usize,
+    /// Literal body, exactly as written (escapes not interpreted).
+    pub text: String,
+}
+
+/// One scanned source file: raw text, sanitized text (byte-for-byte
+/// aligned with the raw), and the extracted string literals.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the scan root, `/`-separated.
+    pub rel: String,
+    pub raw: String,
+    pub code: String,
+    pub strings: Vec<StrLit>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: String, raw: String) -> SourceFile {
+        let (code, strings) = sanitize(&raw);
+        SourceFile { rel, raw, code, strings }
+    }
+
+    /// Raw source lines (for comment inspection); index 0 is line 1.
+    pub fn raw_lines(&self) -> Vec<&str> {
+        self.raw.lines().collect()
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+/// Blank comments and literal bodies to spaces, preserving byte offsets
+/// and line structure; collect string literals.
+fn sanitize(raw: &str) -> (String, Vec<StrLit>) {
+    let b = raw.as_bytes();
+    let n = b.len();
+    let mut out = Vec::with_capacity(n);
+    let mut strings = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Push a blanked byte: newlines survive (line structure), everything
+    // else becomes a space.
+    fn blank(out: &mut Vec<u8>, line: &mut usize, byte: u8) {
+        if byte == b'\n' {
+            out.push(b'\n');
+            *line += 1;
+        } else {
+            out.push(b' ');
+        }
+    }
+
+    while i < n {
+        let c = b[i];
+        let next = if i + 1 < n { b[i + 1] } else { 0 };
+
+        // Line comment (covers `//`, `///`, `//!`).
+        if c == b'/' && next == b'/' {
+            while i < n && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+
+        // Nested block comment.
+        if c == b'/' && next == b'*' {
+            let mut depth = 1usize;
+            out.push(b' ');
+            out.push(b' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else {
+                    blank(&mut out, &mut line, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+
+        // Identifier — consumed wholesale so `r`/`b` inside a name never
+        // trigger the raw-string path. Raw/byte string prefixes are only
+        // recognized at an identifier *start*.
+        if is_ident_start(c) {
+            // Raw string: r"…" or r#"…"# (with b-prefix variants).
+            let after_prefix = if c == b'b' && next == b'r' { i + 2 } else { i + 1 };
+            if (c == b'r' || (c == b'b' && next == b'r')) && after_prefix <= n {
+                let mut h = after_prefix;
+                while h < n && b[h] == b'#' {
+                    h += 1;
+                }
+                if h < n && b[h] == b'"' {
+                    let hashes = h - after_prefix;
+                    // Blank the prefix + hashes + quote.
+                    for _ in i..=h {
+                        out.push(b' ');
+                    }
+                    let start = i;
+                    let start_line = line;
+                    i = h + 1;
+                    let mut text = String::new();
+                    // Body runs to `"` followed by `hashes` hash marks.
+                    while i < n {
+                        if b[i] == b'"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && b[i + 1 + k] == b'#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                for _ in 0..=hashes {
+                                    out.push(b' ');
+                                }
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        text.push(b[i] as char);
+                        blank(&mut out, &mut line, b[i]);
+                        i += 1;
+                    }
+                    strings.push(StrLit { line: start_line, start, text });
+                    continue;
+                }
+            }
+            // Byte string b"…" / byte char b'…': delegate to the normal
+            // handlers by blanking the prefix byte first.
+            if c == b'b' && (next == b'"' || next == b'\'') {
+                out.push(b' ');
+                i += 1;
+                continue;
+            }
+            while i < n && is_ident_byte(b[i]) {
+                out.push(b[i]);
+                i += 1;
+            }
+            continue;
+        }
+
+        // Plain string literal.
+        if c == b'"' {
+            let start = i;
+            let start_line = line;
+            out.push(b' ');
+            i += 1;
+            let mut text = String::new();
+            while i < n {
+                if b[i] == b'\\' && i + 1 < n {
+                    text.push(b[i] as char);
+                    text.push(b[i + 1] as char);
+                    blank(&mut out, &mut line, b[i]);
+                    blank(&mut out, &mut line, b[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    out.push(b' ');
+                    i += 1;
+                    break;
+                }
+                text.push(b[i] as char);
+                blank(&mut out, &mut line, b[i]);
+                i += 1;
+            }
+            strings.push(StrLit { line: start_line, start, text });
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if next == b'\\' {
+                // Escaped char literal: '\n', '\'', '\u{1F600}' …
+                out.push(b' ');
+                out.push(b' ');
+                out.push(b' ');
+                i += 3; // quote, backslash, escaped byte
+                while i < n && b[i] != b'\'' {
+                    blank(&mut out, &mut line, b[i]);
+                    i += 1;
+                }
+                if i < n {
+                    out.push(b' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' && next != b'\'' {
+                // Plain char literal 'x'.
+                out.push(b' ');
+                out.push(b' ');
+                out.push(b' ');
+                i += 3;
+                continue;
+            }
+            // Lifetime: drop the quote, keep the name.
+            out.push(b' ');
+            i += 1;
+            continue;
+        }
+
+        if c == b'\n' {
+            out.push(b'\n');
+            line += 1;
+        } else {
+            out.push(c);
+        }
+        i += 1;
+    }
+
+    // `out` is built from ASCII substitutions plus verbatim raw bytes,
+    // so it is valid UTF-8 whenever the input was.
+    (String::from_utf8_lossy(&out).into_owned(), strings)
+}
+
+/// Token kinds the checks care about.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    /// A single punctuation byte (`::` arrives as two `Punct(b':')`).
+    Punct(u8),
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Byte offset into `SourceFile::code`.
+    pub start: usize,
+}
+
+impl Tok {
+    pub fn is_punct(&self, b: u8) -> bool {
+        self.kind == TokKind::Punct(b)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+/// Tokenize sanitized code. Numbers keep alphanumeric suffixes
+/// (`1_000u64`) but never consume `.`, so ranges stay as punctuation.
+pub fn tokenize(code: &str) -> Vec<Tok> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: code[start..i].to_string(),
+                line,
+                start,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: code[start..i].to_string(),
+                line,
+                start,
+            });
+            continue;
+        }
+        if c.is_ascii() {
+            toks.push(Tok {
+                kind: TokKind::Punct(c),
+                text: (c as char).to_string(),
+                line,
+                start: i,
+            });
+            i += 1;
+            continue;
+        }
+        // Non-ASCII outside literals (e.g. in a doc example that slipped
+        // through): skip the byte.
+        i += 1;
+    }
+    toks
+}
+
+/// Index of the token that closes the bracket at `open` (which must be
+/// one of `(`, `[`, `{`), or `None` if unbalanced.
+pub fn matching_close(toks: &[Tok], open: usize) -> Option<usize> {
+    let (o, c) = match toks[open].kind {
+        TokKind::Punct(b'(') => (b'(', b')'),
+        TokKind::Punct(b'[') => (b'[', b']'),
+        TokKind::Punct(b'{') => (b'{', b'}'),
+        _ => return None,
+    };
+    let mut depth = 0isize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct(o) {
+            depth += 1;
+        } else if t.is_punct(c) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Index of the token that opens the bracket closing at `close`
+/// (scanning backward), or `None` if unbalanced.
+pub fn matching_open(toks: &[Tok], close: usize) -> Option<usize> {
+    let (o, c) = match toks[close].kind {
+        TokKind::Punct(b')') => (b'(', b')'),
+        TokKind::Punct(b']') => (b'[', b']'),
+        TokKind::Punct(b'}') => (b'{', b'}'),
+        _ => return None,
+    };
+    let mut depth = 0isize;
+    for k in (0..=close).rev() {
+        if toks[k].is_punct(c) {
+            depth += 1;
+        } else if toks[k].is_punct(o) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let x = \"a.lock()\"; // .lock() here\nlet y = 1; /* unsafe */\n";
+        let f = SourceFile::parse("t.rs".into(), src.into());
+        assert!(!f.code.contains("lock"));
+        assert!(!f.code.contains("unsafe"));
+        assert_eq!(f.code.len(), f.raw.len());
+        assert_eq!(f.strings.len(), 1);
+        assert_eq!(f.strings[0].text, "a.lock()");
+        assert_eq!(f.strings[0].line, 1);
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "/* a /* b */ c */ fn f() {}\nlet s = r#\"metric.name\"#;\n";
+        let f = SourceFile::parse("t.rs".into(), src.into());
+        assert!(f.code.contains("fn f"));
+        assert!(!f.code.contains('a'), "comment body leaked: {}", f.code);
+        assert_eq!(f.strings[0].text, "metric.name");
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let src = "let c = 'x'; fn f<'a>(s: &'a str) {} let n = '\\n';\n";
+        let f = SourceFile::parse("t.rs".into(), src.into());
+        assert!(!f.code.contains("'x'"));
+        assert!(f.code.contains('a'), "lifetime name must survive");
+        let toks = tokenize(&f.code);
+        assert!(toks.iter().any(|t| t.is_ident("str")));
+    }
+
+    #[test]
+    fn tokenizer_lines_and_brackets() {
+        let src = "fn f() {\n    a.lock();\n}\n";
+        let f = SourceFile::parse("t.rs".into(), src.into());
+        let toks = tokenize(&f.code);
+        let lock = toks.iter().position(|t| t.is_ident("lock")).unwrap();
+        assert_eq!(toks[lock].line, 2);
+        let open = toks.iter().position(|t| t.is_punct(b'{')).unwrap();
+        let close = matching_close(&toks, open).unwrap();
+        assert!(toks[close].is_punct(b'}'));
+        assert_eq!(matching_open(&toks, close), Some(open));
+    }
+
+    #[test]
+    fn multiline_strings_preserve_line_numbers() {
+        let src = "let s = \"a\nb\";\nfn g() {}\n";
+        let f = SourceFile::parse("t.rs".into(), src.into());
+        let toks = tokenize(&f.code);
+        let g = toks.iter().find(|t| t.is_ident("g")).unwrap();
+        assert_eq!(g.line, 3);
+    }
+}

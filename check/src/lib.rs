@@ -1,0 +1,103 @@
+//! lshmf-check — the in-tree static-analysis gate for the `lshmf`
+//! concurrency core.
+//!
+//! The serving stack's correctness rests on invariants that rustc does
+//! not see: the `flush → core → bands` lock hierarchy, the SAFETY
+//! contracts behind the SharedModel `UnsafeCell` idiom, the requirement
+//! that every wire verb has a dispatch arm and every error kind an
+//! encoder arm, the `# Invariants` rustdoc contracts, and a flat global
+//! metric namespace. This crate parses `rust/src/**/*.rs` with a small
+//! purpose-built lexer ([`lexer`]) and enforces those invariants as
+//! `file:line` diagnostics; ci.sh runs the binary as a hard tier-1
+//! gate.
+//!
+//! Checks:
+//!
+//! * [`checks::lock_order`] — `.lock()` acquisition order per function.
+//! * [`checks::unsafe_hygiene`] — `// SAFETY:` comments on every unsafe
+//!   site; `unsafe impl`/`UnsafeCell` allowlisted; crate-root
+//!   `#![deny(unsafe_op_in_unsafe_fn)]`.
+//! * [`checks::protocol`] — `Request`/`ErrorKind` exhaustiveness across
+//!   dispatch and both codec encoders.
+//! * [`checks::invariants`] — `//! # Invariants` sections present in
+//!   the five concurrency modules.
+//! * [`checks::metrics`] — metric-name naming and kind-uniqueness.
+
+pub mod checks;
+pub mod lexer;
+
+use lexer::SourceFile;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One gate violation, printed as `file:line: [check] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable check identifier (`lock-order`, `unsafe-hygiene`, …).
+    pub check: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.check, self.message)
+    }
+}
+
+/// Summary of a gate run: what was scanned plus every violation.
+#[derive(Debug)]
+pub struct Report {
+    pub files: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Parse every `.rs` file under `root` and run all five checks.
+pub fn run_all(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect(root, root, &mut files)?;
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+
+    let mut diagnostics = Vec::new();
+    diagnostics.extend(checks::lock_order::run(&files));
+    diagnostics.extend(checks::unsafe_hygiene::run(&files));
+    diagnostics.extend(checks::protocol::run(&files));
+    diagnostics.extend(checks::invariants::run(&files));
+    diagnostics.extend(checks::metrics::run(&files));
+    diagnostics.sort_by(|a, b| (&a.file, a.line, a.check).cmp(&(&b.file, b.line, b.check)));
+
+    Ok(Report { files: files.len(), diagnostics })
+}
+
+fn collect(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let raw = fs::read_to_string(&path)?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(SourceFile::parse(rel, raw));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! `lshmf-check` — run the static-analysis gate from anywhere in the
+//! workspace. Exit code 0 when clean, 1 on violations, 2 on usage or
+//! I/O errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: lshmf-check [--root <dir>]
+
+Runs the lshmf static-analysis gate (lock order, unsafe hygiene,
+protocol exhaustiveness, invariant docs, metric names) over a source
+tree. Without --root, the nearest enclosing rust/src is scanned.";
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let mut root: Option<PathBuf> = None;
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = Some(PathBuf::from(dir)),
+                None => {
+                    eprintln!("lshmf-check: --root needs a directory\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("lshmf-check: unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let Some(root) = root.or_else(find_rust_src) else {
+        eprintln!("lshmf-check: no rust/src found above the current directory; pass --root");
+        return ExitCode::from(2);
+    };
+
+    match lshmf_check::run_all(&root) {
+        Ok(report) if report.clean() => {
+            println!(
+                "lshmf-check: OK ({} files, 5 checks, root {})",
+                report.files,
+                root.display()
+            );
+            ExitCode::SUCCESS
+        }
+        Ok(report) => {
+            for d in &report.diagnostics {
+                println!("{d}");
+            }
+            println!(
+                "lshmf-check: {} violation(s) in {} files (root {})",
+                report.diagnostics.len(),
+                report.files,
+                root.display()
+            );
+            ExitCode::FAILURE
+        }
+        Err(err) => {
+            eprintln!("lshmf-check: cannot scan {}: {err}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// The nearest `rust/src` at or above the current directory, falling
+/// back to the workspace location this binary was built from.
+fn find_rust_src() -> Option<PathBuf> {
+    if let Ok(cwd) = std::env::current_dir() {
+        for dir in cwd.ancestors() {
+            let candidate = dir.join("rust").join("src");
+            if candidate.is_dir() {
+                return Some(candidate);
+            }
+        }
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let candidate = manifest.parent()?.join("rust").join("src");
+    candidate.is_dir().then_some(candidate)
+}

@@ -1,0 +1,189 @@
+//! Fixture suite for the static-analysis gate: every seeded-mutant tree
+//! under `tests/fixtures/` must be flagged with the right `file:line`
+//! diagnostic, the clean fixture tree and the real `rust/src` tree must
+//! pass with zero diagnostics.
+
+use lshmf_check::{run_all, Diagnostic};
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> Vec<Diagnostic> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    run_all(&root).unwrap_or_else(|e| panic!("cannot scan fixture {name}: {e}")).diagnostics
+}
+
+/// Assert a diagnostic of `check` at exactly `file:line` whose message
+/// contains `needle`.
+fn assert_flagged(diags: &[Diagnostic], check: &str, file: &str, line: usize, needle: &str) {
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.check == check && d.file == file && d.line == line
+                && d.message.contains(needle)),
+        "expected [{check}] at {file}:{line} (message containing {needle:?}); got:\n{}",
+        render(diags)
+    );
+}
+
+fn render(diags: &[Diagnostic]) -> String {
+    diags.iter().map(|d| format!("  {d}\n")).collect()
+}
+
+#[test]
+fn swapped_lock_order_is_flagged() {
+    let diags = fixture("swapped_lock_order");
+    assert_flagged(
+        &diags,
+        "lock-order",
+        "coordinator/banded.rs",
+        19,
+        "`flush` lock acquired after `core`",
+    );
+    assert_flagged(
+        &diags,
+        "lock-order",
+        "coordinator/banded.rs",
+        25,
+        "bands[0] after bands[1]",
+    );
+    assert_eq!(
+        diags.iter().filter(|d| d.check == "lock-order").count(),
+        2,
+        "only the two seeded violations:\n{}",
+        render(&diags)
+    );
+}
+
+#[test]
+fn safety_less_unsafe_block_is_flagged() {
+    let diags = fixture("missing_safety");
+    assert_flagged(
+        &diags,
+        "unsafe-hygiene",
+        "mf/parallel.rs",
+        10,
+        "unsafe block without a `// SAFETY:` comment",
+    );
+    // The SAFETY-commented, allowlisted `unsafe impl` must NOT be
+    // flagged.
+    assert_eq!(
+        diags.iter().filter(|d| d.check == "unsafe-hygiene").count(),
+        1,
+        "{}",
+        render(&diags)
+    );
+}
+
+#[test]
+fn unlisted_unsafe_sync_is_flagged() {
+    let diags = fixture("unlisted_sync");
+    assert_flagged(
+        &diags,
+        "unsafe-hygiene",
+        "coordinator/stream.rs",
+        12,
+        "`unsafe impl` outside the SharedModel allowlist",
+    );
+    assert_flagged(
+        &diags,
+        "unsafe-hygiene",
+        "coordinator/stream.rs",
+        7,
+        "`UnsafeCell` outside the SharedModel allowlist",
+    );
+    assert_flagged(
+        &diags,
+        "unsafe-hygiene",
+        "coordinator/stream.rs",
+        9,
+        "`UnsafeCell` outside the SharedModel allowlist",
+    );
+}
+
+#[test]
+fn missing_dispatch_arm_is_flagged() {
+    let diags = fixture("missing_dispatch_arm");
+    assert_flagged(
+        &diags,
+        "protocol-exhaustiveness",
+        "coordinator/server.rs",
+        5,
+        "`Request::Flush` has no arm in `fn dispatch`",
+    );
+    assert_flagged(
+        &diags,
+        "protocol-exhaustiveness",
+        "coordinator/protocol.rs",
+        29,
+        "`ErrorKind::Backpressure` has no arm in `fn code`",
+    );
+    // `to_line` covers everything; only the two seeded gaps fire.
+    assert_eq!(
+        diags.iter().filter(|d| d.check == "protocol-exhaustiveness").count(),
+        2,
+        "{}",
+        render(&diags)
+    );
+}
+
+#[test]
+fn duplicate_metric_name_is_flagged() {
+    let diags = fixture("duplicate_metric");
+    assert_flagged(
+        &diags,
+        "metrics-names",
+        "coordinator/shared.rs",
+        16,
+        "registered as gauge but previously as counter",
+    );
+    assert_flagged(
+        &diags,
+        "metrics-names",
+        "coordinator/shared.rs",
+        19,
+        "registered as counter but previously as gauge",
+    );
+    assert_flagged(
+        &diags,
+        "metrics-names",
+        "coordinator/shared.rs",
+        17,
+        "`BadMetricName` is not dotted.snake",
+    );
+}
+
+#[test]
+fn missing_invariants_header_is_flagged() {
+    let diags = fixture("missing_invariants");
+    assert_flagged(
+        &diags,
+        "invariant-docs",
+        "coordinator/rotation.rs",
+        1,
+        "missing its `//! # Invariants` rustdoc section",
+    );
+}
+
+#[test]
+fn clean_fixture_tree_passes() {
+    let diags = fixture("clean");
+    assert!(diags.is_empty(), "clean fixture tree must pass:\n{}", render(&diags));
+}
+
+/// The positive run the CI gate depends on: the real source tree is
+/// clean. A failure here means a genuine invariant regression (fix the
+/// source) or a checker false positive (fix the checker) — never
+/// silence it by relaxing the assert.
+#[test]
+fn real_tree_passes() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("rust/src");
+    let report = run_all(&root).expect("scan rust/src");
+    assert!(report.files >= 30, "expected the full tree, scanned {}", report.files);
+    assert!(
+        report.clean(),
+        "rust/src must pass the gate:\n{}",
+        render(&report.diagnostics)
+    );
+}

@@ -1,0 +1,31 @@
+//! Fixture protocol: both encoders exhaustive.
+//!
+//! # Invariants
+//!
+//! * (fixture)
+
+pub enum Request {
+    Predict { i: u64 },
+    Flush,
+}
+
+pub enum ErrorKind {
+    OutOfRange,
+    Usage(String),
+}
+
+impl ErrorKind {
+    pub fn to_line(&self) -> &'static str {
+        match self {
+            ErrorKind::OutOfRange => "ERR out-of-range",
+            ErrorKind::Usage(_) => "ERR usage",
+        }
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            ErrorKind::OutOfRange => 1,
+            ErrorKind::Usage(_) => 2,
+        }
+    }
+}

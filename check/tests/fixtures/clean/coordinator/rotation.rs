@@ -1,0 +1,7 @@
+//! Fixture rotation module.
+//!
+//! # Invariants
+//!
+//! * (fixture)
+
+pub fn schedule() {}

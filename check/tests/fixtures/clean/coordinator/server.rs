@@ -1,0 +1,10 @@
+//! Fixture server: dispatch covers every verb.
+
+use super::protocol::Request;
+
+pub fn dispatch(req: &Request) -> u32 {
+    match req {
+        Request::Predict { .. } => 1,
+        Request::Flush => 2,
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture shared module.
+//!
+//! # Invariants
+//!
+//! * (fixture)
+
+pub fn publish() {}

@@ -1,0 +1,27 @@
+//! Fixture stream module.
+//!
+//! # Invariants
+//!
+//! * (fixture)
+
+pub struct Registry;
+
+impl Registry {
+    pub fn counter(&self, _name: &str) {}
+    pub fn histogram(&self, _name: &str) {}
+}
+
+pub fn record(m: &Registry, b: usize) {
+    m.counter("stream.ingested");
+    m.counter(&format!("flush.band{b}.train_micros"));
+    m.histogram("stream.flush_seconds");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn names_in_tests_are_ignored() {
+        let m = super::Registry;
+        m.counter("x"); // not dotted — must be skipped by the audit
+    }
+}

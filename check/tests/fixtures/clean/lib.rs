@@ -1,0 +1,6 @@
+//! Fixture crate root: a minimal tree every check passes on.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod coordinator;
+pub mod mf;

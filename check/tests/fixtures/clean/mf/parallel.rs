@@ -1,0 +1,13 @@
+//! Fixture parallel core: allowlisted unsafe with SAFETY comments.
+
+use std::cell::UnsafeCell;
+
+pub struct SharedModel(pub UnsafeCell<Vec<f32>>);
+// SAFETY: fixture; exclusively owned wherever it is used.
+unsafe impl Sync for SharedModel {}
+
+pub fn read_it(shared: &SharedModel) -> usize {
+    // SAFETY: exclusive access in this fixture.
+    let v = unsafe { &*shared.0.get() };
+    v.len()
+}

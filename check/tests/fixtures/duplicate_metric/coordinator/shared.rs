@@ -1,0 +1,20 @@
+//! Fixture: one metric name under two kinds, plus a non-dotted name.
+//!
+//! # Invariants
+//!
+//! * (fixture)
+
+pub struct Registry;
+
+impl Registry {
+    pub fn counter(&self, _name: &str) {}
+    pub fn gauge(&self, _name: &str) {}
+}
+
+pub fn record(m: &Registry, b: usize) {
+    m.counter("shared.publishes");
+    m.gauge("shared.publishes");
+    m.counter("BadMetricName");
+    m.gauge(&format!("shared.shard{b}.rows"));
+    m.counter(&format!("shared.shard{b}.rows"));
+}

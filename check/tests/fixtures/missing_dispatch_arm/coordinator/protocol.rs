@@ -1,0 +1,35 @@
+//! Fixture protocol: `Flush` missing from dispatch, `Backpressure`
+//! missing from the binary encoder.
+//!
+//! # Invariants
+//!
+//! * (fixture)
+
+pub enum Request {
+    Predict { i: u64 },
+    Flush,
+    Stats,
+}
+
+pub enum ErrorKind {
+    OutOfRange,
+    Backpressure,
+    Usage(String),
+}
+
+impl ErrorKind {
+    pub fn to_line(&self) -> &'static str {
+        match self {
+            ErrorKind::OutOfRange => "ERR out-of-range",
+            ErrorKind::Backpressure => "ERR backpressure",
+            ErrorKind::Usage(_) => "ERR usage",
+        }
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            ErrorKind::OutOfRange => 1,
+            ErrorKind::Usage(_) => 3,
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixture server: dispatch covers `Predict` and `Stats` only.
+
+use super::protocol::Request;
+
+pub fn dispatch(req: &Request) -> u32 {
+    match req {
+        Request::Predict { .. } => 1,
+        Request::Stats => 2,
+        _ => 0,
+    }
+}

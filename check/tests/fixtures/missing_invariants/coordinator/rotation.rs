@@ -1,0 +1,3 @@
+//! Fixture: rotation module without its invariants section.
+
+pub fn noop() {}

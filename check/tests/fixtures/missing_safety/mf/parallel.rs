@@ -1,0 +1,12 @@
+//! Fixture: an unsafe deref without a SAFETY comment.
+
+use std::cell::UnsafeCell;
+
+pub struct SharedModel(pub UnsafeCell<Vec<f32>>);
+// SAFETY: fixture type; never actually shared.
+unsafe impl Sync for SharedModel {}
+
+pub fn read_it(shared: &SharedModel) -> usize {
+    let v = unsafe { &*shared.0.get() };
+    v.len()
+}

@@ -1,0 +1,27 @@
+//! Fixture: a flush epoch that takes `core` before `flush`, plus a
+//! descending band-index pair.
+//!
+//! # Invariants
+//!
+//! * Lock order is `flush` -> `core` -> `bands[0..d]`.
+
+use std::sync::Mutex;
+
+pub struct Shared {
+    pub flush: Mutex<()>,
+    pub core: Mutex<u32>,
+    pub bands: Vec<Mutex<u32>>,
+}
+
+impl Shared {
+    pub fn flush_epoch(&self) {
+        let _core = self.core.lock().unwrap();
+        let _flush = self.flush.lock().unwrap();
+        let _guards: Vec<_> = self.bands.iter().map(|m| m.lock().unwrap()).collect();
+    }
+
+    pub fn band_pair(&self) {
+        let _b1 = self.bands[1].lock().unwrap();
+        let _b0 = self.bands[0].lock().unwrap();
+    }
+}

@@ -1,0 +1,12 @@
+//! Fixture: `unsafe impl Sync` and `UnsafeCell` outside the allowlist.
+//!
+//! # Invariants
+//!
+//! * (fixture)
+
+use std::cell::UnsafeCell;
+
+pub struct Sneaky(pub UnsafeCell<u64>);
+
+// SAFETY: not actually safe — the point of the fixture.
+unsafe impl Sync for Sneaky {}

@@ -73,6 +73,9 @@
 //!
 //! # Invariants
 //!
+//! (Machine-checked: `cargo run -p lshmf-check` gates the lock order
+//! and this section's presence in tier-1 CI.)
+//!
 //! * **Lock order is `flush` → `core` → `bands[0..d]`** (band locks in
 //!   ascending index order). The per-rate path takes a single band
 //!   lock; `buffer_batch` takes only its touched bands' locks in the

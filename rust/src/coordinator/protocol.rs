@@ -40,6 +40,9 @@
 //!
 //! # Invariants
 //!
+//! (Machine-checked: `cargo run -p lshmf-check` verifies both encoders
+//! and the server dispatch stay exhaustive over these enums.)
+//!
 //! * **One decode, one dispatch, one encode.** Every wire message
 //!   becomes a [`Request`] exactly once and every reply is an encoded
 //!   [`Response`]; reply semantics live in the server's single
@@ -239,9 +242,19 @@ impl ErrorKind {
     /// The detail string carried after the code byte (empty for
     /// detail-free kinds).
     fn detail(&self) -> &str {
+        // Exhaustive on purpose: a new detail-carrying kind must name
+        // itself here or fail to compile, instead of silently encoding
+        // an empty payload through a `_` arm.
         match self {
             ErrorKind::UnknownVerb(s) | ErrorKind::Usage(s) | ErrorKind::MalformedFrame(s) => s,
-            _ => "",
+            ErrorKind::OutOfRange
+            | ErrorKind::TooManyCols
+            | ErrorKind::TooManyItems
+            | ErrorKind::TooManyEvents
+            | ErrorKind::Backpressure
+            | ErrorKind::InvalidValue
+            | ErrorKind::OutOfBounds
+            | ErrorKind::Empty => "",
         }
     }
 

@@ -36,6 +36,9 @@
 //!
 //! # Invariants
 //!
+//! (Machine-checked: `cargo run -p lshmf-check` gates this section's
+//! presence in tier-1 CI.)
+//!
 //! * **The schedule is a Latin square** ([`RotationPlan::validate`],
 //!   property-tested): every step touches each row band and each column
 //!   band exactly once, and an epoch covers all D² blocks exactly once.

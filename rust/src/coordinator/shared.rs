@@ -51,6 +51,9 @@
 //!
 //! # Invariants
 //!
+//! (Machine-checked: `cargo run -p lshmf-check` audits metric names and
+//! this section's presence in tier-1 CI.)
+//!
 //! * **A snapshot is immutable and complete.** Readers compute on one
 //!   `Arc<Snapshot>`; the only post-publish mutation is the relaxed
 //!   `buffered` counter, which is written solely while its snapshot is

@@ -16,6 +16,10 @@
 //!
 //! # Invariants
 //!
+//! (Machine-checked: `cargo run -p lshmf-check` gates this section's
+//! presence in tier-1 CI; the `prop::interleave` explorer checks the
+//! arrival-order claim bit-for-bit under every bounded schedule.)
+//!
 //! * **Buffer order is arrival order.** `flush` applies the buffered
 //!   events exactly in the order `ingest` accepted them; the
 //!   multi-writer path reproduces this by merging its per-band buffers

@@ -33,6 +33,12 @@
 //! println!("rmse = {}", model.rmse(&ds.test));
 //! ```
 
+// Every unsafe operation must sit in an explicit `unsafe { … }` block
+// with its own `// SAFETY:` justification, even inside `unsafe fn` —
+// the lshmf-check gate enforces both the block comments and this lint's
+// presence.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -573,6 +573,9 @@ pub fn train_culsh_logged(
 /// Shared-mutable holder for the conflict-free rotation schedule (see
 /// [`super::parallel`] for the safety argument).
 struct SharedCulsh(UnsafeCell<CulshModel>);
+// SAFETY: shared across the scoped worker threads only; the block
+// rotation gives every worker disjoint row/column bands within a
+// sub-step, and the barrier orders sub-steps.
 unsafe impl Sync for SharedCulsh {}
 
 /// Parallel trainer: T workers over a T×T block rotation. Worker `t` owns
@@ -644,6 +647,8 @@ pub fn train_culsh_parallel_logged(
         });
         train_secs += t0.elapsed().as_secs_f64();
         if !cfg.eval.is_empty() {
+            // SAFETY: the worker scope has joined; this thread is the
+            // only one holding the cell.
             let model = unsafe { &*shared.0.get() };
             log.push(epoch, train_secs, model.rmse(csr, &cfg.eval));
         }

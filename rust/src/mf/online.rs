@@ -361,6 +361,9 @@ pub fn online_update_with_topk(
 /// Shared-mutable holder for the relaxed rotation (the
 /// `neighbourhood.rs` parallel-trainer idiom).
 struct SharedModel(UnsafeCell<CulshModel>);
+// SAFETY: shared across the scoped lane threads only; the Latin-square
+// rotation gives every lane disjoint new-row/new-column ranges within a
+// sub-step, and the barrier orders sub-steps.
 unsafe impl Sync for SharedModel {}
 
 /// The **relaxed** Algorithm-4 core: the same per-entry update as

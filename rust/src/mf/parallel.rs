@@ -26,6 +26,9 @@ use std::sync::Barrier;
 /// threads access disjoint row/column bands within a sub-step; a barrier
 /// separates sub-steps, so no location is ever accessed concurrently.
 struct SharedModel(UnsafeCell<MfModel>);
+// SAFETY: shared across the scoped worker threads only; the rotation
+// schedule above guarantees all concurrent accesses touch disjoint
+// row/column bands, and the barrier orders sub-steps.
 unsafe impl Sync for SharedModel {}
 
 /// Entries of one block, sorted by row so `u_i` stays hot.
@@ -86,6 +89,8 @@ pub fn train_parallel_sgd_logged(
         });
         train_secs += t0.elapsed().as_secs_f64();
         if !cfg.eval.is_empty() {
+            // SAFETY: the worker scope has joined; this thread is the
+            // only one holding the cell.
             let model = unsafe { &*shared.0.get() };
             log.push(epoch, train_secs, model.rmse(&cfg.eval));
         }

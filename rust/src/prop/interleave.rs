@@ -1,0 +1,258 @@
+//! Deterministic interleaving explorer — a mini-loom for the banded
+//! ingest path (the offline image has no `loom`).
+//!
+//! [`schedules`] enumerates **every** order in which a set of logical
+//! threads can interleave their operation sequences (each thread's own
+//! order preserved — the multinomial coefficient of the counts), and
+//! [`interleave`] replays one such schedule into a single flat op
+//! sequence. The tests in this module drive a 2-writer
+//! [`crate::coordinator::banded::BandedEngine`] plus an explicit flush
+//! participant through *all* schedules of a tiny ingest scenario and
+//! assert the published snapshot is **bit-identical** to a sequential
+//! `Engine` reference fed the same arrival order — executing the
+//! "race-free and deterministic" claim of the banded module's
+//! `# Invariants` section instead of merely documenting it.
+//!
+//! Granularity note: ops are replayed one at a time from the exploring
+//! thread, so each schedule exercises one complete linearization of the
+//! real seq-stamp/buffer/flush-epoch machinery (every `rate` round-trips
+//! through its owning band's writer thread). This explores all
+//! *operation* orders exhaustively; sub-operation overlap is the
+//! sanitizer jobs' department (see ci.yml).
+
+/// All distinct interleavings of `counts[t]` ops per thread `t`,
+/// preserving each thread's internal order. A schedule is a sequence of
+/// thread ids; the k-th occurrence of `t` means "thread t's k-th op".
+/// The result has `(Σcounts)! / Π(counts[t]!)` entries.
+pub fn schedules(counts: &[usize]) -> Vec<Vec<usize>> {
+    let total: usize = counts.iter().sum();
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(total);
+    let mut remaining = counts.to_vec();
+    rec(&mut remaining, &mut cur, total, &mut out);
+    out
+}
+
+fn rec(remaining: &mut [usize], cur: &mut Vec<usize>, total: usize, out: &mut Vec<Vec<usize>>) {
+    if cur.len() == total {
+        out.push(cur.clone());
+        return;
+    }
+    for t in 0..remaining.len() {
+        if remaining[t] > 0 {
+            remaining[t] -= 1;
+            cur.push(t);
+            rec(remaining, cur, total, out);
+            cur.pop();
+            remaining[t] += 1;
+        }
+    }
+}
+
+/// Replay `schedule` (a sequence of thread ids from [`schedules`]) over
+/// per-thread op slices into one flat arrival-order sequence.
+pub fn interleave<T: Clone>(schedule: &[usize], threads: &[&[T]]) -> Vec<T> {
+    let mut cursors = vec![0usize; threads.len()];
+    schedule
+        .iter()
+        .map(|&t| {
+            let op = threads[t][cursors[t]].clone();
+            cursors[t] += 1;
+            op
+        })
+        .collect()
+}
+
+/// `(Σcounts)! / Π(counts[t]!)` — the expected schedule count, computed
+/// multiplicatively so intermediate values stay exact binomials.
+pub fn schedule_count(counts: &[usize]) -> u128 {
+    let mut total = 0u128;
+    let mut result = 1u128;
+    for &c in counts {
+        for k in 1..=c as u128 {
+            total += 1;
+            result = result * total / k;
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::banded::BandedEngine;
+    use crate::coordinator::engine::Engine;
+    use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
+    use crate::lsh::{OnlineHashState, SimLsh};
+    use crate::metrics::Registry;
+    use crate::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+    use crate::rng::Rng;
+    use crate::sparse::{Csc, Csr, Triples};
+    use std::collections::HashSet;
+
+    #[test]
+    fn enumeration_is_exhaustive_and_distinct() {
+        let all = schedules(&[2, 2, 1]);
+        assert_eq!(all.len(), 30);
+        assert_eq!(schedule_count(&[2, 2, 1]), 30);
+        let distinct: HashSet<&Vec<usize>> = all.iter().collect();
+        assert_eq!(distinct.len(), all.len(), "duplicate schedules");
+        for s in &all {
+            assert_eq!(s.iter().filter(|&&t| t == 0).count(), 2);
+            assert_eq!(s.iter().filter(|&&t| t == 1).count(), 2);
+            assert_eq!(s.iter().filter(|&&t| t == 2).count(), 1);
+        }
+        assert_eq!(schedules(&[3, 2]).len(), 10);
+        assert_eq!(schedule_count(&[3, 2]), 10);
+        assert_eq!(schedules(&[0, 0]), vec![Vec::<usize>::new()]);
+        assert_eq!(schedule_count(&[4, 4, 2]), 3150);
+    }
+
+    #[test]
+    fn interleave_preserves_per_thread_order() {
+        let a = [1, 2, 3];
+        let b = [10, 20];
+        for s in schedules(&[a.len(), b.len()]) {
+            let flat = interleave(&s, &[&a, &b]);
+            let from_a: Vec<i32> = flat.iter().copied().filter(|x| *x < 10).collect();
+            let from_b: Vec<i32> = flat.iter().copied().filter(|x| *x >= 10).collect();
+            assert_eq!(from_a, a);
+            assert_eq!(from_b, b);
+        }
+    }
+
+    /// One logical step of a writer or the flush participant.
+    #[derive(Clone, Copy, Debug)]
+    enum WriterOp {
+        Rate(u32, u32, f32),
+        Flush,
+    }
+
+    /// The banded test engine recipe (same tiny scale as banded.rs
+    /// tests); `batch_size` is large so flushes happen only where the
+    /// schedule says.
+    fn engine(seed: u64) -> Engine {
+        let mut rng = Rng::seeded(seed);
+        let (m, n) = (25, 12);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 140 {
+            let (i, j) = (rng.below(m), rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(1, 4, 8, 2);
+        let hash_state = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash_state.topk(3, &mut rng);
+        let cfg = CulshConfig { f: 4, k: 3, epochs: 3, ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut rng);
+        let registry = Registry::new();
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig { batch_size: 64, ..Default::default() },
+            cfg,
+            rng.split(1),
+            registry.clone(),
+        );
+        Engine::new(orch, (1.0, 5.0), registry)
+    }
+
+    /// Replay the flat op sequence into the sequential reference.
+    fn run_reference(ops: &[WriterOp]) -> (Engine, Vec<String>) {
+        let mut e = engine(77);
+        let mut replies = Vec::new();
+        for op in ops {
+            match *op {
+                WriterOp::Rate(i, j, r) => replies.push(format!("{:?}", e.rate(i, j, r))),
+                WriterOp::Flush => replies.push(format!("flushed {}", e.flush())),
+            }
+        }
+        e.flush();
+        (e, replies)
+    }
+
+    /// Replay the same sequence against a fresh 2-writer banded engine;
+    /// every `rate` round-trips through the owning band's writer thread.
+    fn run_banded(ops: &[WriterOp]) -> (BandedEngine, crate::coordinator::banded::BandedHandle, Vec<String>) {
+        let (banded, handle) = BandedEngine::spawn(engine(77), 2);
+        let mut replies = Vec::new();
+        for op in ops {
+            match *op {
+                WriterOp::Rate(i, j, r) => replies.push(format!("{:?}", banded.rate(i, j, r))),
+                WriterOp::Flush => replies.push(format!("flushed {}", banded.flush())),
+            }
+        }
+        banded.flush();
+        (banded, handle, replies)
+    }
+
+    /// Full-grid bit-identity between the banded snapshot and the
+    /// sequential reference: dims, every prediction (compared through
+    /// `f32::to_bits`, so "close" is not good enough) and every top-5.
+    fn assert_bit_identical(banded: &BandedEngine, reference: &Engine, sched: &[usize]) {
+        assert_eq!(banded.dims(), reference.dims(), "dims diverge under {sched:?}");
+        let (m, n) = reference.dims();
+        let cols: Vec<u32> = (0..n as u32).collect();
+        for i in 0..m {
+            let got = banded
+                .predict_many(i, &cols)
+                .map(|v| v.iter().map(|p| p.map(f32::to_bits)).collect::<Vec<_>>());
+            let want = reference
+                .predict_many(i, &cols)
+                .map(|v| v.iter().map(|p| p.map(f32::to_bits)).collect::<Vec<_>>());
+            assert_eq!(got, want, "row {i} predictions diverge under {sched:?}");
+            let got_top: Vec<(u32, u32)> =
+                banded.top_n(i, 5).into_iter().map(|(j, s)| (j, s.to_bits())).collect();
+            let want_top: Vec<(u32, u32)> =
+                reference.top_n(i, 5).into_iter().map(|(j, s)| (j, s.to_bits())).collect();
+            assert_eq!(got_top, want_top, "row {i} top-n diverges under {sched:?}");
+        }
+    }
+
+    fn explore(threads: &[&[WriterOp]]) {
+        let counts: Vec<usize> = threads.iter().map(|t| t.len()).collect();
+        let all = schedules(&counts);
+        assert_eq!(all.len() as u128, schedule_count(&counts));
+        for sched in &all {
+            let ops = interleave(sched, threads);
+            let (reference, want_replies) = run_reference(&ops);
+            let (banded, handle, got_replies) = run_banded(&ops);
+            assert_eq!(got_replies, want_replies, "replies diverge under {sched:?}");
+            assert_bit_identical(&banded, &reference, sched);
+            drop(banded);
+            handle.join();
+        }
+    }
+
+    /// The bounded 2-writer ingest+flush scenario: writer A and writer B
+    /// race a re-rating of the same cell (last-write-wins order is
+    /// arrival order, so every schedule's reference differs), B grows
+    /// the column universe mid-stream, and the flush participant's one
+    /// op lands in every possible position — 30 schedules, each held to
+    /// bit-identical snapshots.
+    #[test]
+    fn two_writers_and_flush_bit_identical_under_every_schedule() {
+        let a: &[WriterOp] = &[WriterOp::Rate(0, 0, 4.5), WriterOp::Rate(1, 11, 3.0)];
+        let b: &[WriterOp] = &[WriterOp::Rate(0, 0, 2.0), WriterOp::Rate(2, 13, 5.0)];
+        let flusher: &[WriterOp] = &[WriterOp::Flush];
+        explore(&[a, b, flusher]);
+    }
+
+    /// A writer whose own sequence embeds a flush between its ratings
+    /// (the batch-trigger shape): 10 schedules against a second writer.
+    #[test]
+    fn embedded_flush_schedules_bit_identical() {
+        let a: &[WriterOp] = &[
+            WriterOp::Rate(3, 1, 1.5),
+            WriterOp::Flush,
+            WriterOp::Rate(3, 13, 4.0),
+        ];
+        let b: &[WriterOp] = &[WriterOp::Rate(4, 6, 2.5), WriterOp::Rate(3, 1, 5.0)];
+        explore(&[a, b]);
+    }
+}

@@ -16,6 +16,12 @@
 //!     ys == xs
 //! });
 //! ```
+//!
+//! [`interleave`] is the companion *deterministic* tool: instead of
+//! sampling random inputs it exhaustively enumerates thread
+//! interleavings for the banded ingest path (a mini-loom).
+
+pub mod interleave;
 
 use crate::rng::Rng;
 use std::ops::RangeInclusive;
