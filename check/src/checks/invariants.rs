@@ -8,12 +8,14 @@ use crate::lexer::SourceFile;
 use crate::Diagnostic;
 
 /// Modules required to carry a `//! # Invariants` section.
-pub const INVARIANT_MODULES: [&str; 5] = [
+pub const INVARIANT_MODULES: [&str; 7] = [
     "coordinator/stream.rs",
     "coordinator/banded.rs",
     "coordinator/shared.rs",
     "coordinator/protocol.rs",
     "coordinator/rotation.rs",
+    "coordinator/cache.rs",
+    "coordinator/server.rs",
 ];
 
 const CHECK: &str = "invariant-docs";

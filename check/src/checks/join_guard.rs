@@ -1,0 +1,247 @@
+//! Join-guard analysis: a function must not call `.join()` while a
+//! `.lock()` guard it bound is still live. Joining a thread whose body
+//! needs that same mutex deadlocks both sides, and even when it does
+//! not, holding a guard across a join stretches the critical section
+//! over an unbounded wait — the serving stack's rule (server.rs
+//! `# Invariants`) is that guards never span a blocking join.
+//!
+//! The analysis is intraprocedural and textual. A *guard* is a binding
+//! of the shape
+//!
+//! ```text
+//! let [mut] name = <receiver>.lock()<adapters>;
+//! ```
+//!
+//! where `<adapters>` is a (possibly empty) chain drawn solely from
+//! `unwrap` / `expect` / `unwrap_or_else` / `unwrap_or` /
+//! `unwrap_or_default` — anything else after `.lock()` (a field read, a
+//! `recv()`, an `is_ok()`) means the guard is a consumed temporary that
+//! dies at the end of the statement, not a live binding. A binding to
+//! the bare `_` pattern also drops immediately and is not a guard.
+//! Guards die when the block they were bound in closes, or at an
+//! explicit `drop(name)`. Any `.join(` call while at least one guard is
+//! live is flagged.
+//!
+//! Known approximations, all conservative for this tree: guards taken
+//! through `if let`/`match` bindings are not tracked (the tree only
+//! binds guards with plain `let`), non-thread `.join()` calls
+//! (`Path::join`, `slice::join`) count as joins — acceptable because
+//! the lint only fires when a lock guard is live, and lock-holding
+//! functions here never build paths or join strings.
+
+use crate::lexer::{matching_close, tokenize, SourceFile, Tok, TokKind};
+use crate::Diagnostic;
+
+const CHECK: &str = "join-guard";
+
+/// Adapter methods that unwrap a `LockResult` without consuming the
+/// guard: a `.lock()` chain made only of these still binds a guard.
+const GUARD_ADAPTERS: [&str; 5] =
+    ["unwrap", "expect", "unwrap_or_else", "unwrap_or", "unwrap_or_default"];
+
+/// A live lock guard: the binding name, the brace depth it was bound
+/// at, and the line of the `.lock()` call.
+struct Guard {
+    name: String,
+    depth: usize,
+    line: usize,
+}
+
+struct FnFrame {
+    name: String,
+    /// Brace depth at which the body opened.
+    depth: usize,
+    guards: Vec<Guard>,
+}
+
+pub fn run(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for f in files {
+        scan_file(f, &mut diags);
+    }
+    diags
+}
+
+fn scan_file(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    let toks = tokenize(&f.code);
+    let mut depth = 0usize;
+    let mut pending_fn: Option<String> = None;
+    let mut stack: Vec<FnFrame> = Vec::new();
+
+    let mut k = 0usize;
+    while k < toks.len() {
+        let t = &toks[k];
+        match t.kind {
+            TokKind::Ident if t.text == "fn" => {
+                if let Some(name) = toks.get(k + 1).filter(|n| n.kind == TokKind::Ident) {
+                    pending_fn = Some(name.text.clone());
+                }
+            }
+            TokKind::Ident if t.text == "drop" => {
+                // `drop(name)` releases the guard early.
+                if toks.get(k + 1).is_some_and(|n| n.is_punct(b'('))
+                    && toks.get(k + 3).is_some_and(|n| n.is_punct(b')'))
+                {
+                    if let Some(victim) = toks.get(k + 2).filter(|n| n.kind == TokKind::Ident) {
+                        if let Some(frame) = stack.last_mut() {
+                            frame.guards.retain(|g| g.name != victim.text);
+                        }
+                    }
+                }
+            }
+            TokKind::Punct(b'{') => {
+                depth += 1;
+                if let Some(name) = pending_fn.take() {
+                    stack.push(FnFrame { name, depth, guards: Vec::new() });
+                }
+            }
+            TokKind::Punct(b'}') => {
+                if let Some(frame) = stack.last_mut() {
+                    frame.guards.retain(|g| g.depth < depth);
+                }
+                if stack.last().is_some_and(|fr| fr.depth == depth) {
+                    stack.pop();
+                }
+                depth = depth.saturating_sub(1);
+            }
+            TokKind::Punct(b';') => {
+                // A `fn name(...);` signature (trait decl) has no body.
+                pending_fn = None;
+            }
+            TokKind::Punct(b'.')
+                if toks.get(k + 1).is_some_and(|n| n.is_ident("lock"))
+                    && toks.get(k + 2).is_some_and(|n| n.is_punct(b'(')) =>
+            {
+                if let Some(name) = guard_binding(&toks, k) {
+                    if let Some(frame) = stack.last_mut() {
+                        frame.guards.push(Guard { name, depth, line: toks[k + 1].line });
+                    }
+                }
+            }
+            TokKind::Punct(b'.')
+                if toks.get(k + 1).is_some_and(|n| n.is_ident("join"))
+                    && toks.get(k + 2).is_some_and(|n| n.is_punct(b'(')) =>
+            {
+                if let Some(frame) = stack.last() {
+                    if let Some(g) = frame.guards.last() {
+                        diags.push(Diagnostic {
+                            file: f.rel.clone(),
+                            line: toks[k + 1].line,
+                            check: CHECK,
+                            message: format!(
+                                "`.join()` called in `fn {}` while lock guard `{}` \
+                                 (bound line {}) is live; drop the guard before joining",
+                                frame.name, g.name, g.line
+                            ),
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+}
+
+/// When the `.lock()` whose dot sits at `dot` is the initializer of a
+/// plain `let [mut] name = …` statement whose trailing chain is made
+/// only of [`GUARD_ADAPTERS`] and ends at `;`, return the bound name.
+fn guard_binding(toks: &[Tok], dot: usize) -> Option<String> {
+    // Backward: the statement must start `let [mut] <name> =`.
+    let mut s = dot;
+    while s > 0 {
+        let t = &toks[s - 1];
+        if t.is_punct(b';') || t.is_punct(b'{') || t.is_punct(b'}') {
+            break;
+        }
+        s -= 1;
+    }
+    if !toks.get(s).is_some_and(|t| t.is_ident("let")) {
+        return None;
+    }
+    let mut j = s + 1;
+    if toks.get(j).is_some_and(|t| t.is_ident("mut")) {
+        j += 1;
+    }
+    let name = toks.get(j).filter(|t| t.kind == TokKind::Ident)?;
+    if name.text == "_" || !toks.get(j + 1).is_some_and(|t| t.is_punct(b'=')) {
+        return None;
+    }
+
+    // Forward: after `.lock(...)`, only adapter calls until `;`.
+    let mut k = matching_close(toks, dot + 2)? + 1;
+    loop {
+        let t = toks.get(k)?;
+        if t.is_punct(b';') {
+            return Some(name.text.clone());
+        }
+        if !t.is_punct(b'.') {
+            return None;
+        }
+        let method = toks.get(k + 1)?;
+        if method.kind != TokKind::Ident
+            || !GUARD_ADAPTERS.contains(&method.text.as_str())
+            || !toks.get(k + 2).is_some_and(|n| n.is_punct(b'('))
+        {
+            return None;
+        }
+        k = matching_close(toks, k + 2)? + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diags(src: &str) -> Vec<Diagnostic> {
+        run(&[SourceFile::parse("t.rs".into(), src.into())])
+    }
+
+    #[test]
+    fn guard_across_join_is_flagged() {
+        let src = "fn drain(&self) {\n    let core = self.core.lock().unwrap();\n    \
+                   self.handle.join().unwrap();\n    drop(core);\n}\n";
+        let d = diags(src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 3);
+        assert!(d[0].message.contains("`core`"), "{}", d[0].message);
+        assert!(d[0].message.contains("fn drain"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn guard_dropped_or_scoped_before_join_passes() {
+        let src = "fn a(&self) {\n    let g = self.core.lock().unwrap();\n    drop(g);\n    \
+                   self.handle.join().unwrap();\n}\n\
+                   fn b(&self) {\n    {\n        let g = self.core.lock().unwrap();\n        \
+                   g.touch();\n    }\n    self.handle.join().unwrap();\n}\n";
+        assert!(diags(src).is_empty(), "{:?}", diags(src));
+    }
+
+    #[test]
+    fn consumed_lock_temporary_is_not_a_guard() {
+        // `.lock()…recv()` binds the recv result, not the guard — the
+        // guard is a temporary dead by the time the join runs.
+        let src = "fn worker(&self) {\n    let msg = self.rx.lock().unwrap_or_else(|e| \
+                   e.into_inner()).recv();\n    self.handle.join().unwrap();\n    \
+                   let _ = msg;\n}\n";
+        assert!(diags(src).is_empty(), "{:?}", diags(src));
+    }
+
+    #[test]
+    fn underscore_binding_and_post_join_guard_pass() {
+        let src = "fn a(&self) {\n    let _ = self.core.lock().unwrap();\n    \
+                   self.handle.join().unwrap();\n}\n\
+                   fn b(&self) {\n    self.handle.join().unwrap();\n    \
+                   let g = self.core.lock().unwrap();\n    g.touch();\n}\n";
+        assert!(diags(src).is_empty(), "{:?}", diags(src));
+    }
+
+    #[test]
+    fn expect_adapter_still_binds_a_guard() {
+        let src = "fn f(&self) {\n    let mut g = self.core.lock().expect(\"poisoned\");\n    \
+                   self.h.join().unwrap();\n}\n";
+        let d = diags(src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("`g`"));
+    }
+}

@@ -1,7 +1,8 @@
-//! The five check passes. Each takes the parsed file set and returns
+//! The six check passes. Each takes the parsed file set and returns
 //! diagnostics; `crate::run_all` concatenates and sorts them.
 
 pub mod invariants;
+pub mod join_guard;
 pub mod lock_order;
 pub mod metrics;
 pub mod protocol;

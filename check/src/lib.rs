@@ -14,13 +14,15 @@
 //! Checks:
 //!
 //! * [`checks::lock_order`] — `.lock()` acquisition order per function.
+//! * [`checks::join_guard`] — no `.lock()` guard held across a
+//!   `.join()` call.
 //! * [`checks::unsafe_hygiene`] — `// SAFETY:` comments on every unsafe
 //!   site; `unsafe impl`/`UnsafeCell` allowlisted; crate-root
 //!   `#![deny(unsafe_op_in_unsafe_fn)]`.
 //! * [`checks::protocol`] — `Request`/`ErrorKind` exhaustiveness across
 //!   dispatch and both codec encoders.
 //! * [`checks::invariants`] — `//! # Invariants` sections present in
-//!   the five concurrency modules.
+//!   the concurrency modules.
 //! * [`checks::metrics`] — metric-name naming and kind-uniqueness.
 
 pub mod checks;
@@ -63,7 +65,7 @@ impl Report {
     }
 }
 
-/// Parse every `.rs` file under `root` and run all five checks.
+/// Parse every `.rs` file under `root` and run all six checks.
 pub fn run_all(root: &Path) -> io::Result<Report> {
     let mut files = Vec::new();
     collect(root, root, &mut files)?;
@@ -71,6 +73,7 @@ pub fn run_all(root: &Path) -> io::Result<Report> {
 
     let mut diagnostics = Vec::new();
     diagnostics.extend(checks::lock_order::run(&files));
+    diagnostics.extend(checks::join_guard::run(&files));
     diagnostics.extend(checks::unsafe_hygiene::run(&files));
     diagnostics.extend(checks::protocol::run(&files));
     diagnostics.extend(checks::invariants::run(&files));

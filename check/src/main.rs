@@ -7,9 +7,10 @@ use std::process::ExitCode;
 
 const USAGE: &str = "usage: lshmf-check [--root <dir>]
 
-Runs the lshmf static-analysis gate (lock order, unsafe hygiene,
-protocol exhaustiveness, invariant docs, metric names) over a source
-tree. Without --root, the nearest enclosing rust/src is scanned.";
+Runs the lshmf static-analysis gate (lock order, join-guard hygiene,
+unsafe hygiene, protocol exhaustiveness, invariant docs, metric names)
+over a source tree. Without --root, the nearest enclosing rust/src is
+scanned.";
 
 fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
@@ -41,7 +42,7 @@ fn main() -> ExitCode {
     match lshmf_check::run_all(&root) {
         Ok(report) if report.clean() => {
             println!(
-                "lshmf-check: OK ({} files, 5 checks, root {})",
+                "lshmf-check: OK ({} files, 6 checks, root {})",
                 report.files,
                 root.display()
             );

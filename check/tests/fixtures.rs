@@ -106,7 +106,7 @@ fn missing_dispatch_arm_is_flagged() {
         &diags,
         "protocol-exhaustiveness",
         "coordinator/server.rs",
-        5,
+        9,
         "`Request::Flush` has no arm in `fn dispatch`",
     );
     assert_flagged(
@@ -160,6 +160,25 @@ fn missing_invariants_header_is_flagged() {
         "coordinator/rotation.rs",
         1,
         "missing its `//! # Invariants` rustdoc section",
+    );
+}
+
+#[test]
+fn guard_held_across_join_is_flagged() {
+    let diags = fixture("join_across_guard");
+    assert_flagged(
+        &diags,
+        "join-guard",
+        "coordinator/banded.rs",
+        17,
+        "while lock guard `core`",
+    );
+    // The scoped-guard and consumed-temporary variants must not fire.
+    assert_eq!(
+        diags.iter().filter(|d| d.check == "join-guard").count(),
+        1,
+        "only the seeded violation:\n{}",
+        render(&diags)
     );
 }
 

@@ -1,4 +1,8 @@
 //! Fixture server: dispatch covers every verb.
+//!
+//! # Invariants
+//!
+//! * (fixture)
 
 use super::protocol::Request;
 

@@ -1,0 +1,32 @@
+//! Fixture: a shutdown path that joins its worker while still holding
+//! the `core` guard, plus two correct variants that must not fire.
+//!
+//! # Invariants
+//!
+//! * No lock guard is held across a `.join()`.
+
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+pub struct Shared {
+    pub core: Mutex<u32>,
+}
+
+pub fn drain(shared: &Shared, worker: JoinHandle<()>) {
+    let core = shared.core.lock().unwrap();
+    worker.join().unwrap();
+    drop(core);
+}
+
+pub fn drain_ok(shared: &Shared, worker: JoinHandle<()>) {
+    {
+        let mut core = shared.core.lock().unwrap();
+        *core += 1;
+    }
+    worker.join().unwrap();
+}
+
+pub fn recv_ok(rx: &Mutex<std::sync::mpsc::Receiver<u32>>, worker: JoinHandle<()>) {
+    let _msg = rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
+    worker.join().unwrap();
+}

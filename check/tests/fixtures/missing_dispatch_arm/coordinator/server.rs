@@ -1,4 +1,8 @@
 //! Fixture server: dispatch covers `Predict` and `Stats` only.
+//!
+//! # Invariants
+//!
+//! * (fixture)
 
 use super::protocol::Request;
 

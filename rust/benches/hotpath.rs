@@ -7,13 +7,20 @@
 //! * conflict-free batch assembly (the PJRT gather path);
 //! * flush latency, exact vs relaxed mode at 1 vs 4 bands (the relaxed
 //!   epoch must beat exact at 4 bands — asserted);
+//! * warm per-row Top-N cache vs the full TOPN re-score (the warm read
+//!   must win — asserted);
+//! * out-of-order connection dispatch: a `TOPN` issued behind an
+//!   in-flight slow `FLUSH` on the same binary connection must come
+//!   back first (asserted) — the read never waits on the write lane;
 //! * PJRT step latency (mf_sgd_step) when artifacts exist.
 
 use lshmf::bench::exp::BenchEnv;
 use lshmf::bench::Bencher;
 use lshmf::coordinator::banded::BandedEngine;
 use lshmf::coordinator::client::{ClientCodec, LshmfClient};
-use lshmf::coordinator::protocol::Request;
+use lshmf::coordinator::protocol::{
+    read_frame, FrameRead, OkBody, Request, Response, MAX_TOPN_ITEMS,
+};
 use lshmf::coordinator::server;
 use lshmf::coordinator::shared::SharedEngine;
 use lshmf::coordinator::stream::{FlushMode, StreamConfig, StreamOrchestrator};
@@ -487,6 +494,193 @@ fn main() {
 
         text.shutdown().unwrap();
         binary.shutdown().unwrap();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = std::net::TcpStream::connect(addr);
+        server_thread.join().unwrap();
+    }
+
+    // --- TOPN: warm per-row cache vs the full re-score
+    {
+        // The read-path tentpole measurement. The baseline is a request
+        // above MAX_TOPN_ITEMS, which bypasses the cache and re-scores
+        // every unrated column of the row — exactly what every TOPN
+        // paid before the per-row cache existed (scoring dominates; the
+        // selection depth is noise). The warm loop re-reads rows whose
+        // band lists are already cached at the current version, so each
+        // reply is a k-way merge of cached lists.
+        let (m, n) = (512usize, 256usize);
+        let mut fix_rng = Rng::seeded(66);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 20_000 {
+            let (i, j) = (fix_rng.below(m), fix_rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + fix_rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let hash_state = OnlineHashState::build(SimLsh::new(2, 6, 8, 2), &csc);
+        let (topk, _) = hash_state.topk(8, &mut fix_rng);
+        let cfg = CulshConfig { f: 16, k: 8, epochs: 1, eval: Vec::new(), ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut Rng::seeded(6));
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig { batch_size: usize::MAX >> 1, ..Default::default() },
+            cfg,
+            Rng::seeded(7),
+            Registry::new(),
+        );
+        let engine = Engine::new(orch, (1.0, 5.0), Registry::new());
+        let (banded, handle) = BandedEngine::spawn(engine, 4);
+        let rows = 256usize;
+        let n_items = 10usize;
+        for row in 0..rows {
+            std::hint::black_box(banded.top_n(row, n_items));
+        }
+        let m_warm = b.run("TOPN n=10 x256 rows (warm cache)", || {
+            for row in 0..rows {
+                std::hint::black_box(banded.top_n(row, n_items));
+            }
+        });
+        let m_full = b.run("TOPN x256 rows (full re-score)", || {
+            for row in 0..rows {
+                std::hint::black_box(banded.top_n(row, MAX_TOPN_ITEMS + 1));
+            }
+        });
+        let (hits, misses, partial) = banded.cache().counts();
+        println!(
+            "warm-cache TOPN vs full re-score: {:.1}x (cache hits {hits} misses {misses} \
+             partial {partial})",
+            m_full.p50.as_secs_f64() / m_warm.p50.as_secs_f64().max(f64::MIN_POSITIVE)
+        );
+        assert!(hits > 0, "the warm loop must actually hit the cache");
+        assert!(
+            m_warm.p50 < m_full.p50,
+            "warm-cache TOPN must beat the full re-score ({:?} vs {:?})",
+            m_warm.p50,
+            m_full.p50
+        );
+        handle.join();
+    }
+
+    // --- out-of-order dispatch: TOPN behind an in-flight slow FLUSH
+    {
+        // The connection-dispatch tentpole measurement: buffer a heavy
+        // fresh-row batch (the flush-latency recipe — 64 new rows × 24
+        // ratings, 5 online epochs, so the flush runs for milliseconds),
+        // then send FLUSH immediately followed by TOPN on the SAME
+        // binary connection. FLUSH runs on the connection's ordered
+        // write lane; TOPN dispatches to a read worker and scores the
+        // still-published snapshot lock-free, so its reply must arrive
+        // first — the read does not wait out the write.
+        let (m, n) = (1024usize, 256usize);
+        let mut fix_rng = Rng::seeded(112);
+        let mut t = Triples::new(m, n);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 30_000 {
+            let (i, j) = (fix_rng.below(m), fix_rng.below(n));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + fix_rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let hash_state = OnlineHashState::build(SimLsh::new(2, 8, 8, 2), &csc);
+        let (topk, _) = hash_state.topk(32, &mut fix_rng);
+        let cfg =
+            CulshConfig { f: 32, k: 32, epochs: 1, eval: Vec::new(), ..Default::default() };
+        let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut Rng::seeded(14));
+        let orch = StreamOrchestrator::new(
+            model,
+            hash_state,
+            t,
+            StreamConfig {
+                batch_size: usize::MAX >> 1,
+                queue_capacity: usize::MAX >> 1,
+                online_epochs: 5,
+                ..Default::default()
+            },
+            cfg,
+            Rng::seeded(15),
+            Registry::new(),
+        );
+        let engine = Engine::new(orch, (1.0, 5.0), Registry::new());
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let server_thread = {
+            let stop = stop.clone();
+            std::thread::spawn(move || server::serve_banded(engine, listener, stop, 2, 4).unwrap())
+        };
+
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).ok();
+        let mut events: Vec<(u32, u32, f32)> = Vec::with_capacity(64 * 24);
+        for r in 0..64u32 {
+            for c in 0..24u32 {
+                let j = (r * 37 + c * 11) % n as u32;
+                events.push((m as u32 + r, j, 2.0 + ((c + r) % 3) as f32));
+            }
+        }
+        use std::io::Write as _;
+        for (seq, chunk) in events.chunks(256).enumerate() {
+            let req = Request::MRate { ratings: chunk.to_vec() };
+            stream.write_all(&req.encode_frame(seq as u32)).unwrap();
+            let FrameRead::Frame(ack) = read_frame(&mut stream).unwrap() else {
+                panic!("expected the MRATE ack");
+            };
+            assert!(matches!(
+                Response::decode_frame(&ack),
+                Ok(Response::Ok(OkBody::Buffered))
+            ));
+        }
+
+        let t0 = std::time::Instant::now();
+        stream.write_all(&Request::Flush.encode_frame(100)).unwrap();
+        stream
+            .write_all(&Request::TopN { row: 0, n: 10 }.encode_frame(101))
+            .unwrap();
+        let mut arrivals: Vec<(u32, std::time::Duration)> = Vec::new();
+        while arrivals.len() < 2 {
+            let FrameRead::Frame(f) = read_frame(&mut stream).unwrap() else {
+                panic!("connection closed mid-race");
+            };
+            let at = t0.elapsed();
+            match Response::decode_frame(&f).unwrap() {
+                Response::TopN(items) => {
+                    assert_eq!(f.seq, 101);
+                    assert!(!items.is_empty(), "row 0 must have unrated columns");
+                }
+                Response::Ok(OkBody::Flushed { applied }) => {
+                    assert_eq!(f.seq, 100);
+                    assert_eq!(applied as usize, events.len());
+                }
+                other => panic!("unexpected reply in the race: {other:?}"),
+            }
+            arrivals.push((f.seq, at));
+        }
+        let lat = |seq: u32| arrivals.iter().find(|(s, _)| *s == seq).unwrap().1;
+        println!(
+            "TOPN behind in-flight FLUSH (same binary conn): topn at {:?}, flush at {:?} \
+             (reply order {:?})",
+            lat(101),
+            lat(100),
+            arrivals.iter().map(|(s, _)| *s).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            arrivals[0].0, 101,
+            "TOPN must overtake the in-flight FLUSH on an out-of-order connection"
+        );
+
+        stream.write_all(&Request::Shutdown.encode_frame(200)).unwrap();
+        let FrameRead::Frame(bye) = read_frame(&mut stream).unwrap() else {
+            panic!("expected BYE");
+        };
+        assert!(matches!(Response::decode_frame(&bye), Ok(Response::Bye)));
+        drop(stream);
         stop.store(true, std::sync::atomic::Ordering::Relaxed);
         let _ = std::net::TcpStream::connect(addr);
         server_thread.join().unwrap();

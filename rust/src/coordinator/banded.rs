@@ -93,8 +93,16 @@
 //!   band's hash-accumulator slice is owned by its writer alone;
 //!   growth re-splits ownership only inside the barrier with every
 //!   band lock held.
+//! * **Cache invalidation follows the swap.** The epoch invalidates the
+//!   per-row Top-N cache (and fans out `SUBSCRIBE` push frames)
+//!   strictly *after* `publish_banded` installs the new snapshot, using
+//!   the same dirty-band report the publish keyed off plus the epoch's
+//!   rated rows — a subscriber that re-reads on a push always sees the
+//!   new state.
 
+use super::cache::{PushSink, TopNCache};
 use super::engine::Engine;
+use super::protocol::MAX_TOPN_ITEMS;
 use super::shared::{dirty_bands, full_snapshot, PublishMetrics, Snapshot};
 use super::stream::{
     dedup_batch, record_relaxed_flush_metrics, FlushMode, IngestResult, StreamConfig,
@@ -147,6 +155,7 @@ struct Core {
     train_cfg: CulshConfig,
     last_flush_cols: Vec<u32>,
     last_topk_moved: Vec<u32>,
+    last_flush_rows: Vec<u32>,
     version: u64,
 }
 
@@ -171,6 +180,9 @@ pub struct BandedOrchestrator {
     cfg: StreamConfig,
     metrics: Registry,
     publish: PublishMetrics,
+    /// Per-row Top-N cache over published snapshots; the flush epoch
+    /// invalidates it right after each snapshot swap.
+    cache: TopNCache,
 }
 
 /// A write-path request for one band's writer thread.
@@ -268,6 +280,7 @@ impl BandedEngine {
                 train_cfg: parts.train_cfg,
                 last_flush_cols: parts.last_flush_cols,
                 last_topk_moved: parts.last_flush_topk_moved,
+                last_flush_rows: parts.last_flush_rows,
                 version: 0,
             }),
             bands,
@@ -278,6 +291,7 @@ impl BandedEngine {
             cfg: parts.cfg,
             metrics: metrics.clone(),
             publish: PublishMetrics::new(&metrics, d),
+            cache: TopNCache::new(d, &metrics),
         });
         let mut txs = Vec::with_capacity(d);
         let mut handles = Vec::with_capacity(d);
@@ -350,10 +364,36 @@ impl BandedEngine {
     }
 
     /// Top-N highest-predicted unrated columns for a row, on the
-    /// current snapshot.
+    /// current snapshot. Requests up to [`MAX_TOPN_ITEMS`] (the
+    /// server's `TOPN` bound) go through the per-row cache; larger
+    /// programmatic requests fall back to the full lock-free re-score.
     pub fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
         self.metrics.counter("server.topn").inc();
-        self.snapshot().top_n_clamped(i, n_items, self.clamp)
+        let snap = self.snapshot();
+        let (m, _) = snap.dims();
+        if i >= m {
+            return Vec::new();
+        }
+        if n_items > MAX_TOPN_ITEMS {
+            return snap.top_n_clamped(i, n_items, self.clamp);
+        }
+        let clamp = self.clamp;
+        self.shared
+            .cache
+            .top_n(snap.version, i as u32, n_items, |b| snap.score_band(i, b, clamp))
+    }
+
+    /// The per-row Top-N cache (push-subscription surface for the
+    /// server's `SUBSCRIBE` verb and the tests).
+    pub fn cache(&self) -> &TopNCache {
+        &self.shared.cache
+    }
+
+    /// Register a push sink fired at every publish; returns the
+    /// currently-published snapshot version (the `SUBSCRIBED` reply).
+    pub fn subscribe_push(&self, sink: PushSink) -> u64 {
+        self.shared.cache.subscribe(sink);
+        self.version()
     }
 
     /// Ingest a rating through the owning band's write queue. Blocks
@@ -477,6 +517,7 @@ impl BandedHandle {
             buffer: Vec::new(),
             last_flush_cols: std::mem::take(&mut core.last_flush_cols),
             last_flush_topk_moved: std::mem::take(&mut core.last_topk_moved),
+            last_flush_rows: std::mem::take(&mut core.last_flush_rows),
             cfg,
             train_cfg: core.train_cfg.clone(),
             rng: core.rng.clone(),
@@ -772,6 +813,23 @@ fn flush_epoch(shared: &BandedOrchestrator) -> usize {
     };
     if applied > 0 {
         publish_banded(shared, core, &guards);
+        // Invalidate (and push-notify) strictly after the swap — see
+        // the module invariants. Growth (rows or cols) clears the whole
+        // cache; otherwise the epoch's own dirty-band report keys it.
+        let d = guards.len();
+        let grew = new_rows > old_rows || new_cols > old_cols;
+        let dirty: Vec<u32> = if grew {
+            Vec::new()
+        } else {
+            let mut bands: Vec<u32> =
+                dirty_bands(&core.last_flush_cols, &core.last_topk_moved, new_cols, d)
+                    .into_iter()
+                    .map(|b| b as u32)
+                    .collect();
+            bands.sort_unstable();
+            bands
+        };
+        shared.cache.invalidate(core.version, &dirty, &core.last_flush_rows, grew);
     }
     applied
 }
@@ -862,6 +920,7 @@ fn flush_in_place(
     core.model = Some(report.model);
     core.combined = combined;
     core.last_flush_cols = increment.iter().map(|&(_, j, _)| j).collect();
+    core.last_flush_rows = increment.iter().map(|&(i, _, _)| i).collect();
     core.last_topk_moved = report.topk_moved_cols;
     shared.metrics.counter("stream.flushes").inc();
     shared
@@ -897,6 +956,7 @@ fn grow_and_flush(
         buffer: batch,
         last_flush_cols: Vec::new(),
         last_flush_topk_moved: Vec::new(),
+        last_flush_rows: Vec::new(),
         cfg: shared.cfg.clone(),
         train_cfg: core.train_cfg.clone(),
         rng: std::mem::replace(&mut core.rng, Rng::seeded(0)),
@@ -912,6 +972,7 @@ fn grow_and_flush(
     core.rng = parts.rng;
     core.last_flush_cols = parts.last_flush_cols;
     core.last_topk_moved = parts.last_flush_topk_moved;
+    core.last_flush_rows = parts.last_flush_rows;
     let new_ncols = core.combined.ncols();
     for (b, (g, hash)) in guards
         .iter_mut()

@@ -1,0 +1,407 @@
+//! Per-row Top-N result cache with dirty-band partial re-scoring — the
+//! incremental read path.
+//!
+//! `TOPN` used to score every column on every request even though the
+//! sharded publish reports exactly which column bands a flush moved.
+//! This module closes that gap: each cached row holds one *candidate
+//! list per column band* (every unrated column of the band, scored and
+//! sorted under the shared ranking comparator, truncated to
+//! [`MAX_TOPN_ITEMS`]). A read merges the per-band lists k-way; bands
+//! untouched since they were scored are served from memory, and only
+//! bands a publish dirtied are re-scored. Because the global Top-N of
+//! `n ≤ MAX_TOPN_ITEMS` items can draw at most `MAX_TOPN_ITEMS` entries
+//! from any single band, the merge of per-band prefixes is bit-identical
+//! to ranking the full catalog (`engine::rank_unrated_by`) — the
+//! property tests in `tests/cache.rs` hold all three serving flavours
+//! to that.
+//!
+//! The same structure drives `SUBSCRIBE` push-invalidation: the
+//! publisher calls [`TopNCache::invalidate`] once per snapshot publish,
+//! and every subscriber sink registered via [`TopNCache::subscribe`]
+//! receives the `(version, dirty bands)` pair that the server forwards
+//! to `SUBSCRIBE`d connections as [`Response::Push`] frames.
+//!
+//! # Invariants
+//!
+//! * **A band list is usable for a snapshot `v` iff the band's content
+//!   is identical at `v` and at the list's stamp.** `band_stamp[b]`
+//!   records the version at which band `b` last changed; a list stamped
+//!   `u` is merged into a read at version `v` only when
+//!   `band_stamp[b] ≤ min(u, v)`. Stamps only advance, so the check is
+//!   exact, never heuristic.
+//! * **A rating to row `i` invalidates *all* of row `i`'s cached bands,
+//!   not just the rated column's band.** The Eq. (1) neighbourhood scan
+//!   reads row `i`'s full rating row, so a new rating shifts
+//!   predictions in clean bands too. `invalidate` drops the row's entry
+//!   and records the version in `row_stamp`; an insert computed from an
+//!   older snapshot is refused against it.
+//! * **Universe growth clears everything.** Growth shifts `band_of`
+//!   boundaries, re-slices every shard and may re-baseline, so
+//!   `invalidate(.., grew=true)` drops all entries, advances every band
+//!   stamp, and blocks inserts from pre-growth snapshots.
+//! * **Inserts are validated under the lock — a stale entry can never
+//!   survive a publish.** A list scored against snapshot `v` is stored
+//!   only if, at insert time, `band_stamp[b] ≤ v`, `grew_stamp ≤ v`,
+//!   and row `i` has not been rated after `v`. A publish that races a
+//!   read therefore loses the cache write, never the correctness.
+//! * **`row_stamp` pruning is horizon-bounded.** Entries older than
+//!   [`STALE_HORIZON`] publishes are pruned, and symmetrically any
+//!   insert whose snapshot lags the current version by more than the
+//!   horizon is refused — pruned history can never admit a stale list.
+//! * **Subscribers are notified after the cache state is updated**, so
+//!   a client that re-reads on a push can never observe a pre-push
+//!   cache. Sinks returning `false` (dead connections) are dropped.
+//!
+//! [`MAX_TOPN_ITEMS`]: super::protocol::MAX_TOPN_ITEMS
+//! [`Response::Push`]: super::protocol::Response::Push
+
+use super::engine::rank_cmp;
+use super::protocol::MAX_TOPN_ITEMS;
+use crate::metrics::{Counter, Registry};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Most cached rows per engine. Bounds memory at roughly
+/// `MAX_CACHED_ROWS × nbands × MAX_TOPN_ITEMS × 8` bytes; rated-row
+/// invalidation recycles slots under write traffic.
+pub const MAX_CACHED_ROWS: usize = 4096;
+
+/// How many publishes a `row_stamp` tombstone outlives (and the maximum
+/// snapshot lag an insert may have). See the module invariants.
+const STALE_HORIZON: u64 = 64;
+
+/// A subscriber sink: called with `(version, dirty bands)` at each
+/// publish (`dirty` empty ⇒ growth, everything changed). Return `false`
+/// to unsubscribe (e.g. the connection closed).
+pub type PushSink = Box<dyn Fn(u64, &[u32]) -> bool + Send + Sync>;
+
+/// One band's scored candidates: every unrated column of the band for
+/// this row, sorted by [`rank_cmp`], truncated to [`MAX_TOPN_ITEMS`].
+struct BandList {
+    /// Snapshot version the list was scored against.
+    stamp: u64,
+    items: Vec<(u32, f32)>,
+}
+
+struct RowEntry {
+    /// One optional list per column band (`None` = never scored or
+    /// dropped).
+    bands: Vec<Option<BandList>>,
+}
+
+struct CacheState {
+    /// Latest version `invalidate` has seen.
+    version: u64,
+    /// Version at which band `b`'s content last changed.
+    band_stamp: Vec<u64>,
+    /// Version of the last universe growth.
+    grew_stamp: u64,
+    /// Version at which a row was last rated (insert guard; pruned past
+    /// [`STALE_HORIZON`]).
+    row_stamp: HashMap<u32, u64>,
+    rows: HashMap<u32, RowEntry>,
+    subs: Vec<PushSink>,
+}
+
+/// Outcome class of one cached read (drives the `cache.*` metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Every band served from memory.
+    Hit,
+    /// Some bands served from memory, dirty bands re-scored.
+    Partial,
+    /// No usable entry; every band scored.
+    Miss,
+}
+
+/// The shared, thread-safe Top-N cache. One per serving engine; all
+/// flavours (`Mutex<Engine>`, `SharedEngine`, `BandedEngine`) route
+/// their `TOPN` reads through [`TopNCache::top_n`].
+pub struct TopNCache {
+    nbands: usize,
+    state: Mutex<CacheState>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    partial: Arc<Counter>,
+    invalidations: Arc<Counter>,
+}
+
+impl TopNCache {
+    pub fn new(nbands: usize, metrics: &Registry) -> Self {
+        assert!(nbands >= 1, "cache needs at least one band");
+        TopNCache {
+            nbands,
+            state: Mutex::new(CacheState {
+                version: 0,
+                band_stamp: vec![0; nbands],
+                grew_stamp: 0,
+                row_stamp: HashMap::new(),
+                rows: HashMap::new(),
+                subs: Vec::new(),
+            }),
+            hits: metrics.counter("cache.hits"),
+            misses: metrics.counter("cache.misses"),
+            partial: metrics.counter("cache.partial"),
+            invalidations: metrics.counter("cache.invalidations"),
+        }
+    }
+
+    pub fn nbands(&self) -> usize {
+        self.nbands
+    }
+
+    /// Register a push sink; it fires on every subsequent publish.
+    pub fn subscribe(&self, sink: PushSink) {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).subs.push(sink);
+    }
+
+    /// Publish notification: snapshot `version` is now visible with the
+    /// given dirty column bands and flush-rated rows. Must be called
+    /// *after* the snapshot swap so subscribers re-reading on the push
+    /// see the new state. `grew` ⇒ the universe dimensions changed.
+    pub fn invalidate(&self, version: u64, dirty: &[u32], rated_rows: &[u32], grew: bool) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        self.invalidations.inc();
+        if version > st.version {
+            st.version = version;
+        }
+        if grew {
+            st.grew_stamp = st.grew_stamp.max(version);
+            for s in &mut st.band_stamp {
+                *s = (*s).max(version);
+            }
+            st.rows.clear();
+            // Inserts from pre-growth snapshots are blocked by
+            // `grew_stamp`, so rating history before the growth can be
+            // forgotten wholesale.
+            st.row_stamp.clear();
+        } else {
+            for &b in dirty {
+                if let Some(s) = st.band_stamp.get_mut(b as usize) {
+                    *s = (*s).max(version);
+                }
+            }
+            for &i in rated_rows {
+                st.rows.remove(&i);
+                st.row_stamp.insert(i, version);
+            }
+            let floor = version.saturating_sub(STALE_HORIZON);
+            st.row_stamp.retain(|_, s| *s >= floor);
+        }
+        // Notify after the state update (see module invariants). Growth
+        // pushes an empty dirty set: the protocol's "everything changed".
+        let bands: &[u32] = if grew { &[] } else { dirty };
+        st.subs.retain(|sink| sink(version, bands));
+    }
+
+    /// The cache-aware Top-N read. `version` is the snapshot the caller
+    /// is serving from; `score_band(b)` must return band `b`'s full
+    /// candidate list for this row, scored against that same snapshot,
+    /// sorted by [`rank_cmp`] and truncated to [`MAX_TOPN_ITEMS`]
+    /// (`engine::band_candidates` does exactly this). The returned
+    /// ranking is bit-identical to `engine::rank_unrated_by` over the
+    /// whole catalog for any `n_items ≤ MAX_TOPN_ITEMS`.
+    pub fn top_n(
+        &self,
+        version: u64,
+        row: u32,
+        n_items: usize,
+        mut score_band: impl FnMut(usize) -> Vec<(u32, f32)>,
+    ) -> Vec<(u32, f32)> {
+        // Phase 1 (locked): pull usable band lists.
+        let mut lists: Vec<Option<Vec<(u32, f32)>>> = vec![None; self.nbands];
+        {
+            let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(entry) = st.rows.get(&row) {
+                for (b, slot) in entry.bands.iter().enumerate() {
+                    if let Some(list) = slot {
+                        let stamp_ok =
+                            st.band_stamp[b] <= version && st.band_stamp[b] <= list.stamp;
+                        if stamp_ok {
+                            lists[b] = Some(list.items.clone());
+                        }
+                    }
+                }
+            }
+        }
+
+        // Phase 2 (unlocked): score the bands the cache could not serve.
+        let cached = lists.iter().filter(|l| l.is_some()).count();
+        let mut fresh: Vec<(usize, Vec<(u32, f32)>)> = Vec::new();
+        for b in 0..self.nbands {
+            if lists[b].is_none() {
+                let scored = score_band(b);
+                debug_assert!(scored.len() <= MAX_TOPN_ITEMS);
+                lists[b] = Some(scored.clone());
+                fresh.push((b, scored));
+            }
+        }
+        match cached {
+            0 => self.misses.inc(),
+            c if c == self.nbands => self.hits.inc(),
+            _ => self.partial.inc(),
+        }
+
+        // Phase 3 (locked): store the freshly scored bands, but only if
+        // no publish invalidated them while we were scoring.
+        if !fresh.is_empty() {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            let admissible = st.grew_stamp <= version
+                && st.row_stamp.get(&row).map_or(true, |&s| s <= version)
+                && version.saturating_add(STALE_HORIZON) >= st.version
+                && (st.rows.len() < MAX_CACHED_ROWS || st.rows.contains_key(&row));
+            if admissible {
+                let nbands = self.nbands;
+                let entry = st
+                    .rows
+                    .entry(row)
+                    .or_insert_with(|| RowEntry { bands: (0..nbands).map(|_| None).collect() });
+                for (b, items) in fresh {
+                    // Re-checked per band: a publish during scoring may
+                    // have dirtied exactly this band.
+                    if st.band_stamp[b] <= version {
+                        let newer = entry.bands[b]
+                            .as_ref()
+                            .map_or(true, |old| old.stamp <= version);
+                        if newer {
+                            entry.bands[b] = Some(BandList { stamp: version, items });
+                        }
+                    }
+                }
+            }
+        }
+
+        merge_ranked(&lists, n_items)
+    }
+
+    /// Test/bench visibility into the metric counters.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (self.hits.get(), self.misses.get(), self.partial.get())
+    }
+}
+
+/// K-way merge of per-band candidate lists under [`rank_cmp`],
+/// truncated to `n_items`. Each input list is sorted by `rank_cmp`;
+/// column ids are globally unique across lists, and `rank_cmp` is a
+/// total order, so the merge reproduces exactly the prefix of the
+/// globally sorted sequence.
+fn merge_ranked(lists: &[Option<Vec<(u32, f32)>>], n_items: usize) -> Vec<(u32, f32)> {
+    let mut heads: Vec<usize> = vec![0; lists.len()];
+    let mut out = Vec::with_capacity(n_items);
+    while out.len() < n_items {
+        let mut best: Option<(usize, (u32, f32))> = None;
+        for (b, list) in lists.iter().enumerate() {
+            let Some(items) = list else { continue };
+            let Some(&cand) = items.get(heads[b]) else { continue };
+            let better = match best {
+                None => true,
+                Some((_, cur)) => rank_cmp(&cand, &cur) == std::cmp::Ordering::Less,
+            };
+            if better {
+                best = Some((b, cand));
+            }
+        }
+        let Some((b, cand)) = best else { break };
+        heads[b] += 1;
+        out.push(cand);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn band_list(items: &[(u32, f32)]) -> Vec<(u32, f32)> {
+        let mut v = items.to_vec();
+        v.sort_unstable_by(rank_cmp);
+        v
+    }
+
+    #[test]
+    fn merge_matches_global_sort() {
+        let a = band_list(&[(0, 3.0), (1, 5.0), (2, f32::NAN)]);
+        let b = band_list(&[(3, 5.0), (4, 4.0)]);
+        let merged = merge_ranked(&[Some(a.clone()), Some(b.clone())], 10);
+        let mut all = [a, b].concat();
+        all.sort_unstable_by(rank_cmp);
+        assert_eq!(
+            merged.iter().map(|(j, s)| (*j, s.to_bits())).collect::<Vec<_>>(),
+            all.iter().map(|(j, s)| (*j, s.to_bits())).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn hit_partial_miss_accounting() {
+        let cache = TopNCache::new(2, &Registry::new());
+        let score = |_b: usize| vec![(0u32, 1.0f32)];
+        cache.top_n(1, 7, 1, score); // miss: both bands scored
+        cache.top_n(1, 7, 1, score); // hit: both bands cached
+        cache.invalidate(2, &[1], &[], false); // band 1 dirty
+        cache.top_n(2, 7, 1, score); // partial: band 0 cached, band 1 re-scored
+        assert_eq!(cache.counts(), (1, 1, 1));
+    }
+
+    #[test]
+    fn rated_row_drops_whole_entry() {
+        let cache = TopNCache::new(2, &Registry::new());
+        let calls = AtomicUsize::new(0);
+        let score = |_b: usize| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            vec![(0u32, 1.0f32)]
+        };
+        cache.top_n(1, 7, 1, score);
+        cache.invalidate(2, &[0], &[7], false); // row 7 rated: entry gone
+        cache.top_n(2, 7, 1, score);
+        assert_eq!(calls.load(Ordering::Relaxed), 4, "both bands re-scored");
+        assert_eq!(cache.counts(), (0, 2, 0));
+    }
+
+    #[test]
+    fn growth_clears_everything() {
+        let cache = TopNCache::new(2, &Registry::new());
+        let score = |_b: usize| vec![(0u32, 1.0f32)];
+        cache.top_n(1, 7, 1, score);
+        cache.top_n(1, 8, 1, score);
+        cache.invalidate(2, &[], &[], true);
+        cache.top_n(2, 7, 1, score);
+        cache.top_n(2, 8, 1, score);
+        assert_eq!(cache.counts(), (0, 4, 0));
+    }
+
+    #[test]
+    fn stale_insert_is_refused_after_publish() {
+        // A read against snapshot 1 that completes after row 7 was rated
+        // at publish 2 must not leave its (now stale) lists behind.
+        let cache = TopNCache::new(1, &Registry::new());
+        cache.invalidate(2, &[0], &[7], false);
+        cache.top_n(1, 7, 1, |_b| vec![(0u32, 1.0f32)]); // late read, old snapshot
+        // A fresh read at version 2 must re-score, not reuse the stale list.
+        let calls = AtomicUsize::new(0);
+        cache.top_n(2, 7, 1, |_b| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            vec![(0u32, 2.0f32)]
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1, "stale insert must have been refused");
+    }
+
+    #[test]
+    fn subscribers_observe_publishes_in_order_and_unsubscribe() {
+        let cache = TopNCache::new(2, &Registry::new());
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        cache.subscribe(Box::new(move |v, dirty| {
+            seen2.lock().unwrap().push((v, dirty.to_vec()));
+            v < 3 // unsubscribe after version 3
+        }));
+        cache.invalidate(2, &[1], &[], false);
+        cache.invalidate(3, &[], &[], true);
+        cache.invalidate(4, &[0], &[], false); // sink already dropped
+        assert_eq!(
+            *seen.lock().unwrap(),
+            vec![(2, vec![1]), (3, vec![])],
+            "push order follows publish order; growth pushes an empty set"
+        );
+    }
+}

@@ -8,10 +8,21 @@
 //! duplex socket — and returns every reply in push order. Dropping an
 //! unfinished pipeline abandons its requests without touching the
 //! socket, so the connection stays usable.
-//! On the binary codec each reply frame is checked against its
-//! request's sequence id; on the text codec ordering *is* the framing
-//! (the server answers a connection's requests in order), and the
-//! pipeline tracks which replies are multi-line (`STATS`).
+//! On the binary codec each reply frame correlates by its request's
+//! sequence id, and the server dispatches out of order (reads overtake
+//! writes), so the client stashes ahead-of-order frames until their
+//! turn; on the text codec ordering *is* the framing (the server
+//! answers a text connection's requests in order), and the pipeline
+//! tracks which replies are multi-line (`STATS`).
+//!
+//! [`LshmfClient::subscribe`] (binary only) turns on the client-side
+//! Top-N cache: the server pushes a [`Response::Push`] frame (seq
+//! `PUSH_SEQ`) at every publish, and the client serves repeat
+//! [`LshmfClient::top_n`] calls from memory until a push lands —
+//! a warm read costs zero network round-trips. Pushes carry the dirty
+//! band set, but the client cannot map bands to the rows whose rated
+//! sets changed, so any push conservatively clears the whole client
+//! cache; the server-side per-row cache does the fine-grained work.
 //!
 //! Pipelining is where the binary codec earns its keep: a
 //! one-verb-per-round-trip text client pays a full network round-trip
@@ -36,7 +47,8 @@
 //! # Ok::<(), std::io::Error>(())
 //! ```
 
-use super::protocol::{read_frame, FrameRead, Request, Response};
+use super::protocol::{read_frame, FrameRead, Request, Response, PUSH_SEQ};
+use std::collections::HashMap;
 use std::io::{self, BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 
@@ -49,12 +61,32 @@ pub enum ClientCodec {
     Binary,
 }
 
+/// The client half of the `SUBSCRIBE` contract: remembered `TOPN`
+/// replies, valid until the next push frame. Entries are only ever
+/// inserted at the version the cache currently sits at (see the
+/// in-flight guard in [`LshmfClient::top_n`]), so a push clearing the
+/// map is sufficient invalidation.
+struct ClientCache {
+    /// Highest publish version observed (from the `SUBSCRIBED` ack,
+    /// then each push frame).
+    version: u64,
+    /// `(row, n) → ranked items` — exactly what `TOPN` replied.
+    entries: HashMap<(usize, usize), Vec<(u32, f32)>>,
+    hits: u64,
+}
+
 /// A connected protocol client.
 pub struct LshmfClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     codec: ClientCodec,
     next_seq: u32,
+    /// Reply frames that arrived ahead of the seq being waited on —
+    /// the server dispatches out of order, the client reorders.
+    /// Bounded by the pipeline's in-flight window.
+    stash: HashMap<u32, Response>,
+    /// `Some` once [`LshmfClient::subscribe`] succeeded.
+    push_cache: Option<ClientCache>,
 }
 
 fn invalid(msg: impl Into<String>) -> io::Error {
@@ -72,7 +104,14 @@ impl LshmfClient {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
         let writer = BufWriter::new(stream);
-        Ok(LshmfClient { reader, writer, codec, next_seq: 0 })
+        Ok(LshmfClient {
+            reader,
+            writer,
+            codec,
+            next_seq: 0,
+            stash: HashMap::new(),
+            push_cache: None,
+        })
     }
 
     /// The codec this client speaks.
@@ -108,9 +147,70 @@ impl LshmfClient {
         self.request(&Request::MPredict { row, cols: cols.to_vec() })
     }
 
-    /// `TOPN <row> <n>`.
+    /// `TOPN <row> <n>` — served from the client-side cache when
+    /// [`subscribe`](LshmfClient::subscribe)d and no publish has been
+    /// pushed since the ranking was fetched.
     pub fn top_n(&mut self, row: usize, n: usize) -> io::Result<Response> {
-        self.request(&Request::TopN { row, n })
+        if let Some(cache) = &mut self.push_cache {
+            if let Some(items) = cache.entries.get(&(row, n)) {
+                cache.hits += 1;
+                return Ok(Response::TopN(items.clone()));
+            }
+        }
+        // Remember which publish the cache sat at when the request
+        // left: if a push lands while the reply is in flight, the
+        // reply may predate the publish, so it must not be cached.
+        let sent_version = self.push_cache.as_ref().map(|c| c.version);
+        let resp = self.request(&Request::TopN { row, n })?;
+        if let (Some(cache), Response::TopN(items)) = (&mut self.push_cache, &resp) {
+            if Some(cache.version) == sent_version {
+                cache.entries.insert((row, n), items.clone());
+            }
+        }
+        Ok(resp)
+    }
+
+    /// `SUBSCRIBE` (binary codec only): ask the server to push an
+    /// invalidation frame at every publish, and turn on the client-side
+    /// Top-N cache it invalidates. Returns the publish version the
+    /// cache starts from.
+    pub fn subscribe(&mut self) -> io::Result<u64> {
+        if self.codec != ClientCodec::Binary {
+            return Err(invalid("SUBSCRIBE requires the binary codec"));
+        }
+        match self.request(&Request::Subscribe)? {
+            Response::Subscribed { version } => {
+                self.push_cache =
+                    Some(ClientCache { version, entries: HashMap::new(), hits: 0 });
+                Ok(version)
+            }
+            other => Err(invalid(format!("expected SUBSCRIBED, got {other:?}"))),
+        }
+    }
+
+    /// `TOPN` calls answered from the client cache since
+    /// [`subscribe`](LshmfClient::subscribe) (zero network round-trips
+    /// each).
+    pub fn cache_hits(&self) -> u64 {
+        self.push_cache.as_ref().map_or(0, |c| c.hits)
+    }
+
+    /// Highest publish version this client has observed via the
+    /// `SUBSCRIBED` ack and push frames (`None` before `subscribe`).
+    pub fn observed_version(&self) -> Option<u64> {
+        self.push_cache.as_ref().map(|c| c.version)
+    }
+
+    /// A push frame landed: the snapshot moved, so every remembered
+    /// ranking may be stale. The push carries dirty *bands*, but rated
+    /// rows invalidate rankings in clean bands too (the Eq. (1) scan
+    /// reads the whole rating row) and the client cannot see which rows
+    /// were rated — so the client cache clears wholesale.
+    fn handle_push(&mut self, version: u64) {
+        if let Some(cache) = &mut self.push_cache {
+            cache.version = cache.version.max(version);
+            cache.entries.clear();
+        }
     }
 
     /// `RATE <row> <col> <value>`.
@@ -149,10 +249,15 @@ impl LshmfClient {
     }
 
     /// Encode one request into `out`; returns the sequence id it was
-    /// stamped with (meaningful on the binary codec).
+    /// stamped with (meaningful on the binary codec). The allocator
+    /// skips [`PUSH_SEQ`] — that id is reserved for server-initiated
+    /// push frames, so a request must never carry it.
     fn encode_into(&mut self, req: &Request, out: &mut Vec<u8>) -> u32 {
         let seq = self.next_seq;
         self.next_seq = self.next_seq.wrapping_add(1);
+        if self.next_seq == PUSH_SEQ {
+            self.next_seq = 0;
+        }
         match self.codec {
             ClientCodec::Text => {
                 out.extend_from_slice(req.encode_text().as_bytes());
@@ -202,39 +307,54 @@ impl LshmfClient {
         Response::decode_text(text).map_err(invalid)
     }
 
-    /// Read one binary reply frame and check it answers `want_seq` —
-    /// the server replies in request order, so a mismatch means the
-    /// stream is desynchronized and the connection is unusable.
+    /// Read binary frames until the reply for `want_seq` arrives. The
+    /// server dispatches out of order, so frames for other in-flight
+    /// requests may arrive first — they stash for their own turn — and
+    /// push frames (seq [`PUSH_SEQ`]) may appear between any two
+    /// replies — they invalidate the client cache and are consumed
+    /// here, never surfaced as a reply.
     fn read_binary_response(&mut self, want_seq: u32) -> io::Result<Response> {
-        match read_frame(&mut self.reader)? {
-            FrameRead::Eof => Err(eof("connection closed mid-reply")),
-            FrameRead::Malformed(detail) => {
-                Err(invalid(format!("malformed response frame: {detail}")))
-            }
-            FrameRead::Frame(frame) => {
-                if frame.seq != want_seq {
-                    return Err(invalid(format!(
-                        "out-of-order response: got seq {}, want {}",
-                        frame.seq, want_seq
-                    )));
+        if let Some(resp) = self.stash.remove(&want_seq) {
+            return Ok(resp);
+        }
+        loop {
+            let frame = match read_frame(&mut self.reader)? {
+                FrameRead::Eof => return Err(eof("connection closed mid-reply")),
+                FrameRead::Malformed(detail) => {
+                    return Err(invalid(format!("malformed response frame: {detail}")))
                 }
-                Response::decode_frame(&frame)
-                    .map_err(|e| invalid(format!("undecodable response: {e}")))
+                FrameRead::Frame(frame) => frame,
+            };
+            let resp = Response::decode_frame(&frame)
+                .map_err(|e| invalid(format!("undecodable response: {e}")))?;
+            if frame.seq == PUSH_SEQ {
+                match resp {
+                    Response::Push { version, .. } => self.handle_push(version),
+                    other => {
+                        return Err(invalid(format!("non-push frame on PUSH_SEQ: {other:?}")))
+                    }
+                }
+                continue;
             }
+            if frame.seq == want_seq {
+                return Ok(resp);
+            }
+            self.stash.insert(frame.seq, resp);
         }
     }
 }
 
 /// Most requests one `finish` write phase keeps in flight before
-/// draining their replies. The server answers strictly one request at
-/// a time, so an unbounded write-everything-then-read strategy can
-/// wedge both TCP directions once the kernel buffers fill (client
-/// blocked writing requests, server blocked writing replies). With a
-/// window of 8 the outstanding reply volume stays far below any
-/// kernel's socket buffering (worst non-`STATS` reply is ~2.3 KiB), so
-/// the server never blocks on its replies and the client's writes
-/// always drain — deadlock-free for pipelines of any size. `STATS`
-/// replies are unbounded, so a window also ends right after one.
+/// draining their replies. An unbounded write-everything-then-read
+/// strategy can wedge both TCP directions once the kernel buffers fill
+/// (client blocked writing requests, server blocked writing replies —
+/// the server's dispatch lanes are finite, so replies back up the
+/// moment the client stops reading). With a window of 8 the
+/// outstanding reply volume stays far below any kernel's socket
+/// buffering (worst non-`STATS` reply is ~2.3 KiB), so the server
+/// never blocks on its replies and the client's writes always drain —
+/// deadlock-free for pipelines of any size. `STATS` replies are
+/// unbounded, so a window also ends right after one.
 const PIPELINE_WINDOW: usize = 8;
 
 /// An in-flight request batch. Requests are encoded into the
@@ -255,11 +375,19 @@ pub struct Pipeline<'c> {
 impl Pipeline<'_> {
     /// Buffer one request. `Shutdown` is refused — it closes the
     /// connection mid-pipeline; use [`LshmfClient::shutdown`].
+    /// `Subscribe` is refused likewise: it changes connection-level
+    /// state the client must mirror; use [`LshmfClient::subscribe`].
     pub fn push(&mut self, req: &Request) -> io::Result<()> {
         if matches!(req, Request::Shutdown) {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidInput,
                 "Shutdown in a pipeline; use LshmfClient::shutdown",
+            ));
+        }
+        if matches!(req, Request::Subscribe) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "Subscribe in a pipeline; use LshmfClient::subscribe",
             ));
         }
         let is_stats = matches!(req, Request::Stats);
@@ -470,6 +598,47 @@ mod tests {
             }
             client.shutdown().unwrap();
         }
+        stop_server(addr, stop, handle);
+    }
+
+    /// The full `SUBSCRIBE` loop against a live sharded server: a
+    /// repeat `TOPN` is served from client memory (zero round-trips),
+    /// the publish push arrives before the `FLUSH` reply that caused
+    /// it (the sink fires inside the publish), and the push clears the
+    /// client cache so the next `TOPN` refetches.
+    #[test]
+    fn subscribe_cache_serves_warm_topn_and_invalidates_on_push() {
+        let (addr, stop, handle) = spawn_server(104);
+        let mut client = LshmfClient::connect(addr, ClientCodec::Binary).unwrap();
+        let v0 = client.subscribe().unwrap();
+        let cold = client.top_n(0, 3).unwrap();
+        assert!(matches!(cold, Response::TopN(_)), "{cold:?}");
+        let warm = client.top_n(0, 3).unwrap();
+        assert_eq!(cold, warm, "warm read must replay the cached ranking");
+        assert_eq!(client.cache_hits(), 1);
+        // a buffered rate does not publish: the cache stays warm
+        client.rate(0, 5, 4.5).unwrap();
+        assert_eq!(client.top_n(0, 3).unwrap(), warm);
+        assert_eq!(client.cache_hits(), 2);
+        // the flush publishes; its push precedes the flush reply on
+        // the wire, so by the time flush() returns the cache is cold
+        assert_eq!(
+            client.flush().unwrap(),
+            Response::Ok(OkBody::Flushed { applied: 1 })
+        );
+        assert_eq!(client.observed_version(), Some(v0 + 1));
+        let after = client.top_n(0, 3).unwrap();
+        assert!(matches!(after, Response::TopN(_)), "{after:?}");
+        assert_eq!(client.cache_hits(), 2, "push must clear the cache");
+        // subscribe is binary-only (client-side refusal on text), and
+        // cannot ride inside a pipeline
+        let mut pipe = client.pipeline();
+        assert!(pipe.push(&Request::Subscribe).is_err());
+        drop(pipe);
+        client.shutdown().unwrap();
+        let mut text = LshmfClient::connect(addr, ClientCodec::Text).unwrap();
+        assert!(text.subscribe().is_err());
+        text.shutdown().unwrap();
         stop_server(addr, stop, handle);
     }
 

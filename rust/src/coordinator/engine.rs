@@ -6,10 +6,29 @@
 //! TCP server and the examples consume. Predictions are clamped to the
 //! rating scale; top-N excludes columns the row has already rated.
 
+use super::cache::TopNCache;
+use super::shared::dirty_bands;
 use super::stream::{Event, IngestResult, StreamOrchestrator};
 use crate::metrics::Registry;
 use crate::mf::neighbourhood::{CulshModel, NeighbourScratch};
-use crate::sparse::Csr;
+use crate::sparse::{band_range, Csr};
+
+/// The one ranking order every Top-N path sorts and merges by:
+/// descending score (`f32::total_cmp`), ties broken by ascending column
+/// id, NaN scores sinking to the tail (a poisoned column must never
+/// lead the recommendations; under plain descending `total_cmp`
+/// positive NaN would sort above +inf). Total over distinct column ids,
+/// which is what makes the cache's per-band k-way merge bit-identical
+/// to a full re-sort.
+#[inline]
+pub(crate) fn rank_cmp(a: &(u32, f32), b: &(u32, f32)) -> std::cmp::Ordering {
+    match (a.1.is_nan(), b.1.is_nan()) {
+        (true, true) => a.0.cmp(&b.0),
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)),
+    }
+}
 
 /// Score every unrated column of `matrix` for row `i` with `score` and
 /// return the top `n_items` (ties broken by ascending column id).
@@ -35,16 +54,36 @@ pub(crate) fn rank_unrated_by(
         }
         scored.push((j as u32, score(j)));
     }
-    // NaN scores sink to the tail (a poisoned column must never lead
-    // the recommendations; under plain descending `total_cmp` positive
-    // NaN would sort above +inf).
-    scored.sort_unstable_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
-        (true, true) => a.0.cmp(&b.0),
-        (true, false) => std::cmp::Ordering::Greater,
-        (false, true) => std::cmp::Ordering::Less,
-        (false, false) => b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)),
-    });
+    scored.sort_unstable_by(rank_cmp);
     scored.truncate(n_items);
+    scored
+}
+
+/// Score one column band's unrated columns for row `i` — the unit the
+/// per-row Top-N cache memoizes. Returns band `[lo, hi)`'s candidates
+/// sorted by [`rank_cmp`] and truncated to
+/// [`MAX_TOPN_ITEMS`](super::protocol::MAX_TOPN_ITEMS): a global Top-N
+/// of `n ≤ MAX_TOPN_ITEMS` items can draw at most that many entries
+/// from one band, so the truncated prefix is lossless for every legal
+/// request. `i` must be in range.
+pub(crate) fn band_candidates(
+    matrix: &Csr,
+    i: usize,
+    lo: usize,
+    hi: usize,
+    mut score: impl FnMut(usize) -> f32,
+) -> Vec<(u32, f32)> {
+    let rated: std::collections::HashSet<usize> =
+        matrix.row(i).map(|(j, _)| j).filter(|&j| j >= lo && j < hi).collect();
+    let mut scored: Vec<(u32, f32)> = Vec::with_capacity((hi - lo).saturating_sub(rated.len()));
+    for j in lo..hi {
+        if rated.contains(&j) {
+            continue;
+        }
+        scored.push((j as u32, score(j)));
+    }
+    scored.sort_unstable_by(rank_cmp);
+    scored.truncate(super::protocol::MAX_TOPN_ITEMS);
     scored
 }
 
@@ -87,11 +126,20 @@ pub struct Engine {
     orch: StreamOrchestrator,
     metrics: Registry,
     clamp: (f32, f32),
+    /// Per-row Top-N result cache over the flushed state. Banded with
+    /// `flush_bands` so invalidation keys off the same dirty-band
+    /// report the sharded publish uses.
+    cache: TopNCache,
+    /// Flush counter stamping cache entries: bumped once per applied
+    /// flush, so a cached band list is valid exactly while no flush
+    /// dirtied its band (or the row) since it was scored.
+    version: u64,
 }
 
 impl Engine {
     pub fn new(orch: StreamOrchestrator, clamp: (f32, f32), metrics: Registry) -> Self {
-        Engine { orch, metrics, clamp }
+        let cache = TopNCache::new(orch.config().flush_bands, &metrics);
+        Engine { orch, metrics, clamp, cache, version: 0 }
     }
 
     pub fn dims(&self) -> (usize, usize) {
@@ -124,6 +172,23 @@ impl Engine {
     /// band detection instead of an O(N·K) scan per publish).
     pub fn last_flush_topk_moved(&self) -> &[u32] {
         self.orch.last_flush_topk_moved()
+    }
+
+    /// Row ids applied by the most recent flush (the per-row Top-N
+    /// cache's row-invalidation source).
+    pub fn last_flush_rows(&self) -> &[u32] {
+        self.orch.last_flush_rows()
+    }
+
+    /// The engine's per-row Top-N cache (push-subscription surface).
+    pub fn cache(&self) -> &TopNCache {
+        &self.cache
+    }
+
+    /// Flushes applied so far — the version cached rankings are keyed
+    /// by, and the version `SUBSCRIBED`/`PUSH` frames carry.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Surrender the orchestrator (the multi-writer spawn dismantles it
@@ -162,14 +227,31 @@ impl Engine {
         Some(raw.clamp(self.clamp.0, self.clamp.1))
     }
 
-    /// Top-N highest-predicted unrated columns for a row.
+    /// Top-N highest-predicted unrated columns for a row. Requests up
+    /// to [`MAX_TOPN_ITEMS`](super::protocol::MAX_TOPN_ITEMS) go
+    /// through the per-row cache (the per-band truncation is lossless
+    /// only up to that bound — exactly the server's `TOPN` limit);
+    /// larger programmatic requests fall back to a full re-score.
     pub fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
-        let (m, _) = self.dims();
+        let (m, n) = self.dims();
         if i >= m {
             return Vec::new();
         }
         self.metrics.counter("engine.topn").inc();
-        rank_unrated(self.orch.model(), self.orch.matrix(), i, n_items, self.clamp)
+        if n_items > super::protocol::MAX_TOPN_ITEMS {
+            return rank_unrated(self.orch.model(), self.orch.matrix(), i, n_items, self.clamp);
+        }
+        let model = self.orch.model();
+        let matrix = self.orch.matrix();
+        let d = self.cache.nbands();
+        let clamp = self.clamp;
+        let mut scratch = NeighbourScratch::default();
+        self.cache.top_n(self.version, i as u32, n_items, |b| {
+            let (lo, hi) = band_range(b, n, d);
+            band_candidates(matrix, i, lo, hi, |j| {
+                model.predict(matrix, i, j, &mut scratch).clamp(clamp.0, clamp.1)
+            })
+        })
     }
 
     /// Batched prediction against one engine state (the `MPREDICT`
@@ -192,19 +274,61 @@ impl Engine {
 
     /// Ingest a rating through the online path.
     pub fn rate(&mut self, i: u32, j: u32, r: f32) -> IngestResult {
-        self.orch.ingest(Event::Rate(i, j, r))
+        let old = self.dims();
+        let res = self.orch.ingest(Event::Rate(i, j, r));
+        if let IngestResult::Flushed { applied } = res {
+            self.note_flush(applied, old);
+        }
+        res
     }
 
     /// Vectorized ingest (the `MRATE` verb): the whole batch is
     /// validated and admitted as one unit, with backpressure capacity
     /// reserved once — see [`StreamOrchestrator::ingest_batch`].
     pub fn rate_many(&mut self, batch: &[(u32, u32, f32)]) -> IngestResult {
-        self.orch.ingest_batch(batch)
+        let old = self.dims();
+        let res = self.orch.ingest_batch(batch);
+        if let IngestResult::Flushed { applied } = res {
+            self.note_flush(applied, old);
+        }
+        res
     }
 
     /// Force-apply buffered ratings.
     pub fn flush(&mut self) -> usize {
-        self.orch.flush()
+        let old = self.dims();
+        let applied = self.orch.flush();
+        self.note_flush(applied, old);
+        applied
+    }
+
+    /// Bump the flush version and invalidate the Top-N cache off the
+    /// flush report: dirty column bands + rated rows, or everything on
+    /// growth (band boundaries shift when `ncols` changes, so band
+    /// stamps stop describing the same columns).
+    fn note_flush(&mut self, applied: usize, old_dims: (usize, usize)) {
+        if applied == 0 {
+            return;
+        }
+        self.version += 1;
+        let dims = self.dims();
+        let grew = dims != old_dims;
+        let dirty: Vec<u32> = if grew {
+            Vec::new()
+        } else {
+            let mut bands: Vec<u32> = dirty_bands(
+                self.orch.last_flush_cols(),
+                self.orch.last_flush_topk_moved(),
+                dims.1,
+                self.cache.nbands(),
+            )
+            .into_iter()
+            .map(|b| b as u32)
+            .collect();
+            bands.sort_unstable();
+            bands
+        };
+        self.cache.invalidate(self.version, &dirty, self.orch.last_flush_rows(), grew);
     }
 
     /// Metrics snapshot (server `STATS` verb).
@@ -324,6 +448,34 @@ mod tests {
         }
         assert_eq!(got[3], None, "out-of-range column maps to None");
         assert!(e.predict_many(99, &cols).is_none(), "out-of-range row");
+    }
+
+    /// The cached read path must be bit-identical to the full re-score,
+    /// cold and warm, across re-rates and universe growth.
+    #[test]
+    fn cached_top_n_is_bit_identical_to_full_rescore() {
+        let mut rng = Rng::seeded(66);
+        let mut e = engine(&mut rng);
+        for round in 0..6u32 {
+            for i in [0usize, 3, 7] {
+                let cached = e.top_n(i, 10);
+                let oracle = rank_unrated(e.orch.model(), e.orch.matrix(), i, 10, e.clamp);
+                assert_eq!(
+                    cached.iter().map(|(j, s)| (*j, s.to_bits())).collect::<Vec<_>>(),
+                    oracle.iter().map(|(j, s)| (*j, s.to_bits())).collect::<Vec<_>>(),
+                    "round {round} row {i}"
+                );
+                let warm = e.top_n(i, 10);
+                assert_eq!(warm, cached, "warm re-read drifted (round {round} row {i})");
+            }
+            // Mutate between rounds: in-range re-rates first, then growth.
+            let j = if round >= 4 { 14 + round } else { rng.below(15) as u32 };
+            e.rate(rng.below(30) as u32, j, 1.0 + rng.f32() * 4.0);
+            e.flush();
+        }
+        let (hits, misses, _) = e.cache.counts();
+        assert!(hits > 0, "warm re-reads must hit the cache");
+        assert!(misses > 0, "cold reads must miss the cache");
     }
 
     #[test]

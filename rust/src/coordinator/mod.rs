@@ -9,6 +9,12 @@
 //!   incremental training (the "online sparse big data" pipeline).
 //! * [`engine`] — the serving engine: predictions, top-N recommendation,
 //!   and live ingestion against a trained CULSH-MF model.
+//! * [`cache`] — the incremental read path: a per-row Top-N result
+//!   cache keyed off the published snapshot version, invalidated per
+//!   dirty column band (plus rated rows) by the same flush report that
+//!   drives the sharded publish — warm `TOPN` reads cost O(changed
+//!   bands), not O(catalog) — and the `SUBSCRIBE` push-notification
+//!   fan-out.
 //! * [`shared`] — the concurrent serving core: epoch-swapped,
 //!   column-band-sharded read snapshots over a single writer thread, so
 //!   `PREDICT`/`MPREDICT`/`TOPN`/`STATS` proceed lock-free while `RATE`
@@ -40,6 +46,7 @@
 //! the whole request path through these modules.
 
 pub mod banded;
+pub mod cache;
 pub mod client;
 pub mod engine;
 pub mod protocol;
@@ -49,6 +56,7 @@ pub mod shared;
 pub mod stream;
 
 pub use banded::{BandedEngine, BandedHandle, BandedOrchestrator};
+pub use cache::TopNCache;
 pub use client::{ClientCodec, LshmfClient, Pipeline};
 pub use engine::Engine;
 pub use protocol::{CodecChoice, ErrorKind, OkBody, Request, Response};

@@ -57,11 +57,22 @@
 //!   bounded line reader (`server::MAX_TEXT_LINE_BYTES`); per-verb item
 //!   caps ([`MAX_MPREDICT_COLS`], [`MAX_TOPN_ITEMS`],
 //!   [`MAX_MRATE_EVENTS`]) bound the work one request can demand.
-//! * **Replies preserve request order.** Pipelined binary responses
-//!   carry their request's sequence id and the server answers strictly
-//!   in order; the client's `Pipeline` bounds its in-flight window so
-//!   both TCP directions can always drain (the window bound lives in
-//!   `client::PIPELINE_WINDOW`).
+//! * **Replies are seq-correlated, not order-correlated.** Every
+//!   pipelined binary response carries its request's sequence id, and
+//!   that tag — not arrival order — is the correlation key. Writes
+//!   (`RATE`/`MRATE`/`FLUSH`/`SHUTDOWN`) execute, and are answered, in
+//!   arrival order per connection; reads (`PREDICT`/`MPREDICT`/`TOPN`/
+//!   `STATS`) dispatch concurrently and their replies may overtake the
+//!   reply to an earlier frame. Clients must match replies by seq (the
+//!   bundled `Pipeline` reorders transparently). The client's
+//!   `Pipeline` still bounds its in-flight window so both TCP
+//!   directions can always drain (`client::PIPELINE_WINDOW`).
+//! * **Push frames are server-initiated and carry [`PUSH_SEQ`].** On a
+//!   `SUBSCRIBE`d binary connection a [`Response::Push`] frame — the
+//!   published snapshot version plus the dirty column-band set — may
+//!   appear between any two replies. The reserved sequence id keeps
+//!   push frames disjoint from request/reply correlation; clients must
+//!   never send a request tagged [`PUSH_SEQ`].
 
 use super::stream::IngestResult;
 use std::io::{self, Read};
@@ -96,6 +107,12 @@ pub const MPREDICT_USAGE: &str = "MPREDICT <row> <col> [<col> ...]";
 pub const TOPN_USAGE: &str = "TOPN <row> <n>";
 pub const RATE_USAGE: &str = "RATE <row> <col> <value>";
 pub const MRATE_USAGE: &str = "MRATE <row> <col> <value> [<row> <col> <value> ...]";
+pub const SUBSCRIBE_USAGE: &str = "SUBSCRIBE (binary-codec connections only)";
+
+/// Reserved sequence id of server-initiated [`Response::Push`] frames.
+/// Requests must never carry it: the client's seq allocator skips it,
+/// so push frames can be told apart from replies by seq alone.
+pub const PUSH_SEQ: u32 = u32::MAX;
 
 /// Which codec a server endpoint speaks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -139,6 +156,14 @@ pub enum Request {
     Flush,
     /// `STATS` — metrics snapshot.
     Stats,
+    /// `SUBSCRIBE` — request push-invalidation frames on this
+    /// connection. Binary codec only: the server answers
+    /// [`Response::Subscribed`] and thereafter emits a
+    /// [`Response::Push`] frame (seq [`PUSH_SEQ`]) at every snapshot
+    /// publish. On a text connection the verb parses but dispatch
+    /// answers a [`ErrorKind::Usage`] error — the line protocol has no
+    /// frame to interleave pushes on.
+    Subscribe,
     /// `QUIT` / `SHUTDOWN` — close the connection (binary connections
     /// receive a [`Response::Bye`] ack first).
     Shutdown,
@@ -303,6 +328,17 @@ pub enum Response {
     Ok(OkBody),
     /// Multi-line stats body, text-terminated by `END`.
     Stats(String),
+    /// `SUBSCRIBED <version>` — ack for [`Request::Subscribe`],
+    /// carrying the currently-published snapshot version so the client
+    /// can seed its cache validity.
+    Subscribed { version: u64 },
+    /// `PUSH <version> [<band> ...]` — server-initiated invalidation:
+    /// snapshot `version` was published and the listed column bands
+    /// changed (an empty list means *everything* changed — growth).
+    /// On the wire it is only ever sent as a binary frame tagged
+    /// [`PUSH_SEQ`]; the text form exists so every `Response`
+    /// round-trips on both codecs.
+    Push { version: u64, dirty: Vec<u32> },
     /// `ERR …` — any [`ErrorKind`].
     Error(ErrorKind),
     /// Shutdown ack. Binary connections receive it before the server
@@ -405,6 +441,7 @@ impl Request {
             }
             "FLUSH" => Ok(Request::Flush),
             "STATS" => Ok(Request::Stats),
+            "SUBSCRIBE" => Ok(Request::Subscribe),
             "QUIT" | "SHUTDOWN" => Ok(Request::Shutdown),
             "" => Err(ErrorKind::Empty),
             other => Err(ErrorKind::UnknownVerb(other.to_string())),
@@ -437,6 +474,7 @@ impl Request {
             }
             Request::Flush => "FLUSH".into(),
             Request::Stats => "STATS".into(),
+            Request::Subscribe => "SUBSCRIBE".into(),
             Request::Shutdown => "QUIT".into(),
         }
     }
@@ -480,6 +518,7 @@ impl Request {
             }
             Request::Flush => op::FLUSH,
             Request::Stats => op::STATS,
+            Request::Subscribe => op::SUBSCRIBE,
             Request::Shutdown => op::SHUTDOWN,
         };
         frame(opcode, seq, payload)
@@ -538,6 +577,7 @@ impl Request {
             }
             op::FLUSH => Request::Flush,
             op::STATS => Request::Stats,
+            op::SUBSCRIBE => Request::Subscribe,
             op::SHUTDOWN => Request::Shutdown,
             other => return Err(ErrorKind::UnknownVerb(format!("opcode {other:#04x}"))),
         };
@@ -573,6 +613,15 @@ impl Response {
             Response::Ok(OkBody::Flushed { applied }) => format!("OK flushed {applied}"),
             Response::Ok(OkBody::Ignored) => "OK ignored".into(),
             Response::Stats(body) => format!("{body}END"),
+            Response::Subscribed { version } => format!("SUBSCRIBED {version}"),
+            Response::Push { version, dirty } => {
+                let mut s = format!("PUSH {version}");
+                for b in dirty {
+                    s.push(' ');
+                    s.push_str(&b.to_string());
+                }
+                s
+            }
             Response::Error(kind) => kind.to_line(),
             // Never sent on a text socket (QUIT closes silently); the
             // form exists so every Response round-trips on both codecs.
@@ -626,6 +675,24 @@ impl Response {
         }
         if text == "BYE" {
             return Ok(Response::Bye);
+        }
+        if let Some(rest) = text.strip_prefix("SUBSCRIBED ") {
+            let version: u64 =
+                rest.parse().map_err(|_| format!("bad SUBSCRIBED version `{rest}`"))?;
+            return Ok(Response::Subscribed { version });
+        }
+        if let Some(rest) = text.strip_prefix("PUSH ") {
+            let mut toks = rest.split_whitespace();
+            let version: u64 = toks
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| format!("bad PUSH version `{rest}`"))?;
+            let mut dirty = Vec::new();
+            for tok in toks {
+                let b: u32 = tok.parse().map_err(|_| format!("bad PUSH band `{tok}`"))?;
+                dirty.push(b);
+            }
+            return Ok(Response::Push { version, dirty });
         }
         if let Some(kind) = ErrorKind::parse_line(text) {
             return Ok(Response::Error(kind));
@@ -681,6 +748,18 @@ impl Response {
             Response::Stats(body) => {
                 payload.extend_from_slice(body.as_bytes());
                 op::R_STATS
+            }
+            Response::Subscribed { version } => {
+                put_u64(&mut payload, *version);
+                op::R_SUBSCRIBED
+            }
+            Response::Push { version, dirty } => {
+                put_u64(&mut payload, *version);
+                put_u32(&mut payload, dirty.len() as u32);
+                for b in dirty {
+                    put_u32(&mut payload, *b);
+                }
+                op::R_PUSH
             }
             Response::Error(kind) => {
                 payload.push(kind.code());
@@ -746,6 +825,19 @@ impl Response {
                         .ok_or_else(|| format!("bad error code {code}"))?,
                 ));
             }
+            op::R_SUBSCRIBED => Response::Subscribed { version: c.u64().ok_or_else(short)? },
+            op::R_PUSH => {
+                let version = c.u64().ok_or_else(short)?;
+                let count = c.u32().ok_or_else(short)? as usize;
+                if count * 4 > c.remaining() {
+                    return Err("PUSH count exceeds payload".into());
+                }
+                let mut dirty = Vec::with_capacity(count);
+                for _ in 0..count {
+                    dirty.push(c.u32().ok_or_else(short)?);
+                }
+                Response::Push { version, dirty }
+            }
             op::R_BYE => Response::Bye,
             other => return Err(format!("unknown response opcode {other:#04x}")),
         };
@@ -770,6 +862,7 @@ mod op {
     pub const FLUSH: u8 = 0x06;
     pub const STATS: u8 = 0x07;
     pub const SHUTDOWN: u8 = 0x08;
+    pub const SUBSCRIBE: u8 = 0x09;
 
     pub const R_PRED: u8 = 0x81;
     pub const R_PREDS: u8 = 0x82;
@@ -778,6 +871,8 @@ mod op {
     pub const R_STATS: u8 = 0x85;
     pub const R_ERR: u8 = 0x86;
     pub const R_BYE: u8 = 0x87;
+    pub const R_SUBSCRIBED: u8 = 0x88;
+    pub const R_PUSH: u8 = 0x89;
 }
 
 /// One decoded binary frame.
@@ -965,6 +1060,7 @@ mod tests {
         );
         assert_eq!(Request::parse_text("FLUSH"), Ok(Request::Flush));
         assert_eq!(Request::parse_text("STATS"), Ok(Request::Stats));
+        assert_eq!(Request::parse_text("SUBSCRIBE"), Ok(Request::Subscribe));
         assert_eq!(Request::parse_text("QUIT"), Ok(Request::Shutdown));
         assert_eq!(Request::parse_text("SHUTDOWN"), Ok(Request::Shutdown));
         // legacy grammar: trailing tokens on fixed-arity verbs ignored
@@ -1065,6 +1161,7 @@ mod tests {
             Request::MRate { ratings: vec![(0, 1, 2.5), (u32::MAX, 0, 1e-20)] },
             Request::Flush,
             Request::Stats,
+            Request::Subscribe,
             Request::Shutdown,
         ];
         for req in reqs {
@@ -1083,6 +1180,9 @@ mod tests {
             Response::Ok(OkBody::Flushed { applied: u64::MAX }),
             Response::Ok(OkBody::Ignored),
             Response::Stats("dims 2x2\ncounter server.rate 3\n".into()),
+            Response::Subscribed { version: u64::MAX },
+            Response::Push { version: 17, dirty: vec![0, 2, 7] },
+            Response::Push { version: 3, dirty: vec![] },
             Response::Bye,
         ];
         for resp in resps {
@@ -1101,6 +1201,8 @@ mod tests {
             Response::TopN(vec![]),
             Response::Ok(OkBody::Flushed { applied: 7 }),
             Response::Stats("dims 30x15\nbuffered 2\ncounter stream.flushes 4\n".into()),
+            Response::Subscribed { version: 9 },
+            Response::Push { version: 4, dirty: vec![1, 3] },
             Response::Bye,
         ];
         for resp in resps {

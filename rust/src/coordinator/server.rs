@@ -40,20 +40,47 @@
 //! Codec selection (`serve --codec`): `text` and `binary` pin one
 //! codec; `auto` (the default) detects per connection from the first
 //! byte — [`BINARY_FRAME_BYTE`] can never start a text verb. Binary
-//! connections are pipelined: a client may keep many frames in flight;
-//! the server answers in order, each response tagged with its request's
-//! sequence id. Unknown verbs/opcodes count into `server.unknown_verb`,
-//! unreadable frames into `server.malformed_frames` (the server replies
+//! connections are pipelined **and dispatch out of order**: the
+//! connection's reader thread never blocks on dispatch — writes
+//! (`RATE`/`MRATE`/`FLUSH`) run in arrival order on one write worker,
+//! reads (`PREDICT`/`MPREDICT`/`TOPN`/`STATS`) fan out over
+//! [`CONN_READ_WORKERS`] read workers, and every reply carries its
+//! request's sequence id, so a `TOPN` behind an in-flight `FLUSH`
+//! completes without waiting for it. `SUBSCRIBE` is intercepted at the
+//! connection level (it registers a push sink, not a dispatchable
+//! request); on the text codec it is a typed usage error, since a
+//! line-oriented reply stream has no frame to interleave pushes into.
+//! Unknown verbs/opcodes count into `server.unknown_verb`, unreadable
+//! frames into `server.malformed_frames` (the server replies
 //! [`ErrorKind::MalformedFrame`] once and closes, since framing is
 //! lost).
+//!
+//! # Invariants
+//!
+//! * **Replies are computed before the writer lock is taken.** The
+//!   per-connection writer is a shared `Mutex`; a thread holding it
+//!   must never acquire engine, cache, or band locks (push sinks fire
+//!   under the cache state lock and take the writer lock, so the
+//!   reverse order would deadlock). [`write_reply`] encodes first and
+//!   locks only to write bytes.
+//! * **Per-connection write order is program order.** All mutating
+//!   verbs of one connection funnel through its single write worker in
+//!   arrival order; only reads overtake writes. `SHUTDOWN`'s `BYE` is
+//!   enqueued after the read workers drain, so it is the connection's
+//!   final non-push frame.
+//! * **Push frames never carry a request's seq.** Sinks tag frames
+//!   [`PUSH_SEQ`], which the client-side seq allocator skips, and a
+//!   sink that fails to write returns `false`, unsubscribing itself —
+//!   a dead connection cannot wedge the publish path.
 
 use super::banded::BandedEngine;
+use super::cache::PushSink;
 use super::engine::Engine;
 pub use super::protocol::MAX_MPREDICT_COLS;
 use super::protocol::{
     read_frame, CodecChoice, ErrorKind, FrameRead, OkBody, Request, Response,
     BINARY_FRAME_BYTE, MAX_MRATE_EVENTS, MAX_TOPN_ITEMS, MPREDICT_USAGE, MRATE_USAGE,
-    TOPN_USAGE,
+    PUSH_SEQ, SUBSCRIBE_USAGE, TOPN_USAGE,
 };
 use super::shared::SharedEngine;
 use super::stream::IngestResult;
@@ -83,6 +110,12 @@ pub trait Serving {
     /// events (`server.unknown_verb`, `server.malformed_frames`) into
     /// the same registry `STATS` dumps.
     fn registry(&self) -> Registry;
+    /// Register a `SUBSCRIBE` push sink: fired at every publish with
+    /// the new snapshot version and dirty band set, until it returns
+    /// `false`. Returns the currently-published version for the
+    /// `SUBSCRIBED` ack, so a client knows which snapshot its cache
+    /// starts from.
+    fn subscribe_push(&self, sink: PushSink) -> u64;
 }
 
 impl Serving for Mutex<Engine> {
@@ -121,6 +154,14 @@ impl Serving for Mutex<Engine> {
     fn registry(&self) -> Registry {
         self.lock().unwrap().metrics().clone()
     }
+
+    fn subscribe_push(&self, sink: PushSink) -> u64 {
+        // The mutex flavour has no publish thread: the engine's own
+        // cache fires sinks synchronously inside flush-applying calls.
+        let e = self.lock().unwrap();
+        e.cache().subscribe(sink);
+        e.version()
+    }
 }
 
 impl Serving for BandedEngine {
@@ -155,6 +196,10 @@ impl Serving for BandedEngine {
     fn registry(&self) -> Registry {
         BandedEngine::metrics(self).clone()
     }
+
+    fn subscribe_push(&self, sink: PushSink) -> u64 {
+        BandedEngine::subscribe_push(self, sink)
+    }
 }
 
 impl Serving for SharedEngine {
@@ -188,6 +233,10 @@ impl Serving for SharedEngine {
 
     fn registry(&self) -> Registry {
         SharedEngine::metrics(self).clone()
+    }
+
+    fn subscribe_push(&self, sink: PushSink) -> u64 {
+        SharedEngine::subscribe_push(self, sink)
     }
 }
 
@@ -237,6 +286,11 @@ pub fn dispatch<S: Serving + ?Sized>(engine: &S, req: &Request) -> Response {
         }
         Request::Flush => Response::Ok(OkBody::Flushed { applied: engine.flush() as u64 }),
         Request::Stats => Response::Stats(engine.stats()),
+        // SUBSCRIBE is a connection-level verb: `binary_conn` intercepts
+        // it before dispatch to wire a push sink into its reply stream.
+        // Reaching here means a text-codec connection asked for pushes
+        // the line protocol cannot interleave.
+        Request::Subscribe => Response::Error(ErrorKind::Usage(SUBSCRIBE_USAGE.into())),
         Request::Shutdown => Response::Bye,
     }
 }
@@ -346,7 +400,7 @@ fn run_pool<S>(
     codec: CodecChoice,
 ) -> std::io::Result<()>
 where
-    S: Serving + Clone + Send + 'static,
+    S: Serving + Clone + Send + Sync + 'static,
 {
     let threads = threads.max(1);
     let (conn_tx, conn_rx) = std::sync::mpsc::channel::<TcpStream>();
@@ -401,7 +455,7 @@ where
 /// byte through the `BufReader` (nothing is consumed, so both codec
 /// loops start from byte zero): [`BINARY_FRAME_BYTE`] can never begin a
 /// text verb, so one byte decides.
-fn handle_conn<S: Serving + ?Sized>(
+fn handle_conn<S: Serving + ?Sized + Sync>(
     engine: &S,
     stream: TcpStream,
     codec: CodecChoice,
@@ -523,32 +577,104 @@ fn text_conn<S: Serving + ?Sized>(
     }
 }
 
-/// The binary codec loop: length-prefixed frames, pipelined — the
-/// client may keep many requests in flight; replies go back in order,
-/// each tagged with its request's sequence id. An unreadable frame is
-/// fatal for the connection (framing is lost): the server counts it,
-/// replies [`ErrorKind::MalformedFrame`] once with sequence id 0, and
-/// closes. A `SHUTDOWN` request is acked with [`Response::Bye`] before
-/// the close.
-fn binary_conn<S: Serving + ?Sized>(
+/// Read workers per binary connection: enough that one slow read
+/// (a cold full-catalog `TOPN`) cannot head-of-line-block the next,
+/// small enough that one connection cannot monopolize the machine.
+pub const CONN_READ_WORKERS: usize = 2;
+
+/// Routing predicate for the out-of-order binary loop: mutating verbs
+/// keep their arrival order on the connection's single write worker;
+/// everything else fans out over the read workers. `SUBSCRIBE` and
+/// `SHUTDOWN` never reach this — the reader handles both inline.
+fn is_conn_write(req: &Request) -> bool {
+    matches!(req, Request::Rate { .. } | Request::MRate { .. } | Request::Flush)
+}
+
+/// Encode a response, then lock the shared connection writer just long
+/// enough to put the frame on the wire. Encoding outside the lock is
+/// load-bearing (see the module invariants): nothing may hold the
+/// writer lock while engine or cache locks are being acquired.
+fn write_reply<W: Write>(writer: &Mutex<W>, resp: &Response, seq: u32) -> std::io::Result<()> {
+    let bytes = resp.encode_frame(seq);
+    let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+    w.write_all(&bytes)?;
+    w.flush()
+}
+
+/// The binary codec loop: length-prefixed frames, pipelined, replies
+/// out of order. The reader thread only classifies frames — writes go
+/// to one ordered write worker, reads to [`CONN_READ_WORKERS`] read
+/// workers, every reply tagged with its request's sequence id — so a
+/// `TOPN` behind an in-flight `FLUSH` completes without waiting for it.
+///
+/// `SUBSCRIBE` is handled inline by the reader: it registers a push
+/// sink that writes [`Response::Push`] frames (seq [`PUSH_SEQ`]) into
+/// this connection's reply stream at every publish, and unsubscribes
+/// itself when a write fails. The sink holds the shared writer beyond
+/// the connection's lifetime, which is exactly why the writer is owned
+/// (`'static`), not borrowed.
+///
+/// An unreadable frame is fatal for the connection (framing is lost):
+/// the server counts it, replies [`ErrorKind::MalformedFrame`] once
+/// with sequence id 0, and closes after in-flight dispatches drain. A
+/// `SHUTDOWN` request stops the reader, drains the read workers, then
+/// acks with [`Response::Bye`] through the ordered write path, so
+/// `BYE` is the last non-push frame on the wire.
+fn binary_conn<S: Serving + ?Sized + Sync>(
     engine: &S,
     mut reader: impl BufRead,
-    mut writer: impl Write,
+    writer: impl Write + Send + 'static,
 ) -> std::io::Result<()> {
     let registry = engine.registry();
-    loop {
-        match read_frame(&mut reader)? {
-            FrameRead::Eof => return Ok(()),
-            FrameRead::Malformed(detail) => {
-                registry.counter("server.malformed_frames").inc();
-                let resp = Response::Error(ErrorKind::MalformedFrame(detail));
-                writer.write_all(&resp.encode_frame(0))?;
-                writer.flush()?;
-                return Ok(());
-            }
-            FrameRead::Frame(frame) => {
-                let response = match Request::decode_frame(&frame) {
-                    Ok(req) => dispatch(engine, &req),
+    let writer = Arc::new(Mutex::new(writer));
+    std::thread::scope(|scope| {
+        let (read_tx, read_rx) = std::sync::mpsc::channel::<(u32, Request)>();
+        let (write_tx, write_rx) = std::sync::mpsc::channel::<(u32, Request)>();
+        let read_rx = Arc::new(Mutex::new(read_rx));
+        let read_workers: Vec<_> = (0..CONN_READ_WORKERS)
+            .map(|_| {
+                let read_rx = Arc::clone(&read_rx);
+                let writer = Arc::clone(&writer);
+                scope.spawn(move || loop {
+                    // Hold the queue lock only to dequeue; dispatch and
+                    // reply run unlocked so the workers overlap.
+                    let next = read_rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
+                    let Ok((seq, req)) = next else { break };
+                    let resp = dispatch(engine, &req);
+                    if write_reply(&writer, &resp, seq).is_err() {
+                        break; // connection is gone; let the queue drain unanswered
+                    }
+                })
+            })
+            .collect();
+        let write_worker = {
+            let writer = Arc::clone(&writer);
+            scope.spawn(move || {
+                for (seq, req) in write_rx {
+                    let resp = dispatch(engine, &req);
+                    let bye = matches!(resp, Response::Bye);
+                    if write_reply(&writer, &resp, seq).is_err() || bye {
+                        break;
+                    }
+                }
+            })
+        };
+
+        // The reader: classify each frame without ever blocking on
+        // dispatch. Any `break` below must fall through to the drain
+        // sequence — returning early would leave the workers parked on
+        // live channel senders and the scope joining forever.
+        let mut shutdown_seq = None;
+        let io = loop {
+            match read_frame(&mut reader) {
+                Err(e) => break Err(e),
+                Ok(FrameRead::Eof) => break Ok(()),
+                Ok(FrameRead::Malformed(detail)) => {
+                    registry.counter("server.malformed_frames").inc();
+                    let resp = Response::Error(ErrorKind::MalformedFrame(detail));
+                    break write_reply(&writer, &resp, 0);
+                }
+                Ok(FrameRead::Frame(frame)) => match Request::decode_frame(&frame) {
                     Err(kind) => {
                         match &kind {
                             ErrorKind::UnknownVerb(_) => {
@@ -559,18 +685,46 @@ fn binary_conn<S: Serving + ?Sized>(
                             }
                             _ => {}
                         }
-                        Response::Error(kind)
+                        if let Err(e) = write_reply(&writer, &Response::Error(kind), frame.seq) {
+                            break Err(e);
+                        }
                     }
-                };
-                let bye = matches!(response, Response::Bye);
-                writer.write_all(&response.encode_frame(frame.seq))?;
-                if bye {
-                    writer.flush()?;
-                    return Ok(());
-                }
+                    Ok(Request::Subscribe) => {
+                        let sink_writer = Arc::clone(&writer);
+                        let version = engine.subscribe_push(Box::new(move |v, dirty| {
+                            let push = Response::Push { version: v, dirty: dirty.to_vec() };
+                            write_reply(&sink_writer, &push, PUSH_SEQ).is_ok()
+                        }));
+                        let ack = Response::Subscribed { version };
+                        if let Err(e) = write_reply(&writer, &ack, frame.seq) {
+                            break Err(e);
+                        }
+                    }
+                    Ok(Request::Shutdown) => {
+                        shutdown_seq = Some(frame.seq);
+                        break Ok(());
+                    }
+                    Ok(req) => {
+                        let lane = if is_conn_write(&req) { &write_tx } else { &read_tx };
+                        let _ = lane.send((frame.seq, req));
+                    }
+                },
             }
+        };
+        // Drain: reads first, so every read reply precedes the BYE a
+        // shutdown puts through the ordered write lane.
+        drop(read_tx);
+        for worker in read_workers {
+            let _ = worker.join();
         }
-    }
+        if let Some(seq) = shutdown_seq {
+            let _ = write_tx.send((seq, Request::Shutdown));
+        }
+        drop(write_tx);
+        let _ = write_worker.join();
+        let _ = writer.lock().unwrap_or_else(|e| e.into_inner()).flush();
+        io
+    })
 }
 
 #[cfg(test)]
@@ -715,6 +869,7 @@ mod tests {
             ),
             (Request::Flush, "FLUSH"),
             (Request::Stats, "STATS"),
+            (Request::Subscribe, "SUBSCRIBE"),
             (Request::Predict { row: 0, col: 6 }, "PREDICT 0 6"),
         ];
         for (req, line) in cases {
@@ -836,6 +991,136 @@ mod tests {
         }
         assert!(handle_line::<SharedEngine>(&shared, "QUIT").is_none());
         writer.join();
+    }
+
+    /// An in-memory `Write` the out-of-order binary loop can own
+    /// (`'static`) while the test keeps a handle to read the replies
+    /// back out.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl SharedBuf {
+        fn take(&self) -> Vec<u8> {
+            std::mem::take(&mut self.0.lock().unwrap())
+        }
+    }
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn read_all_frames(mut bytes: &[u8]) -> Vec<(u32, Response)> {
+        let mut out = Vec::new();
+        loop {
+            match read_frame(&mut bytes).unwrap() {
+                FrameRead::Eof => break,
+                FrameRead::Malformed(d) => panic!("malformed reply frame: {d}"),
+                FrameRead::Frame(f) => {
+                    let resp = Response::decode_frame(&f).unwrap();
+                    out.push((f.seq, resp));
+                }
+            }
+        }
+        out
+    }
+
+    /// The connection-level `SUBSCRIBE` path, end to end in memory:
+    /// the ack carries the currently-published version, and the flush
+    /// that publishes version 1 pushes its `PUSH_SEQ` invalidation
+    /// frame into the reply stream *before* the flush's own reply —
+    /// the sink fires inside the publish, the reply after it.
+    #[test]
+    fn binary_subscribe_pushes_on_publish() {
+        let mut rng = Rng::seeded(83);
+        let e = engine(&mut rng);
+        let mut input = Vec::new();
+        input.extend_from_slice(&Request::Subscribe.encode_frame(1));
+        input.extend_from_slice(&Request::Rate { row: 0, col: 5, value: 4.5 }.encode_frame(2));
+        input.extend_from_slice(&Request::Flush.encode_frame(3));
+        let out = SharedBuf::default();
+        binary_conn(&e, &input[..], out.clone()).unwrap();
+        let replies = read_all_frames(&out.take());
+        assert_eq!(replies[0], (1, Response::Subscribed { version: 0 }));
+        assert_eq!(replies[1], (2, Response::Ok(OkBody::Buffered)));
+        match &replies[2] {
+            (seq, Response::Push { version, .. }) => {
+                assert_eq!(*seq, PUSH_SEQ);
+                assert_eq!(*version, 1);
+            }
+            other => panic!("expected PUSH before the flush reply, got {other:?}"),
+        }
+        assert_eq!(replies[3], (3, Response::Ok(OkBody::Flushed { applied: 1 })));
+        assert_eq!(replies.len(), 4);
+        // text connections cannot interleave push frames: typed refusal
+        assert_eq!(
+            handle_line(&e, "SUBSCRIBE").unwrap(),
+            format!("ERR usage: {SUBSCRIBE_USAGE}")
+        );
+    }
+
+    /// Out-of-order dispatch is wire-legal because replies are
+    /// seq-correlated: a pipelined mix of reads and writes produces
+    /// exactly one correctly-typed reply per sequence id (in whatever
+    /// order the lanes finish), and `SHUTDOWN`'s `BYE` is the final
+    /// frame after everything drains.
+    #[test]
+    fn binary_pipeline_replies_carry_seqs_out_of_order() {
+        let mut rng = Rng::seeded(84);
+        let e = engine(&mut rng);
+        let mut input = Vec::new();
+        input.extend_from_slice(&Request::Predict { row: 0, col: 0 }.encode_frame(10));
+        input.extend_from_slice(&Request::Rate { row: 0, col: 5, value: 4.0 }.encode_frame(11));
+        input.extend_from_slice(&Request::TopN { row: 0, n: 3 }.encode_frame(12));
+        input.extend_from_slice(&Request::Flush.encode_frame(13));
+        input.extend_from_slice(&Request::Stats.encode_frame(14));
+        input.extend_from_slice(&Request::Shutdown.encode_frame(15));
+        let out = SharedBuf::default();
+        binary_conn(&e, &input[..], out.clone()).unwrap();
+        let replies = read_all_frames(&out.take());
+        let mut seqs: Vec<u32> = replies.iter().map(|(s, _)| *s).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, vec![10, 11, 12, 13, 14, 15]);
+        for (seq, resp) in &replies {
+            match seq {
+                10 => assert!(matches!(resp, Response::Pred(_)), "{resp:?}"),
+                11 => assert_eq!(resp, &Response::Ok(OkBody::Buffered)),
+                12 => assert!(matches!(resp, Response::TopN(_)), "{resp:?}"),
+                13 => assert_eq!(resp, &Response::Ok(OkBody::Flushed { applied: 1 })),
+                14 => assert!(matches!(resp, Response::Stats(_)), "{resp:?}"),
+                15 => assert_eq!(resp, &Response::Bye),
+                other => panic!("unexpected seq {other}"),
+            }
+        }
+        assert_eq!(replies.last().unwrap(), &(15, Response::Bye));
+    }
+
+    /// Framing loss stays fatal under the concurrent loop: a truncated
+    /// frame is counted, answered once with sequence id 0, and the
+    /// connection closes.
+    #[test]
+    fn binary_malformed_frame_replies_once_and_closes() {
+        let mut rng = Rng::seeded(85);
+        let e = engine(&mut rng);
+        let input = vec![BINARY_FRAME_BYTE]; // EOF inside the header
+        let out = SharedBuf::default();
+        binary_conn(&e, &input[..], out.clone()).unwrap();
+        let replies = read_all_frames(&out.take());
+        assert_eq!(replies.len(), 1);
+        let (seq, resp) = &replies[0];
+        assert_eq!(*seq, 0);
+        assert!(
+            matches!(resp, Response::Error(ErrorKind::MalformedFrame(_))),
+            "{resp:?}"
+        );
+        let stats = handle_line(&e, "STATS").unwrap();
+        assert!(stats.contains("counter server.malformed_frames 1"), "{stats}");
     }
 
     #[test]

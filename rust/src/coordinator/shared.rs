@@ -70,8 +70,15 @@
 //! * **Superseded snapshots are never written again** — the shutdown
 //!   drain republishes the drained state *before* the buffered counter
 //!   zeroes (the PR 3 coherence fix, regression-tested below).
+//! * **Cache invalidation follows the swap.** Every publish calls
+//!   [`invalidate_from_report`] *after* the snapshot pointer swap, with
+//!   the same dirty-band report the publish itself keyed off (plus the
+//!   flush's rated rows); `SUBSCRIBE` push frames fan out from there,
+//!   so a subscriber that re-reads on a push always sees the new state.
 
-use super::engine::{predict_many_by, rank_unrated_by, Engine};
+use super::cache::{PushSink, TopNCache};
+use super::engine::{band_candidates, predict_many_by, rank_unrated_by, Engine};
+use super::protocol::MAX_TOPN_ITEMS;
 use super::stream::IngestResult;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::mf::neighbourhood::{ColBand, NeighbourScratch, RowFactors, ShardedFactors};
@@ -210,6 +217,20 @@ impl Snapshot {
             view.predict(i, j, &mut scratch).clamp(clamp.0, clamp.1)
         })
     }
+
+    /// One shard's scored Top-N candidates for row `i` — the unit the
+    /// per-row cache memoizes ([`band_candidates`] over this snapshot's
+    /// clamped predictions). `b` indexes this snapshot's shards.
+    pub(crate) fn score_band(&self, i: usize, b: usize, clamp: (f32, f32)) -> Vec<(u32, f32)> {
+        let n = self.matrix.ncols();
+        let d = self.shards.len();
+        let (lo, hi) = band_range(b, n, d);
+        let view = self.view();
+        let mut scratch = NeighbourScratch::default();
+        band_candidates(&self.matrix, i, lo, hi, |j| {
+            view.predict(i, j, &mut scratch).clamp(clamp.0, clamp.1)
+        })
+    }
 }
 
 /// Publish-path metric handles, resolved once at spawn: the hot flush
@@ -277,6 +298,10 @@ pub struct SharedEngine {
     tx: Sender<WriteCmd>,
     clamp: (f32, f32),
     metrics: Registry,
+    /// Per-row Top-N cache over published snapshots, shared by every
+    /// connection handle; the writer invalidates it right after each
+    /// snapshot swap (see [`super::cache`]'s ordering invariant).
+    cache: Arc<TopNCache>,
 }
 
 /// Owns the writer thread; [`WriterHandle::join`] stops it (flushing any
@@ -308,16 +333,31 @@ impl SharedEngine {
         let d = shards.max(1);
         let clamp = engine.clamp();
         let metrics = engine.metrics().clone();
+        let cache = Arc::new(TopNCache::new(d, &metrics));
         let initial = Arc::new(full_snapshot(&engine, d, 0));
         let state = Arc::new(RwLock::new(initial));
         let (tx, rx) = channel();
         let handle = {
             let state = Arc::clone(&state);
             let metrics = metrics.clone();
-            std::thread::spawn(move || writer_loop(engine, rx, state, metrics, d))
+            let cache = Arc::clone(&cache);
+            std::thread::spawn(move || writer_loop(engine, rx, state, metrics, d, cache))
         };
-        let shared = SharedEngine { state, tx: tx.clone(), clamp, metrics };
+        let shared = SharedEngine { state, tx: tx.clone(), clamp, metrics, cache };
         (shared, WriterHandle { handle, tx })
+    }
+
+    /// The per-row Top-N cache (push-subscription surface for the
+    /// server's `SUBSCRIBE` verb and the tests).
+    pub fn cache(&self) -> &TopNCache {
+        &self.cache
+    }
+
+    /// Register a push sink fired at every publish; returns the
+    /// currently-published snapshot version (the `SUBSCRIBED` reply).
+    pub fn subscribe_push(&self, sink: PushSink) -> u64 {
+        self.cache.subscribe(sink);
+        self.version()
     }
 
     /// The engine's metric registry (shared with the writer thread and
@@ -370,10 +410,21 @@ impl SharedEngine {
     }
 
     /// Top-N highest-predicted unrated columns for a row, on the current
-    /// snapshot.
+    /// snapshot. Requests up to [`MAX_TOPN_ITEMS`] (the server's `TOPN`
+    /// bound) go through the per-row cache; larger programmatic
+    /// requests fall back to the full lock-free re-score.
     pub fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
         self.metrics.counter("server.topn").inc();
-        self.snapshot().top_n_clamped(i, n_items, self.clamp)
+        let snap = self.snapshot();
+        let (m, _) = snap.dims();
+        if i >= m {
+            return Vec::new();
+        }
+        if n_items > MAX_TOPN_ITEMS {
+            return snap.top_n_clamped(i, n_items, self.clamp);
+        }
+        let clamp = self.clamp;
+        self.cache.top_n(snap.version, i as u32, n_items, |b| snap.score_band(i, b, clamp))
     }
 
     /// Ingest a rating through the single-writer online path. Blocks
@@ -481,6 +532,7 @@ fn writer_loop(
     state: Arc<RwLock<Arc<Snapshot>>>,
     metrics: Registry,
     shards: usize,
+    cache: Arc<TopNCache>,
 ) -> Engine {
     let pm = PublishMetrics::new(&metrics, shards);
     let mut version = 1u64;
@@ -488,6 +540,7 @@ fn writer_loop(
     for cmd in rx {
         match cmd {
             WriteCmd::Rate { i, j, r, reply } => {
+                let prev_dims = current.dims();
                 let result = engine.rate(i, j, r);
                 match result {
                     IngestResult::Buffered => {
@@ -495,6 +548,7 @@ fn writer_loop(
                     }
                     IngestResult::Flushed { .. } => {
                         current = publish(&state, &engine, version, &pm);
+                        invalidate_from_report(&cache, &engine, version, prev_dims, shards);
                         version += 1;
                     }
                     // Rejected / InvalidValue / OutOfBounds never enter
@@ -504,6 +558,7 @@ fn writer_loop(
                 let _ = reply.send(result);
             }
             WriteCmd::RateMany { batch, reply } => {
+                let prev_dims = current.dims();
                 let result = engine.rate_many(&batch);
                 match result {
                     IngestResult::Buffered => {
@@ -511,6 +566,7 @@ fn writer_loop(
                     }
                     IngestResult::Flushed { .. } => {
                         current = publish(&state, &engine, version, &pm);
+                        invalidate_from_report(&cache, &engine, version, prev_dims, shards);
                         version += 1;
                     }
                     // Rejected / InvalidValue / OutOfBounds / Ignored
@@ -520,12 +576,14 @@ fn writer_loop(
                 let _ = reply.send(result);
             }
             WriteCmd::Flush { reply } => {
+                let prev_dims = current.dims();
                 let applied = engine.flush();
                 // No-op flushes (idle FLUSH probes) publish nothing: a
                 // publish clones the dirty shards, which is wasteful
                 // when state hasn't changed.
                 if applied > 0 {
                     current = publish(&state, &engine, version, &pm);
+                    invalidate_from_report(&cache, &engine, version, prev_dims, shards);
                     version += 1;
                 }
                 let _ = reply.send(applied);
@@ -538,11 +596,42 @@ fn writer_loop(
     // zeroing the counter on the superseded snapshot (the old behaviour)
     // handed a reader holding it a (pre-drain factors, buffered 0) pair,
     // violating the (version, buffered) coherence contract.
+    let prev_dims = current.dims();
     if engine.flush() > 0 {
         current = publish(&state, &engine, version, &pm);
+        invalidate_from_report(&cache, &engine, version, prev_dims, shards);
     }
     current.note_buffered(engine.buffered());
     engine
+}
+
+/// Invalidate (and push-notify) a serving cache off one flush's report:
+/// dirty bands + rated rows, or everything when the universe grew.
+/// Must run *after* the snapshot swap (see [`super::cache`]'s ordering
+/// invariant — a subscriber re-reading on the push must see the new
+/// state). Both sharded flavours' publish paths funnel through this so
+/// their invalidation semantics cannot drift.
+pub(crate) fn invalidate_from_report(
+    cache: &TopNCache,
+    engine: &Engine,
+    version: u64,
+    prev_dims: (usize, usize),
+    d: usize,
+) {
+    let dims = engine.dims();
+    let grew = dims != prev_dims;
+    let dirty: Vec<u32> = if grew {
+        Vec::new()
+    } else {
+        let mut bands: Vec<u32> =
+            dirty_bands(engine.last_flush_cols(), engine.last_flush_topk_moved(), dims.1, d)
+                .into_iter()
+                .map(|b| b as u32)
+                .collect();
+        bands.sort_unstable();
+        bands
+    };
+    cache.invalidate(version, &dirty, engine.last_flush_rows(), grew);
 }
 
 /// The per-shard dirty set of one flush, in O(report): a band is dirty

@@ -47,7 +47,11 @@
 //!   `last_flush_topk_moved` is exactly the set of columns whose served
 //!   state may have changed; the sharded snapshot publish keys its
 //!   dirty-band set off this report (O(report) per publish) in both
-//!   flush modes.
+//!   flush modes. `last_flush_rows` is the row-side half of the same
+//!   report: the rows whose rating row changed, which the per-row Top-N
+//!   cache uses to drop entries whose Eq. (1) neighbourhood scan inputs
+//!   moved (a rating shifts the row's predictions in *clean* column
+//!   bands too — the scan reads the full rating row).
 
 use super::super::mf::neighbourhood::{CulshConfig, CulshModel};
 use super::super::mf::online::{online_update, online_update_relaxed_with_topk};
@@ -176,6 +180,9 @@ pub struct StreamOrchestrator {
     /// moved ([`crate::mf::online::OnlineReport::topk_moved_cols`]) —
     /// the publish's other dirty-band source, O(report) per publish.
     last_flush_topk_moved: Vec<u32>,
+    /// Row ids the most recent flush applied — the per-row Top-N
+    /// cache's row-invalidation source (see the module invariants).
+    last_flush_rows: Vec<u32>,
     cfg: StreamConfig,
     train_cfg: CulshConfig,
     rng: Rng,
@@ -194,6 +201,7 @@ pub(crate) struct StreamParts {
     pub buffer: Vec<(u32, u32, f32)>,
     pub last_flush_cols: Vec<u32>,
     pub last_flush_topk_moved: Vec<u32>,
+    pub last_flush_rows: Vec<u32>,
     pub cfg: StreamConfig,
     pub train_cfg: CulshConfig,
     pub rng: Rng,
@@ -283,6 +291,7 @@ impl StreamOrchestrator {
             buffer: Vec::new(),
             last_flush_cols: Vec::new(),
             last_flush_topk_moved: Vec::new(),
+            last_flush_rows: Vec::new(),
             cfg,
             train_cfg,
             rng,
@@ -301,6 +310,7 @@ impl StreamOrchestrator {
             buffer: self.buffer,
             last_flush_cols: self.last_flush_cols,
             last_flush_topk_moved: self.last_flush_topk_moved,
+            last_flush_rows: self.last_flush_rows,
             cfg: self.cfg,
             train_cfg: self.train_cfg,
             rng: self.rng,
@@ -320,6 +330,7 @@ impl StreamOrchestrator {
             buffer: p.buffer,
             last_flush_cols: p.last_flush_cols,
             last_flush_topk_moved: p.last_flush_topk_moved,
+            last_flush_rows: p.last_flush_rows,
             cfg: p.cfg,
             train_cfg: p.train_cfg,
             rng: p.rng,
@@ -336,6 +347,17 @@ impl StreamOrchestrator {
     /// moved (empty before any flush).
     pub fn last_flush_topk_moved(&self) -> &[u32] {
         &self.last_flush_topk_moved
+    }
+
+    /// Row ids applied by the most recent flush (empty before any) —
+    /// the per-row Top-N cache's row-invalidation source.
+    pub fn last_flush_rows(&self) -> &[u32] {
+        &self.last_flush_rows
+    }
+
+    /// The orchestrator's tuning (read-only).
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
     }
 
     pub fn model(&self) -> &CulshModel {
@@ -535,6 +557,7 @@ impl StreamOrchestrator {
         self.model = Some(report.model);
         self.combined = combined;
         self.last_flush_cols = increment.iter().map(|&(_, j, _)| j).collect();
+        self.last_flush_rows = increment.iter().map(|&(i, _, _)| i).collect();
         self.last_flush_topk_moved = report.topk_moved_cols;
         self.metrics.counter("stream.flushes").inc();
         self.metrics

@@ -22,8 +22,9 @@
 //! * **relaxed** ([`online_update_relaxed_with_topk`]) — the same update
 //!   rule executed on `d` lane threads under the Latin-square rotation
 //!   schedule of [`crate::coordinator::rotation`]: trainable entries are
-//!   binned into `d × d` (row-lane, column-lane) cells over the
-//!   new-variable ranges; in sub-step `s`, lane thread `b` processes
+//!   binned into `d × d` (row-lane, column-lane) cells, the lanes cut by
+//!   an entry-count-balanced contiguous partition ([`balanced_cuts`]) of
+//!   each axis segment; in sub-step `s`, lane thread `b` processes
 //!   cell `((b + s) mod d, b)`, so no two threads ever touch the same
 //!   new-row lane or new-column lane concurrently and the execution is
 //!   race-free *and* deterministic. What relaxed
@@ -38,7 +39,7 @@ use super::neighbourhood::{CulshConfig, CulshModel, NeighbourScratch};
 use super::LearningSchedule;
 use crate::lsh::{OnlineHashState, TopK};
 use crate::rng::Rng;
-use crate::sparse::{band_of, Csr, Triples};
+use crate::sparse::{Csr, Triples};
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Barrier;
@@ -358,6 +359,34 @@ pub fn online_update_with_topk(
     OnlineReport { model, topk_moved_cols, band_train_micros: Vec::new() }
 }
 
+/// Deterministic entry-count-balanced contiguous partition of one axis
+/// segment: given the multiset of ids the segment's trainable entries
+/// carry, returns `d - 1` ascending cut points such that
+/// `cuts.partition_point(|&c| c <= id)` assigns each id a lane and the
+/// lanes hold near-equal *entry counts*. The partition is contiguous in
+/// id space and every cut snaps forward to an id boundary, so all
+/// entries with the same id land in the same lane — the write-ownership
+/// rule the Latin-square rotation's safety argument rests on. Heavily
+/// duplicated ids (a hot new column) make perfectly equal counts
+/// impossible; the snap then concentrates the hot id in one lane and
+/// balances the rest, which is optimal for a contiguous partition up to
+/// the hot id's own weight. An empty segment yields saturated cuts
+/// (every id in lane 0 — there are no entries to balance).
+fn balanced_cuts(mut ids: Vec<u32>, d: usize) -> Vec<u32> {
+    ids.sort_unstable();
+    let mut cuts = Vec::with_capacity(d.saturating_sub(1));
+    for k in 1..d {
+        let mut pos = k * ids.len() / d;
+        while pos > 0 && pos < ids.len() && ids[pos] == ids[pos - 1] {
+            pos += 1;
+        }
+        // the cut value is the first id of the next lane; past the end
+        // of the multiset the lane is empty and the cut saturates
+        cuts.push(ids.get(pos).copied().unwrap_or(u32::MAX));
+    }
+    cuts
+}
+
 /// Shared-mutable holder for the relaxed rotation (the
 /// `neighbourhood.rs` parallel-trainer idiom).
 struct SharedModel(UnsafeCell<CulshModel>);
@@ -373,12 +402,17 @@ unsafe impl Sync for SharedModel {}
 /// Trainable entries (at least one new endpoint — an old-row/old-column
 /// entry moves no parameter in Alg. 4, so skipping it is a provable
 /// no-op) are binned into `d × d` `(row-lane, column-lane)` cells. The
-/// lanes [`band_of`]-partition the **new-variable ranges** — new ids
-/// cluster at the tail of each axis, so lanes over the full axes would
-/// collapse the whole batch into one block and serialize the rotation;
-/// an entry whose endpoint is old has no write ownership on that axis
-/// (frozen parameters, shared reads) and is spread by id for load
-/// balance only. Each epoch runs `d` barrier-separated sub-steps; in
+/// lanes are cut by [`balanced_cuts`]: a contiguous partition of each
+/// axis segment (old ids and new ids separately — new ids cluster at
+/// the tail of each axis, so lanes over the full axes would collapse
+/// the whole batch into one block and serialize the rotation) balanced
+/// by **entry count**, not id range, so a hot new column with most of
+/// the batch's ratings no longer drags its whole id-range lane onto one
+/// thread while the others idle at the barrier. Contiguity keeps the
+/// ownership rule intact: every entry with the same id lands in the
+/// same lane. An entry whose endpoint is old has no write ownership on
+/// that axis (frozen parameters, shared reads) and is balanced purely
+/// for load. Each epoch runs `d` barrier-separated sub-steps; in
 /// sub-step `s`, lane thread `b` processes cell `((b + s) mod d, b)` in
 /// batch order. The Latin square guarantees no two threads concurrently
 /// touch the same new-row lane (the `b_ī`/`u_ī` coupling), each new
@@ -409,8 +443,6 @@ pub fn online_update_relaxed_with_topk(
     let d = bands.max(1);
     let (mut model, topk_moved_cols) =
         grow_for_increment(model, topk, combined, increment, old_rows, old_cols, rng);
-    let new_rows = combined.nrows();
-    let new_cols = combined.ncols();
 
     let trainable: Vec<(u32, u32, f32)> = increment
         .iter()
@@ -449,27 +481,36 @@ pub fn online_update_relaxed_with_topk(
     }
 
     // Bin trainable entries into (row-lane, column-lane) cells, batch
-    // order preserved within each cell. Lanes partition the NEW
-    // ranges, not the full axes: Alg. 4 writes only new-variable
+    // order preserved within each cell. Lanes partition the old and NEW
+    // segments of each axis separately (Alg. 4 writes only new-variable
     // parameters, and new ids cluster at the tail of each axis, so
     // lanes over the full axes would collapse every trainable entry
-    // into the last block and serialize the rotation. An entry whose
-    // endpoint is old carries no write ownership on that axis (old
-    // parameters are frozen; reads are shared), so it is spread by its
-    // id purely for load balance.
+    // into the last block and serialize the rotation), cut by entry
+    // count so the barrier waits on near-equal work instead of
+    // near-equal id spans. An entry whose endpoint is old carries no
+    // write ownership on that axis (old parameters are frozen; reads
+    // are shared), so its balanced placement is purely for load.
+    let old_r = old_rows as u32;
+    let old_c = old_cols as u32;
+    let seg = |pred: &dyn Fn(&(u32, u32, f32)) -> Option<u32>| -> Vec<u32> {
+        trainable.iter().filter_map(pred).collect()
+    };
+    let row_cuts_old = balanced_cuts(seg(&|e| (e.0 < old_r).then_some(e.0)), d);
+    let row_cuts_new = balanced_cuts(seg(&|e| (e.0 >= old_r).then_some(e.0)), d);
+    let col_cuts_old = balanced_cuts(seg(&|e| (e.1 < old_c).then_some(e.1)), d);
+    let col_cuts_new = balanced_cuts(seg(&|e| (e.1 >= old_c).then_some(e.1)), d);
+    let lane = |cuts: &[u32], id: u32| cuts.partition_point(|&c| c <= id);
     let mut cells: Vec<Vec<Vec<(u32, u32, f32)>>> = vec![vec![Vec::new(); d]; d];
-    let new_row_span = new_rows - old_rows;
-    let new_col_span = new_cols - old_cols;
     for &(i, j, r) in &trainable {
-        let rb = if (i as usize) < old_rows {
-            band_of(i as usize, old_rows, d)
+        let rb = if i < old_r {
+            lane(&row_cuts_old, i)
         } else {
-            band_of(i as usize - old_rows, new_row_span, d)
+            lane(&row_cuts_new, i)
         };
-        let cb = if (j as usize) < old_cols {
-            band_of(j as usize, old_cols, d)
+        let cb = if j < old_c {
+            lane(&col_cuts_old, j)
         } else {
-            band_of(j as usize - old_cols, new_col_span, d)
+            lane(&col_cuts_new, j)
         };
         cells[rb][cb].push((i, j, r));
     }
@@ -711,6 +752,51 @@ mod tests {
                 &mut rng,
             ),
         }
+    }
+
+    /// The lane partition balances entry *counts*, not id ranges, while
+    /// never splitting one id across lanes (the rotation's ownership
+    /// rule).
+    #[test]
+    fn balanced_cuts_balance_counts_and_never_split_an_id() {
+        let lane = |cuts: &[u32], id: u32| cuts.partition_point(|&c| c <= id);
+
+        // uniform distinct ids: exact quarters
+        let ids: Vec<u32> = (0..100).collect();
+        let cuts = balanced_cuts(ids.clone(), 4);
+        assert_eq!(cuts, vec![25, 50, 75]);
+
+        // ids clustered at the head of a wide axis — the case id-range
+        // binning degenerates on (four 250-wide lanes over 0..1000
+        // would put all 40 entries in lane 0); count binning spreads
+        // them evenly regardless of where they sit in id space
+        let ids: Vec<u32> = (0..40).collect();
+        let cuts = balanced_cuts(ids.clone(), 4);
+        let mut loads = [0usize; 4];
+        for &id in &ids {
+            loads[lane(&cuts, id)] += 1;
+        }
+        assert_eq!(loads, [10, 10, 10, 10]);
+
+        // a hot id (60 of 100 entries on id 7): contiguity forces its
+        // whole weight into one lane, and the cold mass still spreads
+        let mut ids: Vec<u32> = vec![7; 60];
+        ids.extend(100..140);
+        let cuts = balanced_cuts(ids.clone(), 4);
+        let mut loads = [0usize; 4];
+        for &id in &ids {
+            loads[lane(&cuts, id)] += 1;
+        }
+        assert_eq!(loads.iter().sum::<usize>(), 100);
+        assert_eq!(loads[0], 60, "the hot id owns exactly one lane: {loads:?}");
+        assert!(
+            loads[1..].iter().all(|&l| l < 40),
+            "cold entries must not collapse into one lane: {loads:?}"
+        );
+
+        // empty segment: saturated cuts, every id lands in lane 0
+        assert_eq!(balanced_cuts(Vec::new(), 3), vec![u32::MAX, u32::MAX]);
+        assert_eq!(lane(&[u32::MAX, u32::MAX], 12), 0);
     }
 
     /// Relaxed mode at one band is the sequential straggler path over

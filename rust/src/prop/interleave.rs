@@ -5,13 +5,17 @@
 //! threads can interleave their operation sequences (each thread's own
 //! order preserved — the multinomial coefficient of the counts), and
 //! [`interleave`] replays one such schedule into a single flat op
-//! sequence. The tests in this module drive a 2-writer
-//! [`crate::coordinator::banded::BandedEngine`] plus an explicit flush
-//! participant through *all* schedules of a tiny ingest scenario and
-//! assert the published snapshot is **bit-identical** to a sequential
-//! `Engine` reference fed the same arrival order — executing the
-//! "race-free and deterministic" claim of the banded module's
-//! `# Invariants` section instead of merely documenting it.
+//! sequence. The tests in this module drive multi-writer
+//! [`crate::coordinator::banded::BandedEngine`] scenarios — flush
+//! participants, a universe-growing writer, and a SUBSCRIBEd reader —
+//! through *all* schedules of a tiny ingest scenario and assert the
+//! published snapshot is **bit-identical** to a sequential `Engine`
+//! reference fed the same arrival order — executing the "race-free and
+//! deterministic" claim of the banded module's `# Invariants` section
+//! instead of merely documenting it. Every banded run also carries a
+//! push subscriber, so each schedule additionally checks that the
+//! subscriber observes every publish, in order, ending at the final
+//! published version.
 //!
 //! Granularity note: ops are replayed one at a time from the exploring
 //! thread, so each schedule exercises one complete linearization of the
@@ -89,6 +93,7 @@ mod tests {
     use crate::rng::Rng;
     use crate::sparse::{Csc, Csr, Triples};
     use std::collections::HashSet;
+    use std::sync::{Arc, Mutex};
 
     #[test]
     fn enumeration_is_exhaustive_and_distinct() {
@@ -121,11 +126,15 @@ mod tests {
         }
     }
 
-    /// One logical step of a writer or the flush participant.
+    /// One logical step of a writer, the flush participant, or a
+    /// reader observing the published state mid-stream.
     #[derive(Clone, Copy, Debug)]
     enum WriterOp {
         Rate(u32, u32, f32),
         Flush,
+        /// Top-3 read of the row; the reply is recorded bit-exactly, so
+        /// a stale cache entry diverges from the reference.
+        Read(u32),
     }
 
     /// The banded test engine recipe (same tiny scale as banded.rs
@@ -170,25 +179,52 @@ mod tests {
             match *op {
                 WriterOp::Rate(i, j, r) => replies.push(format!("{:?}", e.rate(i, j, r))),
                 WriterOp::Flush => replies.push(format!("flushed {}", e.flush())),
+                WriterOp::Read(i) => replies.push(top3(e.top_n(i as usize, 3))),
             }
         }
         e.flush();
         (e, replies)
     }
 
+    /// Bit-exact rendering of a top-3 reply.
+    fn top3(items: Vec<(u32, f32)>) -> String {
+        let bits: Vec<(u32, u32)> = items.into_iter().map(|(j, s)| (j, s.to_bits())).collect();
+        format!("top {bits:?}")
+    }
+
+    /// One banded replay: the engine, its writer handle, the recorded
+    /// replies, and what the push subscriber observed.
+    struct BandedRun {
+        engine: BandedEngine,
+        handle: crate::coordinator::banded::BandedHandle,
+        replies: Vec<String>,
+        /// Version returned by `subscribe_push` (the SUBSCRIBED ack).
+        subscribed_at: u64,
+        /// Every `(version, dirty bands)` push, in arrival order.
+        pushes: Arc<Mutex<Vec<(u64, Vec<u32>)>>>,
+    }
+
     /// Replay the same sequence against a fresh 2-writer banded engine;
-    /// every `rate` round-trips through the owning band's writer thread.
-    fn run_banded(ops: &[WriterOp]) -> (BandedEngine, crate::coordinator::banded::BandedHandle, Vec<String>) {
+    /// every `rate` round-trips through the owning band's writer
+    /// thread, and a push subscriber records every publish.
+    fn run_banded(ops: &[WriterOp]) -> BandedRun {
         let (banded, handle) = BandedEngine::spawn(engine(77), 2);
+        let pushes: Arc<Mutex<Vec<(u64, Vec<u32>)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink_pushes = Arc::clone(&pushes);
+        let subscribed_at = banded.subscribe_push(Box::new(move |v, dirty| {
+            sink_pushes.lock().unwrap().push((v, dirty.to_vec()));
+            true
+        }));
         let mut replies = Vec::new();
         for op in ops {
             match *op {
                 WriterOp::Rate(i, j, r) => replies.push(format!("{:?}", banded.rate(i, j, r))),
                 WriterOp::Flush => replies.push(format!("flushed {}", banded.flush())),
+                WriterOp::Read(i) => replies.push(top3(banded.top_n(i as usize, 3))),
             }
         }
         banded.flush();
-        (banded, handle, replies)
+        BandedRun { engine: banded, handle, replies, subscribed_at, pushes }
     }
 
     /// Full-grid bit-identity between the banded snapshot and the
@@ -221,9 +257,32 @@ mod tests {
         for sched in &all {
             let ops = interleave(sched, threads);
             let (reference, want_replies) = run_reference(&ops);
-            let (banded, handle, got_replies) = run_banded(&ops);
-            assert_eq!(got_replies, want_replies, "replies diverge under {sched:?}");
-            assert_bit_identical(&banded, &reference, sched);
+            let run = run_banded(&ops);
+            assert_eq!(run.replies, want_replies, "replies diverge under {sched:?}");
+            assert_bit_identical(&run.engine, &reference, sched);
+
+            // The subscriber saw every publish, in order, ending at the
+            // final published version. Dirty band lists are sorted and
+            // in range; an empty list is the growth "everything
+            // changed" signal.
+            let pushes = run.pushes.lock().unwrap();
+            assert!(!pushes.is_empty(), "no publish observed under {sched:?}");
+            let mut prev = run.subscribed_at;
+            for (v, dirty) in pushes.iter() {
+                assert!(*v > prev, "push versions not increasing under {sched:?}: {pushes:?}");
+                prev = *v;
+                assert!(dirty.windows(2).all(|w| w[0] < w[1]), "unsorted dirty: {dirty:?}");
+                let d = run.engine.writers() as u32;
+                assert!(dirty.iter().all(|&b| b < d), "dirty band out of range: {dirty:?}");
+            }
+            assert_eq!(
+                prev,
+                run.engine.version(),
+                "subscriber missed the final publish under {sched:?}"
+            );
+            drop(pushes);
+
+            let BandedRun { engine: banded, handle, .. } = run;
             drop(banded);
             handle.join();
         }
@@ -254,5 +313,23 @@ mod tests {
         ];
         let b: &[WriterOp] = &[WriterOp::Rate(4, 6, 2.5), WriterOp::Rate(3, 1, 5.0)];
         explore(&[a, b]);
+    }
+
+    /// Three writers — two racing a re-rating of the same cell, one
+    /// growing the column universe and flushing mid-stream — plus a
+    /// SUBSCRIBEd reader whose top-n read lands in every possible
+    /// position: 180 schedules. Each schedule checks the read reply is
+    /// bit-identical to the sequential reference at the same arrival
+    /// position (a stale Top-N cache entry would diverge), and the
+    /// `explore` push assertions hold the subscriber to observing every
+    /// publish — including the growth publish with its empty
+    /// "everything changed" dirty set.
+    #[test]
+    fn three_writers_with_subscribed_reader_bit_identical() {
+        let a: &[WriterOp] = &[WriterOp::Rate(0, 0, 4.5), WriterOp::Rate(1, 11, 3.0)];
+        let b: &[WriterOp] = &[WriterOp::Rate(0, 0, 2.0)];
+        let c: &[WriterOp] = &[WriterOp::Rate(2, 13, 5.0), WriterOp::Flush];
+        let reader: &[WriterOp] = &[WriterOp::Read(0)];
+        explore(&[a, b, c, reader]);
     }
 }

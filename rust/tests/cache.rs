@@ -1,0 +1,249 @@
+//! Cache-correctness tests for the per-row Top-N cache: on every
+//! serving flavour, cached and partial-hit `TOPN` replies must be
+//! bit-identical to a full re-score of the same snapshot, and no cached
+//! entry may survive a publish that dirtied its row or bands.
+
+use lshmf::coordinator::banded::BandedEngine;
+use lshmf::coordinator::protocol::MAX_TOPN_ITEMS;
+use lshmf::coordinator::shared::SharedEngine;
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
+use lshmf::lsh::{OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::prop::{check, Gen};
+use lshmf::rng::Rng;
+use lshmf::sparse::{Csc, Csr, Triples};
+
+/// Small trained engine (the serving.rs recipe); `batch_size` is large
+/// so publishes happen only where the script says `Flush`.
+fn engine(seed: u64) -> Engine {
+    let mut rng = Rng::seeded(seed);
+    let (m, n) = (30, 15);
+    let mut t = Triples::new(m, n);
+    let mut seen = std::collections::HashSet::new();
+    while t.nnz() < 180 {
+        let (i, j) = (rng.below(m), rng.below(n));
+        if seen.insert((i, j)) {
+            t.push(i, j, 1.0 + rng.f32() * 4.0);
+        }
+    }
+    let csr = Csr::from_triples(&t);
+    let csc = Csc::from_triples(&t);
+    let lsh = SimLsh::new(1, 5, 8, 2);
+    let hash_state = OnlineHashState::build(lsh, &csc);
+    let (topk, _) = hash_state.topk(4, &mut rng);
+    let cfg = CulshConfig { f: 4, k: 4, epochs: 4, ..Default::default() };
+    let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut rng);
+    let metrics = Registry::new();
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        t,
+        StreamConfig { batch_size: 1024, ..Default::default() },
+        cfg,
+        rng.split(1),
+        metrics.clone(),
+    );
+    Engine::new(orch, (1.0, 5.0), metrics)
+}
+
+/// The one surface the scripts need, implemented by all three flavours.
+trait Serve {
+    fn rate(&mut self, i: u32, j: u32, v: f32);
+    fn flush(&mut self) -> usize;
+    fn top_n(&self, row: usize, n: usize) -> Vec<(u32, f32)>;
+    /// `(hits, misses, partial)` from the flavour's `cache.*` counters.
+    fn counts(&self) -> (u64, u64, u64);
+}
+
+struct Single(Engine);
+struct Shared(SharedEngine);
+struct Banded(BandedEngine);
+
+impl Serve for Single {
+    fn rate(&mut self, i: u32, j: u32, v: f32) {
+        self.0.rate(i, j, v);
+    }
+    fn flush(&mut self) -> usize {
+        self.0.flush()
+    }
+    fn top_n(&self, row: usize, n: usize) -> Vec<(u32, f32)> {
+        self.0.top_n(row, n)
+    }
+    fn counts(&self) -> (u64, u64, u64) {
+        self.0.cache().counts()
+    }
+}
+
+impl Serve for Shared {
+    fn rate(&mut self, i: u32, j: u32, v: f32) {
+        self.0.rate(i, j, v);
+    }
+    fn flush(&mut self) -> usize {
+        self.0.flush()
+    }
+    fn top_n(&self, row: usize, n: usize) -> Vec<(u32, f32)> {
+        self.0.top_n(row, n)
+    }
+    fn counts(&self) -> (u64, u64, u64) {
+        self.0.cache().counts()
+    }
+}
+
+impl Serve for Banded {
+    fn rate(&mut self, i: u32, j: u32, v: f32) {
+        self.0.rate(i, j, v);
+    }
+    fn flush(&mut self) -> usize {
+        self.0.flush()
+    }
+    fn top_n(&self, row: usize, n: usize) -> Vec<(u32, f32)> {
+        self.0.top_n(row, n)
+    }
+    fn counts(&self) -> (u64, u64, u64) {
+        self.0.cache().counts()
+    }
+}
+
+/// Run `f` against a fresh engine of every flavour, tearing each down
+/// (drop, then join the writer threads) before the next.
+fn with_flavours(seed: u64, mut f: impl FnMut(&mut dyn Serve, &'static str)) {
+    let mut single = Single(engine(seed));
+    f(&mut single, "Mutex<Engine>");
+
+    let (shared, writer) = SharedEngine::spawn(engine(seed));
+    let mut shared = Shared(shared);
+    f(&mut shared, "SharedEngine");
+    drop(shared);
+    writer.join();
+
+    let (banded, handle) = BandedEngine::spawn(engine(seed), 2);
+    let mut banded = Banded(banded);
+    f(&mut banded, "BandedEngine");
+    drop(banded);
+    handle.join();
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Rate(u32, u32, f32),
+    Flush,
+    Read(usize, usize),
+}
+
+/// Bit-exact rendering for comparisons ("close" is not good enough).
+fn bits(items: &[(u32, f32)]) -> Vec<(u32, u32)> {
+    items.iter().map(|&(j, s)| (j, s.to_bits())).collect()
+}
+
+/// The full re-score of `row` on the current snapshot: a request above
+/// [`MAX_TOPN_ITEMS`] bypasses the cache on every flavour, and
+/// `rank_cmp` is a total order, so its length-`n` prefix is exactly
+/// what an uncached `TOPN row n` would return.
+fn rescored(f: &dyn Serve, row: usize, n: usize) -> Vec<(u32, f32)> {
+    let mut full = f.top_n(row, MAX_TOPN_ITEMS + 1);
+    full.truncate(n);
+    full
+}
+
+/// Replay the script; every read is checked cold and warm against the
+/// uncached re-score of the same snapshot. Returns false (with a
+/// diagnostic) on the first divergence.
+fn replay_checked(f: &mut dyn Serve, flavour: &str, script: &[Op]) -> bool {
+    let mut reads = 0u64;
+    for (step, op) in script.iter().enumerate() {
+        match *op {
+            Op::Rate(i, j, v) => f.rate(i, j, v),
+            Op::Flush => {
+                f.flush();
+            }
+            Op::Read(row, n) => {
+                reads += 1;
+                let cold = f.top_n(row, n);
+                let warm = f.top_n(row, n);
+                let want = rescored(f, row, n);
+                if bits(&cold) != bits(&want) || bits(&warm) != bits(&want) {
+                    eprintln!(
+                        "step {step} ({flavour}): TOPN {row} {n} diverges from re-score\n\
+                         cold {cold:?}\nwarm {warm:?}\nwant {want:?}"
+                    );
+                    return false;
+                }
+            }
+        }
+    }
+    // Every warm re-read (no publish in between) must have been served
+    // from memory: the scripts only read in-range rows, so a zero hit
+    // count means the cache is not actually caching.
+    let (hits, _, _) = f.counts();
+    if reads > 0 && hits < reads {
+        eprintln!("{flavour}: {reads} warm re-reads but only {hits} cache hits");
+        return false;
+    }
+    true
+}
+
+fn gen_script(g: &mut Gen) -> Vec<Op> {
+    g.vec(12..=36, |g| match g.usize(0..=5) {
+        // Rows/cols past the seed dims (30×15) grow the universe at the
+        // next flush; values stay inside the (1.0, 5.0) clamp.
+        0 | 1 => Op::Rate(g.u32(0..34), g.u32(0..18), 1.0 + g.rng().f32() * 4.0),
+        2 => Op::Flush,
+        // Reads stay in the seed row range (rows never shrink), so the
+        // warm re-read is always a cacheable in-range request.
+        _ => Op::Read(g.usize(0..=29), g.usize(1..=12)),
+    })
+}
+
+/// Property: under randomized ingest / re-rate / growth / flush / read
+/// scripts, cached and partial-hit TOPN replies are bit-identical to a
+/// full re-scoring of the same snapshot on all three flavours.
+#[test]
+fn prop_cached_topn_bit_identical_to_rescore_on_all_flavours() {
+    check("cached topn == re-score", 18, |g| {
+        let script = gen_script(g);
+        let seed = g.u32(1..u32::MAX) as u64;
+        let mut ok = true;
+        with_flavours(seed, |f, flavour| {
+            ok = ok && replay_checked(f, flavour, &script);
+        });
+        ok
+    });
+}
+
+/// Regression: a cached entry must not survive a publish that dirtied
+/// it. Rating a row's current top column removes that column from the
+/// row's unrated set; if the pre-publish cache entry survived the
+/// dirty-band publish, the rated column would still be served.
+#[test]
+fn stale_entry_never_survives_dirty_publish() {
+    with_flavours(4242, |f, flavour| {
+        let row = 3usize;
+        let before = f.top_n(row, 5);
+        assert!(!before.is_empty(), "{flavour}: empty top-n on the seed snapshot");
+        let warm = f.top_n(row, 5);
+        assert_eq!(bits(&warm), bits(&before), "{flavour}: warm re-read diverged");
+        let (top_col, _) = before[0];
+
+        f.rate(row as u32, top_col, 5.0);
+        assert_eq!(f.flush(), 1, "{flavour}: the re-rating must apply");
+
+        let (hits_before, _, _) = f.counts();
+        let after = f.top_n(row, 5);
+        let (hits_after, _, _) = f.counts();
+        assert_eq!(
+            hits_before, hits_after,
+            "{flavour}: post-publish read was served fully from cache"
+        );
+        assert!(
+            after.iter().all(|&(j, _)| j != top_col),
+            "{flavour}: rated column {top_col} survived the publish in {after:?}"
+        );
+        assert_eq!(
+            bits(&after),
+            bits(&rescored(f, row, 5)),
+            "{flavour}: post-publish reply diverges from the re-score"
+        );
+    });
+}

@@ -450,7 +450,7 @@ fn gen_quantized_f32(g: &mut Gen) -> f32 {
 }
 
 fn gen_request(g: &mut Gen) -> Request {
-    match g.usize(0..=7) {
+    match g.usize(0..=8) {
         0 => Request::Predict { row: g.usize(0..=1 << 20), col: g.usize(0..=1 << 20) },
         1 => Request::MPredict {
             row: g.usize(0..=1 << 20),
@@ -469,6 +469,7 @@ fn gen_request(g: &mut Gen) -> Request {
         },
         5 => Request::Flush,
         6 => Request::Stats,
+        7 => Request::Subscribe,
         _ => Request::Shutdown,
     }
 }
@@ -494,7 +495,7 @@ fn gen_error_kind(g: &mut Gen) -> ErrorKind {
 }
 
 fn gen_response(g: &mut Gen) -> Response {
-    match g.usize(0..=6) {
+    match g.usize(0..=8) {
         0 => Response::Pred(gen_quantized_f32(g)),
         1 => Response::Preds(g.vec(1..=48, |g| {
             if g.bool() {
@@ -520,6 +521,12 @@ fn gen_response(g: &mut Gen) -> Response {
             g.usize(0..=1 << 20),
         )),
         5 => Response::Error(gen_error_kind(g)),
+        6 => Response::Subscribed { version: g.usize(0..=1 << 20) as u64 },
+        // An empty dirty list is the growth "everything changed" push.
+        7 => Response::Push {
+            version: g.usize(0..=1 << 20) as u64,
+            dirty: g.vec(0..=8, |g| g.u32(0..64)),
+        },
         _ => Response::Bye,
     }
 }
