@@ -8,7 +8,7 @@ use crate::lexer::SourceFile;
 use crate::Diagnostic;
 
 /// Modules required to carry a `//! # Invariants` section.
-pub const INVARIANT_MODULES: [&str; 7] = [
+pub const INVARIANT_MODULES: [&str; 8] = [
     "coordinator/stream.rs",
     "coordinator/banded.rs",
     "coordinator/shared.rs",
@@ -16,6 +16,7 @@ pub const INVARIANT_MODULES: [&str; 7] = [
     "coordinator/rotation.rs",
     "coordinator/cache.rs",
     "coordinator/server.rs",
+    "coordinator/admission.rs",
 ];
 
 const CHECK: &str = "invariant-docs";

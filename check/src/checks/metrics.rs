@@ -11,6 +11,15 @@
 //! test scaffolding names like `"a"` are not part of the exported
 //! surface. A `timer` records into the histogram of the same name, so
 //! it counts as a histogram for kind-conflict purposes.
+//!
+//! The Prometheus exporter derives its metric names mechanically:
+//! `lshmf_` + the dotted name with `.` → `_` (see
+//! `metrics::prometheus::prom_name`). This pass proves that rewrite
+//! safe at lint time: every rewritten name must be valid
+//! (`[a-z0-9_]` only) and no two distinct dotted names may collide
+//! onto one Prometheus name (`shared.pub_bytes` vs `shared.pub.bytes`
+//! would silently merge into `lshmf_shared_pub_bytes` on the scrape
+//! endpoint — undetectable at runtime, trivially caught here).
 
 use crate::lexer::{matching_close, tokenize, SourceFile, Tok, TokKind};
 use crate::Diagnostic;
@@ -23,15 +32,32 @@ pub fn run(files: &[SourceFile]) -> Vec<Diagnostic> {
     let mut diags = Vec::new();
     // name -> (canonical kind, file, line)
     let mut seen: HashMap<String, (&'static str, String, usize)> = HashMap::new();
+    // prometheus name -> (dotted name, file, line)
+    let mut prom_seen: HashMap<String, (String, String, usize)> = HashMap::new();
     for f in files {
-        scan_file(f, &mut seen, &mut diags);
+        scan_file(f, &mut seen, &mut prom_seen, &mut diags);
     }
     diags
+}
+
+/// The exporter's rewrite, duplicated here so the gate needs no
+/// dependency on the `lshmf` crate: keep in lockstep with
+/// `metrics::prometheus::prom_name`.
+fn prom_name(dotted: &str) -> String {
+    format!("lshmf_{}", dotted.replace('.', "_"))
+}
+
+fn prom_name_is_valid(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
 }
 
 fn scan_file(
     f: &SourceFile,
     seen: &mut HashMap<String, (&'static str, String, usize)>,
+    prom_seen: &mut HashMap<String, (String, String, usize)>,
     diags: &mut Vec<Diagnostic>,
 ) {
     let toks = tokenize(&f.code);
@@ -82,6 +108,38 @@ fn scan_file(
                 ),
             });
         }
+        // The exporter rewrite must stay mechanical: valid characters
+        // only, and no two dotted names may merge into one scrape name.
+        let prom = prom_name(&name);
+        if !prom_name_is_valid(&prom) {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: lit.line,
+                check: CHECK,
+                message: format!(
+                    "metric `{name}` rewrites to invalid Prometheus name `{prom}` \
+                     (only [a-z0-9_] survives the exporter)"
+                ),
+            });
+        }
+        match prom_seen.get(&prom) {
+            Some((prev_name, prev_file, prev_line)) if *prev_name != name => {
+                diags.push(Diagnostic {
+                    file: f.rel.clone(),
+                    line: lit.line,
+                    check: CHECK,
+                    message: format!(
+                        "metric `{name}` collides with `{prev_name}` \
+                         ({prev_file}:{prev_line}) on Prometheus name `{prom}`"
+                    ),
+                });
+            }
+            Some(_) => {}
+            None => {
+                prom_seen.insert(prom, (name.clone(), f.rel.clone(), lit.line));
+            }
+        }
+
         match seen.get(&name) {
             Some((prev_kind, prev_file, prev_line)) if *prev_kind != canonical => {
                 diags.push(Diagnostic {

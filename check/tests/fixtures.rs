@@ -152,6 +152,38 @@ fn duplicate_metric_name_is_flagged() {
 }
 
 #[test]
+fn prom_name_collision_is_flagged() {
+    let diags = fixture("prom_collision");
+    // `shared.pub.bytes` and `shared.pub_bytes` both rewrite to
+    // `lshmf_shared_pub_bytes` — the second registration is the one
+    // flagged, naming the first.
+    assert_flagged(
+        &diags,
+        "metrics-names",
+        "coordinator/shared.rs",
+        16,
+        "collides with `shared.pub_bytes` (coordinator/shared.rs:15) on Prometheus name \
+         `lshmf_shared_pub_bytes`",
+    );
+    assert_flagged(
+        &diags,
+        "metrics-names",
+        "coordinator/shared.rs",
+        17,
+        "invalid Prometheus name `lshmf_shared_Bytes`",
+    );
+    assert_eq!(
+        diags
+            .iter()
+            .filter(|d| d.check == "metrics-names" && d.message.contains("collides"))
+            .count(),
+        1,
+        "only the seeded collision:\n{}",
+        render(&diags)
+    );
+}
+
+#[test]
 fn missing_invariants_header_is_flagged() {
     let diags = fixture("missing_invariants");
     assert_flagged(

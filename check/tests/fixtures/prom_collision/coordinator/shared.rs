@@ -1,0 +1,18 @@
+//! Fixture: two distinct dotted names that merge under the exporter's
+//! `.` -> `_` rewrite, plus a name whose rewrite is invalid.
+//!
+//! # Invariants
+//!
+//! * (fixture)
+
+pub struct Registry;
+
+impl Registry {
+    pub fn counter(&self, _name: &str) {}
+}
+
+pub fn record(m: &Registry) {
+    m.counter("shared.pub_bytes");
+    m.counter("shared.pub.bytes");
+    m.counter("shared.Bytes");
+}

@@ -10,6 +10,9 @@ echo "==> cargo build --release"
 cargo build --release
 
 echo "==> cargo test -q"
+# Also parses the shipped lshmf.toml example: the unit test
+# config::serve::tests::shipped_example_round_trips loads the file at
+# the repo root into both typed configs, so the example cannot rot.
 cargo test -q
 
 # Static-analysis gate: lock order, unsafe hygiene, protocol

@@ -1,6 +1,6 @@
 //! Flag parsing: `<command> [--key value]... [--flag]...`.
 
-use crate::config::ExperimentConfig;
+use crate::config::{parse_codec, parse_flush_mode, EngineMode, ExperimentConfig, ServeConfig};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 
@@ -115,6 +115,49 @@ impl Args {
         cfg.validate()?;
         Ok(cfg)
     }
+
+    /// Build the serving config: `--config` file (if given) + flag
+    /// overrides, re-validated after the overrides land. Flags beat the
+    /// file; the file beats the defaults. `--writers N` (N > 0) implies
+    /// banded mode, exactly like the legacy CLI.
+    pub fn serve_config(&self) -> Result<ServeConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => ServeConfig::from_file(std::path::Path::new(path))?,
+            None => ServeConfig::default(),
+        };
+        if let Some(v) = self.get_usize("port")? {
+            if v == 0 || v > u16::MAX as usize {
+                return Err(Error::Config("--port must be in 1..=65535".into()));
+            }
+            cfg.server.port = v as u16;
+        }
+        if let Some(v) = self.get_usize("threads")? {
+            cfg.server.threads = v;
+        }
+        if let Some(v) = self.get_usize("read-workers")? {
+            cfg.server.read_workers = v;
+        }
+        if let Some(c) = self.get("codec") {
+            cfg.server.codec = parse_codec(c)?;
+        }
+        if let Some(v) = self.get_usize("shards")? {
+            cfg.engine.shards = v;
+        }
+        if let Some(v) = self.get_usize("writers")? {
+            cfg.engine.writers = v;
+            if v > 0 {
+                cfg.engine.mode = EngineMode::Banded;
+            }
+        }
+        if let Some(m) = self.get("mode") {
+            cfg.engine.mode = EngineMode::parse(m)?;
+        }
+        if let Some(m) = self.get("flush-mode") {
+            cfg.flush.mode = parse_flush_mode(m)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
 }
 
 #[cfg(test)]
@@ -171,5 +214,60 @@ mod tests {
     fn bad_choice_is_an_error() {
         let a = Args::parse(&sv(&["train", "--trainer", "magic"])).unwrap();
         assert!(a.experiment_config().is_err());
+    }
+
+    #[test]
+    fn serve_config_defaults_without_flags() {
+        let a = Args::parse(&sv(&["serve"])).unwrap();
+        let cfg = a.serve_config().unwrap();
+        assert_eq!(cfg.server.port, 7878);
+        assert_eq!(cfg.engine.mode, EngineMode::Sharded);
+    }
+
+    #[test]
+    fn serve_flags_override_config_file() {
+        let dir = std::env::temp_dir().join("lshmf-args-serve-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.toml");
+        std::fs::write(
+            &path,
+            "[server]\nport = 9000\nthreads = 3\n\n[engine]\nmode = \"banded\"\nwriters = 2\n",
+        )
+        .unwrap();
+        let p = path.to_str().unwrap();
+
+        // file alone: its values beat the defaults
+        let a = Args::parse(&sv(&["serve", "--config", p])).unwrap();
+        let cfg = a.serve_config().unwrap();
+        assert_eq!(cfg.server.port, 9000);
+        assert_eq!(cfg.server.threads, 3);
+        assert_eq!(cfg.engine.mode, EngineMode::Banded);
+        assert_eq!(cfg.engine.writers, 2);
+
+        // flags beat the file, untouched file values survive
+        let a = Args::parse(&sv(&[
+            "serve", "--config", p, "--port", "9001", "--writers", "4", "--read-workers", "3",
+            "--codec", "binary", "--flush-mode", "relaxed",
+        ]))
+        .unwrap();
+        let cfg = a.serve_config().unwrap();
+        assert_eq!(cfg.server.port, 9001, "flag beats file");
+        assert_eq!(cfg.server.threads, 3, "file value survives");
+        assert_eq!(cfg.engine.writers, 4);
+        assert_eq!(cfg.server.read_workers, 3);
+        assert_eq!(
+            cfg.server.codec,
+            crate::coordinator::protocol::CodecChoice::Binary
+        );
+        assert_eq!(cfg.flush.mode, crate::coordinator::FlushMode::Relaxed);
+
+        // overrides re-validate: forcing writers to 0 breaks banded mode
+        let a = Args::parse(&sv(&["serve", "--config", p, "--writers", "0"])).unwrap();
+        let err = a.serve_config().unwrap_err();
+        assert!(
+            err.to_string().contains("requires writers > 0"),
+            "{err}"
+        );
+        std::fs::remove_file(&path).ok();
     }
 }

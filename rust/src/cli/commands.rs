@@ -2,7 +2,7 @@
 
 use super::Args;
 use crate::config::{ExperimentConfig, LshChoice, TrainerChoice};
-use crate::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use crate::coordinator::stream::StreamOrchestrator;
 use crate::coordinator::Engine;
 use crate::data::synth::{self, SynthConfig};
 use crate::data::Dataset;
@@ -223,37 +223,16 @@ pub fn online(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: train a model from the experiment config, then hand it to
+/// the one config-driven server entry point. Every serving knob lives
+/// in [`ServeConfig`](crate::config::ServeConfig) — the `[server]` /
+/// `[engine]` / `[flush]` / `[limits]` / `[metrics]` sections of
+/// `--config lshmf.toml`, with CLI flags (`--port`, `--writers`,
+/// `--codec`, `--flush-mode`, `--read-workers`, …) desugaring into the
+/// same struct as overrides.
 pub fn serve(args: &mut Args) -> Result<()> {
     let cfg = args.experiment_config()?;
-    let port = args.get_usize("port")?.unwrap_or(7878);
-    // `--threads` doubles as the connection-pool width for serving (it
-    // is also the trainer's block-rotation width; both default to 4).
-    let threads = cfg.trainer.threads.max(1);
-    // `--shards` sets how many column bands the snapshot publish splits
-    // the factor state into (a flush republishes only dirty bands).
-    let shards = args
-        .get_usize("shards")?
-        .unwrap_or(crate::coordinator::DEFAULT_SHARDS);
-    // `--writers` switches ingest to the multi-writer path: one write
-    // queue + writer thread per column band, with the band count
-    // doubling as the snapshot shard count (see coordinator::banded).
-    let writers = args.get_usize("writers")?;
-    // `--codec` pins the wire codec; `auto` (default) detects per
-    // connection from the first byte (see coordinator::protocol).
-    let codec = match args.get_choice("codec", &["text", "binary", "auto"])? {
-        Some("text") => crate::coordinator::protocol::CodecChoice::Text,
-        Some("binary") => crate::coordinator::protocol::CodecChoice::Binary,
-        _ => crate::coordinator::protocol::CodecChoice::Auto,
-    };
-    // `--flush-mode` picks the flush's training execution: `exact`
-    // (default) keeps replies bit-identical across all three serving
-    // flavours; `relaxed` trains band-parallel inside the flush epoch
-    // (bounded divergence, lower flush latency — see
-    // coordinator::stream::FlushMode and README).
-    let flush_mode = match args.get_choice("flush-mode", &["exact", "relaxed"])? {
-        Some("relaxed") => crate::coordinator::FlushMode::Relaxed,
-        _ => crate::coordinator::FlushMode::Exact,
-    };
+    let serve_cfg = args.serve_config()?;
     let mut rng = Rng::seeded(cfg.dataset.seed);
     let ds = build_dataset(&cfg, &mut rng)?;
     eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
@@ -267,57 +246,36 @@ pub fn serve(args: &mut Args) -> Result<()> {
     );
     let lsh = SimLsh::new(cfg.lsh.p, cfg.lsh.q, cfg.lsh.g, cfg.lsh.psi_power);
     let hash_state = OnlineHashState::build(lsh, &ds.train_csc);
-    // One registry across orchestrator, engine, and server so the STATS
-    // verb reports the whole pipeline (per-verb counters, lock waits,
-    // flush timings) in one dump.
+    // One registry across orchestrator, engine, server, and exporter so
+    // STATS and GET /metrics report the whole pipeline in one dump.
     let metrics = Registry::new();
-    // Relaxed rotation width on the single-writer path (and the banded
-    // growth barrier): the band-writer count when --writers is given,
-    // otherwise the trainer's thread width — both are the natural
-    // "lanes available" measure for their path.
-    let stream_cfg = StreamConfig {
-        flush_mode,
-        flush_bands: writers.unwrap_or(threads).max(1),
-        ..StreamConfig::default()
-    };
     let orch = StreamOrchestrator::new(
         model,
         hash_state,
         ds.train.to_triples(),
-        stream_cfg,
+        serve_cfg.stream_config(),
         culsh_cfg,
         rng.split(7),
         metrics.clone(),
     );
     let engine = Engine::new(orch, (ds.min_value, ds.max_value), metrics);
-    let listener = std::net::TcpListener::bind(("0.0.0.0", port as u16))?;
+    let listener = std::net::TcpListener::bind(("0.0.0.0", serve_cfg.server.port))?;
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    match writers {
-        Some(w) => {
-            eprintln!(
-                "# serving on port {port} with {threads} reader thread(s), \
-                 {w} band writer(s)/shard(s), codec {}, flush mode {} \
-                 (PREDICT/MPREDICT/TOPN/RATE/MRATE/FLUSH/STATS/QUIT)",
-                codec.name(),
-                flush_mode.name()
-            );
-            crate::coordinator::server::serve_banded_with(
-                engine, listener, stop, threads, w, codec,
-            )?;
-        }
-        None => {
-            eprintln!(
-                "# serving on port {port} with {threads} reader thread(s), \
-                 {shards} snapshot shard(s), codec {}, flush mode {} \
-                 (PREDICT/MPREDICT/TOPN/RATE/MRATE/FLUSH/STATS/QUIT)",
-                codec.name(),
-                flush_mode.name()
-            );
-            crate::coordinator::server::serve_sharded_with(
-                engine, listener, stop, threads, shards, codec,
-            )?;
-        }
-    }
+    eprintln!(
+        "# serving on port {} ({} mode, {} conn thread(s), codec {}, flush mode {}{}) \
+         (PREDICT/MPREDICT/TOPN/RATE/MRATE/FLUSH/STATS/SUBSCRIBE/QUIT)",
+        serve_cfg.server.port,
+        serve_cfg.engine.mode.name(),
+        serve_cfg.server.threads,
+        serve_cfg.server.codec.name(),
+        serve_cfg.flush.mode.name(),
+        if serve_cfg.metrics.enabled {
+            format!(", metrics on port {}", serve_cfg.metrics.port)
+        } else {
+            String::new()
+        },
+    );
+    crate::coordinator::server::serve_with(engine, listener, stop, &serve_cfg)?;
     Ok(())
 }
 

@@ -7,8 +7,9 @@
 //!                 [--epochs 20] [--threads 4] [--lsh simlsh|gsm|rpcos|minhash|rand]
 //! lshmf online    [--config exp.toml] — Table 9 protocol: base train,
 //!                 increment via Algorithm 4, report the RMSE delta
-//! lshmf serve     [--config exp.toml] [--port 7878] [--threads 4]
-//!                 [--shards 8] [--writers N] [--codec text|binary|auto]
+//! lshmf serve     [--config lshmf.toml] [--port 7878] [--threads 4]
+//!                 [--shards 8] [--writers N] [--mode mutex|sharded|banded]
+//!                 [--read-workers 2] [--codec text|binary|auto]
 //!                 [--flush-mode exact|relaxed]
 //!                 — train, then serve TCP with a bounded reader pool
 //!                 (snapshots sharded by column band, writes
@@ -16,7 +17,11 @@
 //!                 protocol is typed Request/Response over a text or
 //!                 pipelined binary codec — see coordinator::protocol;
 //!                 relaxed flush mode trains band-parallel inside the
-//!                 epoch — see coordinator::stream::FlushMode)
+//!                 epoch — see coordinator::stream::FlushMode). The
+//!                 config file's [server]/[engine]/[flush]/[limits]/
+//!                 [metrics] sections cover the whole serving surface
+//!                 (admission control, Prometheus export); flags are
+//!                 overrides into the same ServeConfig.
 //! lshmf info      — artifact bundle status (PJRT graphs available?)
 //! ```
 //!
@@ -74,7 +79,11 @@ COMMANDS:
   help       this text
 
 COMMON FLAGS:
-  --config <file>      TOML experiment config (flags override)
+  --config <file>      TOML config (flags override). One file carries the
+                       experiment sections ([dataset]/[model]/...) and, for
+                       serve, the closed serving sections ([server]/[engine]/
+                       [flush]/[limits]/[metrics]) — see lshmf.toml at the
+                       repo root for a commented example
   --dataset <name>     netflix | movielens | yahoo (synthetic, calibrated)
   --scale <0..1>       linear size factor (default 0.1)
   --seed <u64>         RNG seed
@@ -86,7 +95,12 @@ COMMON FLAGS:
                        uses it as the connection-pool width)
   --port <int>         serve: TCP port (default 7878)
   --shards <int>       serve: snapshot column-band shard count (default 8)
-  --writers <int>      serve: per-band multi-writer ingest (N queues == N shards)
+  --writers <int>      serve: per-band multi-writer ingest (N queues == N
+                       shards; implies --mode banded)
+  --mode <name>        serve: mutex | sharded | banded engine flavour
+                       (default sharded)
+  --read-workers <int> serve: out-of-order read lanes per binary
+                       connection (default 2)
   --codec <name>       serve: text | binary | auto (default auto — per-
                        connection detection by first byte)
   --flush-mode <name>  serve: exact | relaxed (default exact — bit-identical

@@ -9,13 +9,18 @@
 //! what it overrides.
 
 mod experiment;
+mod serve;
 mod toml;
 
 pub use experiment::{
     DatasetChoice, DatasetSection, ExperimentConfig, LshChoice, LshSection, ModelConfig,
     OnlineConfig, RotationConfig, TrainerChoice, TrainerSection,
 };
-pub use toml::{parse, Value};
+pub use serve::{
+    parse_codec, parse_flush_mode, EngineMode, EngineSection, FlushSection, LimitsSection,
+    MetricsSection, ServeConfig, ServerSection,
+};
+pub use toml::{parse, parse_spanned, Spans, Value};
 
 #[cfg(test)]
 mod tests {

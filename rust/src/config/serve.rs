@@ -1,0 +1,653 @@
+//! Typed serving configuration: the `[server]` / `[engine]` / `[flush]`
+//! / `[limits]` / `[metrics]` sections of `serve --config lshmf.toml`.
+//!
+//! The whole operational surface of the serving stack is one validated
+//! struct ([`ServeConfig`]): which engine flavour to run, how wide the
+//! connection pool and per-connection read lanes are, the flush policy,
+//! per-client admission limits, and the Prometheus exporter. CLI flags
+//! (`--port`, `--writers`, `--flush-mode`, …) desugar into the same
+//! struct as overrides (see `cli::Args::serve_config`), so there is
+//! exactly one place where serving knobs are defined, defaulted, and
+//! cross-validated.
+//!
+//! Unlike [`ExperimentConfig`](super::ExperimentConfig) (which ignores
+//! sections it does not own, so one file can carry both configs), the
+//! serve sections are **closed**: an unknown key inside any of the five
+//! serve sections, or an unknown section altogether, is rejected with
+//! the exact `file:line` of the offender — the zero-dep analogue of
+//! serde's `deny_unknown_fields`.
+
+use super::toml::{parse_spanned, Spans, Tree, Value};
+use crate::coordinator::protocol::CodecChoice;
+use crate::coordinator::server::CONN_READ_WORKERS;
+use crate::coordinator::shared::DEFAULT_SHARDS;
+use crate::coordinator::stream::{FlushMode, StreamConfig};
+use crate::{Error, Result};
+
+/// Which serving flavour `serve` runs (`[engine] mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// The fully-serialized `Mutex<Engine>` reference flavour.
+    Mutex,
+    /// Epoch-swapped snapshots over a single writer thread (the
+    /// default; `shards` column bands per publish).
+    Sharded,
+    /// Per-column-band multi-writer ingest (`writers` write queues).
+    Banded,
+}
+
+impl EngineMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mutex" => EngineMode::Mutex,
+            "sharded" => EngineMode::Sharded,
+            "banded" => EngineMode::Banded,
+            other => {
+                return Err(Error::Config(format!(
+                    "[engine] mode must be one of mutex|sharded|banded (got `{other}`)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineMode::Mutex => "mutex",
+            EngineMode::Sharded => "sharded",
+            EngineMode::Banded => "banded",
+        }
+    }
+}
+
+/// `[server]` — the TCP front end.
+#[derive(Clone, Debug)]
+pub struct ServerSection {
+    /// Listen port.
+    pub port: u16,
+    /// Connection-pool width (how many connections are served at once).
+    pub threads: usize,
+    /// Read workers per binary connection (out-of-order read lanes);
+    /// the former hard-coded `CONN_READ_WORKERS`.
+    pub read_workers: usize,
+    /// Wire codec policy (`auto` detects per connection).
+    pub codec: CodecChoice,
+}
+
+impl Default for ServerSection {
+    fn default() -> Self {
+        ServerSection {
+            port: 7878,
+            threads: 4,
+            read_workers: CONN_READ_WORKERS,
+            codec: CodecChoice::Auto,
+        }
+    }
+}
+
+/// `[engine]` — serving flavour selection.
+#[derive(Clone, Debug)]
+pub struct EngineSection {
+    pub mode: EngineMode,
+    /// Band-writer count; meaningful (and required > 0) only in banded
+    /// mode.
+    pub writers: usize,
+    /// Snapshot shard count for the sharded flavour.
+    pub shards: usize,
+}
+
+impl Default for EngineSection {
+    fn default() -> Self {
+        EngineSection { mode: EngineMode::Sharded, writers: 0, shards: DEFAULT_SHARDS }
+    }
+}
+
+/// `[flush]` — the stream orchestrator's batching and flush policy
+/// (maps onto [`StreamConfig`] via [`ServeConfig::stream_config`]).
+#[derive(Clone, Debug)]
+pub struct FlushSection {
+    pub mode: FlushMode,
+    /// Relaxed-rotation lane count; `0` derives it (writers in banded
+    /// mode, else the pool width) exactly like the legacy CLI did.
+    pub bands: usize,
+    pub batch_size: usize,
+    pub queue_capacity: usize,
+    pub online_epochs: usize,
+    pub reject_when_full: bool,
+}
+
+impl Default for FlushSection {
+    fn default() -> Self {
+        let s = StreamConfig::default();
+        FlushSection {
+            mode: FlushMode::Exact,
+            bands: 0,
+            batch_size: s.batch_size,
+            queue_capacity: s.queue_capacity,
+            online_epochs: s.online_epochs,
+            reject_when_full: s.reject_when_full,
+        }
+    }
+}
+
+/// `[limits]` — per-client admission control. Every limit defaults to
+/// `0` = off, so a config without the section serves exactly like the
+/// pre-admission server.
+#[derive(Clone, Debug)]
+pub struct LimitsSection {
+    /// Token-bucket refill rate per connection, requests/second
+    /// (`0` = unlimited). A drained bucket answers
+    /// `ErrorKind::Overloaded`.
+    pub rate_per_conn: u32,
+    /// Token-bucket capacity (burst size); must be > 0 when
+    /// `rate_per_conn` is set.
+    pub burst: u32,
+    /// Slow-reader eviction: a reply or push write blocked longer than
+    /// this is abandoned and the connection dropped (`0` = wait
+    /// forever).
+    pub write_deadline_ms: u64,
+    /// Load shedding: once a connection has this many reads queued and
+    /// unfinished, further `TOPN`/`MPREDICT` are shed with
+    /// `ErrorKind::Overloaded` while `RATE`/`MRATE` stay admitted
+    /// (`0` = never shed).
+    pub shed_highwater: usize,
+}
+
+impl Default for LimitsSection {
+    fn default() -> Self {
+        LimitsSection { rate_per_conn: 0, burst: 64, write_deadline_ms: 0, shed_highwater: 0 }
+    }
+}
+
+/// `[metrics]` — the Prometheus text-format exporter.
+#[derive(Clone, Debug)]
+pub struct MetricsSection {
+    /// Serve `GET /metrics` (exposition format) when true.
+    pub enabled: bool,
+    /// Exporter port (must differ from `[server] port`).
+    pub port: u16,
+}
+
+impl Default for MetricsSection {
+    fn default() -> Self {
+        MetricsSection { enabled: false, port: 9878 }
+    }
+}
+
+/// The whole typed serving configuration; see the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct ServeConfig {
+    pub server: ServerSection,
+    pub engine: EngineSection,
+    pub flush: FlushSection,
+    pub limits: LimitsSection,
+    pub metrics: MetricsSection,
+}
+
+/// The closed serve sections and their allowed keys.
+const SERVE_SECTIONS: [(&str, &[&str]); 5] = [
+    ("server", &["port", "threads", "read_workers", "codec"]),
+    ("engine", &["mode", "writers", "shards"]),
+    (
+        "flush",
+        &["mode", "bands", "batch_size", "queue_capacity", "online_epochs", "reject_when_full"],
+    ),
+    ("limits", &["rate_per_conn", "burst", "write_deadline_ms", "shed_highwater"]),
+    ("metrics", &["enabled", "port"]),
+];
+
+/// Sections owned by [`ExperimentConfig`](super::ExperimentConfig) —
+/// tolerated so one `lshmf.toml` carries both configs. `""` is the
+/// root section (keys before any header).
+const EXPERIMENT_SECTIONS: [&str; 7] =
+    ["", "dataset", "model", "trainer", "lsh", "online", "rotation"];
+
+fn get_usize(tree: &Tree, sec: &str, key: &str, default: usize) -> Result<usize> {
+    match tree.get(sec).and_then(|s| s.get(key)) {
+        None => Ok(default),
+        Some(v) => match v.as_int() {
+            Some(i) if i >= 0 => Ok(i as usize),
+            Some(_) => Err(Error::Config(format!("[{sec}] {key} must not be negative"))),
+            None => Err(Error::Config(format!("[{sec}] {key} must be an integer"))),
+        },
+    }
+}
+
+fn get_port(tree: &Tree, sec: &str, key: &str, default: u16) -> Result<u16> {
+    let v = get_usize(tree, sec, key, default as usize)?;
+    if v == 0 || v > u16::MAX as usize {
+        return Err(Error::Config(format!("[{sec}] {key} must be in 1..=65535")));
+    }
+    Ok(v as u16)
+}
+
+fn get_bool(tree: &Tree, sec: &str, key: &str, default: bool) -> Result<bool> {
+    match tree.get(sec).and_then(|s| s.get(key)) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::Config(format!("[{sec}] {key} must be true or false"))),
+    }
+}
+
+fn get_str<'t>(tree: &'t Tree, sec: &str, key: &str) -> Result<Option<&'t str>> {
+    match tree.get(sec).and_then(|s| s.get(key)) {
+        None => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(s)),
+        Some(_) => Err(Error::Config(format!("[{sec}] {key} must be a string"))),
+    }
+}
+
+/// Parse a codec name (`[server] codec` / `--codec`).
+pub fn parse_codec(s: &str) -> Result<CodecChoice> {
+    Ok(match s {
+        "text" => CodecChoice::Text,
+        "binary" => CodecChoice::Binary,
+        "auto" => CodecChoice::Auto,
+        other => {
+            return Err(Error::Config(format!(
+                "codec must be one of text|binary|auto (got `{other}`)"
+            )))
+        }
+    })
+}
+
+/// Parse a flush-mode name (`[flush] mode` / `--flush-mode`).
+pub fn parse_flush_mode(s: &str) -> Result<FlushMode> {
+    Ok(match s {
+        "exact" => FlushMode::Exact,
+        "relaxed" => FlushMode::Relaxed,
+        other => {
+            return Err(Error::Config(format!(
+                "flush mode must be one of exact|relaxed (got `{other}`)"
+            )))
+        }
+    })
+}
+
+impl ServeConfig {
+    /// Parse from TOML-subset text, filling defaults and validating.
+    pub fn from_str(text: &str) -> Result<Self> {
+        Self::from_text(text, "<config>")
+    }
+
+    /// Load from a file path; rejection errors carry `path:line`.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_text(&text, &path.display().to_string())
+    }
+
+    fn from_text(text: &str, origin: &str) -> Result<Self> {
+        let (tree, spans) =
+            parse_spanned(text).map_err(|e| Error::Config(format!("{origin}: {e}")))?;
+        Self::from_tree(&tree, &spans, origin)
+    }
+
+    /// Build from a parsed tree. `origin` names the source (a path or
+    /// `<config>`) in unknown-key/unknown-section rejections.
+    pub fn from_tree(tree: &Tree, spans: &Spans, origin: &str) -> Result<Self> {
+        reject_unknown(tree, spans, origin)?;
+        let mut cfg = ServeConfig::default();
+
+        cfg.server.port = get_port(tree, "server", "port", cfg.server.port)?;
+        cfg.server.threads = get_usize(tree, "server", "threads", cfg.server.threads)?;
+        cfg.server.read_workers =
+            get_usize(tree, "server", "read_workers", cfg.server.read_workers)?;
+        if let Some(codec) = get_str(tree, "server", "codec")? {
+            cfg.server.codec = parse_codec(codec)?;
+        }
+
+        if let Some(mode) = get_str(tree, "engine", "mode")? {
+            cfg.engine.mode = EngineMode::parse(mode)?;
+        }
+        cfg.engine.writers = get_usize(tree, "engine", "writers", cfg.engine.writers)?;
+        cfg.engine.shards = get_usize(tree, "engine", "shards", cfg.engine.shards)?;
+
+        if let Some(mode) = get_str(tree, "flush", "mode")? {
+            cfg.flush.mode = parse_flush_mode(mode)?;
+        }
+        cfg.flush.bands = get_usize(tree, "flush", "bands", cfg.flush.bands)?;
+        cfg.flush.batch_size = get_usize(tree, "flush", "batch_size", cfg.flush.batch_size)?;
+        cfg.flush.queue_capacity =
+            get_usize(tree, "flush", "queue_capacity", cfg.flush.queue_capacity)?;
+        cfg.flush.online_epochs =
+            get_usize(tree, "flush", "online_epochs", cfg.flush.online_epochs)?;
+        cfg.flush.reject_when_full =
+            get_bool(tree, "flush", "reject_when_full", cfg.flush.reject_when_full)?;
+
+        cfg.limits.rate_per_conn =
+            get_usize(tree, "limits", "rate_per_conn", cfg.limits.rate_per_conn as usize)? as u32;
+        cfg.limits.burst = get_usize(tree, "limits", "burst", cfg.limits.burst as usize)? as u32;
+        cfg.limits.write_deadline_ms =
+            get_usize(tree, "limits", "write_deadline_ms", cfg.limits.write_deadline_ms as usize)?
+                as u64;
+        cfg.limits.shed_highwater =
+            get_usize(tree, "limits", "shed_highwater", cfg.limits.shed_highwater)?;
+
+        cfg.metrics.enabled = get_bool(tree, "metrics", "enabled", cfg.metrics.enabled)?;
+        cfg.metrics.port = get_port(tree, "metrics", "port", cfg.metrics.port)?;
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation; every error names both fields it relates.
+    pub fn validate(&self) -> Result<()> {
+        let bad = |m: String| Err(Error::Config(m));
+        if self.server.threads == 0 {
+            return bad("[server] threads must be positive".into());
+        }
+        if self.server.read_workers == 0 {
+            return bad("[server] read_workers must be positive".into());
+        }
+        if self.engine.shards == 0 {
+            return bad("[engine] shards must be positive".into());
+        }
+        if self.engine.writers > 0 && self.engine.mode != EngineMode::Banded {
+            return bad(format!(
+                "[engine] writers > 0 requires mode = \"banded\" (got mode = \"{}\")",
+                self.engine.mode.name()
+            ));
+        }
+        if self.engine.mode == EngineMode::Banded && self.engine.writers == 0 {
+            return bad("[engine] mode = \"banded\" requires writers > 0".into());
+        }
+        if self.flush.mode == FlushMode::Relaxed && self.engine.writers == 0 {
+            return bad(
+                "[flush] mode = \"relaxed\" requires banded mode with [engine] writers > 0"
+                    .into(),
+            );
+        }
+        if self.engine.mode == EngineMode::Banded
+            && self.flush.bands > 0
+            && self.flush.bands > self.engine.writers
+        {
+            return bad(format!(
+                "[flush] bands ({}) must not exceed [engine] writers ({})",
+                self.flush.bands, self.engine.writers
+            ));
+        }
+        if self.flush.batch_size == 0 {
+            return bad("[flush] batch_size must be positive".into());
+        }
+        if self.flush.queue_capacity < self.flush.batch_size {
+            return bad(format!(
+                "[flush] queue_capacity ({}) must be at least batch_size ({})",
+                self.flush.queue_capacity, self.flush.batch_size
+            ));
+        }
+        if self.limits.rate_per_conn > 0 && self.limits.burst == 0 {
+            return bad("[limits] burst must be positive when rate_per_conn > 0".into());
+        }
+        if self.metrics.enabled && self.metrics.port == self.server.port {
+            return bad(format!(
+                "[metrics] port ({}) must differ from [server] port",
+                self.metrics.port
+            ));
+        }
+        Ok(())
+    }
+
+    /// Resolved relaxed-rotation lane count: the explicit `[flush]
+    /// bands` if set, else the band-writer count in banded mode, else
+    /// the pool width — the derivation the legacy CLI flags used.
+    pub fn flush_bands(&self) -> usize {
+        if self.flush.bands > 0 {
+            return self.flush.bands;
+        }
+        match self.engine.mode {
+            EngineMode::Banded => self.engine.writers.max(1),
+            _ => self.server.threads.max(1),
+        }
+    }
+
+    /// The [`StreamConfig`] this serving configuration implies.
+    pub fn stream_config(&self) -> StreamConfig {
+        StreamConfig {
+            batch_size: self.flush.batch_size,
+            queue_capacity: self.flush.queue_capacity,
+            online_epochs: self.flush.online_epochs,
+            reject_when_full: self.flush.reject_when_full,
+            flush_mode: self.flush.mode,
+            flush_bands: self.flush_bands(),
+            ..StreamConfig::default()
+        }
+    }
+}
+
+/// Closed-world check: unknown keys in serve sections and unknown
+/// sections are rejected at their exact `origin:line`.
+fn reject_unknown(tree: &Tree, spans: &Spans, origin: &str) -> Result<()> {
+    for (section, keys) in tree {
+        if let Some((_, allowed)) =
+            SERVE_SECTIONS.iter().find(|(name, _)| name == section)
+        {
+            for key in keys.keys() {
+                if !allowed.contains(&key.as_str()) {
+                    let line = spans.key_line(section, key).unwrap_or(0);
+                    return Err(Error::Config(format!(
+                        "{origin}:{line}: unknown key `{key}` in [{section}]"
+                    )));
+                }
+            }
+        } else if !EXPERIMENT_SECTIONS.contains(&section.as_str()) {
+            let line = spans.section_line(section).unwrap_or(0);
+            return Err(Error::Config(format!(
+                "{origin}:{line}: unknown section [{section}]"
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid_and_legacy_shaped() {
+        let cfg = ServeConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.server.port, 7878);
+        assert_eq!(cfg.server.read_workers, CONN_READ_WORKERS);
+        assert_eq!(cfg.engine.mode, EngineMode::Sharded);
+        assert_eq!(cfg.engine.shards, DEFAULT_SHARDS);
+        // no [limits] section -> admission entirely off
+        assert_eq!(cfg.limits.rate_per_conn, 0);
+        assert_eq!(cfg.limits.write_deadline_ms, 0);
+        assert_eq!(cfg.limits.shed_highwater, 0);
+        assert!(!cfg.metrics.enabled);
+        // derived stream config matches the legacy CLI derivation
+        let s = cfg.stream_config();
+        assert_eq!(s.flush_bands, cfg.server.threads);
+        assert_eq!(s.flush_mode, FlushMode::Exact);
+    }
+
+    #[test]
+    fn full_file_round_trips_every_section() {
+        let text = r#"
+# one file carries both experiment and serve config
+[dataset]
+kind = "movielens"
+
+[server]
+port = 9000
+threads = 3
+read_workers = 4
+codec = "binary"
+
+[engine]
+mode = "banded"
+writers = 2
+shards = 16
+
+[flush]
+mode = "relaxed"
+bands = 2
+batch_size = 512
+queue_capacity = 4096
+online_epochs = 7
+reject_when_full = true
+
+[limits]
+rate_per_conn = 100
+burst = 16
+write_deadline_ms = 1500
+shed_highwater = 32
+
+[metrics]
+enabled = true
+port = 9100
+"#;
+        let cfg = ServeConfig::from_str(text).unwrap();
+        assert_eq!(cfg.server.port, 9000);
+        assert_eq!(cfg.server.threads, 3);
+        assert_eq!(cfg.server.read_workers, 4);
+        assert_eq!(cfg.server.codec, CodecChoice::Binary);
+        assert_eq!(cfg.engine.mode, EngineMode::Banded);
+        assert_eq!(cfg.engine.writers, 2);
+        assert_eq!(cfg.engine.shards, 16);
+        assert_eq!(cfg.flush.mode, FlushMode::Relaxed);
+        assert_eq!(cfg.flush.bands, 2);
+        assert_eq!(cfg.flush.batch_size, 512);
+        assert_eq!(cfg.flush.queue_capacity, 4096);
+        assert_eq!(cfg.flush.online_epochs, 7);
+        assert!(cfg.flush.reject_when_full);
+        assert_eq!(cfg.limits.rate_per_conn, 100);
+        assert_eq!(cfg.limits.burst, 16);
+        assert_eq!(cfg.limits.write_deadline_ms, 1500);
+        assert_eq!(cfg.limits.shed_highwater, 32);
+        assert!(cfg.metrics.enabled);
+        assert_eq!(cfg.metrics.port, 9100);
+        let s = cfg.stream_config();
+        assert_eq!(s.batch_size, 512);
+        assert_eq!(s.flush_bands, 2);
+        assert_eq!(s.flush_mode, FlushMode::Relaxed);
+    }
+
+    #[test]
+    fn unknown_key_rejected_at_exact_line() {
+        // line 1 is empty (leading newline), [server] on 2, port on 3,
+        // the typo on line 4
+        let text = "\n[server]\nport = 7878\nprot = 1\n";
+        let err = ServeConfig::from_str(text).unwrap_err().to_string();
+        assert!(err.contains("<config>:4: unknown key `prot` in [server]"), "{err}");
+        // unknown keys in every other serve section carry their line too
+        for (sec, line) in
+            [("engine", 2), ("flush", 2), ("limits", 2), ("metrics", 2)]
+        {
+            let text = format!("[{sec}]\nbogus = 1\n");
+            let err = ServeConfig::from_str(&text).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("<config>:{line}: unknown key `bogus` in [{sec}]")),
+                "{err}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_section_rejected_at_header_line() {
+        let err = ServeConfig::from_str("[server]\nport = 7878\n\n[serverr]\nx = 1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("<config>:4: unknown section [serverr]"), "{err}");
+        // experiment sections are tolerated: shared file
+        ServeConfig::from_str("[dataset]\nkind = \"movielens\"\n[model]\nf = 8\n").unwrap();
+    }
+
+    #[test]
+    fn file_load_uses_the_path_in_rejections() {
+        let dir = std::env::temp_dir().join("lshmf_serve_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.toml");
+        std::fs::write(&path, "[limits]\nrate = 5\n").unwrap();
+        let err = ServeConfig::from_file(&path).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("{}:2: unknown key `rate` in [limits]", path.display())),
+            "{err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Every cross-field validation rule, by exact message.
+    #[test]
+    fn cross_field_validation_messages() {
+        let cases: [(&str, &str); 11] = [
+            ("[server]\nthreads = 0\n", "[server] threads must be positive"),
+            ("[server]\nread_workers = 0\n", "[server] read_workers must be positive"),
+            ("[engine]\nshards = 0\n", "[engine] shards must be positive"),
+            (
+                "[engine]\nwriters = 2\n",
+                "[engine] writers > 0 requires mode = \"banded\" (got mode = \"sharded\")",
+            ),
+            (
+                "[engine]\nmode = \"banded\"\n",
+                "[engine] mode = \"banded\" requires writers > 0",
+            ),
+            (
+                "[flush]\nmode = \"relaxed\"\n",
+                "[flush] mode = \"relaxed\" requires banded mode with [engine] writers > 0",
+            ),
+            (
+                "[engine]\nmode = \"banded\"\nwriters = 2\n[flush]\nbands = 3\n",
+                "[flush] bands (3) must not exceed [engine] writers (2)",
+            ),
+            ("[flush]\nbatch_size = 0\n", "[flush] batch_size must be positive"),
+            (
+                "[flush]\nbatch_size = 100\nqueue_capacity = 10\n",
+                "[flush] queue_capacity (10) must be at least batch_size (100)",
+            ),
+            (
+                "[limits]\nrate_per_conn = 10\nburst = 0\n",
+                "[limits] burst must be positive when rate_per_conn > 0",
+            ),
+            (
+                "[server]\nport = 7878\n[metrics]\nenabled = true\nport = 7878\n",
+                "[metrics] port (7878) must differ from [server] port",
+            ),
+        ];
+        for (text, want) in cases {
+            let err = ServeConfig::from_str(text).unwrap_err().to_string();
+            assert!(err.contains(want), "config {text:?}: got {err}, want {want}");
+        }
+        // the valid variants of each rule parse
+        ServeConfig::from_str("[engine]\nmode = \"banded\"\nwriters = 2\n[flush]\nbands = 2\n")
+            .unwrap();
+        ServeConfig::from_str(
+            "[engine]\nmode = \"banded\"\nwriters = 2\n[flush]\nmode = \"relaxed\"\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn bad_values_are_typed_errors() {
+        assert!(ServeConfig::from_str("[server]\nport = \"x\"\n").is_err());
+        assert!(ServeConfig::from_str("[server]\nport = 0\n").is_err());
+        assert!(ServeConfig::from_str("[server]\nport = 70000\n").is_err());
+        assert!(ServeConfig::from_str("[server]\ncodec = \"morse\"\n").is_err());
+        assert!(ServeConfig::from_str("[engine]\nmode = \"warp\"\n").is_err());
+        assert!(ServeConfig::from_str("[flush]\nmode = \"sloppy\"\n").is_err());
+        assert!(ServeConfig::from_str("[flush]\nreject_when_full = 1\n").is_err());
+        assert!(ServeConfig::from_str("[limits]\nrate_per_conn = -1\n").is_err());
+    }
+
+    /// The shipped example at the repository root must parse into both
+    /// typed configs — ci.sh counts on this test so the example cannot
+    /// rot.
+    #[test]
+    fn shipped_example_round_trips() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("workspace root")
+            .join("lshmf.toml");
+        let cfg = ServeConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("shipped lshmf.toml must parse: {e}"));
+        assert_eq!(cfg.engine.mode, EngineMode::Banded);
+        assert!(cfg.engine.writers > 0);
+        assert!(cfg.metrics.enabled);
+        assert!(cfg.limits.rate_per_conn > 0);
+        // the same file is a valid experiment config (shared sections)
+        let exp = super::super::ExperimentConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("shipped lshmf.toml must parse as experiment: {e}"));
+        assert!(exp.model.f > 0);
+    }
+}

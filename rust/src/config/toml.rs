@@ -59,9 +59,39 @@ impl Value {
 /// `section -> key -> value`. Keys before any `[section]` land in `""`.
 pub type Tree = BTreeMap<String, BTreeMap<String, Value>>;
 
+/// Source positions for a parsed [`Tree`]: the 1-based line of every
+/// `[section]` header and every `key = value` pair. Typed configs use
+/// this to point rejection errors at the exact file:line instead of
+/// merely naming the offending key.
+#[derive(Clone, Debug, Default)]
+pub struct Spans {
+    /// `section -> header line` (the root section `""` is absent).
+    pub sections: BTreeMap<String, usize>,
+    /// `(section, key) -> line of the (last) assignment`.
+    pub keys: BTreeMap<(String, String), usize>,
+}
+
+impl Spans {
+    /// Line of `key` in `[section]`, if present.
+    pub fn key_line(&self, section: &str, key: &str) -> Option<usize> {
+        self.keys.get(&(section.to_string(), key.to_string())).copied()
+    }
+
+    /// Line of the `[section]` header, if present.
+    pub fn section_line(&self, section: &str) -> Option<usize> {
+        self.sections.get(section).copied()
+    }
+}
+
 /// Parse a TOML-subset document.
 pub fn parse(text: &str) -> Result<Tree, String> {
+    parse_spanned(text).map(|(tree, _)| tree)
+}
+
+/// [`parse`], additionally returning the [`Spans`] line map.
+pub fn parse_spanned(text: &str) -> Result<(Tree, Spans), String> {
     let mut tree: Tree = BTreeMap::new();
+    let mut spans = Spans::default();
     let mut section = String::new();
     tree.entry(section.clone()).or_default();
 
@@ -80,6 +110,7 @@ pub fn parse(text: &str) -> Result<Tree, String> {
             }
             section = name.to_string();
             tree.entry(section.clone()).or_default();
+            spans.sections.entry(section.clone()).or_insert(lineno + 1);
             continue;
         }
         let eq = line
@@ -92,8 +123,11 @@ pub fn parse(text: &str) -> Result<Tree, String> {
         let value = parse_value(line[eq + 1..].trim())
             .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
         tree.get_mut(&section).unwrap().insert(key.to_string(), value);
+        spans
+            .keys
+            .insert((section.clone(), key.to_string()), lineno + 1);
     }
-    Ok(tree)
+    Ok((tree, spans))
 }
 
 /// Strip a trailing `#` comment, respecting quoted strings.
@@ -238,6 +272,25 @@ empty = []
     fn later_keys_override() {
         let t = parse("[a]\nx = 1\nx = 2\n").unwrap();
         assert_eq!(t["a"]["x"], Value::Int(2));
+    }
+
+    #[test]
+    fn spans_track_section_and_key_lines() {
+        let (_, spans) = parse_spanned(
+            "top = 1\n\n[server]\n# comment\nport = 7878\n\n[server]\nthreads = 2\n",
+        )
+        .unwrap();
+        assert_eq!(spans.key_line("", "top"), Some(1));
+        // first header wins for the section line; re-opened sections
+        // keep adding keys with their own lines
+        assert_eq!(spans.section_line("server"), Some(3));
+        assert_eq!(spans.key_line("server", "port"), Some(5));
+        assert_eq!(spans.key_line("server", "threads"), Some(8));
+        assert_eq!(spans.key_line("server", "missing"), None);
+        assert_eq!(spans.section_line(""), None);
+        // a re-assigned key reports the last assignment
+        let (_, spans) = parse_spanned("[a]\nx = 1\nx = 2\n").unwrap();
+        assert_eq!(spans.key_line("a", "x"), Some(3));
     }
 
     #[test]

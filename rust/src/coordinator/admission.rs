@@ -1,0 +1,326 @@
+//! Per-client admission control for the serving front end, driven by
+//! the `[limits]` section of [`ServeConfig`](crate::config::ServeConfig):
+//! token-bucket rate limiting per connection, load shedding that drops
+//! expensive reads (`TOPN`/`MPREDICT`) before ingest verbs when a
+//! connection's read lane backs up, and slow-reader eviction so a
+//! blocked reply writer or push sink cannot wedge a worker. Every
+//! refusal is the typed [`ErrorKind::Overloaded`] so clients can back
+//! off; every limit defaults to off, making an unconfigured server
+//! behave exactly like the pre-admission one.
+//!
+//! # Invariants
+//!
+//! * **Admission decisions run on the connection's reader thread,
+//!   before a request is enqueued.** A shed or rate-limited request
+//!   never occupies a worker slot; its `Overloaded` reply is written
+//!   directly from the reader. `SUBSCRIBE` and `SHUTDOWN` are exempt —
+//!   throttling the control verbs could strand a connection that is
+//!   trying to wind down.
+//! * **The read-lane depth counts admitted-but-unfinished reads.** It
+//!   is incremented by [`ConnAdmission::track_read`] at enqueue and
+//!   decremented when the corresponding [`DepthGuard`] drops after the
+//!   reply is written, so shedding keys off real in-flight pressure,
+//!   not queue residency — a gated dispatch keeps the depth high no
+//!   matter how workers are scheduled.
+//! * **Only `TOPN`/`MPREDICT` are sheddable.** `RATE`/`MRATE` carry
+//!   client state the server has not seen; dropping reads is a retry,
+//!   dropping writes is data loss, so ingest is only ever refused by
+//!   the rate limiter or the queue's own backpressure.
+//! * **An evicted writer stays evicted.** The first write failure
+//!   poisons [`EvictingWriter`] permanently: a frame that timed out
+//!   mid-write has already corrupted framing, so later frames must not
+//!   reach the wire. Deadline expiries (`TimedOut`/`WouldBlock` from
+//!   the socket's write timeout) count into `server.evictions`; the
+//!   poisoned writer makes the push sink unsubscribe itself and the
+//!   connection workers drain, which is what "evicted, not waited on"
+//!   means — publish fan-out never blocks on the dead peer.
+
+use super::protocol::{ErrorKind, Request};
+use crate::config::LimitsSection;
+use crate::metrics::Registry;
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Classic token bucket: `rate` tokens/second refill, `burst` capacity,
+/// one token per admitted request. Time is passed in explicitly so the
+/// refill arithmetic is deterministic under test.
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_sec: u32, burst: u32, now: Instant) -> Self {
+        TokenBucket {
+            rate: rate_per_sec as f64,
+            burst: burst as f64,
+            tokens: burst as f64,
+            last: now,
+        }
+    }
+
+    /// Take one token if available, refilling for the time elapsed
+    /// since the last call first.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Reads the shedder may refuse under pressure: the expensive ranking
+/// and batch-prediction verbs. Point reads stay cheap enough to serve.
+pub fn is_sheddable(req: &Request) -> bool {
+    matches!(req, Request::TopN { .. } | Request::MPredict { .. })
+}
+
+/// Per-connection admission state, created once per accepted socket
+/// from the server's `[limits]`.
+pub struct ConnAdmission {
+    bucket: Option<Mutex<TokenBucket>>,
+    shed_highwater: usize,
+    depth: AtomicUsize,
+    registry: Registry,
+}
+
+impl ConnAdmission {
+    pub fn new(limits: &LimitsSection, registry: Registry) -> Self {
+        let bucket = (limits.rate_per_conn > 0).then(|| {
+            Mutex::new(TokenBucket::new(limits.rate_per_conn, limits.burst, Instant::now()))
+        });
+        ConnAdmission {
+            bucket,
+            shed_highwater: limits.shed_highwater,
+            depth: AtomicUsize::new(0),
+            registry,
+        }
+    }
+
+    /// Decide whether `req` may proceed. `Err(Overloaded)` means the
+    /// reader should answer the typed refusal itself and move on.
+    pub fn admit(&self, req: &Request) -> Result<(), ErrorKind> {
+        if matches!(req, Request::Subscribe | Request::Shutdown) {
+            return Ok(());
+        }
+        if let Some(bucket) = &self.bucket {
+            let mut b = bucket.lock().unwrap_or_else(|e| e.into_inner());
+            if !b.try_take(Instant::now()) {
+                self.registry.counter("server.rate_limited").inc();
+                return Err(ErrorKind::Overloaded);
+            }
+        }
+        if self.shed_highwater > 0
+            && is_sheddable(req)
+            && self.depth.load(Ordering::Acquire) >= self.shed_highwater
+        {
+            self.registry.counter("server.shed_reads").inc();
+            return Err(ErrorKind::Overloaded);
+        }
+        Ok(())
+    }
+
+    /// Register one admitted read in flight; the returned guard drops
+    /// the depth back down when the read's reply has been written.
+    pub fn track_read(self: &Arc<Self>) -> DepthGuard {
+        self.depth.fetch_add(1, Ordering::AcqRel);
+        DepthGuard(Arc::clone(self))
+    }
+
+    /// Current in-flight read count (admitted, reply not yet written).
+    pub fn read_depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+}
+
+/// RAII handle for one in-flight read; see [`ConnAdmission::track_read`].
+pub struct DepthGuard(Arc<ConnAdmission>);
+
+impl Drop for DepthGuard {
+    fn drop(&mut self) {
+        self.0.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A `Write` wrapper enforcing slow-reader eviction: the first write or
+/// flush failure poisons it permanently (framing is already lost), and
+/// deadline expiries — the `TimedOut`/`WouldBlock` a socket write
+/// timeout surfaces — count into `server.evictions`. Wrapped around
+/// every connection writer, so both reply writes and push-sink writes
+/// stop dead instead of waiting on a blocked peer.
+pub struct EvictingWriter<W> {
+    inner: W,
+    evicted: bool,
+    registry: Registry,
+}
+
+impl<W: Write> EvictingWriter<W> {
+    pub fn new(inner: W, registry: Registry) -> Self {
+        EvictingWriter { inner, evicted: false, registry }
+    }
+
+    fn poison(&mut self, e: std::io::Error) -> std::io::Error {
+        if matches!(
+            e.kind(),
+            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+        ) {
+            self.registry.counter("server.evictions").inc();
+        }
+        self.evicted = true;
+        e
+    }
+
+    fn refused() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::BrokenPipe, "connection evicted")
+    }
+}
+
+impl<W: Write> Write for EvictingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.evicted {
+            return Err(Self::refused());
+        }
+        match self.inner.write(buf) {
+            Err(e) => Err(self.poison(e)),
+            ok => ok,
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.evicted {
+            return Err(Self::refused());
+        }
+        match self.inner.flush() {
+            Err(e) => Err(self.poison(e)),
+            ok => ok,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn token_bucket_burst_then_refill() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10, 3, t0);
+        // burst capacity drains without any elapsed time
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0));
+        // 10/s refill: 100ms buys exactly one token
+        assert!(b.try_take(t0 + Duration::from_millis(100)));
+        assert!(!b.try_take(t0 + Duration::from_millis(100)));
+        // refill never exceeds the burst capacity
+        let mut b = TokenBucket::new(1000, 2, t0);
+        assert!(b.try_take(t0 + Duration::from_secs(60)));
+        assert!(b.try_take(t0 + Duration::from_secs(60)));
+        assert!(!b.try_take(t0 + Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn admit_rate_limits_and_counts() {
+        let limits = LimitsSection { rate_per_conn: 1000, burst: 2, ..Default::default() };
+        let registry = Registry::new();
+        let adm = ConnAdmission::new(&limits, registry.clone());
+        let read = Request::TopN { row: 0, n: 3 };
+        assert!(adm.admit(&read).is_ok());
+        assert!(adm.admit(&read).is_ok());
+        // the burst is gone and ~no time has passed
+        assert_eq!(adm.admit(&read), Err(ErrorKind::Overloaded));
+        assert_eq!(registry.counter("server.rate_limited").get(), 1);
+        // control verbs bypass the bucket even when it is empty
+        assert!(adm.admit(&Request::Subscribe).is_ok());
+        assert!(adm.admit(&Request::Shutdown).is_ok());
+    }
+
+    #[test]
+    fn shedding_prefers_writes_and_tracks_depth() {
+        let limits = LimitsSection { shed_highwater: 1, ..Default::default() };
+        let registry = Registry::new();
+        let adm = Arc::new(ConnAdmission::new(&limits, registry.clone()));
+        let topn = Request::TopN { row: 0, n: 3 };
+        let rate = Request::Rate { row: 0, col: 0, value: 3.0 };
+        assert!(adm.admit(&topn).is_ok());
+        let guard = adm.track_read();
+        assert_eq!(adm.read_depth(), 1);
+        // at the high-water mark: expensive reads shed, ingest admitted
+        assert_eq!(adm.admit(&topn), Err(ErrorKind::Overloaded));
+        assert_eq!(
+            adm.admit(&Request::MPredict { row: 0, cols: vec![1] }),
+            Err(ErrorKind::Overloaded)
+        );
+        assert!(adm.admit(&rate).is_ok());
+        assert!(adm.admit(&Request::Predict { row: 0, col: 0 }).is_ok());
+        assert_eq!(registry.counter("server.shed_reads").get(), 2);
+        // the guard's drop reopens admission
+        drop(guard);
+        assert_eq!(adm.read_depth(), 0);
+        assert!(adm.admit(&topn).is_ok());
+    }
+
+    /// A writer that accepts `budget` bytes, then times out forever —
+    /// an in-memory stand-in for a peer that stopped reading.
+    struct StallingWriter {
+        budget: usize,
+    }
+
+    impl Write for StallingWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.budget == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "send buffer full",
+                ));
+            }
+            let n = buf.len().min(self.budget);
+            self.budget -= n;
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn evicting_writer_poisons_once_and_counts() {
+        let registry = Registry::new();
+        let mut w = EvictingWriter::new(StallingWriter { budget: 4 }, registry.clone());
+        assert_eq!(w.write(b"abcd").unwrap(), 4);
+        // deadline expiry: counted once, poisoned forever
+        assert_eq!(
+            w.write(b"more").unwrap_err().kind(),
+            std::io::ErrorKind::TimedOut
+        );
+        assert_eq!(w.write(b"more").unwrap_err().kind(), std::io::ErrorKind::BrokenPipe);
+        assert!(w.flush().is_err());
+        assert_eq!(registry.counter("server.evictions").get(), 1);
+        // a non-deadline failure poisons but is not an eviction
+        struct Broken;
+        impl Write for Broken {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "peer gone"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let registry = Registry::new();
+        let mut w = EvictingWriter::new(Broken, registry.clone());
+        assert!(w.write(b"x").is_err());
+        assert_eq!(registry.counter("server.evictions").get(), 0);
+    }
+}

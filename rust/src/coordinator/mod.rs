@@ -33,7 +33,14 @@
 //!   over any serving flavour, decoding wire messages into `Request`
 //!   once and dispatching through one `Serving`-generic path
 //!   (`serve --codec text|binary|auto`, auto-detected per connection
-//!   by first byte).
+//!   by first byte). All three flavours launch through one
+//!   [`ServeConfig`](crate::config::ServeConfig)-driven entry point,
+//!   `server::serve_with`, which also hosts the `[metrics]` Prometheus
+//!   scrape listener.
+//! * [`admission`] — per-connection admission control (`[limits]`):
+//!   token-bucket rate limiting, read-depth load shedding that drops
+//!   `TOPN`/`MPREDICT` before ingest, and the poisoning writer that
+//!   evicts peers blocked past their write deadline.
 //! * [`client`] — [`LshmfClient`]: synchronous calls plus `pipeline()`
 //!   batching (many requests in flight per connection) on either codec.
 //!
@@ -45,6 +52,7 @@
 //! bounded divergence. `ARCHITECTURE.md` at the repository root walks
 //! the whole request path through these modules.
 
+pub mod admission;
 pub mod banded;
 pub mod cache;
 pub mod client;

@@ -189,6 +189,10 @@ pub enum ErrorKind {
     OutOfBounds,
     /// Empty request line.
     Empty,
+    /// Admission control refused the request: the client is over its
+    /// per-connection rate limit, or the server is shedding read load
+    /// (`TOPN`/`MPREDICT` shed first). Back off and retry.
+    Overloaded,
     /// Unrecognized verb (text) or opcode (binary).
     UnknownVerb(String),
     /// Malformed arguments; carries the verb's usage string.
@@ -211,6 +215,7 @@ impl ErrorKind {
             ErrorKind::InvalidValue => "ERR invalid-value".into(),
             ErrorKind::OutOfBounds => "ERR out-of-bounds".into(),
             ErrorKind::Empty => "ERR empty".into(),
+            ErrorKind::Overloaded => "ERR overloaded".into(),
             ErrorKind::UnknownVerb(verb) => format!("ERR unknown verb `{verb}`"),
             ErrorKind::Usage(usage) => format!("ERR usage: {usage}"),
             ErrorKind::MalformedFrame(detail) => format!("ERR malformed-frame: {detail}"),
@@ -230,6 +235,7 @@ impl ErrorKind {
             "invalid-value" => ErrorKind::InvalidValue,
             "out-of-bounds" => ErrorKind::OutOfBounds,
             "empty" => ErrorKind::Empty,
+            "overloaded" => ErrorKind::Overloaded,
             _ => {
                 if let Some(usage) = body.strip_prefix("usage: ") {
                     ErrorKind::Usage(usage.to_string())
@@ -261,6 +267,7 @@ impl ErrorKind {
             ErrorKind::UnknownVerb(_) => 9,
             ErrorKind::Usage(_) => 10,
             ErrorKind::MalformedFrame(_) => 11,
+            ErrorKind::Overloaded => 12,
         }
     }
 
@@ -279,7 +286,8 @@ impl ErrorKind {
             | ErrorKind::Backpressure
             | ErrorKind::InvalidValue
             | ErrorKind::OutOfBounds
-            | ErrorKind::Empty => "",
+            | ErrorKind::Empty
+            | ErrorKind::Overloaded => "",
         }
     }
 
@@ -296,6 +304,7 @@ impl ErrorKind {
             9 => ErrorKind::UnknownVerb(detail),
             10 => ErrorKind::Usage(detail),
             11 => ErrorKind::MalformedFrame(detail),
+            12 => ErrorKind::Overloaded,
             _ => return None,
         })
     }
@@ -1138,6 +1147,7 @@ mod tests {
             ErrorKind::InvalidValue,
             ErrorKind::OutOfBounds,
             ErrorKind::Empty,
+            ErrorKind::Overloaded,
             ErrorKind::UnknownVerb("FROB".into()),
             ErrorKind::Usage(TOPN_USAGE.into()),
             ErrorKind::MalformedFrame("truncated frame header".into()),

@@ -73,6 +73,7 @@
 //!   sink that fails to write returns `false`, unsubscribing itself —
 //!   a dead connection cannot wedge the publish path.
 
+use super::admission::{ConnAdmission, DepthGuard, EvictingWriter};
 use super::banded::BandedEngine;
 use super::cache::PushSink;
 use super::engine::Engine;
@@ -84,11 +85,13 @@ use super::protocol::{
 };
 use super::shared::SharedEngine;
 use super::stream::IngestResult;
+use crate::config::{EngineMode, LimitsSection, ServeConfig};
 use crate::metrics::Registry;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// The protocol surface a serving engine must expose. `&self` receivers
 /// throughout: implementations provide their own interior
@@ -116,6 +119,47 @@ pub trait Serving {
     /// `SUBSCRIBED` ack, so a client knows which snapshot its cache
     /// starts from.
     fn subscribe_push(&self, sink: PushSink) -> u64;
+}
+
+/// `Arc<S>` serves by delegation, so the `Mutex<Engine>` reference
+/// flavour can ride the same cloneable connection pool as the
+/// concurrent engines ([`serve_with`] with `[engine] mode = "mutex"`).
+impl<S: Serving + ?Sized> Serving for Arc<S> {
+    fn predict(&self, i: usize, j: usize) -> Option<f32> {
+        (**self).predict(i, j)
+    }
+
+    fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
+        (**self).predict_many(i, cols)
+    }
+
+    fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
+        (**self).top_n(i, n_items)
+    }
+
+    fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult {
+        (**self).rate(i, j, r)
+    }
+
+    fn rate_many(&self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        (**self).rate_many(batch)
+    }
+
+    fn flush(&self) -> usize {
+        (**self).flush()
+    }
+
+    fn stats(&self) -> String {
+        (**self).stats()
+    }
+
+    fn registry(&self) -> Registry {
+        (**self).registry()
+    }
+
+    fn subscribe_push(&self, sink: PushSink) -> u64 {
+        (**self).subscribe_push(sink)
+    }
 }
 
 impl Serving for Mutex<Engine> {
@@ -301,9 +345,24 @@ pub fn dispatch<S: Serving + ?Sized>(engine: &S, req: &Request) -> Response {
 /// Thin composition over the typed layer: parse once, [`dispatch`]
 /// once, encode once.
 pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String> {
+    handle_line_admitted(engine, line, None)
+}
+
+/// [`handle_line`] with an optional admission gate — the text
+/// connection loop passes its per-connection [`ConnAdmission`] so a
+/// rate-limited line answers the typed `ERR overloaded` without ever
+/// dispatching.
+fn handle_line_admitted<S: Serving + ?Sized>(
+    engine: &S,
+    line: &str,
+    admission: Option<&ConnAdmission>,
+) -> Option<String> {
     let response = match Request::parse_text(line) {
         Ok(Request::Shutdown) => return None,
-        Ok(req) => dispatch(engine, &req),
+        Ok(req) => match admission.map_or(Ok(()), |a| a.admit(&req)) {
+            Ok(()) => dispatch(engine, &req),
+            Err(kind) => Response::Error(kind),
+        },
         Err(kind) => {
             if matches!(kind, ErrorKind::UnknownVerb(_)) {
                 engine.registry().counter("server.unknown_verb").inc();
@@ -343,20 +402,24 @@ pub fn serve_sharded(
     threads: usize,
     shards: usize,
 ) -> std::io::Result<Engine> {
-    serve_sharded_with(engine, listener, stop, threads, shards, CodecChoice::Auto)
+    let mut cfg = ServeConfig::default();
+    cfg.server.threads = threads;
+    cfg.engine.shards = shards;
+    serve_sharded_with(engine, listener, stop, &cfg)
 }
 
-/// [`serve_sharded`] with an explicit codec policy (`serve --codec`).
+/// [`serve_sharded`] driven by a full [`ServeConfig`]: `[server]`
+/// supplies the pool width, codec policy, and per-connection read
+/// workers, `[engine] shards` the publish sharding, `[limits]` the
+/// admission policy.
 pub fn serve_sharded_with(
     engine: Engine,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
-    threads: usize,
-    shards: usize,
-    codec: CodecChoice,
+    cfg: &ServeConfig,
 ) -> std::io::Result<Engine> {
-    let (shared, writer) = SharedEngine::spawn_sharded(engine, shards);
-    run_pool(shared, listener, stop, threads, codec)?;
+    let (shared, writer) = SharedEngine::spawn_sharded(engine, cfg.engine.shards);
+    run_pool(shared, listener, stop, cfg.server.threads, ConnOptions::from_cfg(cfg))?;
     Ok(writer.join())
 }
 
@@ -372,21 +435,103 @@ pub fn serve_banded(
     threads: usize,
     writers: usize,
 ) -> std::io::Result<Engine> {
-    serve_banded_with(engine, listener, stop, threads, writers, CodecChoice::Auto)
+    let mut cfg = ServeConfig::default();
+    cfg.server.threads = threads;
+    cfg.engine.mode = EngineMode::Banded;
+    cfg.engine.writers = writers;
+    serve_banded_with(engine, listener, stop, &cfg)
 }
 
-/// [`serve_banded`] with an explicit codec policy (`serve --codec`).
+/// [`serve_banded`] driven by a full [`ServeConfig`] (see
+/// [`serve_sharded_with`]; `[engine] writers` is the band-writer count).
 pub fn serve_banded_with(
     engine: Engine,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
-    threads: usize,
-    writers: usize,
-    codec: CodecChoice,
+    cfg: &ServeConfig,
 ) -> std::io::Result<Engine> {
-    let (banded, handle) = BandedEngine::spawn(engine, writers);
-    run_pool(banded, listener, stop, threads, codec)?;
+    let (banded, handle) = BandedEngine::spawn(engine, cfg.engine.writers.max(1));
+    run_pool(banded, listener, stop, cfg.server.threads, ConnOptions::from_cfg(cfg))?;
     Ok(handle.join())
+}
+
+/// The one config-driven entry point `serve --config` lands on: picks
+/// the serving flavour from `[engine] mode`, spawns the `[metrics]`
+/// Prometheus exporter when enabled, and runs the connection pool with
+/// the `[limits]` admission policy. Returns the drained engine on
+/// shutdown, whichever flavour ran.
+pub fn serve_with(
+    engine: Engine,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    cfg: &ServeConfig,
+) -> std::io::Result<Engine> {
+    let exporter = if cfg.metrics.enabled {
+        let registry = engine.metrics().clone();
+        let scrape = TcpListener::bind(("127.0.0.1", cfg.metrics.port))?;
+        Some(crate::metrics::prometheus::spawn_exporter(
+            scrape,
+            registry,
+            Arc::clone(&stop),
+        )?)
+    } else {
+        None
+    };
+    let engine = match cfg.engine.mode {
+        EngineMode::Sharded => serve_sharded_with(engine, listener, Arc::clone(&stop), cfg)?,
+        EngineMode::Banded => serve_banded_with(engine, listener, Arc::clone(&stop), cfg)?,
+        EngineMode::Mutex => {
+            let shared = Arc::new(Mutex::new(engine));
+            run_pool(
+                Arc::clone(&shared),
+                listener,
+                Arc::clone(&stop),
+                cfg.server.threads,
+                ConnOptions::from_cfg(cfg),
+            )?;
+            // run_pool joins every connection worker before returning,
+            // so this Arc is the last holder.
+            match Arc::try_unwrap(shared) {
+                Ok(mutex) => mutex.into_inner().unwrap_or_else(|e| e.into_inner()),
+                Err(_) => unreachable!("connection workers joined; engine uniquely held"),
+            }
+        }
+    };
+    if let Some(handle) = exporter {
+        // `stop` is already true once run_pool returns; the exporter's
+        // poll loop notices within one sleep tick.
+        let _ = handle.join();
+    }
+    Ok(engine)
+}
+
+/// The per-connection slice of a [`ServeConfig`]: what [`run_pool`]
+/// hands each accepted socket.
+#[derive(Clone)]
+struct ConnOptions {
+    codec: CodecChoice,
+    read_workers: usize,
+    limits: LimitsSection,
+}
+
+impl ConnOptions {
+    fn from_cfg(cfg: &ServeConfig) -> Self {
+        ConnOptions {
+            codec: cfg.server.codec,
+            read_workers: cfg.server.read_workers.max(1),
+            limits: cfg.limits.clone(),
+        }
+    }
+}
+
+impl Default for ConnOptions {
+    fn default() -> Self {
+        ConnOptions {
+            codec: CodecChoice::Auto,
+            read_workers: CONN_READ_WORKERS,
+            limits: LimitsSection::default(),
+        }
+    }
 }
 
 /// The accept loop + bounded connection-worker pool, generic over the
@@ -397,7 +542,7 @@ fn run_pool<S>(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
     threads: usize,
-    codec: CodecChoice,
+    opts: ConnOptions,
 ) -> std::io::Result<()>
 where
     S: Serving + Clone + Send + Sync + 'static,
@@ -409,6 +554,7 @@ where
     for _ in 0..threads {
         let conn_rx = Arc::clone(&conn_rx);
         let shared = shared.clone();
+        let opts = opts.clone();
         workers.push(std::thread::spawn(move || loop {
             // Holding the queue lock only while dequeuing; connection
             // handling runs unlocked so workers serve in parallel.
@@ -419,7 +565,7 @@ where
             // silently shrink the pool until accepted connections hang
             // with no worker left to serve them.
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                handle_conn(&shared, stream, codec)
+                handle_conn(&shared, stream, &opts)
             }));
             match outcome {
                 Ok(Ok(())) => {}
@@ -455,25 +601,35 @@ where
 /// byte through the `BufReader` (nothing is consumed, so both codec
 /// loops start from byte zero): [`BINARY_FRAME_BYTE`] can never begin a
 /// text verb, so one byte decides.
+///
+/// The `[limits]` plumbing happens here: the socket gets the write
+/// deadline, the writer is wrapped in the poisoning [`EvictingWriter`],
+/// and a fresh [`ConnAdmission`] carries this connection's token
+/// bucket and read-depth state into whichever codec loop runs.
 fn handle_conn<S: Serving + ?Sized + Sync>(
     engine: &S,
     stream: TcpStream,
-    codec: CodecChoice,
+    opts: &ConnOptions,
 ) -> std::io::Result<()> {
-    let writer = stream.try_clone()?;
+    if opts.limits.write_deadline_ms > 0 {
+        stream.set_write_timeout(Some(Duration::from_millis(opts.limits.write_deadline_ms)))?;
+    }
+    let registry = engine.registry();
+    let admission = Arc::new(ConnAdmission::new(&opts.limits, registry.clone()));
+    let writer = EvictingWriter::new(stream.try_clone()?, registry);
     let mut reader = BufReader::new(stream);
-    match codec {
-        CodecChoice::Text => text_conn(engine, reader, writer),
-        CodecChoice::Binary => binary_conn(engine, reader, writer),
+    match opts.codec {
+        CodecChoice::Text => text_conn(engine, reader, writer, &admission),
+        CodecChoice::Binary => binary_conn(engine, reader, writer, opts.read_workers, admission),
         CodecChoice::Auto => {
             let first = reader.fill_buf()?;
             if first.is_empty() {
                 return Ok(()); // closed before the first byte
             }
             if first[0] == BINARY_FRAME_BYTE {
-                binary_conn(engine, reader, writer)
+                binary_conn(engine, reader, writer, opts.read_workers, admission)
             } else {
-                text_conn(engine, reader, writer)
+                text_conn(engine, reader, writer, &admission)
             }
         }
     }
@@ -552,6 +708,7 @@ fn text_conn<S: Serving + ?Sized>(
     engine: &S,
     mut reader: impl BufRead,
     mut writer: impl Write,
+    admission: &ConnAdmission,
 ) -> std::io::Result<()> {
     let mut buf = Vec::new();
     loop {
@@ -566,7 +723,7 @@ fn text_conn<S: Serving + ?Sized>(
                 writer.write_all(b"\n")?;
                 return Ok(());
             }
-            TextRead::Line(line) => match handle_line(engine, &line) {
+            TextRead::Line(line) => match handle_line_admitted(engine, &line, Some(admission)) {
                 Some(reply) => {
                     writer.write_all(reply.as_bytes())?;
                     writer.write_all(b"\n")?;
@@ -577,9 +734,10 @@ fn text_conn<S: Serving + ?Sized>(
     }
 }
 
-/// Read workers per binary connection: enough that one slow read
-/// (a cold full-catalog `TOPN`) cannot head-of-line-block the next,
-/// small enough that one connection cannot monopolize the machine.
+/// Default read workers per binary connection (`[server] read_workers`
+/// / `--read-workers`): enough that one slow read (a cold full-catalog
+/// `TOPN`) cannot head-of-line-block the next, small enough that one
+/// connection cannot monopolize the machine.
 pub const CONN_READ_WORKERS: usize = 2;
 
 /// Routing predicate for the out-of-order binary loop: mutating verbs
@@ -624,14 +782,16 @@ fn binary_conn<S: Serving + ?Sized + Sync>(
     engine: &S,
     mut reader: impl BufRead,
     writer: impl Write + Send + 'static,
+    read_worker_count: usize,
+    admission: Arc<ConnAdmission>,
 ) -> std::io::Result<()> {
     let registry = engine.registry();
     let writer = Arc::new(Mutex::new(writer));
     std::thread::scope(|scope| {
-        let (read_tx, read_rx) = std::sync::mpsc::channel::<(u32, Request)>();
+        let (read_tx, read_rx) = std::sync::mpsc::channel::<(u32, Request, DepthGuard)>();
         let (write_tx, write_rx) = std::sync::mpsc::channel::<(u32, Request)>();
         let read_rx = Arc::new(Mutex::new(read_rx));
-        let read_workers: Vec<_> = (0..CONN_READ_WORKERS)
+        let read_workers: Vec<_> = (0..read_worker_count.max(1))
             .map(|_| {
                 let read_rx = Arc::clone(&read_rx);
                 let writer = Arc::clone(&writer);
@@ -639,9 +799,14 @@ fn binary_conn<S: Serving + ?Sized + Sync>(
                     // Hold the queue lock only to dequeue; dispatch and
                     // reply run unlocked so the workers overlap.
                     let next = read_rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
-                    let Ok((seq, req)) = next else { break };
+                    let Ok((seq, req, depth)) = next else { break };
                     let resp = dispatch(engine, &req);
-                    if write_reply(&writer, &resp, seq).is_err() {
+                    let io = write_reply(&writer, &resp, seq);
+                    // The read counts as in flight until its reply is on
+                    // the wire — shedding keys off completed work, not
+                    // dequeues.
+                    drop(depth);
+                    if io.is_err() {
                         break; // connection is gone; let the queue drain unanswered
                     }
                 })
@@ -705,8 +870,21 @@ fn binary_conn<S: Serving + ?Sized + Sync>(
                         break Ok(());
                     }
                     Ok(req) => {
-                        let lane = if is_conn_write(&req) { &write_tx } else { &read_tx };
-                        let _ = lane.send((frame.seq, req));
+                        // Admission runs here on the reader: a refused
+                        // request answers `Overloaded` without ever
+                        // occupying a worker slot.
+                        if let Err(kind) = admission.admit(&req) {
+                            if let Err(e) =
+                                write_reply(&writer, &Response::Error(kind), frame.seq)
+                            {
+                                break Err(e);
+                            }
+                        } else if is_conn_write(&req) {
+                            let _ = write_tx.send((frame.seq, req));
+                        } else {
+                            let depth = admission.track_read();
+                            let _ = read_tx.send((frame.seq, req, depth));
+                        }
                     }
                 },
             }
@@ -768,6 +946,12 @@ mod tests {
 
     fn engine(rng: &mut Rng) -> Mutex<Engine> {
         Mutex::new(engine_with(rng, StreamConfig::default()))
+    }
+
+    /// Admission with every limit off — the legacy behaviour the
+    /// pre-existing connection-loop tests assume.
+    fn no_limits<S: Serving + ?Sized>(e: &S) -> Arc<ConnAdmission> {
+        Arc::new(ConnAdmission::new(&LimitsSection::default(), e.registry()))
     }
 
     #[test]
@@ -908,7 +1092,7 @@ mod tests {
         let mut input = vec![b'A'; MAX_TEXT_LINE_BYTES + 100];
         input.extend_from_slice(b"\nPREDICT 0 0\n");
         let mut out = Vec::new();
-        text_conn(&e, &input[..], &mut out).unwrap();
+        text_conn(&e, &input[..], &mut out, &no_limits(&e)).unwrap();
         let reply = String::from_utf8(out).unwrap();
         assert!(
             reply.starts_with("ERR malformed-frame: text line exceeds"),
@@ -920,7 +1104,7 @@ mod tests {
         // a legitimate long-but-capped line still serves
         let full = format!("MPREDICT 0{}", " 1".repeat(MAX_MPREDICT_COLS));
         let mut out = Vec::new();
-        text_conn(&e, format!("{full}\nQUIT\n").as_bytes(), &mut out).unwrap();
+        text_conn(&e, format!("{full}\nQUIT\n").as_bytes(), &mut out, &no_limits(&e)).unwrap();
         assert!(String::from_utf8(out).unwrap().starts_with("PREDS "));
     }
 
@@ -1045,7 +1229,7 @@ mod tests {
         input.extend_from_slice(&Request::Rate { row: 0, col: 5, value: 4.5 }.encode_frame(2));
         input.extend_from_slice(&Request::Flush.encode_frame(3));
         let out = SharedBuf::default();
-        binary_conn(&e, &input[..], out.clone()).unwrap();
+        binary_conn(&e, &input[..], out.clone(), CONN_READ_WORKERS, no_limits(&e)).unwrap();
         let replies = read_all_frames(&out.take());
         assert_eq!(replies[0], (1, Response::Subscribed { version: 0 }));
         assert_eq!(replies[1], (2, Response::Ok(OkBody::Buffered)));
@@ -1082,7 +1266,7 @@ mod tests {
         input.extend_from_slice(&Request::Stats.encode_frame(14));
         input.extend_from_slice(&Request::Shutdown.encode_frame(15));
         let out = SharedBuf::default();
-        binary_conn(&e, &input[..], out.clone()).unwrap();
+        binary_conn(&e, &input[..], out.clone(), CONN_READ_WORKERS, no_limits(&e)).unwrap();
         let replies = read_all_frames(&out.take());
         let mut seqs: Vec<u32> = replies.iter().map(|(s, _)| *s).collect();
         seqs.sort_unstable();
@@ -1110,7 +1294,7 @@ mod tests {
         let e = engine(&mut rng);
         let input = vec![BINARY_FRAME_BYTE]; // EOF inside the header
         let out = SharedBuf::default();
-        binary_conn(&e, &input[..], out.clone()).unwrap();
+        binary_conn(&e, &input[..], out.clone(), CONN_READ_WORKERS, no_limits(&e)).unwrap();
         let replies = read_all_frames(&out.take());
         assert_eq!(replies.len(), 1);
         let (seq, resp) = &replies[0];
@@ -1198,5 +1382,206 @@ mod tests {
         let _ = TcpStream::connect(addr);
         let engine = handle.join().unwrap();
         assert_eq!(engine.buffered(), 0, "band writers drained on shutdown");
+    }
+
+    /// A [`Serving`] wrapper whose `top_n` blocks on a gate — lets the
+    /// shed test hold one read deterministically in flight regardless
+    /// of worker scheduling.
+    #[derive(Clone)]
+    struct GatedServing {
+        inner: Arc<Mutex<Engine>>,
+        gate: Arc<(Mutex<bool>, std::sync::Condvar)>,
+    }
+
+    impl GatedServing {
+        fn open_gate(&self) {
+            let (lock, cvar) = &*self.gate;
+            *lock.lock().unwrap() = true;
+            cvar.notify_all();
+        }
+    }
+
+    impl Serving for GatedServing {
+        fn predict(&self, i: usize, j: usize) -> Option<f32> {
+            self.inner.predict(i, j)
+        }
+
+        fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
+            self.inner.predict_many(i, cols)
+        }
+
+        fn top_n(&self, i: usize, n_items: usize) -> Vec<(u32, f32)> {
+            let (lock, cvar) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cvar.wait(open).unwrap();
+            }
+            drop(open);
+            self.inner.top_n(i, n_items)
+        }
+
+        fn rate(&self, i: u32, j: u32, r: f32) -> IngestResult {
+            self.inner.rate(i, j, r)
+        }
+
+        fn rate_many(&self, batch: &[(u32, u32, f32)]) -> IngestResult {
+            self.inner.rate_many(batch)
+        }
+
+        fn flush(&self) -> usize {
+            self.inner.flush()
+        }
+
+        fn stats(&self) -> String {
+            self.inner.stats()
+        }
+
+        fn registry(&self) -> Registry {
+            self.inner.registry()
+        }
+
+        fn subscribe_push(&self, sink: PushSink) -> u64 {
+            self.inner.subscribe_push(sink)
+        }
+    }
+
+    /// Load shedding prioritizes ingest over expensive reads: with one
+    /// read worker pinned by a gated `TOPN` and the high-water mark at
+    /// 1, further `TOPN`s answer `Overloaded` from the reader thread
+    /// while a `RATE` on the same connection is still admitted.
+    #[test]
+    fn shedding_drops_topn_before_rate() {
+        let mut rng = Rng::seeded(86);
+        let e = GatedServing {
+            inner: Arc::new(Mutex::new(engine_with(&mut rng, StreamConfig::default()))),
+            gate: Arc::new((Mutex::new(false), std::sync::Condvar::new())),
+        };
+        let registry = e.registry();
+        let limits = LimitsSection { shed_highwater: 1, ..Default::default() };
+        let admission = Arc::new(ConnAdmission::new(&limits, registry.clone()));
+        let mut input = Vec::new();
+        input.extend_from_slice(&Request::TopN { row: 0, n: 3 }.encode_frame(1));
+        input.extend_from_slice(&Request::TopN { row: 0, n: 3 }.encode_frame(2));
+        input.extend_from_slice(&Request::TopN { row: 0, n: 3 }.encode_frame(3));
+        input.extend_from_slice(&Request::Rate { row: 0, col: 5, value: 4.5 }.encode_frame(4));
+        input.extend_from_slice(&Request::Shutdown.encode_frame(5));
+        let out = SharedBuf::default();
+        let conn = {
+            let (e, out) = (e.clone(), out.clone());
+            std::thread::spawn(move || binary_conn(&e, &input[..], out, 1, admission))
+        };
+        // The reader processes frames in order, so both sheds must land
+        // while seq 1 is gated; open the gate only once they have.
+        while registry.counter("server.shed_reads").get() < 2 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        e.open_gate();
+        conn.join().unwrap().unwrap();
+        let replies: std::collections::HashMap<u32, Response> =
+            read_all_frames(&out.take()).into_iter().collect();
+        assert!(matches!(replies[&1], Response::TopN(_)), "{:?}", replies[&1]);
+        assert_eq!(replies[&2], Response::Error(ErrorKind::Overloaded));
+        assert_eq!(replies[&3], Response::Error(ErrorKind::Overloaded));
+        assert_eq!(replies[&4], Response::Ok(OkBody::Buffered));
+        assert_eq!(replies[&5], Response::Bye);
+        assert_eq!(registry.counter("server.shed_reads").get(), 2);
+        assert_eq!(registry.counter("server.rate_limited").get(), 0);
+    }
+
+    /// A writer that accepts `frames` successful writes, then times out
+    /// forever — the in-memory shape of a subscriber that stopped
+    /// reading until the socket write deadline fires.
+    struct TimingOutBuf {
+        inner: SharedBuf,
+        frames: usize,
+    }
+
+    impl Write for TimingOutBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.frames == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "send buffer full",
+                ));
+            }
+            self.frames -= 1;
+            self.inner.write(buf)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// A subscriber that blocks past its write deadline is evicted: the
+    /// push-sink write fails, the sink unsubscribes itself, the flush's
+    /// publish fan-out completes (the model advances), and the eviction
+    /// is counted — the dead peer never stalls the publish path.
+    #[test]
+    fn blocked_subscriber_is_evicted_without_stalling_publish() {
+        let mut rng = Rng::seeded(87);
+        let e = engine(&mut rng);
+        let registry = e.registry();
+        let mut input = Vec::new();
+        input.extend_from_slice(&Request::Subscribe.encode_frame(1));
+        input.extend_from_slice(&Request::Rate { row: 0, col: 5, value: 4.5 }.encode_frame(2));
+        input.extend_from_slice(&Request::Flush.encode_frame(3));
+        let out = SharedBuf::default();
+        // Two frames fit (SUBSCRIBED ack, RATE reply); the PUSH the
+        // flush publishes hits the deadline.
+        let writer = EvictingWriter::new(
+            TimingOutBuf { inner: out.clone(), frames: 2 },
+            registry.clone(),
+        );
+        binary_conn(&e, &input[..], writer, 1, no_limits(&e)).unwrap();
+        let replies = read_all_frames(&out.take());
+        assert_eq!(replies[0], (1, Response::Subscribed { version: 0 }));
+        assert_eq!(replies[1], (2, Response::Ok(OkBody::Buffered)));
+        assert_eq!(replies.len(), 2, "nothing after the evicted PUSH: {replies:?}");
+        // the flush's dispatch completed despite the dead subscriber
+        assert_eq!(e.lock().unwrap().version(), 1);
+        assert_eq!(registry.counter("server.evictions").get(), 1);
+        // the sink unsubscribed itself: another publish fires no sink
+        // (a second eviction would have been counted by the poisoned
+        // writer refusing with a non-deadline error anyway)
+        e.rate(0, 6, 3.0);
+        e.flush();
+        assert_eq!(registry.counter("server.evictions").get(), 1);
+    }
+
+    /// `serve_with` runs the `Mutex<Engine>` flavour end to end: the
+    /// pool serves over the Arc-wrapped engine and shutdown hands the
+    /// drained engine back.
+    #[test]
+    fn serve_with_runs_mutex_flavour() {
+        use std::io::{BufRead, BufReader, Write};
+        let mut rng = Rng::seeded(88);
+        let e = engine_with(&mut rng, StreamConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut cfg = ServeConfig::default();
+            cfg.engine.mode = EngineMode::Mutex;
+            cfg.server.threads = 2;
+            serve_with(e, listener, stop2, &cfg).unwrap()
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut reply = String::new();
+        client.write_all(b"RATE 0 5 4.5\n").unwrap();
+        reader.read_line(&mut reply).unwrap();
+        assert_eq!(reply.trim(), "OK buffered");
+        reply.clear();
+        client.write_all(b"FLUSH\n").unwrap();
+        reader.read_line(&mut reply).unwrap();
+        assert_eq!(reply.trim(), "OK flushed 1");
+        client.write_all(b"QUIT\n").unwrap();
+        drop(client);
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr);
+        let engine = handle.join().unwrap();
+        assert_eq!(engine.version(), 1, "the drained engine saw the flush");
     }
 }

@@ -5,6 +5,8 @@
 //! streaming ingest path can record without contention. A [`Registry`]
 //! renders a human-readable snapshot for the CLI / server `STATS` verb.
 
+pub mod prometheus;
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -78,6 +80,17 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total recorded time in nanoseconds (the exporter's `_sum`).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket sample counts; bucket `b` holds samples in
+    /// `(2^b, 2^(b+1)]` ns (b = 0 additionally catches 0..=2 ns).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 
     pub fn mean_ns(&self) -> f64 {
@@ -161,6 +174,40 @@ impl Registry {
     /// without sprinkling `Instant` bookkeeping through the hot path.
     pub fn timer(&self, name: &str) -> TimerGuard {
         TimerGuard { histogram: self.histogram(name), start: Instant::now() }
+    }
+
+    /// All counters by name, snapshotted (the exporter's iteration
+    /// surface — names sort deterministically via the `BTreeMap`).
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| (name.clone(), c.get()))
+            .collect()
+    }
+
+    /// All gauges by name, snapshotted.
+    pub fn gauges(&self) -> Vec<(String, f64)> {
+        self.inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, g)| (name.clone(), g.get()))
+            .collect()
+    }
+
+    /// All histograms by name (shared handles, cheap to clone).
+    pub fn histograms(&self) -> Vec<(String, Arc<Histogram>)> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| (name.clone(), Arc::clone(h)))
+            .collect()
     }
 
     /// Render all metrics as `name value` lines.

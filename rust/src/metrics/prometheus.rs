@@ -1,0 +1,222 @@
+//! Prometheus text-format export of a [`Registry`]: the exposition
+//! renderer plus a tiny hand-rolled HTTP listener answering
+//! `GET /metrics` (format version 0.0.4, the text scrape format every
+//! Prometheus server speaks — no dependencies, ~one screen of HTTP).
+//!
+//! Metric names are derived mechanically from the registry's dotted
+//! names: `server.rate_limited` exports as `lshmf_server_rate_limited`.
+//! The `lshmf-check` metrics-names pass verifies statically that every
+//! dotted name in the tree survives this rewrite as a valid, collision
+//! free Prometheus name, so the mapping can stay rule-based forever.
+//! Histograms are power-of-two nanosecond buckets internally and export
+//! in seconds (cumulative `_bucket{le="…"}` plus `_sum`/`_count`), per
+//! Prometheus convention.
+
+use super::{Histogram, Registry};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The mechanical dotted-name → Prometheus-name rewrite. Keep this in
+/// lockstep with `check/src/checks/metrics.rs`, which proves at lint
+/// time that the rewrite is collision-free over the real tree.
+pub fn prom_name(dotted: &str) -> String {
+    format!("lshmf_{}", dotted.replace('.', "_"))
+}
+
+fn push_histogram(out: &mut String, name: &str, h: &Histogram) {
+    out.push_str(&format!("# TYPE {name} histogram\n"));
+    let mut cumulative = 0u64;
+    for (b, count) in h.bucket_counts().iter().enumerate() {
+        if *count == 0 {
+            continue; // sparse: 56 log buckets, a handful populated
+        }
+        cumulative += count;
+        let le = (1u64 << (b + 1)) as f64 / 1e9;
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cumulative}\n"));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum {}\n", h.sum_ns() as f64 / 1e9));
+    out.push_str(&format!("{name}_count {}\n", h.count()));
+}
+
+/// Render the whole registry in exposition format. Every counter,
+/// gauge, and histogram the registry holds appears; ordering is the
+/// registry's deterministic name order.
+pub fn render(registry: &Registry) -> String {
+    let mut out = String::new();
+    for (dotted, value) in registry.counters() {
+        let name = prom_name(&dotted);
+        out.push_str(&format!("# TYPE {name} counter\n{name} {value}\n"));
+    }
+    for (dotted, value) in registry.gauges() {
+        let name = prom_name(&dotted);
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
+    }
+    for (dotted, h) in registry.histograms() {
+        push_histogram(&mut out, &prom_name(&dotted), &h);
+    }
+    out
+}
+
+/// Most bytes of HTTP request head the scrape listener will buffer; a
+/// scrape request is one line plus a few headers.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Answer one HTTP connection: `GET /metrics` scrapes, anything else
+/// is a 404. The request head is read up to the blank line (bounded),
+/// and the connection closes after one response — scrapers reconnect
+/// per scrape, so keep-alive buys nothing here.
+pub fn handle_scrape(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") && !head.ends_with(b"\n\n") {
+        if head.len() >= MAX_REQUEST_BYTES || stream.read(&mut byte)? == 0 {
+            break;
+        }
+        head.push(byte[0]);
+    }
+    let request_line = std::str::from_utf8(&head)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, body) = if method == "GET" && path == "/metrics" {
+        ("200 OK", render(registry))
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+/// Run the scrape listener on its own thread until `stop` flips true.
+/// The listener polls non-blockingly so shutdown needs no poke
+/// connection; one scrape is served at a time (Prometheus scrapes are
+/// serial per target anyway).
+pub fn spawn_exporter(
+    listener: TcpListener,
+    registry: Registry,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    listener.set_nonblocking(true)?;
+    Ok(std::thread::spawn(move || loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Accepted sockets can inherit non-blocking mode; the
+                // scrape handler wants plain blocking reads with its
+                // own timeouts.
+                if stream.set_nonblocking(false).is_ok() {
+                    let _ = handle_scrape(stream, &registry);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prom_name_rewrite_is_mechanical() {
+        assert_eq!(prom_name("server.rate_limited"), "lshmf_server_rate_limited");
+        assert_eq!(
+            prom_name("flush.band0.train_micros"),
+            "lshmf_flush_band0_train_micros"
+        );
+    }
+
+    #[test]
+    fn render_covers_every_metric_kind() {
+        let r = Registry::new();
+        r.counter("server.requests").add(7);
+        r.gauge("model.rmse").set(0.5);
+        r.histogram("flush.apply_wait").record(Duration::from_micros(3));
+        r.histogram("flush.apply_wait").record(Duration::from_millis(40));
+        let text = render(&r);
+        assert!(text.contains("# TYPE lshmf_server_requests counter\n"), "{text}");
+        assert!(text.contains("lshmf_server_requests 7\n"), "{text}");
+        assert!(text.contains("# TYPE lshmf_model_rmse gauge\n"), "{text}");
+        assert!(text.contains("lshmf_model_rmse 0.5\n"), "{text}");
+        assert!(text.contains("# TYPE lshmf_flush_apply_wait histogram\n"), "{text}");
+        assert!(text.contains("lshmf_flush_apply_wait_count 2\n"), "{text}");
+        assert!(
+            text.contains("lshmf_flush_apply_wait_bucket{le=\"+Inf\"} 2\n"),
+            "{text}"
+        );
+        // cumulative: the +Inf bucket equals the count, the sum is in
+        // seconds (3us + 40ms ≈ 0.040003s)
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("lshmf_flush_apply_wait_sum "))
+            .unwrap();
+        let sum: f64 = sum_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!((sum - 0.040_003).abs() < 1e-6, "{sum_line}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_bounded() {
+        let h = Histogram::default();
+        h.record(Duration::from_nanos(100)); // bucket 6: (64, 128]
+        h.record(Duration::from_nanos(100));
+        h.record(Duration::from_nanos(1000)); // bucket 9: (512, 1024]
+        let mut out = String::new();
+        push_histogram(&mut out, "lshmf_x", &h);
+        let bucket_lines: Vec<&str> =
+            out.lines().filter(|l| l.starts_with("lshmf_x_bucket")).collect();
+        // two populated buckets + the +Inf line
+        assert_eq!(bucket_lines.len(), 3, "{out}");
+        assert!(bucket_lines[0].ends_with(" 2"), "{out}");
+        assert!(bucket_lines[1].ends_with(" 3"), "{out}");
+        assert_eq!(bucket_lines[2], "lshmf_x_bucket{le=\"+Inf\"} 3", "{out}");
+        // le bounds are seconds: bucket 6's upper bound is 128ns
+        assert!(bucket_lines[0].contains("le=\"0.000000128\""), "{out}");
+    }
+
+    #[test]
+    fn scrape_endpoint_serves_exposition_text() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let registry = Registry::new();
+        registry.counter("server.requests").add(3);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = spawn_exporter(listener, registry, Arc::clone(&stop)).unwrap();
+
+        let scrape = |path: &str| -> String {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+                .unwrap();
+            let mut reply = String::new();
+            conn.read_to_string(&mut reply).unwrap();
+            reply
+        };
+        let reply = scrape("/metrics");
+        assert!(reply.starts_with("HTTP/1.1 200 OK\r\n"), "{reply}");
+        assert!(reply.contains("text/plain; version=0.0.4"), "{reply}");
+        assert!(reply.contains("lshmf_server_requests 3\n"), "{reply}");
+        let missing = scrape("/other");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+}

@@ -14,6 +14,7 @@ use lshmf::coordinator::server::{self, dispatch, handle_line, Serving};
 use lshmf::coordinator::shared::SharedEngine;
 use lshmf::coordinator::stream::{IngestResult, StreamConfig, StreamOrchestrator};
 use lshmf::coordinator::Engine;
+use lshmf::config::ServeConfig;
 use lshmf::lsh::{OnlineHashState, SimLsh};
 use lshmf::metrics::Registry;
 use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
@@ -602,7 +603,11 @@ fn binary_only_server_rejects_text_greeting() {
     let server_thread = {
         let stop = stop.clone();
         std::thread::spawn(move || {
-            server::serve_sharded_with(e, listener, stop, 2, 4, CodecChoice::Binary).unwrap()
+            let mut cfg = ServeConfig::default();
+            cfg.server.threads = 2;
+            cfg.server.codec = CodecChoice::Binary;
+            cfg.engine.shards = 4;
+            server::serve_sharded_with(e, listener, stop, &cfg).unwrap()
         })
     };
     // binary works
@@ -803,4 +808,71 @@ fn shared_path_matches_direct_engine() {
     }
     assert_eq!(direct.flush(), 5);
     assert_eq!(from_shared.dims(), direct.dims());
+}
+
+/// Admission control over a real socket, via the config-driven entry
+/// point: a client flooding `TOPN` past its token bucket sees typed
+/// `ERR overloaded` refusals, while a concurrent `RATE` client — with
+/// its own per-connection bucket — is admitted throughout.
+#[test]
+fn flooding_client_is_rate_limited_while_ingest_is_admitted() {
+    let e = engine(46, StreamConfig::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut cfg = ServeConfig::default();
+            cfg.server.threads = 2;
+            // 1 token/s with burst 3: the flood exhausts the bucket in
+            // milliseconds and no refill lands within the test
+            cfg.limits.rate_per_conn = 1;
+            cfg.limits.burst = 3;
+            server::serve_with(e, listener, stop, &cfg).unwrap()
+        })
+    };
+
+    let rater = std::thread::spawn(move || {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut replies = Vec::new();
+        for k in 0..3 {
+            conn.write_all(format!("RATE 0 {k} 4.0\n").as_bytes()).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            replies.push(line.trim().to_string());
+        }
+        conn.write_all(b"QUIT\n").unwrap();
+        replies
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let (mut served, mut refused) = (0, 0);
+    for _ in 0..10 {
+        conn.write_all(b"TOPN 0 3\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match line.trim() {
+            l if l.starts_with("TOPN ") => served += 1,
+            "ERR overloaded" => refused += 1,
+            other => panic!("unexpected reply: {other}"),
+        }
+    }
+    conn.write_all(b"QUIT\n").unwrap();
+    drop(conn);
+    // the burst is admitted, the flood beyond it is refused
+    assert!(served >= 3, "served={served}");
+    assert!(refused >= 1, "refused={refused}");
+
+    // the concurrent ingest client never saw a refusal: buckets are
+    // per connection, so one noisy reader cannot starve ingest
+    for reply in rater.join().unwrap() {
+        assert_eq!(reply, "OK buffered");
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    server_thread.join().unwrap();
 }
