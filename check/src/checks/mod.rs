@@ -1,4 +1,4 @@
-//! The six check passes. Each takes the parsed file set and returns
+//! The seven check passes. Each takes the parsed file set and returns
 //! diagnostics; `crate::run_all` concatenates and sorts them.
 
 pub mod invariants;
@@ -6,4 +6,5 @@ pub mod join_guard;
 pub mod lock_order;
 pub mod metrics;
 pub mod protocol;
+pub mod rotation_ownership;
 pub mod unsafe_hygiene;

@@ -1,0 +1,269 @@
+//! Rotation-lane ownership: the relaxed online trainer's Latin-square
+//! schedule (`mf/online.rs`, `fn online_update_relaxed_with_topk`) is
+//! only data-race-free while every lane thread `t` touches exactly the
+//! cell `cells[rb][t]` with `rb = (t + s) % d` — the rotated row lane
+//! paired with the thread's own column lane. The SAFETY argument on the
+//! `SharedModel` access rests entirely on that indexing discipline, and
+//! rustc cannot see it: `cells[rb][rb]` compiles cleanly and races.
+//!
+//! The check anchors on the spawn closure inside the target function
+//! and verifies three things lexically:
+//!
+//! 1. the closure binds a rotated lane `let <lane> = (<tid> + _) % _;`,
+//! 2. every `cells[...][...]` access inside the closure indexes
+//!    `[<lane>][<tid>]` — nothing else,
+//! 3. the closure synchronizes sub-steps with `barrier.wait()`.
+//!
+//! Binning writes *outside* the closure (`cells[rb][cb].push(..)` on the
+//! single setup thread) are legal and ignored. If the anchor function or
+//! its spawn closure disappears the check flags that too — a silently
+//! un-checked rotation is exactly the regression this pass exists to
+//! catch.
+
+use crate::lexer::{matching_close, tokenize, SourceFile, Tok, TokKind};
+use crate::Diagnostic;
+
+const CHECK: &str = "rotation-ownership";
+const FILE: &str = "mf/online.rs";
+const TARGET_FN: &str = "online_update_relaxed_with_topk";
+
+pub fn run(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let Some(f) = files.iter().find(|f| f.rel == FILE) else {
+        return Vec::new();
+    };
+    let toks = tokenize(&f.code);
+    let mut diags = Vec::new();
+
+    // Locate `fn online_update_relaxed_with_topk` and its body span.
+    let Some(fn_kw) = (0..toks.len()).find(|&k| {
+        toks[k].is_ident("fn") && toks.get(k + 1).is_some_and(|n| n.is_ident(TARGET_FN))
+    }) else {
+        diags.push(anchor_lost(f, 1, &format!("`fn {TARGET_FN}` not found")));
+        return diags;
+    };
+    let Some(body_open) = (fn_kw..toks.len()).find(|&k| toks[k].is_punct(b'{')) else {
+        diags.push(anchor_lost(f, toks[fn_kw].line, "function body not found"));
+        return diags;
+    };
+    let Some(body_close) = matching_close(&toks, body_open) else {
+        diags.push(anchor_lost(f, toks[body_open].line, "unbalanced function body"));
+        return diags;
+    };
+
+    // The rotation closure: `spawn ( move | | { … } )` inside the body.
+    let Some((closure_open, closure_close)) =
+        (body_open..body_close).find_map(|k| spawn_closure(&toks, k))
+    else {
+        diags.push(anchor_lost(
+            f,
+            toks[fn_kw].line,
+            "rotation `spawn(move || { .. })` closure not found",
+        ));
+        return diags;
+    };
+
+    // 1) the rotated-lane binding `let <lane> = (<tid> + _) % _;`.
+    let Some((lane, tid)) =
+        (closure_open..closure_close).find_map(|k| lane_binding(&toks, k))
+    else {
+        diags.push(Diagnostic {
+            file: f.rel.clone(),
+            line: toks[closure_open].line,
+            check: CHECK,
+            message: "rotation closure has no `let <lane> = (<tid> + _) % _;` binding — \
+                      lane rotation is the ownership schedule"
+                .into(),
+        });
+        return diags;
+    };
+
+    // 2) every `cells[...][...]` inside the closure is `[lane][tid]`.
+    let mut k = closure_open;
+    while k < closure_close {
+        if toks[k].is_ident("cells") && toks.get(k + 1).is_some_and(|n| n.is_punct(b'[')) {
+            match cell_indices(&toks, k + 1) {
+                Some((i1, i2, after)) => {
+                    if i1 != lane || i2 != tid {
+                        diags.push(Diagnostic {
+                            file: f.rel.clone(),
+                            line: toks[k].line,
+                            check: CHECK,
+                            message: format!(
+                                "`cells[{i1}][{i2}]` inside the rotation closure breaks \
+                                 Latin-square lane ownership: thread `{tid}` may only touch \
+                                 `cells[{lane}][{tid}]`"
+                            ),
+                        });
+                    }
+                    k = after;
+                    continue;
+                }
+                None => {
+                    diags.push(Diagnostic {
+                        file: f.rel.clone(),
+                        line: toks[k].line,
+                        check: CHECK,
+                        message: format!(
+                            "`cells[..]` inside the rotation closure uses a compound index \
+                             expression; only `cells[{lane}][{tid}]` is provably owned"
+                        ),
+                    });
+                }
+            }
+        }
+        k += 1;
+    }
+
+    // 3) sub-steps are ordered by `barrier.wait()`.
+    let has_barrier = (closure_open..closure_close.saturating_sub(2)).any(|k| {
+        toks[k].is_ident("barrier")
+            && toks[k + 1].is_punct(b'.')
+            && toks[k + 2].is_ident("wait")
+    });
+    if !has_barrier {
+        diags.push(Diagnostic {
+            file: f.rel.clone(),
+            line: toks[closure_open].line,
+            check: CHECK,
+            message: "rotation closure has no `barrier.wait()` — without the barrier the \
+                      sub-steps overlap and lane ownership races"
+                .into(),
+        });
+    }
+    diags
+}
+
+fn anchor_lost(f: &SourceFile, line: usize, what: &str) -> Diagnostic {
+    Diagnostic {
+        file: f.rel.clone(),
+        line,
+        check: CHECK,
+        message: format!("{what}; the rotation-ownership anchor moved — update this check"),
+    }
+}
+
+/// When `k` starts `spawn ( move | | {`, return the closure body's
+/// (open, close) token indices.
+fn spawn_closure(toks: &[Tok], k: usize) -> Option<(usize, usize)> {
+    if !toks[k].is_ident("spawn")
+        || !toks.get(k + 1)?.is_punct(b'(')
+        || !toks.get(k + 2)?.is_ident("move")
+        || !toks.get(k + 3)?.is_punct(b'|')
+        || !toks.get(k + 4)?.is_punct(b'|')
+        || !toks.get(k + 5)?.is_punct(b'{')
+    {
+        return None;
+    }
+    Some((k + 5, matching_close(toks, k + 5)?))
+}
+
+/// When `k` starts `let <lane> = ( <tid> + <x> ) % <y> ;`, return the
+/// `(lane, tid)` identifier pair.
+fn lane_binding(toks: &[Tok], k: usize) -> Option<(String, String)> {
+    let ident = |t: &Tok| (t.kind == TokKind::Ident).then(|| t.text.clone());
+    if !toks[k].is_ident("let") {
+        return None;
+    }
+    let lane = ident(toks.get(k + 1)?)?;
+    if !toks.get(k + 2)?.is_punct(b'=') || !toks.get(k + 3)?.is_punct(b'(') {
+        return None;
+    }
+    let tid = ident(toks.get(k + 4)?)?;
+    if !toks.get(k + 5)?.is_punct(b'+')
+        || ident(toks.get(k + 6)?).is_none()
+        || !toks.get(k + 7)?.is_punct(b')')
+        || !toks.get(k + 8)?.is_punct(b'%')
+        || ident(toks.get(k + 9)?).is_none()
+        || !toks.get(k + 10)?.is_punct(b';')
+    {
+        return None;
+    }
+    Some((lane, tid))
+}
+
+/// For the `[` at `open` starting `cells[a][b]`, return the two index
+/// identifiers plus the token index just past the second `]` — `None`
+/// when either index is not a single identifier.
+fn cell_indices(toks: &[Tok], open: usize) -> Option<(String, String, usize)> {
+    let close1 = matching_close(toks, open)?;
+    let open2 = close1 + 1;
+    if !toks.get(open2)?.is_punct(b'[') {
+        return None;
+    }
+    let close2 = matching_close(toks, open2)?;
+    let single = |lo: usize, hi: usize| -> Option<String> {
+        (hi == lo + 2 && toks[lo + 1].kind == TokKind::Ident).then(|| toks[lo + 1].text.clone())
+    };
+    Some((single(open, close1)?, single(open2, close2)?, close2 + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diags(src: &str) -> Vec<Diagnostic> {
+        run(&[SourceFile::parse(FILE.into(), src.into())])
+    }
+
+    const CLEAN: &str = "pub fn online_update_relaxed_with_topk(d: usize) {\n\
+        let mut cells: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); d]; d];\n\
+        for e in 0..9 {\n        cells[rb][cb].push(e);\n    }\n\
+        std::thread::scope(|scope| {\n        for t in 0..d {\n\
+            scope.spawn(move || {\n                for s in 0..d {\n\
+                    let rb = (t + s) % d;\n                    for x in &cells[rb][t] {\n\
+                        train(x);\n                    }\n\
+                    barrier.wait();\n                }\n            });\n\
+        }\n    });\n}\n";
+
+    #[test]
+    fn latin_square_indexing_passes() {
+        assert!(diags(CLEAN).is_empty(), "{:?}", diags(CLEAN));
+    }
+
+    #[test]
+    fn foreign_lane_access_is_flagged() {
+        let src = CLEAN.replace("&cells[rb][t]", "&cells[rb][rb]");
+        let d = diags(&src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("cells[rb][rb]"), "{}", d[0].message);
+        assert!(d[0].message.contains("cells[rb][t]"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn compound_index_is_flagged() {
+        let src = CLEAN.replace("&cells[rb][t]", "&cells[rb][(t + 1) % d]");
+        let d = diags(&src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("compound index"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn missing_barrier_is_flagged() {
+        let src = CLEAN.replace("barrier.wait();", "");
+        let d = diags(&src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("barrier.wait"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn missing_lane_binding_is_flagged() {
+        let src = CLEAN.replace("let rb = (t + s) % d;", "let rb = t;");
+        let d = diags(&src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("rotation is the ownership schedule"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn renamed_anchor_is_flagged_not_skipped() {
+        let src = CLEAN.replace("online_update_relaxed_with_topk", "online_update_v2");
+        let d = diags(&src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("anchor moved"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn other_files_are_out_of_scope() {
+        let f = SourceFile::parse("mf/other.rs".into(), "fn f() {}".into());
+        assert!(run(&[f]).is_empty());
+    }
+}

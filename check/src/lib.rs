@@ -24,6 +24,8 @@
 //! * [`checks::invariants`] — `//! # Invariants` sections present in
 //!   the concurrency modules.
 //! * [`checks::metrics`] — metric-name naming and kind-uniqueness.
+//! * [`checks::rotation_ownership`] — Latin-square lane indexing inside
+//!   the relaxed online trainer's rotation closure.
 
 pub mod checks;
 pub mod lexer;
@@ -65,7 +67,7 @@ impl Report {
     }
 }
 
-/// Parse every `.rs` file under `root` and run all six checks.
+/// Parse every `.rs` file under `root` and run all seven checks.
 pub fn run_all(root: &Path) -> io::Result<Report> {
     let mut files = Vec::new();
     collect(root, root, &mut files)?;
@@ -78,6 +80,7 @@ pub fn run_all(root: &Path) -> io::Result<Report> {
     diagnostics.extend(checks::protocol::run(&files));
     diagnostics.extend(checks::invariants::run(&files));
     diagnostics.extend(checks::metrics::run(&files));
+    diagnostics.extend(checks::rotation_ownership::run(&files));
     diagnostics.sort_by(|a, b| (&a.file, a.line, a.check).cmp(&(&b.file, b.line, b.check)));
 
     Ok(Report { files: files.len(), diagnostics })

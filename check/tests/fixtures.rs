@@ -215,6 +215,32 @@ fn guard_held_across_join_is_flagged() {
 }
 
 #[test]
+fn foreign_rotation_lane_is_flagged() {
+    let diags = fixture("rotation_ownership");
+    assert_flagged(
+        &diags,
+        "rotation-ownership",
+        "mf/online.rs",
+        23,
+        "`cells[rb][rb]` inside the rotation closure breaks Latin-square lane ownership",
+    );
+    assert_flagged(
+        &diags,
+        "rotation-ownership",
+        "mf/online.rs",
+        19,
+        "no `barrier.wait()`",
+    );
+    // The single-threaded binning write outside the closure is legal.
+    assert_eq!(
+        diags.iter().filter(|d| d.check == "rotation-ownership").count(),
+        2,
+        "only the two seeded violations:\n{}",
+        render(&diags)
+    );
+}
+
+#[test]
 fn clean_fixture_tree_passes() {
     let diags = fixture("clean");
     assert!(diags.is_empty(), "clean fixture tree must pass:\n{}", render(&diags));

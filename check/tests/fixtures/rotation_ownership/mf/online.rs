@@ -1,0 +1,35 @@
+//! Seeded mutant for the rotation-ownership check: the binning write
+//! outside the closure is legal (single setup thread), but inside the
+//! rotation closure the lane thread reads `cells[rb][rb]` — a foreign
+//! column lane the Latin square assigned to another thread — and the
+//! `barrier.wait()` ordering the sub-steps has been deleted.
+
+pub fn online_update_relaxed_with_topk(d: usize, epochs: usize) -> usize {
+    let trainable: Vec<(u32, u32, f32)> = Vec::new();
+    let mut cells: Vec<Vec<Vec<(u32, u32, f32)>>> = vec![vec![Vec::new(); d]; d];
+    for &(i, j, r) in &trainable {
+        let rb = i as usize % d;
+        let cb = j as usize % d;
+        cells[rb][cb].push((i, j, r)); // legal: single-threaded binning
+    }
+    let mut applied = 0usize;
+    std::thread::scope(|scope| {
+        for t in 0..d {
+            let cells = &cells;
+            scope.spawn(move || {
+                for _epoch in 0..epochs {
+                    for s in 0..d {
+                        let rb = (t + s) % d;
+                        for &(_i, _j, _r) in &cells[rb][rb] {
+                            // SEEDED: foreign column lane — races with
+                            // the thread that owns lane `rb`.
+                        }
+                        // SEEDED: no barrier.wait() — sub-steps overlap.
+                    }
+                }
+            });
+        }
+    });
+    applied += 1;
+    applied
+}

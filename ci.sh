@@ -13,7 +13,19 @@ echo "==> cargo test -q"
 # Also parses the shipped lshmf.toml example: the unit test
 # config::serve::tests::shipped_example_round_trips loads the file at
 # the repo root into both typed configs, so the example cannot rot.
+# The durability gate rides in here too: tests/persist.rs kills a
+# persisted run at every op boundary (both shared and banded flavours)
+# and asserts bit-exact recovery, plus the damaged-file fixtures
+# (torn/bit-flipped WAL tail, corrupt checkpoint) — tier-1, no opt-in.
 cargo test -q
+
+# Recovery smoke: boot a persisted server over TCP, ingest + flush,
+# kill it, boot a second server from the same dir and serve reads from
+# the recovered state. #[ignore]d in the harness (it binds sockets and
+# round-trips real files) and run explicitly here, same as the rest of
+# tier-1.
+echo "==> cargo test -q -p lshmf --test persist -- --ignored (recovery smoke)"
+cargo test -q -p lshmf --test persist -- --ignored
 
 # Static-analysis gate: lock order, unsafe hygiene, protocol
 # exhaustiveness, invariant docs, metric names. Hard tier-1 failure —
@@ -32,7 +44,15 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 lint_status=0
 echo "==> cargo fmt --check"
-cargo fmt --check || lint_status=1
+# Guarded: the growth containers ship no rustfmt component, so the
+# one-shot mechanical `cargo fmt` commit is still pending a toolchain
+# that has it (tracked in ROADMAP). Where the component exists (CI),
+# the check gates as usual.
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check || lint_status=1
+else
+    echo "NOTE: rustfmt component unavailable; fmt check skipped"
+fi
 
 echo "==> cargo clippy -- -D warnings"
 cargo clippy --all-targets -- -D warnings || lint_status=1

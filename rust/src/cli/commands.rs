@@ -223,42 +223,92 @@ pub fn online(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// `serve`: train a model from the experiment config, then hand it to
-/// the one config-driven server entry point. Every serving knob lives
-/// in [`ServeConfig`](crate::config::ServeConfig) — the `[server]` /
-/// `[engine]` / `[flush]` / `[limits]` / `[metrics]` sections of
-/// `--config lshmf.toml`, with CLI flags (`--port`, `--writers`,
-/// `--codec`, `--flush-mode`, `--read-workers`, …) desugaring into the
-/// same struct as overrides.
+/// `serve`: recover the engine from the `[persist]` directory when one
+/// holds a valid checkpoint, otherwise train a model from the
+/// experiment config; then hand it to the one config-driven server
+/// entry point. Every serving knob lives in
+/// [`ServeConfig`](crate::config::ServeConfig) — the `[server]` /
+/// `[engine]` / `[flush]` / `[limits]` / `[metrics]` / `[persist]`
+/// sections of `--config lshmf.toml`, with CLI flags (`--port`,
+/// `--writers`, `--codec`, `--flush-mode`, `--read-workers`, …)
+/// desugaring into the same struct as overrides.
 pub fn serve(args: &mut Args) -> Result<()> {
     let cfg = args.experiment_config()?;
     let serve_cfg = args.serve_config()?;
-    let mut rng = Rng::seeded(cfg.dataset.seed);
-    let ds = build_dataset(&cfg, &mut rng)?;
-    eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
-    let (topk, _) = build_topk(&cfg, &ds, &mut rng);
-    let culsh_cfg = culsh_config(&cfg, Vec::new());
-    let (model, _) = crate::mf::neighbourhood::train_culsh_logged(
-        &ds.train,
-        topk,
-        &culsh_cfg,
-        &mut rng,
-    );
-    let lsh = SimLsh::new(cfg.lsh.p, cfg.lsh.q, cfg.lsh.g, cfg.lsh.psi_power);
-    let hash_state = OnlineHashState::build(lsh, &ds.train_csc);
     // One registry across orchestrator, engine, server, and exporter so
     // STATS and GET /metrics report the whole pipeline in one dump.
     let metrics = Registry::new();
-    let orch = StreamOrchestrator::new(
-        model,
-        hash_state,
-        ds.train.to_triples(),
-        serve_cfg.stream_config(),
-        culsh_cfg,
-        rng.split(7),
-        metrics.clone(),
-    );
-    let engine = Engine::new(orch, (ds.min_value, ds.max_value), metrics);
+    let culsh_cfg = culsh_config(&cfg, Vec::new());
+
+    // Recovery-first: a valid checkpoint (plus WAL tails) replaces the
+    // whole training step — the learned state follows disk, the tuning
+    // (flush policy, limits, cadence) follows the current config.
+    let mut recovered = None;
+    if serve_cfg.persist.enabled() {
+        let dir = std::path::Path::new(&serve_cfg.persist.dir);
+        if let Some((engine, info)) = crate::persist::recover(
+            dir,
+            serve_cfg.stream_config(),
+            culsh_cfg.clone(),
+            &metrics,
+        )? {
+            eprintln!(
+                "# recovered from {}: checkpoint gen {}, replayed {} event(s){}",
+                serve_cfg.persist.dir,
+                info.gen,
+                info.replayed_events,
+                if info.torn_tails > 0 {
+                    format!(", {} torn WAL tail(s) skipped", info.torn_tails)
+                } else {
+                    String::new()
+                },
+            );
+            recovered = Some((engine, info));
+        }
+    }
+    let (mut engine, recover_info) = match recovered {
+        Some((engine, info)) => (engine, Some(info)),
+        None => {
+            let mut rng = Rng::seeded(cfg.dataset.seed);
+            let ds = build_dataset(&cfg, &mut rng)?;
+            eprintln!("# training {} on {} ...", cfg.trainer.kind.name(), ds.name);
+            let (topk, _) = build_topk(&cfg, &ds, &mut rng);
+            let (model, _) = crate::mf::neighbourhood::train_culsh_logged(
+                &ds.train,
+                topk,
+                &culsh_cfg,
+                &mut rng,
+            );
+            let lsh = SimLsh::new(cfg.lsh.p, cfg.lsh.q, cfg.lsh.g, cfg.lsh.psi_power);
+            let hash_state = OnlineHashState::build(lsh, &ds.train_csc);
+            let orch = StreamOrchestrator::new(
+                model,
+                hash_state,
+                ds.train.to_triples(),
+                serve_cfg.stream_config(),
+                culsh_cfg,
+                rng.split(7),
+                metrics.clone(),
+            );
+            (Engine::new(orch, (ds.min_value, ds.max_value), metrics.clone()), None)
+        }
+    };
+    if serve_cfg.persist.enabled() {
+        let nbands = match serve_cfg.engine.mode {
+            crate::config::EngineMode::Banded => serve_cfg.engine.writers.max(1),
+            _ => 1,
+        };
+        let persister = crate::persist::Persister::create(
+            std::path::Path::new(&serve_cfg.persist.dir),
+            serve_cfg.persist.fsync_policy(),
+            serve_cfg.persist.checkpoint_every_flushes,
+            nbands,
+            &engine,
+            recover_info.as_ref(),
+            &metrics,
+        )?;
+        engine.attach_persister(persister);
+    }
     let listener = std::net::TcpListener::bind(("0.0.0.0", serve_cfg.server.port))?;
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     eprintln!(

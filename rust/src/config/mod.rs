@@ -18,7 +18,7 @@ pub use experiment::{
 };
 pub use serve::{
     parse_codec, parse_flush_mode, EngineMode, EngineSection, FlushSection, LimitsSection,
-    MetricsSection, ServeConfig, ServerSection,
+    MetricsSection, PersistSection, ServeConfig, ServerSection,
 };
 pub use toml::{parse, parse_spanned, Spans, Value};
 

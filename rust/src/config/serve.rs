@@ -1,5 +1,6 @@
 //! Typed serving configuration: the `[server]` / `[engine]` / `[flush]`
-//! / `[limits]` / `[metrics]` sections of `serve --config lshmf.toml`.
+//! / `[limits]` / `[metrics]` / `[persist]` sections of
+//! `serve --config lshmf.toml`.
 //!
 //! The whole operational surface of the serving stack is one validated
 //! struct ([`ServeConfig`]): which engine flavour to run, how wide the
@@ -12,7 +13,7 @@
 //!
 //! Unlike [`ExperimentConfig`](super::ExperimentConfig) (which ignores
 //! sections it does not own, so one file can carry both configs), the
-//! serve sections are **closed**: an unknown key inside any of the five
+//! serve sections are **closed**: an unknown key inside any of the six
 //! serve sections, or an unknown section altogether, is rejected with
 //! the exact `file:line` of the offender — the zero-dep analogue of
 //! serde's `deny_unknown_fields`.
@@ -22,6 +23,7 @@ use crate::coordinator::protocol::CodecChoice;
 use crate::coordinator::server::CONN_READ_WORKERS;
 use crate::coordinator::shared::DEFAULT_SHARDS;
 use crate::coordinator::stream::{FlushMode, StreamConfig};
+use crate::persist::FsyncPolicy;
 use crate::{Error, Result};
 
 /// Which serving flavour `serve` runs (`[engine] mode`).
@@ -173,6 +175,39 @@ impl Default for MetricsSection {
     }
 }
 
+/// `[persist]` — durability: per-band write-ahead logs plus
+/// checkpointed snapshots (see [`crate::persist`]). Off by default — an
+/// empty `dir` disables the whole subsystem, so a config without the
+/// section serves exactly like the pre-durability server.
+#[derive(Clone, Debug)]
+pub struct PersistSection {
+    /// Directory for WAL segments and checkpoints; `""` = durability
+    /// off.
+    pub dir: String,
+    /// WAL fsync policy; `None` defaults to `per_flush` when enabled.
+    pub fsync: Option<FsyncPolicy>,
+    /// Write a checkpoint every N applied flushes (must be >= 1).
+    pub checkpoint_every_flushes: usize,
+}
+
+impl Default for PersistSection {
+    fn default() -> Self {
+        PersistSection { dir: String::new(), fsync: None, checkpoint_every_flushes: 1 }
+    }
+}
+
+impl PersistSection {
+    /// Durability is on iff a directory is configured.
+    pub fn enabled(&self) -> bool {
+        !self.dir.is_empty()
+    }
+
+    /// The effective fsync policy (`per_flush` unless overridden).
+    pub fn fsync_policy(&self) -> FsyncPolicy {
+        self.fsync.unwrap_or(FsyncPolicy::PerFlush)
+    }
+}
+
 /// The whole typed serving configuration; see the module docs.
 #[derive(Clone, Debug, Default)]
 pub struct ServeConfig {
@@ -181,10 +216,11 @@ pub struct ServeConfig {
     pub flush: FlushSection,
     pub limits: LimitsSection,
     pub metrics: MetricsSection,
+    pub persist: PersistSection,
 }
 
 /// The closed serve sections and their allowed keys.
-const SERVE_SECTIONS: [(&str, &[&str]); 5] = [
+const SERVE_SECTIONS: [(&str, &[&str]); 6] = [
     ("server", &["port", "threads", "read_workers", "codec"]),
     ("engine", &["mode", "writers", "shards"]),
     (
@@ -193,6 +229,7 @@ const SERVE_SECTIONS: [(&str, &[&str]); 5] = [
     ),
     ("limits", &["rate_per_conn", "burst", "write_deadline_ms", "shed_highwater"]),
     ("metrics", &["enabled", "port"]),
+    ("persist", &["dir", "fsync", "checkpoint_every_flushes"]),
 ];
 
 /// Sections owned by [`ExperimentConfig`](super::ExperimentConfig) —
@@ -326,6 +363,23 @@ impl ServeConfig {
         cfg.metrics.enabled = get_bool(tree, "metrics", "enabled", cfg.metrics.enabled)?;
         cfg.metrics.port = get_port(tree, "metrics", "port", cfg.metrics.port)?;
 
+        if let Some(dir) = get_str(tree, "persist", "dir")? {
+            cfg.persist.dir = dir.to_string();
+        }
+        if let Some(policy) = get_str(tree, "persist", "fsync")? {
+            cfg.persist.fsync = Some(FsyncPolicy::parse(policy).ok_or_else(|| {
+                Error::Config(format!(
+                    "[persist] fsync must be one of per_record|per_flush|off (got `{policy}`)"
+                ))
+            })?);
+        }
+        cfg.persist.checkpoint_every_flushes = get_usize(
+            tree,
+            "persist",
+            "checkpoint_every_flushes",
+            cfg.persist.checkpoint_every_flushes,
+        )?;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -383,6 +437,12 @@ impl ServeConfig {
                 "[metrics] port ({}) must differ from [server] port",
                 self.metrics.port
             ));
+        }
+        if self.persist.fsync.is_some() && !self.persist.enabled() {
+            return bad("[persist] fsync requires dir to be set".into());
+        }
+        if self.persist.checkpoint_every_flushes == 0 {
+            return bad("[persist] checkpoint_every_flushes must be at least 1".into());
         }
         Ok(())
     }
@@ -456,6 +516,10 @@ mod tests {
         assert_eq!(cfg.limits.write_deadline_ms, 0);
         assert_eq!(cfg.limits.shed_highwater, 0);
         assert!(!cfg.metrics.enabled);
+        // no [persist] section -> durability entirely off
+        assert!(!cfg.persist.enabled());
+        assert_eq!(cfg.persist.fsync_policy(), FsyncPolicy::PerFlush);
+        assert_eq!(cfg.persist.checkpoint_every_flushes, 1);
         // derived stream config matches the legacy CLI derivation
         let s = cfg.stream_config();
         assert_eq!(s.flush_bands, cfg.server.threads);
@@ -497,6 +561,11 @@ shed_highwater = 32
 [metrics]
 enabled = true
 port = 9100
+
+[persist]
+dir = "/tmp/lshmf-wal"
+fsync = "per_record"
+checkpoint_every_flushes = 3
 "#;
         let cfg = ServeConfig::from_str(text).unwrap();
         assert_eq!(cfg.server.port, 9000);
@@ -518,6 +587,10 @@ port = 9100
         assert_eq!(cfg.limits.shed_highwater, 32);
         assert!(cfg.metrics.enabled);
         assert_eq!(cfg.metrics.port, 9100);
+        assert!(cfg.persist.enabled());
+        assert_eq!(cfg.persist.dir, "/tmp/lshmf-wal");
+        assert_eq!(cfg.persist.fsync_policy(), FsyncPolicy::PerRecord);
+        assert_eq!(cfg.persist.checkpoint_every_flushes, 3);
         let s = cfg.stream_config();
         assert_eq!(s.batch_size, 512);
         assert_eq!(s.flush_bands, 2);
@@ -533,7 +606,7 @@ port = 9100
         assert!(err.contains("<config>:4: unknown key `prot` in [server]"), "{err}");
         // unknown keys in every other serve section carry their line too
         for (sec, line) in
-            [("engine", 2), ("flush", 2), ("limits", 2), ("metrics", 2)]
+            [("engine", 2), ("flush", 2), ("limits", 2), ("metrics", 2), ("persist", 2)]
         {
             let text = format!("[{sec}]\nbogus = 1\n");
             let err = ServeConfig::from_str(&text).unwrap_err().to_string();
@@ -571,7 +644,7 @@ port = 9100
     /// Every cross-field validation rule, by exact message.
     #[test]
     fn cross_field_validation_messages() {
-        let cases: [(&str, &str); 11] = [
+        let cases: [(&str, &str); 13] = [
             ("[server]\nthreads = 0\n", "[server] threads must be positive"),
             ("[server]\nread_workers = 0\n", "[server] read_workers must be positive"),
             ("[engine]\nshards = 0\n", "[engine] shards must be positive"),
@@ -604,6 +677,14 @@ port = 9100
                 "[server]\nport = 7878\n[metrics]\nenabled = true\nport = 7878\n",
                 "[metrics] port (7878) must differ from [server] port",
             ),
+            (
+                "[persist]\nfsync = \"per_record\"\n",
+                "[persist] fsync requires dir to be set",
+            ),
+            (
+                "[persist]\ndir = \"/tmp/w\"\ncheckpoint_every_flushes = 0\n",
+                "[persist] checkpoint_every_flushes must be at least 1",
+            ),
         ];
         for (text, want) in cases {
             let err = ServeConfig::from_str(text).unwrap_err().to_string();
@@ -616,6 +697,7 @@ port = 9100
             "[engine]\nmode = \"banded\"\nwriters = 2\n[flush]\nmode = \"relaxed\"\n",
         )
         .unwrap();
+        ServeConfig::from_str("[persist]\ndir = \"/tmp/w\"\nfsync = \"off\"\n").unwrap();
     }
 
     #[test]
@@ -628,6 +710,10 @@ port = 9100
         assert!(ServeConfig::from_str("[flush]\nmode = \"sloppy\"\n").is_err());
         assert!(ServeConfig::from_str("[flush]\nreject_when_full = 1\n").is_err());
         assert!(ServeConfig::from_str("[limits]\nrate_per_conn = -1\n").is_err());
+        assert!(
+            ServeConfig::from_str("[persist]\ndir = \"/tmp/w\"\nfsync = \"always\"\n").is_err()
+        );
+        assert!(ServeConfig::from_str("[persist]\ndir = 7\n").is_err());
     }
 
     /// The shipped example at the repository root must parse into both
@@ -645,6 +731,8 @@ port = 9100
         assert!(cfg.engine.writers > 0);
         assert!(cfg.metrics.enabled);
         assert!(cfg.limits.rate_per_conn > 0);
+        // the [persist] block ships commented out: durability is opt-in
+        assert!(!cfg.persist.enabled());
         // the same file is a valid experiment config (shared sections)
         let exp = super::super::ExperimentConfig::from_file(&path)
             .unwrap_or_else(|e| panic!("shipped lshmf.toml must parse as experiment: {e}"));

@@ -112,6 +112,7 @@ use crate::lsh::{assemble_bands, topk_banded, topk_banded_parallel, OnlineHashSt
 use crate::metrics::{Counter, Registry};
 use crate::mf::neighbourhood::{ColBand, CulshConfig, CulshModel};
 use crate::mf::online::{online_update_relaxed_with_topk, online_update_with_topk};
+use crate::persist::{CheckpointSource, Persister};
 use crate::rng::Rng;
 use crate::sparse::{band_of, band_range, Csr, Triples};
 use std::collections::HashMap;
@@ -183,6 +184,12 @@ pub struct BandedOrchestrator {
     /// Per-row Top-N cache over published snapshots; the flush epoch
     /// invalidates it right after each snapshot swap.
     cache: TopNCache,
+    /// Rating-scale clamp, carried for checkpoint serialization.
+    clamp: (f32, f32),
+    /// Durability coordinator (taken from the engine at spawn). Appends
+    /// happen inside the band locks; the epoch checkpoints with every
+    /// band lock held, so the watermark covers all allocated seqs.
+    persist: Option<Arc<Persister>>,
 }
 
 /// A write-path request for one band's writer thread.
@@ -239,11 +246,13 @@ impl BandedEngine {
     /// Split an [`Engine`] into a concurrent read handle plus one
     /// writer thread per column band. `writers` is both the queue count
     /// and the snapshot shard count — one band, one writer, one shard.
-    pub fn spawn(engine: Engine, writers: usize) -> (BandedEngine, BandedHandle) {
+    pub fn spawn(mut engine: Engine, writers: usize) -> (BandedEngine, BandedHandle) {
         let d = writers.max(1);
         let clamp = engine.clamp();
         let metrics = engine.metrics().clone();
-        let initial = Arc::new(full_snapshot(&engine, d, 0));
+        let persist = engine.take_persister();
+        let version = engine.version();
+        let initial = Arc::new(full_snapshot(&engine, d, version));
         let parts = engine.into_orchestrator().into_parts();
         let ncols = parts.combined.ncols();
         let mut bands: Vec<Mutex<BandState>> = parts
@@ -269,6 +278,12 @@ impl BandedEngine {
             seq += 1;
         }
         let buffered = seq as usize;
+        // A recovered engine's carried buffer keeps its low local stamps
+        // (those events are already on disk under their original seqs);
+        // new allocations continue past the persisted history.
+        if let Some(p) = &persist {
+            seq = seq.max(p.next_seq());
+        }
         let shared = Arc::new(BandedOrchestrator {
             snap: RwLock::new(initial),
             core: Mutex::new(Core {
@@ -281,7 +296,7 @@ impl BandedEngine {
                 last_flush_cols: parts.last_flush_cols,
                 last_topk_moved: parts.last_flush_topk_moved,
                 last_flush_rows: parts.last_flush_rows,
-                version: 0,
+                version,
             }),
             bands,
             flush: Mutex::new(()),
@@ -292,6 +307,8 @@ impl BandedEngine {
             metrics: metrics.clone(),
             publish: PublishMetrics::new(&metrics, d),
             cache: TopNCache::new(d, &metrics),
+            clamp,
+            persist,
         });
         let mut txs = Vec::with_capacity(d);
         let mut handles = Vec::with_capacity(d);
@@ -360,7 +377,16 @@ impl BandedEngine {
     /// `MPREDICT` consistency contract).
     pub fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
         self.metrics.counter("server.mpredict").inc();
-        self.snapshot().predict_many_clamped(i, cols, self.clamp)
+        let snap = self.snapshot();
+        let (m, n) = snap.dims();
+        if i < m {
+            if let Some(hit) =
+                self.shared.cache.lookup_scores(snap.version, i as u32, n, cols)
+            {
+                return Some(hit);
+            }
+        }
+        snap.predict_many_clamped(i, cols, self.clamp)
     }
 
     /// Top-N highest-predicted unrated columns for a row, on the
@@ -496,7 +522,7 @@ impl BandedHandle {
         for h in self.handles {
             h.join().expect("band writer panicked");
         }
-        flush_epoch(&self.shared);
+        flush_epoch(&self.shared, true);
         let metrics = self.shared.metrics.clone();
         let cfg = self.shared.cfg.clone();
         let mut core = self.shared.core.lock().unwrap_or_else(|e| e.into_inner());
@@ -523,9 +549,15 @@ impl BandedHandle {
             rng: core.rng.clone(),
             metrics: metrics.clone(),
         };
+        let version = core.version;
         drop(guards);
         drop(core);
-        Engine::new(StreamOrchestrator::from_parts(parts), self.clamp, metrics)
+        let mut engine = Engine::new(StreamOrchestrator::from_parts(parts), self.clamp, metrics);
+        engine.set_version(version);
+        if let Some(p) = self.shared.persist.clone() {
+            engine.attach_persister(p);
+        }
+        engine
     }
 }
 
@@ -544,7 +576,7 @@ fn band_writer_loop(shared: Arc<BandedOrchestrator>, band: usize, rx: Receiver<B
                 let _ = reply.send(ingest_batch(&shared, &im, &batch));
             }
             BandCmd::Flush { reply } => {
-                let _ = reply.send(flush_epoch(&shared));
+                let _ = reply.send(flush_epoch(&shared, true));
             }
             BandCmd::Shutdown => break,
         }
@@ -598,7 +630,7 @@ fn ingest_rate(
         if shared.buffered.load(Ordering::Relaxed) >= cfg.queue_capacity {
             // Flush first, then retain the triggering event un-flushed
             // — the single-writer capacity contract.
-            let applied = flush_epoch(shared);
+            let applied = flush_epoch(shared, false);
             buffer_rating(shared, band, i, j, r, false);
             im.ingested.inc();
             return if applied > 0 {
@@ -611,7 +643,7 @@ fn ingest_rate(
     }
     im.ingested.inc();
     if shared.buffered.load(Ordering::Relaxed) >= cfg.batch_size {
-        let applied = flush_epoch(shared);
+        let applied = flush_epoch(shared, false);
         if applied > 0 {
             return IngestResult::Flushed { applied };
         }
@@ -640,8 +672,15 @@ fn buffer_rating(
     r: f32,
     reserved: bool,
 ) {
-    let seq = shared.seq.fetch_add(1, Ordering::Relaxed);
     let mut state = shared.bands[band].lock().unwrap_or_else(|e| e.into_inner());
+    // Seq allocation and WAL append happen inside the band lock: an
+    // epoch (which holds every band lock) can then trust that every
+    // allocated seq has both landed in a buffer and reached its log —
+    // the exact-watermark precondition of the checkpoint hook.
+    let seq = shared.seq.fetch_add(1, Ordering::Relaxed);
+    if let Some(p) = &shared.persist {
+        p.append_rate(band, seq, i, j, r);
+    }
     state.buffer.push(Stamped { seq, i, j, r });
     let now = if reserved {
         shared.buffered.load(Ordering::Relaxed)
@@ -701,13 +740,13 @@ fn ingest_batch(
         if shared.buffered.load(Ordering::Relaxed) + batch.len() > cfg.queue_capacity {
             // Flush the backlog first, then admit the batch un-flushed —
             // the single-writer capacity contract, batch-wide.
-            applied += flush_epoch(shared);
+            applied += flush_epoch(shared, false);
         }
         buffer_batch(shared, batch, false);
     }
     im.ingested.add(batch.len() as u64);
     if shared.buffered.load(Ordering::Relaxed) >= cfg.batch_size {
-        applied += flush_epoch(shared);
+        applied += flush_epoch(shared, false);
     }
     if applied > 0 {
         IngestResult::Flushed { applied }
@@ -742,8 +781,16 @@ fn buffer_batch(shared: &BandedOrchestrator, batch: &[(u32, u32, f32)], reserved
         slot[b] = idx;
         guards.push(shared.bands[b].lock().unwrap_or_else(|e| e.into_inner()));
     }
-    for &(i, j, r) in batch {
-        let seq = shared.seq.fetch_add(1, Ordering::Relaxed);
+    // One block allocation under the touched-band locks keeps the
+    // batch's seqs contiguous — the shape the WAL batch record (and the
+    // single-writer replay of it) requires. The carrying band is the
+    // first event's, whose lock this batch holds.
+    let base = shared.seq.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    if let Some(p) = &shared.persist {
+        p.append_batch(route_col(batch[0].1, ncols, d), base, batch);
+    }
+    for (k, &(i, j, r)) in batch.iter().enumerate() {
+        let seq = base + k as u64;
         guards[slot[route_col(j, ncols, d)]].buffer.push(Stamped { seq, i, j, r });
     }
     let now = if reserved {
@@ -769,8 +816,11 @@ fn buffer_batch(shared: &BandedOrchestrator, batch: &[(u32, u32, f32)], reserved
 /// the orders cannot cycle. Steals every band's buffer, restores global
 /// arrival order via the sequence stamps, applies the batch through
 /// exactly the single-writer computation, and publishes the per-band
-/// shards. Returns the applied count.
-fn flush_epoch(shared: &BandedOrchestrator) -> usize {
+/// shards. Returns the applied count. `explicit` marks client-driven
+/// flushes (`FLUSH` verb, shutdown drain): those are external inputs a
+/// replay cannot re-derive, so they log a WAL marker; threshold- and
+/// capacity-triggered epochs re-fire deterministically and do not.
+fn flush_epoch(shared: &BandedOrchestrator, explicit: bool) -> usize {
     let _epoch = shared.flush.lock().unwrap_or_else(|e| e.into_inner());
     let mut core_guard = shared.core.lock().unwrap_or_else(|e| e.into_inner());
     let core: &mut Core = &mut core_guard;
@@ -786,6 +836,15 @@ fn flush_epoch(shared: &BandedOrchestrator) -> usize {
     }
     if raw.is_empty() {
         return 0;
+    }
+    if explicit {
+        if let Some(p) = &shared.persist {
+            // All band locks are held: the marker's seq is greater than
+            // every stolen event's and smaller than anything after the
+            // epoch, so replay re-runs the flush at exactly this point.
+            let seq = shared.seq.fetch_add(1, Ordering::Relaxed);
+            p.append_flush(0, seq);
+        }
     }
     shared.buffered.fetch_sub(raw.len(), Ordering::Relaxed);
     raw.sort_unstable_by_key(|e| e.seq);
@@ -830,6 +889,26 @@ fn flush_epoch(shared: &BandedOrchestrator) -> usize {
             bands
         };
         shared.cache.invalidate(core.version, &dirty, &core.last_flush_rows, grew);
+        if let Some(p) = &shared.persist {
+            // Checkpoint hook, with every band lock still held: no seq
+            // can be allocated concurrently, so `counter - 1` is an
+            // exact watermark; the buffer is empty (all stolen) and the
+            // band accumulators reassemble to the post-flush hash state.
+            let counter = shared.seq.load(Ordering::Relaxed);
+            p.bump_seq_to(counter);
+            let refs: Vec<&OnlineHashState> = guards.iter().map(|g| &g.hash).collect();
+            let hash = assemble_bands(&refs);
+            let src = CheckpointSource {
+                engine_version: core.version,
+                clamp: shared.clamp,
+                hash: &hash,
+                model: core.model.as_ref().expect("model present outside flush"),
+                triples: &core.combined_t,
+                buffer: &[],
+                rng: &core.rng,
+            };
+            p.note_applied_flush(&src, counter - 1);
+        }
     }
     applied
 }

@@ -58,6 +58,7 @@
 use super::engine::rank_cmp;
 use super::protocol::MAX_TOPN_ITEMS;
 use crate::metrics::{Counter, Registry};
+use crate::sparse::band_of;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -124,6 +125,8 @@ pub struct TopNCache {
     misses: Arc<Counter>,
     partial: Arc<Counter>,
     invalidations: Arc<Counter>,
+    mpredict_hits: Arc<Counter>,
+    mpredict_misses: Arc<Counter>,
 }
 
 impl TopNCache {
@@ -143,6 +146,8 @@ impl TopNCache {
             misses: metrics.counter("cache.misses"),
             partial: metrics.counter("cache.partial"),
             invalidations: metrics.counter("cache.invalidations"),
+            mpredict_hits: metrics.counter("cache.mpredict_hits"),
+            mpredict_misses: metrics.counter("cache.mpredict_misses"),
         }
     }
 
@@ -274,9 +279,60 @@ impl TopNCache {
         merge_ranked(&lists, n_items)
     }
 
+    /// `MPREDICT` riding the Top-N candidate lists: resolve every
+    /// requested column of `row` from cached band lists scored against
+    /// exactly `version`, or `None` if any in-range column cannot be.
+    ///
+    /// All-or-nothing on purpose: a column absent from a *valid* band
+    /// list is ambiguous — it may be rated (lists hold only unrated
+    /// columns) or truncated past [`MAX_TOPN_ITEMS`] — so partial
+    /// answers cannot be assembled without re-scoring anyway. A cached
+    /// score is admissible under the same predicate as a Top-N merge
+    /// (`band_stamp[b] ≤ min(version, list.stamp)`), which makes the
+    /// fast path bit-identical to the full prediction (the lists were
+    /// produced by the same clamped predict the slow path runs).
+    /// Out-of-range columns resolve to `None` without touching a band.
+    pub fn lookup_scores(
+        &self,
+        version: u64,
+        row: u32,
+        ncols: usize,
+        cols: &[u32],
+    ) -> Option<Vec<Option<f32>>> {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = st.rows.get(&row);
+        let mut out = Vec::with_capacity(cols.len());
+        for &j in cols {
+            if j as usize >= ncols {
+                out.push(None);
+                continue;
+            }
+            let b = band_of(j as usize, ncols, self.nbands);
+            let hit = entry
+                .and_then(|e| e.bands[b].as_ref())
+                .filter(|list| st.band_stamp[b] <= version && st.band_stamp[b] <= list.stamp)
+                .and_then(|list| list.items.iter().find(|(c, _)| *c == j))
+                .map(|&(_, s)| s);
+            match hit {
+                Some(s) => out.push(Some(s)),
+                None => {
+                    self.mpredict_misses.inc();
+                    return None;
+                }
+            }
+        }
+        self.mpredict_hits.inc();
+        Some(out)
+    }
+
     /// Test/bench visibility into the metric counters.
     pub fn counts(&self) -> (u64, u64, u64) {
         (self.hits.get(), self.misses.get(), self.partial.get())
+    }
+
+    /// Test/bench visibility into the `MPREDICT` fast-path counters.
+    pub fn mpredict_counts(&self) -> (u64, u64) {
+        (self.mpredict_hits.get(), self.mpredict_misses.get())
     }
 }
 
@@ -384,6 +440,36 @@ mod tests {
             vec![(0u32, 2.0f32)]
         });
         assert_eq!(calls.load(Ordering::Relaxed), 1, "stale insert must have been refused");
+    }
+
+    #[test]
+    fn lookup_scores_is_all_or_nothing() {
+        let cache = TopNCache::new(2, &Registry::new());
+        // ncols = 4 → band 0 holds cols {0, 1}, band 1 holds {2, 3}.
+        // Band 1's list omits col 3 (rated or truncated — ambiguous).
+        cache.top_n(1, 7, 4, |b| {
+            if b == 0 {
+                band_list(&[(0, 1.5), (1, 2.5)])
+            } else {
+                band_list(&[(2, 3.5)])
+            }
+        });
+        assert_eq!(
+            cache.lookup_scores(1, 7, 4, &[1, 2]),
+            Some(vec![Some(2.5), Some(3.5)])
+        );
+        assert!(
+            cache.lookup_scores(1, 7, 4, &[3]).is_none(),
+            "absence from a valid list must fail the whole lookup"
+        );
+        assert_eq!(
+            cache.lookup_scores(1, 7, 4, &[0, 9]),
+            Some(vec![Some(1.5), None]),
+            "out-of-range columns resolve to None without a band probe"
+        );
+        cache.invalidate(2, &[1], &[], false);
+        assert!(cache.lookup_scores(2, 7, 4, &[2]).is_none(), "dirty band");
+        assert_eq!(cache.mpredict_counts(), (2, 2));
     }
 
     #[test]

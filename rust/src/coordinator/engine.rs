@@ -11,7 +11,9 @@ use super::shared::dirty_bands;
 use super::stream::{Event, IngestResult, StreamOrchestrator};
 use crate::metrics::Registry;
 use crate::mf::neighbourhood::{CulshModel, NeighbourScratch};
+use crate::persist::Persister;
 use crate::sparse::{band_range, Csr};
+use std::sync::Arc;
 
 /// The one ranking order every Top-N path sorts and merges by:
 /// descending score (`f32::total_cmp`), ties broken by ascending column
@@ -134,12 +136,39 @@ pub struct Engine {
     /// flush, so a cached band list is valid exactly while no flush
     /// dirtied its band (or the row) since it was scored.
     version: u64,
+    /// Optional durability: when attached, accepted events append to
+    /// the WAL *before* ingesting and every applied flush runs the
+    /// fsync/checkpoint policy (see [`crate::persist`]).
+    persist: Option<Arc<Persister>>,
 }
 
 impl Engine {
     pub fn new(orch: StreamOrchestrator, clamp: (f32, f32), metrics: Registry) -> Self {
         let cache = TopNCache::new(orch.config().flush_bands, &metrics);
-        Engine { orch, metrics, clamp, cache, version: 0 }
+        Engine { orch, metrics, clamp, cache, version: 0, persist: None }
+    }
+
+    /// Attach a durability coordinator; subsequent writes WAL-append
+    /// before ingesting and flushes follow its checkpoint cadence.
+    pub fn attach_persister(&mut self, persister: Arc<Persister>) {
+        self.persist = Some(persister);
+    }
+
+    /// Detach and surrender the persister (the banded spawn moves it
+    /// into the orchestrator so epoch-time hooks run under its locks).
+    pub(crate) fn take_persister(&mut self) -> Option<Arc<Persister>> {
+        self.persist.take()
+    }
+
+    /// Restore a recovered flush version (recovery resumes serving at
+    /// the version the checkpoint recorded, not at zero).
+    pub(crate) fn set_version(&mut self, version: u64) {
+        self.version = version;
+    }
+
+    /// The wrapped orchestrator (checkpoint serialization source).
+    pub(crate) fn orchestrator(&self) -> &StreamOrchestrator {
+        &self.orch
     }
 
     pub fn dims(&self) -> (usize, usize) {
@@ -263,6 +292,9 @@ impl Engine {
             return None;
         }
         self.metrics.counter("engine.mpredict").inc();
+        if let Some(hit) = self.cache.lookup_scores(self.version, i as u32, n, cols) {
+            return Some(hit);
+        }
         let mut scratch = NeighbourScratch::default();
         Some(predict_many_by(n, cols, |j| {
             self.orch
@@ -272,8 +304,15 @@ impl Engine {
         }))
     }
 
-    /// Ingest a rating through the online path.
+    /// Ingest a rating through the online path. With a persister
+    /// attached the event is WAL-appended first — append-before-apply,
+    /// so a checkpoint can never reflect an unlogged event (a rejected
+    /// or invalid event logs too and re-rejects identically on replay).
     pub fn rate(&mut self, i: u32, j: u32, r: f32) -> IngestResult {
+        if let Some(p) = &self.persist {
+            let seq = p.alloc_seq();
+            p.append_rate(j as usize % p.nbands(), seq, i, j, r);
+        }
         let old = self.dims();
         let res = self.orch.ingest(Event::Rate(i, j, r));
         if let IngestResult::Flushed { applied } = res {
@@ -284,8 +323,15 @@ impl Engine {
 
     /// Vectorized ingest (the `MRATE` verb): the whole batch is
     /// validated and admitted as one unit, with backpressure capacity
-    /// reserved once — see [`StreamOrchestrator::ingest_batch`].
+    /// reserved once — see [`StreamOrchestrator::ingest_batch`]. One
+    /// WAL record logs the whole batch under contiguous seqs.
     pub fn rate_many(&mut self, batch: &[(u32, u32, f32)]) -> IngestResult {
+        if let Some(p) = &self.persist {
+            if !batch.is_empty() {
+                let base = p.alloc_seqs(batch.len() as u64);
+                p.append_batch(batch[0].1 as usize % p.nbands(), base, batch);
+            }
+        }
         let old = self.dims();
         let res = self.orch.ingest_batch(batch);
         if let IngestResult::Flushed { applied } = res {
@@ -294,8 +340,17 @@ impl Engine {
         res
     }
 
-    /// Force-apply buffered ratings.
+    /// Force-apply buffered ratings. An explicit flush with work to do
+    /// is logged as a WAL marker (replay must re-run it at the same
+    /// point — the re-search draws from the RNG); empty flushes are
+    /// no-ops on both sides and never logged.
     pub fn flush(&mut self) -> usize {
+        if let Some(p) = &self.persist {
+            if self.orch.buffered() > 0 {
+                let seq = p.alloc_seq();
+                p.append_flush(0, seq);
+            }
+        }
         let old = self.dims();
         let applied = self.orch.flush();
         self.note_flush(applied, old);
@@ -329,6 +384,9 @@ impl Engine {
             bands
         };
         self.cache.invalidate(self.version, &dirty, self.orch.last_flush_rows(), grew);
+        if let Some(p) = self.persist.clone() {
+            p.on_flush(self);
+        }
     }
 
     /// Metrics snapshot (server `STATS` verb).

@@ -334,7 +334,7 @@ impl SharedEngine {
         let clamp = engine.clamp();
         let metrics = engine.metrics().clone();
         let cache = Arc::new(TopNCache::new(d, &metrics));
-        let initial = Arc::new(full_snapshot(&engine, d, 0));
+        let initial = Arc::new(full_snapshot(&engine, d, engine.version()));
         let state = Arc::new(RwLock::new(initial));
         let (tx, rx) = channel();
         let handle = {
@@ -406,7 +406,14 @@ impl SharedEngine {
     /// consistency contract).
     pub fn predict_many(&self, i: usize, cols: &[u32]) -> Option<Vec<Option<f32>>> {
         self.metrics.counter("server.mpredict").inc();
-        self.snapshot().predict_many_clamped(i, cols, self.clamp)
+        let snap = self.snapshot();
+        let (m, n) = snap.dims();
+        if i < m {
+            if let Some(hit) = self.cache.lookup_scores(snap.version, i as u32, n, cols) {
+                return Some(hit);
+            }
+        }
+        snap.predict_many_clamped(i, cols, self.clamp)
     }
 
     /// Top-N highest-predicted unrated columns for a row, on the current
@@ -535,7 +542,9 @@ fn writer_loop(
     cache: Arc<TopNCache>,
 ) -> Engine {
     let pm = PublishMetrics::new(&metrics, shards);
-    let mut version = 1u64;
+    // Resume numbering past a recovered engine's flush count so cached
+    // rankings and `SUBSCRIBE` pushes stay monotonic across a restart.
+    let mut version = engine.version() + 1;
     let mut current = Arc::clone(&state.read().unwrap_or_else(|e| e.into_inner()));
     for cmd in rx {
         match cmd {

@@ -381,6 +381,33 @@ impl StreamOrchestrator {
         (self.combined_t.nrows(), self.combined_t.ncols())
     }
 
+    /// Online hash accumulators (checkpoint serialization source).
+    pub(crate) fn hash_state(&self) -> &OnlineHashState {
+        &self.hash_state
+    }
+
+    /// Raw triple store behind the combined matrix (checkpoint source;
+    /// entry order is part of the bit-exact state — the re-rating index
+    /// maps cells to positions in this exact order).
+    pub(crate) fn triples(&self) -> &Triples {
+        &self.combined_t
+    }
+
+    /// Flush-path RNG (checkpoint source).
+    pub(crate) fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
+    /// Buffered-but-unflushed events (checkpoint source).
+    pub(crate) fn buffer(&self) -> &[(u32, u32, f32)] {
+        &self.buffer
+    }
+
+    /// Training hyper-parameters (checkpoint reconstruction input).
+    pub(crate) fn train_config(&self) -> &CulshConfig {
+        &self.train_cfg
+    }
+
     /// Ingest one event.
     pub fn ingest(&mut self, event: Event) -> IngestResult {
         match event {

@@ -49,6 +49,7 @@ pub mod linalg;
 pub mod lsh;
 pub mod metrics;
 pub mod mf;
+pub mod persist;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

@@ -47,6 +47,22 @@ impl OnlineHashState {
         ((round * self.lsh.p + slot) * self.n_cols + j) * self.lsh.g + gbit
     }
 
+    /// Decompose into checkpointable parts `(lsh, n_cols, accumulators)`.
+    pub(crate) fn to_parts(&self) -> (SimLsh, usize, &[f64]) {
+        (self.lsh.clone(), self.n_cols, &self.acc)
+    }
+
+    /// Rebuild from checkpointed parts; the accumulator length must match
+    /// the `q·p·n_cols·g` layout exactly.
+    pub(crate) fn from_parts(lsh: SimLsh, n_cols: usize, acc: Vec<f64>) -> Self {
+        assert_eq!(
+            acc.len(),
+            lsh.q * lsh.p * n_cols * lsh.g,
+            "accumulator length does not match the q*p*n_cols*g layout"
+        );
+        OnlineHashState { lsh, n_cols, acc }
+    }
+
     /// Add one interaction's contribution to every base hash of column j.
     fn absorb(&mut self, i: usize, j: usize, r: f32) {
         let w = self.lsh.weight(r) as f64;

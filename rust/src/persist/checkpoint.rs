@@ -1,0 +1,462 @@
+//! Atomic checkpoints of the flushed engine state.
+//!
+//! A checkpoint file `ckpt-<gen>.bin` is one little-endian body — magic,
+//! generation, seq watermark, engine version, clamp, the simLSH config
+//! and accumulators, the full CULSH model, the training RNG, the raw
+//! triple store (in storage order — the re-rating index is a function of
+//! it) and the pending ingest buffer — followed by a trailing CRC-32 of
+//! everything before it. Writes go through a temp file + rename +
+//! directory fsync, so a crash mid-checkpoint leaves the previous
+//! generation untouched.
+//!
+//! # Invariants
+//!
+//! (Machine-checked: `cargo run -p lshmf-check` gates this section's
+//! presence in tier-1 CI.)
+//!
+//! * **A checkpoint is all-or-nothing.** The rename is the commit point;
+//!   a file that decodes (magic, exact consumption, CRC) is a complete
+//!   consistent state, and one that doesn't is ignored entirely —
+//!   recovery falls back to the previous generation.
+//! * **Bit-exactness is part of the format.** Floats are stored as raw
+//!   IEEE bits (f32/f64 `to_bits`), the triple store keeps its exact
+//!   entry order, and the RNG state includes the Box–Muller spare — so
+//!   a recovered engine replays to bit-identical replies.
+//! * **The watermark is the replay filter.** Every event with seq at or
+//!   below the stored watermark is reflected in the checkpointed state
+//!   (applied or in the pending buffer); replay must skip exactly those.
+
+use super::{crc32, CheckpointSource};
+use crate::coordinator::protocol::{put_f32, put_u32, put_u64, Cur};
+use crate::linalg::FactorMatrix;
+use crate::lsh::{OnlineHashState, SimLsh, TopK};
+use crate::mf::neighbourhood::CulshModel;
+use crate::mf::{Baselines, MfModel};
+use crate::rng::Rng;
+use crate::sparse::Triples;
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Format magic; bump the trailing digit on layout changes.
+const MAGIC: &[u8; 8] = b"LSHMFCK1";
+
+/// Checkpoint file name for a generation.
+pub(crate) fn file_name(gen: u64) -> String {
+    format!("ckpt-{gen}.bin")
+}
+
+/// Parse `ckpt-<gen>.bin` back into the generation.
+pub(crate) fn parse_name(name: &str) -> Option<u64> {
+    name.strip_prefix("ckpt-")?.strip_suffix(".bin")?.parse().ok()
+}
+
+/// A fully decoded checkpoint — everything recovery needs to rebuild a
+/// [`crate::coordinator::engine::Engine`] plus the replay bookkeeping.
+pub(crate) struct DecodedCheckpoint {
+    pub gen: u64,
+    pub watermark: u64,
+    pub engine_version: u64,
+    pub clamp: (f32, f32),
+    pub hash: OnlineHashState,
+    pub model: CulshModel,
+    pub triples: Triples,
+    pub buffer: Vec<(u32, u32, f32)>,
+    pub rng: Rng,
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_f32_slice(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u64(out, vs.len() as u64);
+    for &v in vs {
+        put_f32(out, v);
+    }
+}
+
+fn take_f32_vec(cur: &mut Cur<'_>) -> Option<Vec<f32>> {
+    let len = cur.u64()? as usize;
+    let mut vs = Vec::with_capacity(len.min(1 << 24));
+    for _ in 0..len {
+        vs.push(cur.f32()?);
+    }
+    Some(vs)
+}
+
+fn put_factor_matrix(out: &mut Vec<u8>, m: &FactorMatrix) {
+    put_u64(out, m.rows() as u64);
+    put_u64(out, m.cols() as u64);
+    for &v in m.data() {
+        put_f32(out, v);
+    }
+}
+
+fn take_factor_matrix(cur: &mut Cur<'_>) -> Option<FactorMatrix> {
+    let rows = cur.u64()? as usize;
+    let cols = cur.u64()? as usize;
+    if cur.remaining() < rows.checked_mul(cols)?.checked_mul(4)? {
+        return None;
+    }
+    let mut m = FactorMatrix::zeros(rows, cols);
+    for v in m.data_mut() {
+        *v = cur.f32()?;
+    }
+    Some(m)
+}
+
+fn put_clamp(out: &mut Vec<u8>, clamp: Option<(f32, f32)>) {
+    match clamp {
+        Some((lo, hi)) => {
+            out.push(1);
+            put_f32(out, lo);
+            put_f32(out, hi);
+        }
+        None => out.push(0),
+    }
+}
+
+fn take_clamp(cur: &mut Cur<'_>) -> Option<Option<(f32, f32)>> {
+    match cur.u8()? {
+        0 => Some(None),
+        1 => Some(Some((cur.f32()?, cur.f32()?))),
+        _ => None,
+    }
+}
+
+fn put_entries(out: &mut Vec<u8>, entries: &[(u32, u32, f32)]) {
+    put_u64(out, entries.len() as u64);
+    for &(i, j, r) in entries {
+        put_u32(out, i);
+        put_u32(out, j);
+        put_f32(out, r);
+    }
+}
+
+fn take_entries(cur: &mut Cur<'_>) -> Option<Vec<(u32, u32, f32)>> {
+    let len = cur.u64()? as usize;
+    if cur.remaining() < len.checked_mul(12)? {
+        return None;
+    }
+    let mut entries = Vec::with_capacity(len);
+    for _ in 0..len {
+        entries.push((cur.u32()?, cur.u32()?, cur.f32()?));
+    }
+    Some(entries)
+}
+
+/// Encode the full body (without the CRC trailer).
+fn encode_body(gen: u64, watermark: u64, src: &CheckpointSource<'_>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 << 16);
+    out.extend_from_slice(MAGIC);
+    put_u64(&mut out, gen);
+    put_u64(&mut out, watermark);
+    put_u64(&mut out, src.engine_version);
+    put_f32(&mut out, src.clamp.0);
+    put_f32(&mut out, src.clamp.1);
+
+    // simLSH config + online accumulators.
+    let (lsh, n_cols, acc) = src.hash.to_parts();
+    put_u64(&mut out, lsh.p as u64);
+    put_u64(&mut out, lsh.q as u64);
+    put_u64(&mut out, lsh.g as u64);
+    put_u32(&mut out, lsh.psi_power);
+    put_f32(&mut out, lsh.center);
+    put_u64(&mut out, lsh.seed);
+    put_u64(&mut out, n_cols as u64);
+    put_u64(&mut out, acc.len() as u64);
+    for &a in acc {
+        put_f64(&mut out, a);
+    }
+
+    // CULSH model: biased MF base, W/C influences, Top-K, baselines.
+    let model = src.model;
+    put_f32(&mut out, model.base.mu);
+    put_f32_slice(&mut out, &model.base.bi);
+    put_f32_slice(&mut out, &model.base.bj);
+    put_factor_matrix(&mut out, &model.base.u);
+    put_factor_matrix(&mut out, &model.base.v);
+    put_clamp(&mut out, model.base.clamp);
+    put_factor_matrix(&mut out, &model.w);
+    put_factor_matrix(&mut out, &model.c);
+    put_u64(&mut out, model.topk.k() as u64);
+    put_u64(&mut out, model.topk.n() as u64);
+    for j in 0..model.topk.n() {
+        for &row in model.topk.neighbours(j) {
+            put_u32(&mut out, row);
+        }
+    }
+    put_f32(&mut out, model.baselines.mu);
+    put_f32_slice(&mut out, &model.baselines.bi);
+    put_f32_slice(&mut out, &model.baselines.bj);
+
+    // Training RNG (xoshiro words + Box–Muller spare).
+    let (state, spare) = src.rng.state();
+    for word in state {
+        put_u64(&mut out, word);
+    }
+    match spare {
+        Some(v) => {
+            out.push(1);
+            put_f64(&mut out, v);
+        }
+        None => out.push(0),
+    }
+
+    // Raw triple store (exact entry order) + pending ingest buffer.
+    put_u64(&mut out, src.triples.nrows() as u64);
+    put_u64(&mut out, src.triples.ncols() as u64);
+    put_entries(&mut out, src.triples.entries());
+    put_entries(&mut out, src.buffer);
+    out
+}
+
+/// Decode one checkpoint body (with trailing CRC). `None` on any
+/// truncation, bad magic, CRC mismatch or trailing garbage.
+pub(crate) fn decode(bytes: &[u8]) -> Option<DecodedCheckpoint> {
+    if bytes.len() < MAGIC.len() + 4 {
+        return None;
+    }
+    let (body, trailer) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    if crc32(body) != stored {
+        return None;
+    }
+    let mut cur = Cur::new(body);
+    if cur.take(MAGIC.len())? != MAGIC {
+        return None;
+    }
+    let gen = cur.u64()?;
+    let watermark = cur.u64()?;
+    let engine_version = cur.u64()?;
+    let clamp = (cur.f32()?, cur.f32()?);
+
+    let lsh = SimLsh {
+        p: cur.u64()? as usize,
+        q: cur.u64()? as usize,
+        g: cur.u64()? as usize,
+        psi_power: cur.u32()?,
+        center: cur.f32()?,
+        seed: cur.u64()?,
+    };
+    let n_cols = cur.u64()? as usize;
+    let acc_len = cur.u64()? as usize;
+    if acc_len != lsh.q.checked_mul(lsh.p)?.checked_mul(n_cols)?.checked_mul(lsh.g)?
+        || cur.remaining() < acc_len.checked_mul(8)?
+    {
+        return None;
+    }
+    let mut acc = Vec::with_capacity(acc_len);
+    for _ in 0..acc_len {
+        acc.push(f64::from_bits(cur.u64()?));
+    }
+    let hash = OnlineHashState::from_parts(lsh, n_cols, acc);
+
+    let mu = cur.f32()?;
+    let bi = take_f32_vec(&mut cur)?;
+    let bj = take_f32_vec(&mut cur)?;
+    let u = take_factor_matrix(&mut cur)?;
+    let v = take_factor_matrix(&mut cur)?;
+    let base_clamp = take_clamp(&mut cur)?;
+    let base = MfModel { mu, bi, bj, u, v, clamp: base_clamp };
+    let w = take_factor_matrix(&mut cur)?;
+    let c = take_factor_matrix(&mut cur)?;
+    let k = cur.u64()? as usize;
+    let n = cur.u64()? as usize;
+    if cur.remaining() < n.checked_mul(k)?.checked_mul(4)? {
+        return None;
+    }
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut row = Vec::with_capacity(k);
+        for _ in 0..k {
+            row.push(cur.u32()?);
+        }
+        rows.push(row);
+    }
+    let topk = TopK::from_rows(rows, k);
+    let baselines = Baselines {
+        mu: cur.f32()?,
+        bi: take_f32_vec(&mut cur)?,
+        bj: take_f32_vec(&mut cur)?,
+    };
+    let model = CulshModel { base, w, c, topk, baselines };
+
+    let mut state = [0u64; 4];
+    for word in &mut state {
+        *word = cur.u64()?;
+    }
+    let spare = match cur.u8()? {
+        0 => None,
+        1 => Some(f64::from_bits(cur.u64()?)),
+        _ => return None,
+    };
+    let rng = Rng::from_state(state, spare);
+
+    let nrows = cur.u64()? as usize;
+    let ncols = cur.u64()? as usize;
+    let entries = take_entries(&mut cur)?;
+    if entries.iter().any(|&(i, j, _)| i as usize >= nrows || j as usize >= ncols) {
+        return None;
+    }
+    let triples = Triples::from_entries(nrows, ncols, entries);
+    let buffer = take_entries(&mut cur)?;
+    if !cur.done() {
+        return None;
+    }
+    Some(DecodedCheckpoint {
+        gen,
+        watermark,
+        engine_version,
+        clamp,
+        hash,
+        model,
+        triples,
+        buffer,
+        rng,
+    })
+}
+
+/// Atomically write checkpoint `gen`: encode, CRC, write to a temp file,
+/// fsync it, rename into place, fsync the directory. Returns the byte
+/// count written.
+pub(crate) fn write(
+    dir: &Path,
+    gen: u64,
+    watermark: u64,
+    src: &CheckpointSource<'_>,
+) -> std::io::Result<usize> {
+    let mut body = encode_body(gen, watermark, src);
+    let crc = crc32(&body);
+    put_u32(&mut body, crc);
+    let tmp: PathBuf = dir.join(format!("{}.tmp", file_name(gen)));
+    let path = dir.join(file_name(gen));
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(&body)?;
+        f.sync_data()?;
+    }
+    fs::rename(&tmp, &path)?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(body.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Csc, Csr};
+
+    fn sample_source() -> (OnlineHashState, CulshModel, Triples, Vec<(u32, u32, f32)>, Rng) {
+        let mut rng = Rng::seeded(77);
+        let mut t = Triples::new(12, 8);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < 40 {
+            let (i, j) = (rng.below(12), rng.below(8));
+            if seen.insert((i, j)) {
+                t.push(i, j, 1.0 + rng.f32() * 4.0);
+            }
+        }
+        let csr = Csr::from_triples(&t);
+        let csc = Csc::from_triples(&t);
+        let lsh = SimLsh::new(1, 3, 8, 2);
+        let hash = OnlineHashState::build(lsh, &csc);
+        let (topk, _) = hash.topk(3, &mut rng);
+        let cfg = crate::mf::neighbourhood::CulshConfig { f: 3, k: 3, epochs: 2, ..Default::default() };
+        let (model, _) = crate::mf::neighbourhood::train_culsh_logged(&csr, topk, &cfg, &mut rng);
+        let buffer = vec![(1, 2, 3.5), (0, 7, 1.0)];
+        (hash, model, t, buffer, rng)
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_exactly() {
+        let (hash, model, triples, buffer, rng) = sample_source();
+        let src = CheckpointSource {
+            engine_version: 9,
+            clamp: (1.0, 5.0),
+            hash: &hash,
+            model: &model,
+            triples: &triples,
+            buffer: &buffer,
+            rng: &rng,
+        };
+        let dir = std::env::temp_dir().join(format!("lshmf-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        write(&dir, 4, 17, &src).unwrap();
+        let bytes = std::fs::read(dir.join("ckpt-4.bin")).unwrap();
+        let got = decode(&bytes).expect("checkpoint decodes");
+        assert_eq!(got.gen, 4);
+        assert_eq!(got.watermark, 17);
+        assert_eq!(got.engine_version, 9);
+        assert_eq!(got.clamp, (1.0, 5.0));
+        assert_eq!(got.buffer, buffer);
+        assert_eq!(got.triples.entries(), triples.entries());
+        assert_eq!(got.triples.nrows(), triples.nrows());
+        assert_eq!(got.triples.ncols(), triples.ncols());
+        let (_, n1, acc1) = hash.to_parts();
+        let (_, n2, acc2) = got.hash.to_parts();
+        assert_eq!(n1, n2);
+        assert_eq!(
+            acc1.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+            acc2.iter().map(|a| a.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(got.model.base.mu.to_bits(), model.base.mu.to_bits());
+        assert_eq!(
+            got.model.base.u.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            model.base.u.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        for j in 0..model.topk.n() {
+            assert_eq!(got.model.topk.neighbours(j), model.topk.neighbours(j));
+        }
+        // RNG streams must continue identically.
+        let mut a = got.rng.clone();
+        let mut b = rng.clone();
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_checkpoints_are_rejected() {
+        let (hash, model, triples, buffer, rng) = sample_source();
+        let src = CheckpointSource {
+            engine_version: 1,
+            clamp: (1.0, 5.0),
+            hash: &hash,
+            model: &model,
+            triples: &triples,
+            buffer: &buffer,
+            rng: &rng,
+        };
+        let dir = std::env::temp_dir().join(format!("lshmf-ckpt-bad-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        write(&dir, 1, 5, &src).unwrap();
+        let bytes = std::fs::read(dir.join("ckpt-1.bin")).unwrap();
+        assert!(decode(&bytes).is_some());
+        // Bit flip anywhere fails the CRC.
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        assert!(decode(&flipped).is_none());
+        // Truncation fails.
+        assert!(decode(&bytes[..bytes.len() - 9]).is_none());
+        // Trailing garbage fails (CRC covers length implicitly).
+        let mut longer = bytes.clone();
+        longer.extend_from_slice(&[0, 1, 2, 3]);
+        assert!(decode(&longer).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_names_round_trip() {
+        assert_eq!(parse_name(&file_name(12)), Some(12));
+        assert_eq!(parse_name("ckpt-0.bin"), Some(0));
+        assert_eq!(parse_name("ckpt-3.bin.tmp"), None);
+        assert_eq!(parse_name("wal-0-1.log"), None);
+    }
+}

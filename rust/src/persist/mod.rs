@@ -1,0 +1,436 @@
+//! Durability: per-band write-ahead logs, checkpointed snapshots, and
+//! crash recovery for the serving engines.
+//!
+//! The online path's seq-stamped ingest events are already perfect log
+//! records and flush-epoch boundaries are already consistent snapshot
+//! points, so durability composes from three small pieces:
+//!
+//! * [`wal`] — one append-only CRC-framed log per column band. Records
+//!   are the accepted ingest events ([`wal::WalRecord`]), length-
+//!   prefixed with the same little-endian primitives as the binary
+//!   protocol codec, stamped with the global arrival sequence.
+//! * [`checkpoint`] — at flush-epoch boundaries the full flushed state
+//!   (factors, CSR triples, hash accumulators, RNG, pending buffer) is
+//!   written atomically via temp-file + rename; WAL segments fully
+//!   covered by the checkpoint watermark are garbage-collected.
+//! * [`recover`] — on startup the newest valid checkpoint is decoded
+//!   and each band's WAL tail (records with seq beyond the watermark)
+//!   is replayed in global seq-merge order through the normal ingest
+//!   path, resuming service at the recovered version.
+//!
+//! The [`Persister`] below is the live-side coordinator all three share:
+//! it owns the per-band [`wal::WalWriter`]s, the sequence allocator, the
+//! checkpoint cadence, and the fsync policy.
+//!
+//! # Invariants
+//!
+//! (Machine-checked: `cargo run -p lshmf-check` gates this section's
+//! presence in tier-1 CI.)
+//!
+//! * **Append happens before apply.** A WAL record is written before
+//!   its event enters the ingest path, so a checkpoint taken after the
+//!   event applied always has the record on disk with `seq <=`
+//!   watermark — replay can filter on the watermark alone and never
+//!   double-applies or drops an event.
+//! * **The watermark covers every allocated seq.** A checkpoint is
+//!   written only at a point where all allocated sequence numbers have
+//!   landed (single-writer: between ingest calls; banded: inside the
+//!   epoch with every band lock held), so `watermark = next_seq - 1`
+//!   splits history exactly: state `<=` watermark is in the checkpoint,
+//!   records `>` watermark are in the WAL tails.
+//! * **GC never strands the fallback checkpoint.** The newest two
+//!   checkpoint generations are retained and a WAL segment is deleted
+//!   only when a later segment of the same band starts at or below
+//!   `prev_watermark + 1` — so a corrupt newest checkpoint can always
+//!   fall back to the previous generation plus surviving tails.
+//! * **A crashed persister never touches disk again.**
+//!   [`Persister::crash`] (the test kill switch) suppresses every
+//!   subsequent append,
+//!   fsync, checkpoint and GC atomically, so the on-disk state observed
+//!   by recovery is exactly the state at the kill point even though the
+//!   in-memory engine keeps draining on shutdown.
+
+pub mod checkpoint;
+pub mod recover;
+pub mod wal;
+
+use crate::coordinator::engine::Engine;
+use crate::lsh::OnlineHashState;
+use crate::metrics::{Counter, Registry};
+use crate::mf::neighbourhood::CulshModel;
+use crate::rng::Rng;
+use crate::sparse::Triples;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use recover::{recover, RecoverInfo};
+
+/// When WAL appends reach the disk platter.
+///
+/// * `PerRecord` — fsync after every appended record: no accepted event
+///   is ever lost, at a per-write latency cost.
+/// * `PerFlush` — fsync at flush boundaries (the default): a crash can
+///   lose only the tail buffered since the last flush.
+/// * `Off` — never fsync explicitly; the OS page cache decides. Only
+///   process crashes (not power loss) are fully recoverable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    PerRecord,
+    PerFlush,
+    Off,
+}
+
+impl FsyncPolicy {
+    /// Parse the `[persist] fsync` config spelling.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        match s {
+            "per_record" => Some(FsyncPolicy::PerRecord),
+            "per_flush" => Some(FsyncPolicy::PerFlush),
+            "off" => Some(FsyncPolicy::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FsyncPolicy::PerRecord => "per_record",
+            FsyncPolicy::PerFlush => "per_flush",
+            FsyncPolicy::Off => "off",
+        }
+    }
+}
+
+/// IEEE CRC-32 (the zlib polynomial), hand-rolled because the crate is
+/// dependency-free. Shared by the WAL frame and checkpoint trailers.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+pub(crate) fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Borrowed view of everything a checkpoint serializes — assembled by
+/// the single-writer engine directly and by the banded flush epoch from
+/// its core + reassembled band accumulators.
+pub(crate) struct CheckpointSource<'a> {
+    pub engine_version: u64,
+    pub clamp: (f32, f32),
+    pub hash: &'a OnlineHashState,
+    pub model: &'a CulshModel,
+    pub triples: &'a Triples,
+    pub buffer: &'a [(u32, u32, f32)],
+    pub rng: &'a Rng,
+}
+
+impl<'a> CheckpointSource<'a> {
+    pub(crate) fn from_engine(engine: &'a Engine) -> Self {
+        let orch = engine.orchestrator();
+        CheckpointSource {
+            engine_version: engine.version(),
+            clamp: engine.clamp(),
+            hash: orch.hash_state(),
+            model: orch.model(),
+            triples: orch.triples(),
+            buffer: orch.buffer(),
+            rng: orch.rng(),
+        }
+    }
+}
+
+/// Checkpoint bookkeeping behind one mutex: generation counter,
+/// watermarks of the newest two generations, and the flush-cadence
+/// countdown.
+struct CkptState {
+    /// Newest on-disk checkpoint generation.
+    gen: u64,
+    /// Newest checkpoint's seq watermark.
+    watermark: u64,
+    /// Watermark of generation `gen - 1` (the GC fallback bound).
+    prev_watermark: u64,
+    /// Applied flushes since the last checkpoint.
+    flushes_since: usize,
+}
+
+/// Live-side durability coordinator: per-band WAL writers, the global
+/// sequence allocator, checkpoint cadence and fsync policy. Shared via
+/// `Arc` between the engine flavours and the recovery smoke tests.
+pub struct Persister {
+    dir: PathBuf,
+    fsync: FsyncPolicy,
+    /// Write a checkpoint every N applied flushes (N >= 1).
+    cadence: usize,
+    /// Next unallocated global sequence number (single-writer engines
+    /// allocate here; the banded orchestrator seeds its own counter
+    /// from [`Persister::next_seq`] at spawn).
+    seq: AtomicU64,
+    /// Test kill switch: once set, every disk write becomes a no-op.
+    crashed: AtomicBool,
+    /// One writer per column band; a band index out of range clamps to
+    /// the last writer (routing is cosmetic — recovery merges by seq).
+    wals: Vec<Mutex<wal::WalWriter>>,
+    inner: Mutex<CkptState>,
+    appended_bytes: Arc<Counter>,
+    fsyncs: Arc<Counter>,
+    ckpt_bytes: Arc<Counter>,
+}
+
+impl Persister {
+    /// Attach durability to `engine`: write a fresh checkpoint of its
+    /// current state (generation `prior.gen + 1`, watermark =
+    /// `prior.max_seq`), open new WAL segments right after the
+    /// watermark, and garbage-collect everything the attach checkpoint
+    /// plus its fallback no longer need. `recovered` carries the
+    /// recovery bookkeeping when the engine was just rebuilt from this
+    /// directory; `None` starts a fresh history at generation 1.
+    pub fn create(
+        dir: &Path,
+        fsync: FsyncPolicy,
+        cadence: usize,
+        nbands: usize,
+        engine: &Engine,
+        recovered: Option<&RecoverInfo>,
+        metrics: &Registry,
+    ) -> std::io::Result<Arc<Persister>> {
+        fs::create_dir_all(dir)?;
+        let (prior_gen, prior_watermark, base_seq) = match recovered {
+            Some(r) => (r.gen, r.ckpt_watermark, r.max_seq),
+            None => (0, 0, 0),
+        };
+        let nbands = nbands.max(1);
+        let persister = Persister {
+            dir: dir.to_path_buf(),
+            fsync,
+            cadence: cadence.max(1),
+            seq: AtomicU64::new(base_seq + 1),
+            crashed: AtomicBool::new(false),
+            wals: (0..nbands).map(|b| Mutex::new(wal::WalWriter::closed(b))).collect(),
+            inner: Mutex::new(CkptState {
+                gen: prior_gen,
+                watermark: prior_watermark,
+                prev_watermark: prior_watermark,
+                flushes_since: 0,
+            }),
+            appended_bytes: metrics.counter("wal.appended_bytes"),
+            fsyncs: metrics.counter("wal.fsyncs"),
+            ckpt_bytes: metrics.counter("checkpoint.bytes"),
+        };
+        persister.write_checkpoint(&CheckpointSource::from_engine(engine), base_seq)?;
+        Ok(Arc::new(persister))
+    }
+
+    /// Number of band WAL writers.
+    pub fn nbands(&self) -> usize {
+        self.wals.len()
+    }
+
+    /// Next unallocated sequence number (the banded orchestrator seeds
+    /// its stamp counter from this at spawn).
+    pub fn next_seq(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Allocate one global sequence number.
+    pub(crate) fn alloc_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Allocate `n` contiguous sequence numbers; returns the base.
+    pub(crate) fn alloc_seqs(&self, n: u64) -> u64 {
+        self.seq.fetch_add(n, Ordering::Relaxed)
+    }
+
+    /// Advance the allocator to at least `seq` (the banded epoch hands
+    /// its own counter back before a checkpoint so the watermark and
+    /// future single-writer allocations stay coherent).
+    pub(crate) fn bump_seq_to(&self, seq: u64) {
+        self.seq.fetch_max(seq, Ordering::Relaxed);
+    }
+
+    /// Simulate a crash: every subsequent disk write (append, fsync,
+    /// checkpoint, GC) becomes a no-op, so the clean-shutdown drain the
+    /// engines run on drop cannot retroactively persist state past the
+    /// kill point. Test-only in spirit, but safe to call at any time.
+    pub fn crash(&self) {
+        self.crashed.store(true, Ordering::SeqCst);
+    }
+
+    fn is_crashed(&self) -> bool {
+        self.crashed.load(Ordering::SeqCst)
+    }
+
+    fn wal_index(&self, band: usize) -> usize {
+        band.min(self.wals.len() - 1)
+    }
+
+    /// Append one accepted rating to `band`'s log.
+    pub(crate) fn append_rate(&self, band: usize, seq: u64, i: u32, j: u32, r: f32) {
+        self.append(band, &wal::WalRecord::Rate { seq, i, j, r });
+    }
+
+    /// Append one admitted batch (contiguous seqs from `base_seq`) to
+    /// the carrying band's log.
+    pub(crate) fn append_batch(&self, band: usize, base_seq: u64, batch: &[(u32, u32, f32)]) {
+        self.append(band, &wal::WalRecord::Batch { seq: base_seq, batch: batch.to_vec() });
+    }
+
+    /// Append an explicit flush marker: client-driven `FLUSH` points are
+    /// external inputs the replay cannot re-derive from the event
+    /// stream (threshold-triggered flushes replay deterministically and
+    /// are *not* logged).
+    pub(crate) fn append_flush(&self, band: usize, seq: u64) {
+        self.append(band, &wal::WalRecord::Flush { seq });
+    }
+
+    fn append(&self, band: usize, record: &wal::WalRecord) {
+        if self.is_crashed() {
+            return;
+        }
+        let frame = record.to_frame();
+        let mut writer = self.wals[self.wal_index(band)].lock().unwrap_or_else(|e| e.into_inner());
+        if writer.append(&self.dir, &frame).is_ok() {
+            self.appended_bytes.add(frame.len() as u64);
+            if self.fsync == FsyncPolicy::PerRecord && matches!(writer.sync(), Ok(true)) {
+                self.fsyncs.inc();
+            }
+        }
+    }
+
+    /// Flush-boundary hook for the single-writer engine (also reached
+    /// through [`crate::coordinator::shared::SharedEngine`]'s writer
+    /// thread): the caller guarantees no ingest is concurrently
+    /// allocating, so `next_seq - 1` is an exact watermark.
+    pub(crate) fn on_flush(&self, engine: &Engine) {
+        let watermark = self.next_seq() - 1;
+        self.note_applied_flush(&CheckpointSource::from_engine(engine), watermark);
+    }
+
+    /// Flush-boundary hook shared by both flavours: apply the per-flush
+    /// fsync policy and count down the checkpoint cadence. The caller
+    /// must guarantee `watermark` covers every allocated seq and that
+    /// `src` reflects the post-flush state (the banded epoch calls this
+    /// with all band locks held).
+    pub(crate) fn note_applied_flush(&self, src: &CheckpointSource<'_>, watermark: u64) {
+        if self.is_crashed() {
+            return;
+        }
+        if self.fsync == FsyncPolicy::PerFlush {
+            for wal in &self.wals {
+                let mut writer = wal.lock().unwrap_or_else(|e| e.into_inner());
+                if matches!(writer.sync(), Ok(true)) {
+                    self.fsyncs.inc();
+                }
+            }
+        }
+        let due = {
+            let mut st = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            st.flushes_since += 1;
+            st.flushes_since >= self.cadence
+        };
+        if due {
+            let _ = self.write_checkpoint(src, watermark);
+        }
+    }
+
+    /// Write checkpoint generation `gen + 1` atomically, roll every band
+    /// onto a fresh WAL segment starting at `watermark + 1`, and GC
+    /// checkpoints/segments the retained pair no longer needs.
+    fn write_checkpoint(&self, src: &CheckpointSource<'_>, watermark: u64) -> std::io::Result<()> {
+        if self.is_crashed() {
+            return Ok(());
+        }
+        let mut st = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let gen = st.gen + 1;
+        let bytes = checkpoint::write(&self.dir, gen, watermark, src)?;
+        self.ckpt_bytes.add(bytes as u64);
+        for wal in &self.wals {
+            let mut writer = wal.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = writer.sync();
+            writer.roll(watermark + 1);
+        }
+        // The generation we keep as fallback after this write is the old
+        // newest; segments are deletable only once fully covered by *its*
+        // watermark (see the module invariants).
+        let fallback_watermark = st.watermark;
+        st.prev_watermark = st.watermark;
+        st.watermark = watermark;
+        st.gen = gen;
+        st.flushes_since = 0;
+        drop(st);
+        self.gc(gen, fallback_watermark);
+        Ok(())
+    }
+
+    /// Delete checkpoints older than the newest two generations and WAL
+    /// segments fully covered by the fallback generation's watermark (a
+    /// segment is covered iff a later segment of the same band starts at
+    /// or below `fallback_watermark + 1`).
+    fn gc(&self, newest_gen: u64, fallback_watermark: u64) {
+        if self.is_crashed() {
+            return;
+        }
+        let Ok(listing) = fs::read_dir(&self.dir) else { return };
+        let mut segments: Vec<(usize, u64, PathBuf)> = Vec::new();
+        for entry in listing.flatten() {
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if let Some(gen) = checkpoint::parse_name(name) {
+                if gen + 1 < newest_gen {
+                    let _ = fs::remove_file(&path);
+                }
+            } else if let Some((band, start)) = wal::parse_name(name) {
+                segments.push((band, start, path));
+            }
+        }
+        segments.sort_unstable_by_key(|&(band, start, _)| (band, start));
+        for w in segments.windows(2) {
+            let (band, _, ref path) = w[0];
+            let (next_band, next_start, _) = (w[1].0, w[1].1);
+            if band == next_band && next_start <= fallback_watermark + 1 {
+                let _ = fs::remove_file(path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard IEEE test vector: crc32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // A single flipped bit must change the sum.
+        assert_ne!(crc32(b"123456788"), crc32(b"123456789"));
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_names() {
+        for policy in [FsyncPolicy::PerRecord, FsyncPolicy::PerFlush, FsyncPolicy::Off] {
+            assert_eq!(FsyncPolicy::parse(policy.name()), Some(policy));
+        }
+        assert_eq!(FsyncPolicy::parse("always"), None);
+    }
+}

@@ -1,0 +1,179 @@
+//! Startup recovery: newest valid checkpoint + WAL-tail replay.
+//!
+//! Recovery scans the persist directory for checkpoint generations in
+//! descending order and decodes the first one that passes its CRC (a
+//! corrupt newest generation falls back to the previous — the GC
+//! invariant in [`super`] guarantees its WAL tails still exist). The
+//! engine is rebuilt from the checkpoint bit-exactly, then every band's
+//! WAL records with seq beyond the checkpoint watermark are merged into
+//! global seq order and replayed through the normal ingest path — the
+//! same `rate`/`rate_many`/`flush` calls the live server would have
+//! made — so the recovered state is the state the never-crashed run
+//! would hold after the same events.
+//!
+//! # Invariants
+//!
+//! (Machine-checked: `cargo run -p lshmf-check` gates this section's
+//! presence in tier-1 CI.)
+//!
+//! * **Replay is the normal ingest path.** Records go through
+//!   [`Engine::rate`], [`Engine::rate_many`] and [`Engine::flush`] on
+//!   an engine with no persister attached — threshold-triggered flushes
+//!   re-fire deterministically, rejected events re-reject identically,
+//!   and nothing is re-logged during replay.
+//! * **The watermark filter is exact.** A record replays iff its seq
+//!   exceeds the checkpoint watermark; batches are never split by a
+//!   watermark (appends and checkpoints are mutually excluded by the
+//!   band locks), so the filter never double-applies half a batch.
+//! * **Damage degrades, never panics.** A torn WAL tail truncates that
+//!   band's history at the tear (`wal.torn_tail` counts it); a corrupt
+//!   checkpoint falls back a generation; an empty or missing directory
+//!   recovers to `None` and the caller trains fresh.
+
+use super::{checkpoint, wal};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::stream::{StreamConfig, StreamOrchestrator, StreamParts};
+use crate::metrics::Registry;
+use crate::mf::neighbourhood::CulshConfig;
+use crate::sparse::Csr;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Bookkeeping from a successful recovery, consumed by
+/// [`super::Persister::create`] to continue the on-disk history.
+#[derive(Clone, Debug)]
+pub struct RecoverInfo {
+    /// Generation of the checkpoint recovery loaded.
+    pub gen: u64,
+    /// That checkpoint's seq watermark.
+    pub ckpt_watermark: u64,
+    /// Highest event seq reflected in the recovered state (watermark if
+    /// no WAL tail survived).
+    pub max_seq: u64,
+    /// Events replayed from WAL tails.
+    pub replayed_events: u64,
+    /// Torn/corrupt WAL tails skipped.
+    pub torn_tails: u64,
+}
+
+/// Recover an [`Engine`] from `dir`, or `Ok(None)` when no valid
+/// checkpoint exists (first boot, or a wiped directory) — the caller
+/// trains fresh in that case. `cfg`/`train_cfg` come from the *current*
+/// config: tuning (batch sizes, epochs, limits) follows the operator,
+/// while the learned state (factors, accumulators, RNG) follows disk.
+pub fn recover(
+    dir: &Path,
+    cfg: StreamConfig,
+    train_cfg: CulshConfig,
+    metrics: &Registry,
+) -> std::io::Result<Option<(Engine, RecoverInfo)>> {
+    if !dir.is_dir() {
+        return Ok(None);
+    }
+    let mut ckpts: Vec<(u64, PathBuf)> = Vec::new();
+    let mut segments: Vec<(usize, u64, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)?.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if let Some(gen) = checkpoint::parse_name(name) {
+            ckpts.push((gen, path));
+        } else if let Some((band, start)) = wal::parse_name(name) {
+            segments.push((band, start, path));
+        }
+    }
+    ckpts.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    let mut decoded = None;
+    for (_, path) in &ckpts {
+        let Ok(bytes) = std::fs::read(path) else { continue };
+        if let Some(ckpt) = checkpoint::decode(&bytes) {
+            decoded = Some(ckpt);
+            break;
+        }
+    }
+    let Some(ckpt) = decoded else { return Ok(None) };
+
+    // Rebuild the last-write-wins re-rating index from the stored entry
+    // order (entries are unique per cell by the orchestrator invariant).
+    let mut cells: HashMap<(u32, u32), u32> = HashMap::with_capacity(ckpt.triples.nnz());
+    for (pos, &(i, j, _)) in ckpt.triples.entries().iter().enumerate() {
+        cells.insert((i, j), pos as u32);
+    }
+    let combined = Arc::new(Csr::from_triples(&ckpt.triples));
+    let parts = StreamParts {
+        model: ckpt.model,
+        hash_state: ckpt.hash,
+        combined_t: ckpt.triples,
+        combined,
+        cells,
+        buffer: ckpt.buffer,
+        last_flush_cols: Vec::new(),
+        last_flush_topk_moved: Vec::new(),
+        last_flush_rows: Vec::new(),
+        cfg,
+        train_cfg,
+        rng: ckpt.rng,
+        metrics: metrics.clone(),
+    };
+    let mut engine = Engine::new(
+        StreamOrchestrator::from_parts(parts),
+        ckpt.clamp,
+        metrics.clone(),
+    );
+    engine.set_version(ckpt.engine_version);
+
+    // Gather every band's tail records beyond the watermark; a torn
+    // frame ends that band's readable history.
+    let torn_counter = metrics.counter("wal.torn_tail");
+    let mut torn_tails = 0u64;
+    let mut tail: Vec<wal::WalRecord> = Vec::new();
+    segments.sort_unstable_by_key(|&(band, start, _)| (band, start));
+    let mut skip_band = None;
+    for (band, _, path) in &segments {
+        if skip_band == Some(*band) {
+            continue;
+        }
+        let (records, torn) = wal::read_segment(path)?;
+        for record in records {
+            if record.last_seq() > ckpt.watermark {
+                tail.push(record);
+            }
+        }
+        if torn {
+            torn_counter.inc();
+            torn_tails += 1;
+            skip_band = Some(*band);
+        }
+    }
+    tail.sort_by_key(|r| r.seq());
+
+    // Replay in global arrival order through the normal ingest path.
+    let replayed_counter = metrics.counter("recover.replayed_events");
+    let mut replayed = 0u64;
+    let mut max_seq = ckpt.watermark;
+    for record in &tail {
+        max_seq = max_seq.max(record.last_seq());
+        match record {
+            wal::WalRecord::Rate { i, j, r, .. } => {
+                engine.rate(*i, *j, *r);
+                replayed += 1;
+            }
+            wal::WalRecord::Batch { batch, .. } => {
+                engine.rate_many(batch);
+                replayed += batch.len() as u64;
+            }
+            wal::WalRecord::Flush { .. } => {
+                engine.flush();
+            }
+        }
+    }
+    replayed_counter.add(replayed);
+    let info = RecoverInfo {
+        gen: ckpt.gen,
+        ckpt_watermark: ckpt.watermark,
+        max_seq,
+        replayed_events: replayed,
+        torn_tails,
+    };
+    Ok(Some((engine, info)))
+}

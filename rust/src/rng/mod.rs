@@ -48,6 +48,17 @@ impl Rng {
         Rng { s, gauss_spare: None }
     }
 
+    /// Raw generator state for checkpointing: the xoshiro words plus the
+    /// cached Box–Muller spare (bit-exact resume requires both).
+    pub(crate) fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild from a [`Rng::state`] snapshot.
+    pub(crate) fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Rng {
+        Rng { s, gauss_spare }
+    }
+
     /// Derive the `idx`-th independent child stream (for worker threads).
     pub fn split(&self, idx: u64) -> Rng {
         // Mix the current state with the index through SplitMix64; children

@@ -1,0 +1,563 @@
+//! Crash-recovery integration tests for the durability subsystem
+//! (`lshmf::persist`). The headline property kills a persisted run at
+//! *every* op boundary — including the boundaries right after
+//! auto-flush-triggering and universe-growing events — recovers from
+//! disk, finishes the script, and asserts the final predict grid and
+//! Top-N rankings are **bit-identical** to a never-crashed reference,
+//! on both the shared single-writer and the banded multi-writer
+//! engines, at checkpoint cadences 1 and 3. Satellites: a torn or
+//! bit-flipped WAL tail degrades without panicking, a corrupt newest
+//! checkpoint falls back one generation and replays to the identical
+//! state, and `MPREDICT` answers from the per-row Top-N cache
+//! bit-identically to the uncached score path.
+
+use lshmf::coordinator::banded::{BandedEngine, BandedHandle};
+use lshmf::coordinator::server;
+use lshmf::coordinator::shared::{SharedEngine, WriterHandle};
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::Engine;
+use lshmf::lsh::{OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::persist::{recover, FsyncPolicy, Persister, RecoverInfo};
+use lshmf::rng::Rng;
+use lshmf::sparse::{Csc, Csr, Triples};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+const SEED: u64 = 91;
+const BANDED_WRITERS: usize = 2;
+
+fn stream_cfg() -> StreamConfig {
+    StreamConfig { batch_size: 4, ..Default::default() }
+}
+
+fn train_cfg() -> CulshConfig {
+    CulshConfig { f: 3, k: 3, epochs: 2, ..Default::default() }
+}
+
+/// Small trained engine over a dense-ish random fixture (the serving
+/// test fixture, shrunk — every call with the same seed is bit-exact).
+fn engine(seed: u64) -> Engine {
+    let mut rng = Rng::seeded(seed);
+    let (m, n) = (20, 12);
+    let mut t = Triples::new(m, n);
+    let mut seen = std::collections::HashSet::new();
+    while t.nnz() < 100 {
+        let (i, j) = (rng.below(m), rng.below(n));
+        if seen.insert((i, j)) {
+            t.push(i, j, 1.0 + rng.f32() * 4.0);
+        }
+    }
+    let csr = Csr::from_triples(&t);
+    let csc = Csc::from_triples(&t);
+    let lsh = SimLsh::new(1, 4, 8, 2);
+    let hash_state = OnlineHashState::build(lsh, &csc);
+    let (topk, _) = hash_state.topk(3, &mut rng);
+    let cfg = train_cfg();
+    let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut rng);
+    let metrics = Registry::new();
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        t,
+        stream_cfg(),
+        cfg,
+        rng.split(1),
+        metrics.clone(),
+    );
+    Engine::new(orch, (1.0, 5.0), metrics)
+}
+
+static DIR_ID: AtomicUsize = AtomicUsize::new(0);
+
+/// A fresh scratch directory under the system temp dir (no tempfile
+/// crate offline); the caller removes it on success.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let id = DIR_ID.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "lshmf-persist-{tag}-{}-{id}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One scripted client action, applied identically to every flavour.
+#[derive(Clone, Debug)]
+enum Op {
+    Rate(u32, u32, f32),
+    Batch(Vec<(u32, u32, f32)>),
+    Flush,
+}
+
+/// The acceptance script: threshold-triggered flushes (batch_size 4),
+/// explicit flushes, `MRATE` batches, and universe growth on both axes
+/// (base dims are 20x12) — so kill points land before, inside, and
+/// after flush- and growth-carrying events.
+fn script() -> Vec<Op> {
+    vec![
+        Op::Rate(0, 1, 4.0),
+        Op::Rate(1, 2, 3.5),
+        Op::Batch(vec![(2, 3, 2.5), (3, 4, 5.0), (4, 5, 1.5)]), // crosses the threshold
+        Op::Rate(5, 0, 3.0),
+        Op::Flush, // explicit: logged as a WAL marker
+        Op::Rate(22, 2, 4.5), // row growth
+        Op::Rate(3, 14, 2.0), // column growth
+        Op::Batch(vec![(6, 1, 3.0), (7, 2, 4.0), (8, 3, 2.0), (9, 4, 5.0)]), // flushes the growth
+        Op::Rate(10, 5, 3.5),
+        Op::Rate(11, 6, 1.0),
+        Op::Flush,
+        Op::Batch(vec![(24, 11, 4.0), (0, 0, 2.0)]), // row growth inside a batch
+        Op::Rate(12, 7, 4.5), // left buffered until the closing flush
+    ]
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Flavour {
+    Shared,
+    Banded,
+}
+
+impl Flavour {
+    fn nbands(self) -> usize {
+        match self {
+            Flavour::Shared => 1,
+            Flavour::Banded => BANDED_WRITERS,
+        }
+    }
+}
+
+/// Uniform driver over both concurrent serving flavours.
+enum Driver {
+    Shared(SharedEngine, WriterHandle),
+    Banded(BandedEngine, BandedHandle),
+}
+
+impl Driver {
+    fn spawn(flavour: Flavour, engine: Engine) -> Driver {
+        match flavour {
+            Flavour::Shared => {
+                let (shared, writer) = SharedEngine::spawn(engine);
+                Driver::Shared(shared, writer)
+            }
+            Flavour::Banded => {
+                let (banded, handle) = BandedEngine::spawn(engine, BANDED_WRITERS);
+                Driver::Banded(banded, handle)
+            }
+        }
+    }
+
+    fn apply(&self, op: &Op) {
+        match (self, op) {
+            (Driver::Shared(s, _), Op::Rate(i, j, r)) => drop(s.rate(*i, *j, *r)),
+            (Driver::Shared(s, _), Op::Batch(b)) => drop(s.rate_many(b)),
+            (Driver::Shared(s, _), Op::Flush) => drop(s.flush()),
+            (Driver::Banded(b, _), Op::Rate(i, j, r)) => drop(b.rate(*i, *j, *r)),
+            (Driver::Banded(b, _), Op::Batch(batch)) => drop(b.rate_many(batch)),
+            (Driver::Banded(b, _), Op::Flush) => drop(b.flush()),
+        }
+    }
+
+    fn join(self) -> Engine {
+        match self {
+            Driver::Shared(shared, writer) => {
+                drop(shared);
+                writer.join()
+            }
+            Driver::Banded(banded, handle) => {
+                drop(banded);
+                handle.join()
+            }
+        }
+    }
+}
+
+/// Bit-exact observable state: flush version, dims, buffered count, the
+/// full clamped predict grid, and every row's Top-5 (column ids and
+/// score bits).
+fn fingerprint(e: &Engine) -> (u64, (usize, usize), usize, Vec<u64>) {
+    let (m, n) = e.dims();
+    let mut bits = Vec::with_capacity(m * n + m * 5);
+    for i in 0..m {
+        for j in 0..n {
+            bits.push(e.predict(i, j).map_or(0, |v| u64::from(v.to_bits()) + 1));
+        }
+    }
+    for i in 0..m {
+        for (c, s) in e.top_n(i, 5) {
+            bits.push((u64::from(c) << 32) | u64::from(s.to_bits()));
+        }
+    }
+    (e.version(), (m, n), e.buffered(), bits)
+}
+
+/// Run the full script on `flavour` with no persistence attached and
+/// return the never-crashed reference fingerprint.
+fn reference_run(flavour: Flavour, ops: &[Op]) -> (u64, (usize, usize), usize, Vec<u64>) {
+    let driver = Driver::spawn(flavour, engine(SEED));
+    for op in ops {
+        driver.apply(op);
+    }
+    driver.apply(&Op::Flush);
+    fingerprint(&driver.join())
+}
+
+/// Recover from `dir`, reattach a persister continuing the on-disk
+/// history, and return the engine ready to resume.
+fn recover_and_reattach(
+    dir: &Path,
+    cadence: usize,
+    nbands: usize,
+) -> (Engine, RecoverInfo) {
+    let metrics = Registry::new();
+    let (mut e, info) = recover(dir, stream_cfg(), train_cfg(), &metrics)
+        .expect("recovery IO")
+        .expect("the attach checkpoint always exists");
+    let p = Persister::create(
+        dir,
+        FsyncPolicy::PerFlush,
+        cadence,
+        nbands,
+        &e,
+        Some(&info),
+        &metrics,
+    )
+    .expect("reattach persister");
+    e.attach_persister(p);
+    (e, info)
+}
+
+/// The headline property: kill a persisted run at every op boundary,
+/// recover from disk, finish the script, and the final state is
+/// bit-identical to the never-crashed reference.
+fn crash_recovery_is_bit_exact(flavour: Flavour) {
+    let ops = script();
+    let want = reference_run(flavour, &ops);
+    for cadence in [1usize, 3] {
+        for kill in 0..=ops.len() {
+            let dir = scratch_dir("crash");
+            // Run 1: persisted, killed after `kill` ops. The crash()
+            // switch freezes the disk, so the clean-shutdown drain the
+            // join performs cannot persist state past the kill point.
+            {
+                let mut e = engine(SEED);
+                let metrics = e.metrics().clone();
+                let p = Persister::create(
+                    &dir,
+                    FsyncPolicy::PerFlush,
+                    cadence,
+                    flavour.nbands(),
+                    &e,
+                    None,
+                    &metrics,
+                )
+                .expect("create persister");
+                e.attach_persister(Arc::clone(&p));
+                let driver = Driver::spawn(flavour, e);
+                for op in &ops[..kill] {
+                    driver.apply(op);
+                }
+                p.crash();
+                drop(driver.join());
+            }
+            // Run 2: recover, reattach, finish the script.
+            let (e, info) = recover_and_reattach(&dir, cadence, flavour.nbands());
+            assert_eq!(
+                info.torn_tails, 0,
+                "{flavour:?} cadence {cadence} kill {kill}: clean files"
+            );
+            let driver = Driver::spawn(flavour, e);
+            for op in &ops[kill..] {
+                driver.apply(op);
+            }
+            driver.apply(&Op::Flush);
+            let got = fingerprint(&driver.join());
+            assert_eq!(
+                got, want,
+                "{flavour:?} cadence {cadence} kill {kill}: recovered state drifted"
+            );
+            std::fs::remove_dir_all(&dir).expect("cleanup");
+        }
+    }
+}
+
+#[test]
+fn crash_recovery_is_bit_exact_shared() {
+    crash_recovery_is_bit_exact(Flavour::Shared);
+}
+
+#[test]
+fn crash_recovery_is_bit_exact_banded() {
+    crash_recovery_is_bit_exact(Flavour::Banded);
+}
+
+fn wal_segments(dir: &Path) -> Vec<PathBuf> {
+    let mut segs: Vec<PathBuf> = std::fs::read_dir(dir)
+        .expect("read persist dir")
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("wal-") && n.ends_with(".log"))
+        })
+        .collect();
+    segs.sort();
+    segs
+}
+
+fn checkpoints(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let mut ckpts: Vec<(u64, PathBuf)> = std::fs::read_dir(dir)
+        .expect("read persist dir")
+        .flatten()
+        .map(|e| e.path())
+        .filter_map(|p| {
+            let name = p.file_name()?.to_str()?;
+            let gen = name.strip_prefix("ckpt-")?.strip_suffix(".bin")?.parse().ok()?;
+            Some((gen, p))
+        })
+        .collect();
+    ckpts.sort();
+    ckpts
+}
+
+/// Leave three un-flushed ratings in a single-band WAL, then damage the
+/// final record: the tail truncates at the tear, `wal.torn_tail` counts
+/// it, and recovery still succeeds with the surviving prefix.
+fn damaged_tail_recovers(damage: impl FnOnce(&Path)) {
+    let dir = scratch_dir("torn");
+    {
+        let mut e = engine(SEED);
+        let metrics = e.metrics().clone();
+        let p = Persister::create(&dir, FsyncPolicy::Off, 100, 1, &e, None, &metrics)
+            .expect("create persister");
+        e.attach_persister(p);
+        for k in 0..3u32 {
+            e.rate(k, k % 12, 3.0 + k as f32 * 0.5);
+        }
+        // batch_size 4: nothing flushed, all three live in the tail
+    }
+    let segs = wal_segments(&dir);
+    assert_eq!(segs.len(), 1, "one band, one segment: {segs:?}");
+    damage(&segs[0]);
+    let metrics = Registry::new();
+    let (e, info) = recover(&dir, stream_cfg(), train_cfg(), &metrics)
+        .expect("recovery IO")
+        .expect("checkpoint survives WAL damage");
+    assert_eq!(info.torn_tails, 1);
+    assert_eq!(info.replayed_events, 2, "the damaged final record is dropped");
+    assert_eq!(e.buffered(), 2);
+    assert!(e.predict(0, 0).is_some(), "recovered engine serves reads");
+    assert!(
+        metrics.snapshot().contains("counter wal.torn_tail 1"),
+        "{}",
+        metrics.snapshot()
+    );
+    std::fs::remove_dir_all(&dir).expect("cleanup");
+}
+
+#[test]
+fn truncated_wal_tail_is_skipped_not_fatal() {
+    damaged_tail_recovers(|seg| {
+        let bytes = std::fs::read(seg).expect("read segment");
+        std::fs::write(seg, &bytes[..bytes.len() - 3]).expect("truncate tail");
+    });
+}
+
+#[test]
+fn bit_flipped_wal_tail_is_skipped_not_fatal() {
+    damaged_tail_recovers(|seg| {
+        let mut bytes = std::fs::read(seg).expect("read segment");
+        let n = bytes.len();
+        bytes[n - 5] ^= 0x40; // inside the final record's payload: CRC must catch it
+        std::fs::write(seg, &bytes).expect("write flipped segment");
+    });
+}
+
+/// A corrupt newest checkpoint falls back to the previous generation,
+/// whose surviving WAL tail replays forward to the *identical* state —
+/// recovery before and after the corruption fingerprints bit-equal.
+#[test]
+fn corrupt_newest_checkpoint_falls_back_a_generation() {
+    let dir = scratch_dir("ckpt");
+    {
+        let mut e = engine(SEED);
+        let metrics = e.metrics().clone();
+        let p = Persister::create(&dir, FsyncPolicy::Off, 1, 1, &e, None, &metrics)
+            .expect("create persister");
+        e.attach_persister(p);
+        e.rate(0, 1, 4.0);
+        e.rate(1, 2, 3.0);
+        e.flush(); // checkpoint generation 2
+        e.rate(2, 3, 2.0);
+        e.rate(3, 4, 5.0);
+        e.flush(); // checkpoint generation 3
+        e.rate(4, 5, 3.5); // tail past generation 3
+        e.rate(5, 6, 1.5);
+    }
+    let metrics = Registry::new();
+    let (intact, info) = recover(&dir, stream_cfg(), train_cfg(), &metrics)
+        .expect("recovery IO")
+        .expect("valid history");
+    assert_eq!(info.gen, 3);
+    assert_eq!(info.replayed_events, 2, "only the post-checkpoint tail replays");
+    let want = fingerprint(&intact);
+
+    let ckpts = checkpoints(&dir);
+    let (newest_gen, newest) = ckpts.last().expect("checkpoints on disk");
+    assert_eq!(*newest_gen, 3);
+    let mut bytes = std::fs::read(newest).expect("read checkpoint");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(newest, &bytes).expect("corrupt checkpoint");
+
+    let metrics = Registry::new();
+    let (fallback, info) = recover(&dir, stream_cfg(), train_cfg(), &metrics)
+        .expect("recovery IO")
+        .expect("fallback generation recovers");
+    assert_eq!(info.gen, 2, "fell back one generation");
+    assert_eq!(
+        info.replayed_events, 4,
+        "the longer tail (two flushed events + two buffered) replays"
+    );
+    assert_eq!(
+        fingerprint(&fallback),
+        want,
+        "fallback + replay reproduces the identical state"
+    );
+    std::fs::remove_dir_all(&dir).expect("cleanup");
+}
+
+/// `MPREDICT` rides the per-row Top-N cache: priming a row via `TOPN`
+/// lets `predict_many` answer from the cached per-band candidate lists,
+/// bit-identically to the uncached score path; a column absent from the
+/// lists (rated) misses all-or-nothing, and out-of-range columns come
+/// back `None` on the cached path too.
+#[test]
+fn mpredict_answers_from_primed_cache_bit_identically() {
+    let e = engine(SEED);
+    let recs = e.top_n(2, 5);
+    assert!(!recs.is_empty());
+    let cols: Vec<u32> = recs.iter().map(|(j, _)| *j).collect();
+
+    let (h0, m0) = e.cache().mpredict_counts();
+    let got = e.predict_many(2, &cols).expect("row in range");
+    let (h1, _) = e.cache().mpredict_counts();
+    assert_eq!(h1, h0 + 1, "primed row answers MPREDICT from the cache");
+    for (&j, p) in cols.iter().zip(&got) {
+        assert_eq!(
+            p.map(f32::to_bits),
+            e.predict(2, j as usize).map(f32::to_bits),
+            "cached score for col {j} drifted from the direct path"
+        );
+    }
+
+    // a rated column is absent from the candidate lists: all-or-nothing
+    // miss, the uncached path answers, parity still holds
+    let rated: u32 = e.matrix().row(2).next().map(|(j, _)| j as u32).expect("row 2 has ratings");
+    let mut with_rated = cols.clone();
+    with_rated.push(rated);
+    let got = e.predict_many(2, &with_rated).expect("row in range");
+    let (_, m1) = e.cache().mpredict_counts();
+    assert!(m1 > m0, "rated column forces the uncached path");
+    for (&j, p) in with_rated.iter().zip(&got) {
+        assert_eq!(p.map(f32::to_bits), e.predict(2, j as usize).map(f32::to_bits), "col {j}");
+    }
+
+    // out-of-range columns are None on the cached path, same as uncached
+    let mut with_oob = cols.clone();
+    with_oob.push(999);
+    let got = e.predict_many(2, &with_oob).expect("row in range");
+    assert_eq!(got.last(), Some(&None), "out-of-range col maps to None");
+    let (h2, _) = e.cache().mpredict_counts();
+    assert_eq!(h2, h1 + 1, "oob columns do not break the cache hit");
+
+    // the concurrent flavour wires the same fast path
+    let (shared, writer) = SharedEngine::spawn(engine(SEED));
+    let recs = shared.top_n(2, 5);
+    let cols: Vec<u32> = recs.iter().map(|(j, _)| *j).collect();
+    let got = shared.predict_many(2, &cols).expect("row in range");
+    for (&j, p) in cols.iter().zip(&got) {
+        assert_eq!(
+            p.map(f32::to_bits),
+            shared.predict(2, j as usize).map(f32::to_bits),
+            "shared flavour col {j}"
+        );
+    }
+    writer.join();
+}
+
+/// Tier-2 smoke (run by ci.sh via `--ignored` behind its network gate):
+/// a served engine persists over TCP, a second boot recovers the
+/// flushed state from disk and serves reads from it.
+#[test]
+#[ignore = "tier-2 smoke: ci.sh runs it via `cargo test -q --test persist -- --ignored`"]
+fn recovery_smoke_over_tcp() {
+    let dir = scratch_dir("smoke");
+    let first_boot_version;
+    {
+        let mut e = engine(SEED);
+        let metrics = e.metrics().clone();
+        let p = Persister::create(&dir, FsyncPolicy::PerFlush, 1, 1, &e, None, &metrics)
+            .expect("create persister");
+        e.attach_persister(p);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let server_thread = {
+            let stop = stop.clone();
+            std::thread::spawn(move || server::serve(e, listener, stop, 2).unwrap())
+        };
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        for k in 0..6u32 {
+            conn.write_all(format!("RATE {k} {} 4.0\n", k % 12).as_bytes()).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("OK"), "{line}");
+        }
+        conn.write_all(b"FLUSH\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK flushed"), "{line}");
+        conn.write_all(b"QUIT\n").unwrap();
+        drop(conn);
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr);
+        let engine = server_thread.join().unwrap();
+        first_boot_version = engine.version();
+        assert!(first_boot_version >= 2, "threshold + explicit flush both applied");
+    }
+
+    let metrics = Registry::new();
+    let (e, info) = recover(&dir, stream_cfg(), train_cfg(), &metrics)
+        .expect("recovery IO")
+        .expect("persisted history recovers");
+    assert!(info.gen >= 2, "flush-boundary checkpoints were written");
+    assert_eq!(e.version(), first_boot_version, "resumes at the flushed version");
+    assert_eq!(e.buffered(), 0, "everything was flushed before shutdown");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let stop = stop.clone();
+        std::thread::spawn(move || server::serve(e, listener, stop, 2).unwrap())
+    };
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"PREDICT 0 0\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("PRED "), "recovered server serves reads: {line}");
+    conn.write_all(b"QUIT\n").unwrap();
+    drop(conn);
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    server_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).expect("cleanup");
+}
