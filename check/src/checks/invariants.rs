@@ -8,7 +8,7 @@ use crate::lexer::SourceFile;
 use crate::Diagnostic;
 
 /// Modules required to carry a `//! # Invariants` section.
-pub const INVARIANT_MODULES: [&str; 11] = [
+pub const INVARIANT_MODULES: [&str; 12] = [
     "coordinator/stream.rs",
     "coordinator/banded.rs",
     "coordinator/shared.rs",
@@ -17,6 +17,7 @@ pub const INVARIANT_MODULES: [&str; 11] = [
     "coordinator/cache.rs",
     "coordinator/server.rs",
     "coordinator/admission.rs",
+    "coordinator/router.rs",
     "persist/wal.rs",
     "persist/checkpoint.rs",
     "persist/recover.rs",

@@ -17,6 +17,12 @@ echo "==> cargo test -q"
 # persisted run at every op boundary (both shared and banded flavours)
 # and asserts bit-exact recovery, plus the damaged-file fixtures
 # (torn/bit-flipped WAL tail, corrupt checkpoint) — tier-1, no opt-in.
+# The route-tier gate rides in here as well: tests/router.rs drives
+# randomized scripts through a router over 2- and 3-backend fleets of
+# live serve processes and asserts bit-identical replies vs one
+# monolithic engine, then kills a backend through a fault proxy and
+# asserts typed ERR unavailable (never a hang), counted retries, and
+# replay-to-parity recovery — tier-1, no opt-in.
 cargo test -q
 
 # Recovery smoke: boot a persisted server over TCP, ingest + flush,

@@ -158,6 +158,32 @@ impl Args {
         cfg.validate()?;
         Ok(cfg)
     }
+
+    /// Build the route-tier config from the `--config` file. The fleet
+    /// layout is file-only (no flag overrides), so a missing file or a
+    /// config carrying no route sections is a pointed error instead of
+    /// an empty-fleet validation failure.
+    pub fn route_config(&self) -> Result<crate::config::RouteConfig> {
+        let path = self.get("config").ok_or_else(|| {
+            Error::Config(
+                "route needs --config <file> carrying a [route] section and at least one \
+                 [[route.backend]]"
+                    .into(),
+            )
+        })?;
+        let path = std::path::Path::new(path);
+        let text = std::fs::read_to_string(path)?;
+        let origin = path.display().to_string();
+        let (tree, spans) = crate::config::parse_spanned(&text)
+            .map_err(|e| Error::Config(format!("{origin}: {e}")))?;
+        if !crate::config::RouteConfig::present(&tree) {
+            return Err(Error::Config(format!(
+                "{origin}: no [route] section — the route tier is configured by [route] plus \
+                 one [[route.backend]] per downstream serve process"
+            )));
+        }
+        crate::config::RouteConfig::from_tree(&tree, &spans, &origin)
+    }
 }
 
 #[cfg(test)]

@@ -329,6 +329,45 @@ pub fn serve(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// `route`: the multi-node tier. No model is trained here — the
+/// downstream `serve` processes own the engines; the router owns write
+/// ordering, scatter/gather, and fault handling. The
+/// `[server]`/`[limits]`/`[metrics]` sections of the same `--config`
+/// file govern the front-end listener (port, pool width, codec,
+/// admission, Prometheus export) exactly as they do for `serve`;
+/// `[route]` + `[[route.backend]]` describe the backend fleet and the
+/// router's fault policy.
+pub fn route(args: &mut Args) -> Result<()> {
+    let route_cfg = args.route_config()?;
+    let serve_cfg = args.serve_config()?;
+    let metrics = Registry::new();
+    let router = crate::coordinator::Router::new(&route_cfg, metrics);
+    let listener = std::net::TcpListener::bind(("0.0.0.0", serve_cfg.server.port))?;
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let d = route_cfg.backends.len();
+    eprintln!(
+        "# routing on port {} over {} backend(s) ({} conn thread(s), codec {}{})",
+        serve_cfg.server.port,
+        d,
+        serve_cfg.server.threads,
+        serve_cfg.server.codec.name(),
+        if serve_cfg.metrics.enabled {
+            format!(", metrics on port {}", serve_cfg.metrics.port)
+        } else {
+            String::new()
+        },
+    );
+    for (i, b) in route_cfg.backends.iter().enumerate() {
+        // Band boundaries mirror sparse::band_of: backend i owns
+        // columns [ceil(i*cols/d), ceil((i+1)*cols/d)).
+        let lo = (i * route_cfg.cols + d - 1) / d;
+        let hi = ((i + 1) * route_cfg.cols + d - 1) / d;
+        eprintln!("#   backend{i} {} owns cols [{lo}, {hi})", b.addr);
+    }
+    crate::coordinator::server::serve_route(router, listener, stop, &serve_cfg)?;
+    Ok(())
+}
+
 pub fn info(_args: &mut Args) -> Result<()> {
     let dir = crate::runtime::Runtime::default_dir();
     if !crate::runtime::Runtime::available(&dir) {

@@ -22,6 +22,12 @@
 //!                 [metrics] sections cover the whole serving surface
 //!                 (admission control, Prometheus export); flags are
 //!                 overrides into the same ServeConfig.
+//! lshmf route     --config lshmf.toml — multi-node route tier: front a
+//!                 fleet of `serve` processes ([[route.backend]]) with
+//!                 replicated writes and column-band scatter/gather
+//!                 reads, bit-identical to one monolithic engine (the
+//!                 [server]/[limits]/[metrics] sections govern the
+//!                 front-end listener exactly as for serve)
 //! lshmf info      — artifact bundle status (PJRT graphs available?)
 //! ```
 //!
@@ -54,6 +60,7 @@ pub fn run(argv: &[String]) -> crate::Result<()> {
         "train" => commands::train(&mut args),
         "online" => commands::online(&mut args),
         "serve" => commands::serve(&mut args),
+        "route" => commands::route(&mut args),
         "info" => commands::info(&mut args),
         "help" | "" => {
             print!("{}", HELP);
@@ -75,6 +82,11 @@ COMMANDS:
   train      train a model and report the RMSE-vs-time curve
   online     run the Table 9 online-learning protocol
   serve      train, then serve predictions over TCP (see server.rs verbs)
+  route      front a fleet of serve processes (the [route] and
+             [[route.backend]] config sections) with the same wire
+             protocol: writes replicate in one global order, reads
+             scatter/gather by column band, dead backends answer typed
+             ERR unavailable and replay back to parity on recovery
   info       show the AOT artifact bundle status
   help       this text
 

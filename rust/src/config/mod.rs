@@ -9,6 +9,7 @@
 //! what it overrides.
 
 mod experiment;
+mod route;
 mod serve;
 mod toml;
 
@@ -16,6 +17,7 @@ pub use experiment::{
     DatasetChoice, DatasetSection, ExperimentConfig, LshChoice, LshSection, ModelConfig,
     OnlineConfig, RotationConfig, TrainerChoice, TrainerSection,
 };
+pub use route::{RouteBackend, RouteConfig};
 pub use serve::{
     parse_codec, parse_flush_mode, EngineMode, EngineSection, FlushSection, LimitsSection,
     MetricsSection, PersistSection, ServeConfig, ServerSection,

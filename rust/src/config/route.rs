@@ -1,0 +1,353 @@
+//! Typed route-tier configuration: the `[route]` / `[[route.backend]]`
+//! sections of `route --config lshmf.toml`.
+//!
+//! The route tier fronts N downstream `serve` processes (see
+//! `coordinator::router`). Its sections are **closed** exactly like the
+//! serve sections: an unknown key inside `[route]` or any
+//! `[[route.backend]]` element is rejected with the `file:line` of the
+//! offender. The front-end listener itself (`port`, `threads`, codec,
+//! admission limits, metrics) is still configured by the `[server]` /
+//! `[limits]` / `[metrics]` sections of the same file — `[route]` only
+//! describes the backend fleet and the router's fault policy.
+
+use super::toml::{parse_spanned, Spans, Tree, Value};
+use crate::{Error, Result};
+
+/// One downstream `serve` process (`[[route.backend]]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteBackend {
+    /// `host:port` of the backend's TCP listener.
+    pub addr: String,
+}
+
+/// `[route]` + `[[route.backend]]` — the backend fleet and fault policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteConfig {
+    /// Column extent of the ownership map: col ids are banded over
+    /// `0..cols` with `sparse::band_of`, one band per backend. Ids at
+    /// or beyond `cols` clamp into the last band, so a grown matrix
+    /// keeps routing (coarsely) rather than erroring.
+    pub cols: usize,
+    /// Health-probe cadence: every tick the router probes each backend
+    /// (liveness check when up, reconnect attempt when down).
+    pub probe_interval_ms: u64,
+    /// Base reconnect/retry backoff; doubles per consecutive failure.
+    pub retry_backoff_ms: u64,
+    /// Backoff ceiling (jitter rides on top of the capped value).
+    pub retry_backoff_max_ms: u64,
+    /// Read-path attempts per request before answering `Unavailable`
+    /// (the first try plus `retry_attempts - 1` retries).
+    pub retry_attempts: usize,
+    /// Read deadline on backend sockets: a backend that accepts bytes
+    /// but never answers is indistinguishable from a dead one, so every
+    /// router-side connection carries this timeout (0 disables).
+    pub io_timeout_ms: u64,
+    /// The fleet, in `[[route.backend]]` declaration order; backend `i`
+    /// owns column band `i`.
+    pub backends: Vec<RouteBackend>,
+}
+
+impl Default for RouteConfig {
+    fn default() -> Self {
+        RouteConfig {
+            cols: 65_536,
+            probe_interval_ms: 500,
+            retry_backoff_ms: 50,
+            retry_backoff_max_ms: 2_000,
+            retry_attempts: 3,
+            io_timeout_ms: 2_000,
+            backends: Vec::new(),
+        }
+    }
+}
+
+const ROUTE_KEYS: &[&str] = &[
+    "cols",
+    "probe_interval_ms",
+    "retry_backoff_ms",
+    "retry_backoff_max_ms",
+    "retry_attempts",
+    "io_timeout_ms",
+];
+const BACKEND_KEYS: &[&str] = &["addr"];
+
+fn get_u64(tree: &Tree, sec: &str, key: &str, default: u64) -> Result<u64> {
+    match tree.get(sec).and_then(|s| s.get(key)) {
+        None => Ok(default),
+        Some(v) => match v.as_int() {
+            Some(i) if i >= 0 => Ok(i as u64),
+            Some(_) => Err(Error::Config(format!("[{sec}] {key} must not be negative"))),
+            None => Err(Error::Config(format!("[{sec}] {key} must be an integer"))),
+        },
+    }
+}
+
+fn get_usize(tree: &Tree, sec: &str, key: &str, default: usize) -> Result<usize> {
+    get_u64(tree, sec, key, default as u64).map(|v| v as usize)
+}
+
+impl RouteConfig {
+    /// Does this tree carry route sections at all? `route` and `serve`
+    /// share one file, so the CLI uses this to give a pointed error
+    /// when `route` is started against a config with no fleet in it.
+    pub fn present(tree: &Tree) -> bool {
+        tree.keys()
+            .any(|s| s == "route" || s.starts_with("route.backend."))
+    }
+
+    /// Parse from TOML-subset text, filling defaults and validating.
+    pub fn from_str(text: &str) -> Result<Self> {
+        Self::from_text(text, "<config>")
+    }
+
+    /// Load from a file path; rejection errors carry `path:line`.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_text(&text, &path.display().to_string())
+    }
+
+    fn from_text(text: &str, origin: &str) -> Result<Self> {
+        let (tree, spans) =
+            parse_spanned(text).map_err(|e| Error::Config(format!("{origin}: {e}")))?;
+        Self::from_tree(&tree, &spans, origin)
+    }
+
+    /// Build from a parsed tree (closed-world over the route sections;
+    /// every other section is someone else's and ignored).
+    pub fn from_tree(tree: &Tree, spans: &Spans, origin: &str) -> Result<Self> {
+        reject_unknown(tree, spans, origin)?;
+        let mut cfg = RouteConfig::default();
+
+        cfg.cols = get_usize(tree, "route", "cols", cfg.cols)?;
+        cfg.probe_interval_ms =
+            get_u64(tree, "route", "probe_interval_ms", cfg.probe_interval_ms)?;
+        cfg.retry_backoff_ms = get_u64(tree, "route", "retry_backoff_ms", cfg.retry_backoff_ms)?;
+        cfg.retry_backoff_max_ms =
+            get_u64(tree, "route", "retry_backoff_max_ms", cfg.retry_backoff_max_ms)?;
+        cfg.retry_attempts = get_usize(tree, "route", "retry_attempts", cfg.retry_attempts)?;
+        cfg.io_timeout_ms = get_u64(tree, "route", "io_timeout_ms", cfg.io_timeout_ms)?;
+
+        // `[[route.backend]]` elements surface as `route.backend.{n}`
+        // sections (see config::toml); sort the suffixes numerically —
+        // the BTreeMap's lexicographic order would put `10` before `2`.
+        let mut indices: Vec<usize> = Vec::new();
+        for section in tree.keys() {
+            if let Some(suffix) = section.strip_prefix("route.backend.") {
+                match suffix.parse::<usize>() {
+                    Ok(n) => indices.push(n),
+                    Err(_) => {
+                        return Err(Error::Config(format!(
+                            "{origin}: unknown section [{section}]"
+                        )))
+                    }
+                }
+            }
+        }
+        indices.sort_unstable();
+        for n in indices {
+            let sec = format!("route.backend.{n}");
+            let addr = match tree.get(&sec).and_then(|s| s.get("addr")) {
+                Some(Value::Str(s)) => s.clone(),
+                Some(_) => {
+                    return Err(Error::Config(format!("[{sec}] addr must be a string")))
+                }
+                None => {
+                    let line = spans
+                        .section_line(&sec)
+                        .map(|l| format!("{origin}:{l}"))
+                        .unwrap_or_else(|| origin.to_string());
+                    return Err(Error::Config(format!(
+                        "{line}: [[route.backend]] requires `addr`"
+                    )));
+                }
+            };
+            cfg.backends.push(RouteBackend { addr });
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field checks shared by file parsing and CLI overrides.
+    pub fn validate(&self) -> Result<()> {
+        if self.backends.is_empty() {
+            return Err(Error::Config(
+                "[route] requires at least one [[route.backend]]".into(),
+            ));
+        }
+        for (i, b) in self.backends.iter().enumerate() {
+            if b.addr.trim().is_empty() {
+                return Err(Error::Config(format!(
+                    "[[route.backend]] #{i} addr must not be empty"
+                )));
+            }
+        }
+        if self.cols == 0 {
+            return Err(Error::Config("[route] cols must be > 0".into()));
+        }
+        if self.retry_attempts == 0 {
+            return Err(Error::Config("[route] retry_attempts must be > 0".into()));
+        }
+        if self.retry_backoff_max_ms < self.retry_backoff_ms {
+            return Err(Error::Config(
+                "[route] retry_backoff_max_ms must be >= retry_backoff_ms".into(),
+            ));
+        }
+        if self.probe_interval_ms == 0 {
+            return Err(Error::Config("[route] probe_interval_ms must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Closed-world check over the route sections only (the rest of the
+/// file belongs to `ServeConfig` / `ExperimentConfig`).
+fn reject_unknown(tree: &Tree, spans: &Spans, origin: &str) -> Result<()> {
+    let at = |sec: &str, key: &str| -> String {
+        spans
+            .key_line(sec, key)
+            .or_else(|| spans.section_line(sec))
+            .map(|l| format!("{origin}:{l}"))
+            .unwrap_or_else(|| origin.to_string())
+    };
+    for (section, keys) in tree {
+        let allowed: &[&str] = if section == "route" {
+            ROUTE_KEYS
+        } else if section.starts_with("route.backend.") {
+            BACKEND_KEYS
+        } else if section == "route.backend" || section.starts_with("route.") {
+            return Err(Error::Config(format!(
+                "{}: unknown section [{section}]",
+                spans
+                    .section_line(section)
+                    .map(|l| format!("{origin}:{l}"))
+                    .unwrap_or_else(|| origin.to_string())
+            )));
+        } else {
+            continue;
+        };
+        for key in keys.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "{}: unknown key `{key}` in [{section}]",
+                    at(section, key)
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+[server]
+port = 7900
+
+[route]
+cols = 40
+probe_interval_ms = 100
+retry_backoff_ms = 10
+retry_backoff_max_ms = 80
+retry_attempts = 2
+io_timeout_ms = 500
+
+[[route.backend]]
+addr = "127.0.0.1:7878"
+
+[[route.backend]]
+addr = "127.0.0.1:7879"
+"#;
+
+    #[test]
+    fn parses_fleet_in_declaration_order() {
+        let cfg = RouteConfig::from_str(EXAMPLE).unwrap();
+        assert_eq!(cfg.cols, 40);
+        assert_eq!(cfg.probe_interval_ms, 100);
+        assert_eq!(cfg.retry_attempts, 2);
+        assert_eq!(cfg.io_timeout_ms, 500);
+        assert_eq!(
+            cfg.backends,
+            vec![
+                RouteBackend { addr: "127.0.0.1:7878".into() },
+                RouteBackend { addr: "127.0.0.1:7879".into() },
+            ]
+        );
+    }
+
+    #[test]
+    fn backend_order_is_numeric_not_lexicographic() {
+        // 11 backends: lexicographic section order would visit
+        // `route.backend.10` before `route.backend.2`.
+        let mut text = String::from("[route]\ncols = 44\n");
+        for i in 0..11 {
+            text.push_str(&format!("[[route.backend]]\naddr = \"h:{}\"\n", 7000 + i));
+        }
+        let cfg = RouteConfig::from_str(&text).unwrap();
+        let ports: Vec<String> = cfg
+            .backends
+            .iter()
+            .map(|b| b.addr.rsplit(':').next().unwrap().to_string())
+            .collect();
+        let want: Vec<String> = (0..11).map(|i| (7000 + i).to_string()).collect();
+        assert_eq!(ports, want);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_sections_with_location() {
+        let e = RouteConfig::from_str("[route]\nbogus = 1\n[[route.backend]]\naddr = \"a:1\"\n")
+            .unwrap_err();
+        assert!(e.to_string().contains("unknown key `bogus`"), "{e}");
+        assert!(e.to_string().contains(":2"), "{e}");
+        let e = RouteConfig::from_str(
+            "[route.frontend]\nx = 1\n[[route.backend]]\naddr = \"a:1\"\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("unknown section"), "{e}");
+        let e = RouteConfig::from_str("[[route.backend]]\nhost = \"a\"\n").unwrap_err();
+        assert!(e.to_string().contains("unknown key `host`"), "{e}");
+    }
+
+    #[test]
+    fn validates_fleet_and_policy() {
+        assert!(RouteConfig::from_str("[route]\ncols = 40\n").is_err());
+        let e = RouteConfig::from_str("[[route.backend]]\n# no addr\n").unwrap_err();
+        assert!(e.to_string().contains("requires `addr`"), "{e}");
+        let e = RouteConfig::from_str(
+            "[route]\ncols = 0\n[[route.backend]]\naddr = \"a:1\"\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("cols"), "{e}");
+        let e = RouteConfig::from_str(
+            "[route]\nretry_backoff_ms = 100\nretry_backoff_max_ms = 10\n[[route.backend]]\naddr = \"a:1\"\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("retry_backoff_max_ms"), "{e}");
+    }
+
+    #[test]
+    fn presence_probe_sees_either_section_form() {
+        let (tree, _) = parse_spanned("[route]\ncols = 1\n").unwrap();
+        assert!(RouteConfig::present(&tree));
+        let (tree, _) = parse_spanned("[[route.backend]]\naddr = \"a:1\"\n").unwrap();
+        assert!(RouteConfig::present(&tree));
+        let (tree, _) = parse_spanned("[server]\nport = 1\n").unwrap();
+        assert!(!RouteConfig::present(&tree));
+    }
+
+    #[test]
+    fn shipped_example_parses_route_tier() {
+        // The repo-root lshmf.toml carries a live `[route]` block; keep
+        // it parseable by the typed config, mirroring
+        // `config::serve::tests::shipped_example_round_trips`.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate dir has a parent")
+            .join("lshmf.toml");
+        let cfg = RouteConfig::from_file(&path).expect("shipped lshmf.toml parses as RouteConfig");
+        assert!(!cfg.backends.is_empty());
+        assert!(cfg.cols > 0);
+    }
+}

@@ -489,6 +489,9 @@ fn reject_unknown(tree: &Tree, spans: &Spans, origin: &str) -> Result<()> {
                     )));
                 }
             }
+        } else if section == "route" || section.starts_with("route.backend.") {
+            // The route tier's sections share the file; they are closed
+            // by `config::route::RouteConfig`, not here.
         } else if !EXPERIMENT_SECTIONS.contains(&section.as_str()) {
             let line = spans.section_line(section).unwrap_or(0);
             return Err(Error::Config(format!(
@@ -625,6 +628,11 @@ checkpoint_every_flushes = 3
         assert!(err.contains("<config>:4: unknown section [serverr]"), "{err}");
         // experiment sections are tolerated: shared file
         ServeConfig::from_str("[dataset]\nkind = \"movielens\"\n[model]\nf = 8\n").unwrap();
+        // route sections are tolerated too (closed by RouteConfig)
+        ServeConfig::from_str(
+            "[server]\nport = 7878\n[route]\ncols = 40\n[[route.backend]]\naddr = \"a:1\"\n",
+        )
+        .unwrap();
     }
 
     #[test]

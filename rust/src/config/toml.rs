@@ -1,9 +1,14 @@
 //! Minimal TOML-subset parser.
 //!
-//! Supported: `[section]` headers, `key = value` pairs where value is a
-//! quoted string, integer, float, boolean, or a flat array of those;
-//! `#` comments (full-line or trailing); blank lines. Nested tables,
-//! datetimes, multi-line strings and table arrays are out of scope.
+//! Supported: `[section]` headers, `[[section]]` array-of-tables
+//! headers, `key = value` pairs where value is a quoted string,
+//! integer, float, boolean, or a flat array of those; `#` comments
+//! (full-line or trailing); blank lines. Nested tables, datetimes and
+//! multi-line strings are out of scope.
+//!
+//! Array-of-tables headers keep the flat [`Tree`] shape: the n-th
+//! `[[route.backend]]` becomes the section `route.backend.{n}`, so
+//! typed configs enumerate elements by numeric suffix.
 
 use std::collections::BTreeMap;
 
@@ -93,11 +98,27 @@ pub fn parse_spanned(text: &str) -> Result<(Tree, Spans), String> {
     let mut tree: Tree = BTreeMap::new();
     let mut spans = Spans::default();
     let mut section = String::new();
+    let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
     tree.entry(section.clone()).or_default();
 
     for (lineno, raw) in text.lines().enumerate() {
         let line = strip_comment(raw).trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest
+                .strip_suffix("]]")
+                .ok_or_else(|| format!("line {}: unterminated table-array header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty table-array name", lineno + 1));
+            }
+            let slot = array_counts.entry(name.to_string()).or_insert(0);
+            section = format!("{name}.{slot}");
+            *slot += 1;
+            tree.entry(section.clone()).or_default();
+            spans.sections.entry(section.clone()).or_insert(lineno + 1);
             continue;
         }
         if let Some(rest) = line.strip_prefix('[') {
@@ -291,6 +312,26 @@ empty = []
         // a re-assigned key reports the last assignment
         let (_, spans) = parse_spanned("[a]\nx = 1\nx = 2\n").unwrap();
         assert_eq!(spans.key_line("a", "x"), Some(3));
+    }
+
+    #[test]
+    fn table_arrays_become_numbered_sections() {
+        let (t, spans) = parse_spanned(
+            "[route]\ncols = 40\n\n[[route.backend]]\naddr = \"a:1\"\n\n[[route.backend]]\naddr = \"b:2\"\n",
+        )
+        .unwrap();
+        assert_eq!(t["route"]["cols"], Value::Int(40));
+        assert_eq!(t["route.backend.0"]["addr"], Value::Str("a:1".into()));
+        assert_eq!(t["route.backend.1"]["addr"], Value::Str("b:2".into()));
+        assert_eq!(spans.section_line("route.backend.1"), Some(7));
+        // independent arrays count independently
+        let t = parse("[[a]]\nx = 1\n[[b]]\ny = 2\n[[a]]\nx = 3\n").unwrap();
+        assert_eq!(t["a.0"]["x"], Value::Int(1));
+        assert_eq!(t["b.0"]["y"], Value::Int(2));
+        assert_eq!(t["a.1"]["x"], Value::Int(3));
+        // malformed headers are rejected with the line
+        assert!(parse("[[a]\n").is_err());
+        assert!(parse("[[ ]]\n").is_err());
     }
 
     #[test]

@@ -101,7 +101,13 @@ impl LshmfClient {
     /// Connect to a server. Works against any `serve --codec` mode that
     /// admits `codec` (`auto` admits both).
     pub fn connect(addr: impl ToSocketAddrs, codec: ClientCodec) -> io::Result<LshmfClient> {
-        let stream = TcpStream::connect(addr)?;
+        Self::from_stream(TcpStream::connect(addr)?, codec)
+    }
+
+    /// Build a client over an already-connected stream — the router
+    /// tier connects on its own terms (read timeouts, backoff) and
+    /// hands the socket over here.
+    pub fn from_stream(stream: TcpStream, codec: ClientCodec) -> io::Result<LshmfClient> {
         let reader = BufReader::new(stream.try_clone()?);
         let writer = BufWriter::new(stream);
         Ok(LshmfClient {
@@ -683,5 +689,80 @@ mod tests {
             client.shutdown().unwrap();
         }
         stop_server(addr, stop, handle);
+    }
+
+    /// A scripted raw-socket peer: accepts one connection, waits for
+    /// the client's first write, answers with `reply` verbatim, and
+    /// closes. Lets the error-path tests put arbitrary (including
+    /// corrupt) bytes on the wire.
+    fn fake_server(reply: Vec<u8>) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 4096];
+            let _ = std::io::Read::read(&mut sock, &mut buf);
+            if !reply.is_empty() {
+                std::io::Write::write_all(&mut sock, &reply).unwrap();
+            }
+            // dropping the socket closes the connection mid-conversation
+        });
+        (addr, handle)
+    }
+
+    /// The server dying mid-`finish` (requests written, no replies)
+    /// surfaces as a typed `UnexpectedEof` — never a hang, never a
+    /// panic.
+    #[test]
+    fn pipeline_finish_surfaces_server_close_as_typed_eof() {
+        let (addr, handle) = fake_server(Vec::new());
+        let mut client = LshmfClient::connect(addr, ClientCodec::Binary).unwrap();
+        let mut pipe = client.pipeline();
+        pipe.push(&Request::Predict { row: 0, col: 0 }).unwrap();
+        pipe.push(&Request::Flush).unwrap();
+        let err = pipe.finish().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "{err}");
+        handle.join().unwrap();
+    }
+
+    /// A reply frame whose header claims more payload than arrives
+    /// before the close is `InvalidData` (the malformed-frame path),
+    /// not a wedge waiting for bytes that never come.
+    #[test]
+    fn truncated_reply_frame_is_invalid_data_not_a_hang() {
+        let mut reply = Response::Pred(1.0).encode_frame(0);
+        reply[6] = 8; // header now promises an 8-byte payload...
+        reply.truncate(10 + 3); // ...but only 3 bytes precede the close
+        let (addr, handle) = fake_server(reply);
+        let mut client = LshmfClient::connect(addr, ClientCodec::Binary).unwrap();
+        let err = client.predict(0, 0).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        handle.join().unwrap();
+    }
+
+    /// A reply stamped with a sequence id the client never issued is
+    /// stashed for a request that does not exist; the close that
+    /// follows becomes a typed EOF for the request actually waiting.
+    #[test]
+    fn wrong_seq_reply_then_close_errors_instead_of_hanging() {
+        let reply = Response::Pred(2.5).encode_frame(5);
+        let (addr, handle) = fake_server(reply);
+        let mut client = LshmfClient::connect(addr, ClientCodec::Binary).unwrap();
+        let err = client.predict(0, 0).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "{err}");
+        handle.join().unwrap();
+    }
+
+    /// `PUSH_SEQ` is reserved for `Push` frames; anything else riding
+    /// that id is a protocol violation the client rejects as
+    /// `InvalidData` instead of mistaking it for a reply.
+    #[test]
+    fn non_push_frame_on_push_seq_is_protocol_error() {
+        let reply = Response::Pred(2.5).encode_frame(PUSH_SEQ);
+        let (addr, handle) = fake_server(reply);
+        let mut client = LshmfClient::connect(addr, ClientCodec::Binary).unwrap();
+        let err = client.predict(0, 0).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        handle.join().unwrap();
     }
 }

@@ -43,6 +43,12 @@
 //!   evicts peers blocked past their write deadline.
 //! * [`client`] — [`LshmfClient`]: synchronous calls plus `pipeline()`
 //!   batching (many requests in flight per connection) on either codec.
+//! * [`router`] — the multi-node route tier: `lshmf route` fronts N
+//!   downstream `serve` processes over the binary codec, replicating
+//!   writes in one global order and scatter/gathering reads by column
+//!   band, bit-identical to a monolithic engine; dead backends answer
+//!   typed `ERR unavailable` and are replayed back to parity on
+//!   recovery.
 //!
 //! Flushes run the Algorithm-4 training core in one of two modes
 //! ([`FlushMode`], `serve --flush-mode exact|relaxed`): `exact` is the
@@ -59,6 +65,7 @@ pub mod client;
 pub mod engine;
 pub mod protocol;
 pub mod rotation;
+pub mod router;
 pub mod server;
 pub mod shared;
 pub mod stream;
@@ -69,5 +76,6 @@ pub use client::{ClientCodec, LshmfClient, Pipeline};
 pub use engine::Engine;
 pub use protocol::{CodecChoice, ErrorKind, OkBody, Request, Response};
 pub use rotation::{RotationPlan, VirtualClockReport};
+pub use router::Router;
 pub use shared::{SharedEngine, Snapshot, WriterHandle, DEFAULT_SHARDS};
 pub use stream::{FlushMode, StreamConfig, StreamOrchestrator};

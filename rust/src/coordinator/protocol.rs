@@ -193,6 +193,11 @@ pub enum ErrorKind {
     /// per-connection rate limit, or the server is shedding read load
     /// (`TOPN`/`MPREDICT` shed first). Back off and retry.
     Overloaded,
+    /// The backend holding the requested partition is down or
+    /// unreachable (route tier only: a monolithic `serve` never emits
+    /// it). Transient by design — the router's probe loop keeps trying
+    /// to reconnect, so back off and retry.
+    Unavailable,
     /// Unrecognized verb (text) or opcode (binary).
     UnknownVerb(String),
     /// Malformed arguments; carries the verb's usage string.
@@ -216,6 +221,7 @@ impl ErrorKind {
             ErrorKind::OutOfBounds => "ERR out-of-bounds".into(),
             ErrorKind::Empty => "ERR empty".into(),
             ErrorKind::Overloaded => "ERR overloaded".into(),
+            ErrorKind::Unavailable => "ERR unavailable".into(),
             ErrorKind::UnknownVerb(verb) => format!("ERR unknown verb `{verb}`"),
             ErrorKind::Usage(usage) => format!("ERR usage: {usage}"),
             ErrorKind::MalformedFrame(detail) => format!("ERR malformed-frame: {detail}"),
@@ -236,6 +242,7 @@ impl ErrorKind {
             "out-of-bounds" => ErrorKind::OutOfBounds,
             "empty" => ErrorKind::Empty,
             "overloaded" => ErrorKind::Overloaded,
+            "unavailable" => ErrorKind::Unavailable,
             _ => {
                 if let Some(usage) = body.strip_prefix("usage: ") {
                     ErrorKind::Usage(usage.to_string())
@@ -268,6 +275,7 @@ impl ErrorKind {
             ErrorKind::Usage(_) => 10,
             ErrorKind::MalformedFrame(_) => 11,
             ErrorKind::Overloaded => 12,
+            ErrorKind::Unavailable => 13,
         }
     }
 
@@ -287,7 +295,8 @@ impl ErrorKind {
             | ErrorKind::InvalidValue
             | ErrorKind::OutOfBounds
             | ErrorKind::Empty
-            | ErrorKind::Overloaded => "",
+            | ErrorKind::Overloaded
+            | ErrorKind::Unavailable => "",
         }
     }
 
@@ -305,6 +314,7 @@ impl ErrorKind {
             10 => ErrorKind::Usage(detail),
             11 => ErrorKind::MalformedFrame(detail),
             12 => ErrorKind::Overloaded,
+            13 => ErrorKind::Unavailable,
             _ => return None,
         })
     }
@@ -1149,6 +1159,7 @@ mod tests {
             ErrorKind::OutOfBounds,
             ErrorKind::Empty,
             ErrorKind::Overloaded,
+            ErrorKind::Unavailable,
             ErrorKind::UnknownVerb("FROB".into()),
             ErrorKind::Usage(TOPN_USAGE.into()),
             ErrorKind::MalformedFrame("truncated frame header".into()),

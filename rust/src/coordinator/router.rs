@@ -1,0 +1,811 @@
+//! The route tier: one [`Router`] fronts N downstream `serve` processes
+//! over the binary codec, so the serving surface scales across nodes
+//! instead of only across threads.
+//!
+//! **Partition map.** Column ids are banded over `[0, cols)` with
+//! [`band_of`](crate::sparse::band_of) — the same Latin-square split
+//! every in-process layer shards by — one band per backend, declared in
+//! `[[route.backend]]` order. Ids at or beyond `cols` clamp into the
+//! last band.
+//!
+//! **Writes replicate, reads partition.** The Eq. (1) neighbourhood
+//! scan reads the *whole* rating row, so a backend holding only its
+//! band's ratings could not answer bit-identically to a monolith.
+//! Every mutating verb (`RATE`/`MRATE`/`FLUSH`) is therefore fanned out
+//! to **all** backends in one global arrival order (deterministic
+//! lock-step replicas — the "replicate for read fan-out" arm of the
+//! ROADMAP item); column-band ownership governs the *read* path and
+//! which replica's write reply is authoritative. `PREDICT` routes to
+//! the owner of its column; `MPREDICT` splits its columns by owner and
+//! reassembles by position; `TOPN` scatters, keeps each backend's items
+//! that it owns, and merges under the engine's `rank_cmp`; `STATS`
+//! aggregates; `FLUSH` is a cross-backend barrier.
+//!
+//! **Fault surface.** Each backend has one ordered *write lane* thread
+//! (persistent pipelined [`LshmfClient`]) and a small read-connection
+//! pool. A dead backend answers typed
+//! [`ErrorKind::Unavailable`] — never a hang: router connections carry
+//! a read deadline (`[route] io_timeout_ms`), reads retry with capped
+//! jittered backoff before giving up, and a probe loop keeps poking
+//! down backends so recovery is automatic. Writes a down replica missed
+//! are kept in its lane's replay queue and re-applied in order on
+//! reconnect (at-least-once: a batch that failed mid-pipeline may be
+//! partially applied, then replayed; `RATE` re-application is
+//! last-write-wins per cell, and the replica is marked up only once the
+//! replay drains).
+//!
+//! # Invariants
+//!
+//! * **No lock is held across backend IO.** The global order lock is
+//!   held only while enqueueing a write into every lane (in-memory
+//!   channel sends); lane IO runs on the lane threads, and the read
+//!   path checks a connection out of the pool before touching the
+//!   socket. A slow or dead backend can therefore never wedge requests
+//!   for the others.
+//! * **Merge determinism.** Scatter/gather replies are merged under
+//!   the same total order the engines rank by (`rank_cmp`: score desc,
+//!   NaN last, col id asc) after filtering each backend's reply to the
+//!   columns it owns, so a merged `TOPN` is bit-identical to a
+//!   monolith's.
+//! * **Write order is global.** All lanes see mutating verbs in the
+//!   same relative order (the order lock), and each lane is a single
+//!   thread draining a FIFO — replicas that stay connected apply the
+//!   identical event sequence, and the barrier reply waits for every
+//!   lane so a subsequent read cannot observe a half-applied write.
+//! * **Health-state transitions are counted and monotonic per
+//!   observation.** `up -> down` happens where a failure is proven (IO
+//!   error after retries, lane batch failure); `down -> up` only where
+//!   recovery is proven (lane reconnected *and* drained its replay
+//!   queue). Each flip increments `router.backend{i}.health_transitions`.
+
+use super::client::{ClientCodec, LshmfClient};
+use super::engine::rank_cmp;
+use super::protocol::{
+    ErrorKind, Request, Response, MAX_MPREDICT_COLS, MAX_MRATE_EVENTS, MAX_TOPN_ITEMS,
+    MPREDICT_USAGE, MRATE_USAGE, SUBSCRIBE_USAGE, TOPN_USAGE,
+};
+use crate::config::RouteConfig;
+use crate::coordinator::cache::PushSink;
+use crate::coordinator::server::Dispatch;
+use crate::metrics::{Counter, Gauge, Registry};
+use crate::rng::Rng;
+use crate::sparse::band_of;
+use std::collections::VecDeque;
+use std::io;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Most write jobs one lane batch drains into a single pipeline flush.
+const WRITE_BATCH: usize = 32;
+/// Read connections kept per backend.
+const READ_POOL_CAP: usize = 4;
+
+/// One queued mutating request plus the slot its reply must land in.
+/// The lane **always** fulfils the slot (with the backend's reply or
+/// `Unavailable`) — a dropped sender would strand the write barrier.
+struct WriteJob {
+    req: Request,
+    reply: Sender<Response>,
+}
+
+enum Job {
+    Write(WriteJob),
+    /// Probe tick: liveness-check an up backend, drive reconnect +
+    /// replay on a down one.
+    Probe,
+}
+
+/// Per-backend shared state (the lane thread holds its own `Arc`s to
+/// the pieces it needs, so dropping the core never races the lane).
+struct Backend {
+    addr: String,
+    up: Arc<AtomicBool>,
+    lane: Mutex<Option<Sender<Job>>>,
+    pool: Mutex<Vec<LshmfClient>>,
+    transitions: Arc<Counter>,
+}
+
+/// Connect with the router's socket policy: binary codec, read deadline
+/// so a silent backend surfaces as an IO timeout instead of a hang.
+fn connect_backend(addr: &str, io_timeout_ms: u64) -> io::Result<LshmfClient> {
+    let stream = TcpStream::connect(addr)?;
+    if io_timeout_ms > 0 {
+        stream.set_read_timeout(Some(Duration::from_millis(io_timeout_ms)))?;
+    }
+    LshmfClient::from_stream(stream, ClientCodec::Binary)
+}
+
+/// Flip the health flag, counting actual transitions only.
+fn set_health(up: &AtomicBool, transitions: &Counter, healthy: bool) {
+    if up.swap(healthy, Ordering::SeqCst) != healthy {
+        transitions.inc();
+    }
+}
+
+/// The write-lane thread: owns the persistent pipelined connection to
+/// one backend, drains its FIFO in batches, and runs the
+/// reconnect/replay machinery. Everything it shares with the core is
+/// behind `Arc`s — it never holds the core itself.
+struct Lane {
+    index: usize,
+    addr: String,
+    rx: Receiver<Job>,
+    up: Arc<AtomicBool>,
+    transitions: Arc<Counter>,
+    replayed: Arc<Counter>,
+    retries: Arc<Counter>,
+    depth: Arc<Gauge>,
+    backoff_ms: u64,
+    backoff_max_ms: u64,
+    io_timeout_ms: u64,
+    rng: Rng,
+}
+
+impl Lane {
+    fn run(mut self) {
+        let mut client: Option<LshmfClient> = None;
+        let mut replay: VecDeque<Request> = VecDeque::new();
+        let mut fails: u32 = 0;
+        let mut next_attempt = Instant::now();
+        loop {
+            let first = match self.rx.recv() {
+                Ok(job) => job,
+                Err(_) => break, // all senders gone: shut down
+            };
+            let mut batch: Vec<WriteJob> = Vec::new();
+            let mut probed = matches!(first, Job::Probe);
+            if let Job::Write(w) = first {
+                batch.push(w);
+            }
+            while batch.len() < WRITE_BATCH {
+                match self.rx.try_recv() {
+                    Ok(Job::Write(w)) => batch.push(w),
+                    Ok(Job::Probe) => probed = true,
+                    Err(_) => break,
+                }
+            }
+            self.depth.set((batch.len() + replay.len()) as f64);
+
+            // (Re)connect, gated by the jittered backoff deadline so a
+            // flapping backend is not hammered.
+            if client.is_none() && Instant::now() >= next_attempt {
+                if fails > 0 {
+                    self.retries.inc();
+                }
+                match connect_backend(&self.addr, self.io_timeout_ms) {
+                    Ok(c) => {
+                        client = Some(c);
+                        fails = 0;
+                    }
+                    Err(_) => {
+                        fails += 1;
+                        next_attempt = Instant::now() + self.backoff(fails);
+                    }
+                }
+            }
+            // Catch-up before any new work: the replica must re-apply
+            // everything it missed, in order, before it counts as up.
+            if !replay.is_empty() {
+                if let Some(c) = client.as_mut() {
+                    match replay_all(c, &mut replay) {
+                        Ok(n) => self.replayed.add(n),
+                        Err(_) => {
+                            client = None;
+                            fails += 1;
+                            next_attempt = Instant::now() + self.backoff(fails);
+                        }
+                    }
+                }
+            }
+            let ready = client.is_some() && replay.is_empty();
+            set_health(&self.up, &self.transitions, ready);
+
+            if batch.is_empty() {
+                // Pure probe tick on a healthy lane: one cheap STATS
+                // round-trip proves the connection still answers.
+                if probed && ready {
+                    if let Some(c) = client.as_mut() {
+                        if c.request(&Request::Stats).is_err() {
+                            self.retries.inc();
+                            client = None;
+                            fails += 1;
+                            next_attempt = Instant::now() + self.backoff(fails);
+                            set_health(&self.up, &self.transitions, false);
+                        }
+                    }
+                }
+                self.depth.set(replay.len() as f64);
+                continue;
+            }
+            if !ready {
+                // Answer now (typed, never a hang) and journal for the
+                // at-least-once catch-up.
+                for w in batch {
+                    let _ = w.reply.send(Response::Error(ErrorKind::Unavailable));
+                    replay.push_back(w.req);
+                }
+                self.depth.set(replay.len() as f64);
+                continue;
+            }
+            let c = client.as_mut().expect("ready implies connected");
+            match send_batch(c, &batch) {
+                Ok(replies) => {
+                    for (w, r) in batch.into_iter().zip(replies) {
+                        let _ = w.reply.send(r);
+                    }
+                    self.depth.set(0.0);
+                }
+                Err(_) => {
+                    self.retries.inc();
+                    for w in batch {
+                        let _ = w.reply.send(Response::Error(ErrorKind::Unavailable));
+                        replay.push_back(w.req);
+                    }
+                    client = None;
+                    fails += 1;
+                    next_attempt = Instant::now() + self.backoff(fails);
+                    set_health(&self.up, &self.transitions, false);
+                    self.depth.set(replay.len() as f64);
+                }
+            }
+        }
+        // Drain-on-shutdown: one last attempt to land journaled writes
+        // on a backend that is reachable again.
+        if !replay.is_empty() {
+            if client.is_none() {
+                client = connect_backend(&self.addr, self.io_timeout_ms).ok();
+            }
+            if let Some(c) = client.as_mut() {
+                if let Ok(n) = replay_all(c, &mut replay) {
+                    self.replayed.add(n);
+                }
+            }
+        }
+        let _ = self.index;
+    }
+
+    /// Exponential, capped, jittered: `base * 2^(fails-1)` up to the
+    /// cap, plus up to half a base of jitter so a fleet of lanes does
+    /// not reconnect in lock-step.
+    fn backoff(&mut self, fails: u32) -> Duration {
+        let base = self.backoff_ms.max(1);
+        let exp = base.saturating_mul(1u64 << fails.saturating_sub(1).min(6));
+        let capped = exp.min(self.backoff_max_ms.max(base));
+        let jitter = self.rng.below((base / 2 + 1) as usize) as u64;
+        Duration::from_millis(capped + jitter)
+    }
+}
+
+/// Pipeline `replay` into the backend until drained; on success the
+/// queue is empty. Replies are discarded — their slots were already
+/// answered `Unavailable` when the writes were journaled.
+fn replay_all(c: &mut LshmfClient, replay: &mut VecDeque<Request>) -> io::Result<u64> {
+    let mut applied = 0u64;
+    while !replay.is_empty() {
+        let take = replay.len().min(WRITE_BATCH);
+        let mut pipe = c.pipeline();
+        for req in replay.iter().take(take) {
+            pipe.push(req)?;
+        }
+        let replies = pipe.finish()?;
+        if replies.len() != take {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "short pipeline reply during replay",
+            ));
+        }
+        for _ in 0..take {
+            replay.pop_front();
+        }
+        applied += take as u64;
+    }
+    Ok(applied)
+}
+
+/// One pipelined flush of a write batch; exactly one reply per job.
+fn send_batch(c: &mut LshmfClient, batch: &[WriteJob]) -> io::Result<Vec<Response>> {
+    let mut pipe = c.pipeline();
+    for w in batch {
+        pipe.push(&w.req)?;
+    }
+    let replies = pipe.finish()?;
+    if replies.len() != batch.len() {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "short pipeline reply",
+        ));
+    }
+    Ok(replies)
+}
+
+struct RouterCore {
+    cfg: RouteConfig,
+    registry: Registry,
+    backends: Vec<Backend>,
+    /// The global write-order lock (see module invariants): held only
+    /// around the in-memory enqueue into every lane.
+    order: Mutex<()>,
+    retries: Arc<Counter>,
+    unavailable: Arc<Counter>,
+    divergence: Arc<Counter>,
+    jitter: Mutex<Rng>,
+    stop: Arc<AtomicBool>,
+    probe: Mutex<Option<JoinHandle<()>>>,
+    lanes: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// The scatter/gather front end over a `[[route.backend]]` fleet.
+/// Cheaply cloneable (one shared core); implements
+/// [`Dispatch`], so [`serve_route`](super::server::serve_route) runs it
+/// behind the same connection pool, codecs, and admission as any
+/// engine. Dropping the last clone drains the write lanes and joins
+/// every router thread.
+#[derive(Clone)]
+pub struct Router {
+    core: Arc<RouterCore>,
+}
+
+impl Router {
+    /// Spawn the lane and probe threads for `cfg.backends`. Backends
+    /// start optimistically `up`; the first proven failure flips them.
+    pub fn new(cfg: &RouteConfig, registry: Registry) -> Router {
+        let retries = registry.counter("router.retries");
+        let unavailable = registry.counter("router.unavailable");
+        let divergence = registry.counter("router.divergence");
+        let mut backends = Vec::with_capacity(cfg.backends.len());
+        let mut lane_threads = Vec::with_capacity(cfg.backends.len());
+        let mut probe_senders = Vec::with_capacity(cfg.backends.len());
+        for (i, spec) in cfg.backends.iter().enumerate() {
+            let up = Arc::new(AtomicBool::new(true));
+            let transitions =
+                registry.counter(&format!("router.backend{i}.health_transitions"));
+            let replayed = registry.counter(&format!("router.backend{i}.replayed"));
+            let depth = registry.gauge(&format!("router.backend{i}.depth"));
+            let (tx, rx) = channel();
+            let lane = Lane {
+                index: i,
+                addr: spec.addr.clone(),
+                rx,
+                up: Arc::clone(&up),
+                transitions: Arc::clone(&transitions),
+                replayed,
+                retries: Arc::clone(&retries),
+                depth,
+                backoff_ms: cfg.retry_backoff_ms,
+                backoff_max_ms: cfg.retry_backoff_max_ms,
+                io_timeout_ms: cfg.io_timeout_ms,
+                rng: Rng::seeded(0x9070_5e5e ^ i as u64),
+            };
+            lane_threads.push(std::thread::spawn(move || lane.run()));
+            probe_senders.push(tx.clone());
+            backends.push(Backend {
+                addr: spec.addr.clone(),
+                up,
+                lane: Mutex::new(Some(tx)),
+                pool: Mutex::new(Vec::new()),
+                transitions,
+            });
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let probe = {
+            let stop = Arc::clone(&stop);
+            let interval = Duration::from_millis(cfg.probe_interval_ms.max(1));
+            std::thread::spawn(move || {
+                let tick = Duration::from_millis(10);
+                let mut waited = Duration::ZERO;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick.min(interval));
+                    waited += tick;
+                    if waited >= interval {
+                        waited = Duration::ZERO;
+                        for lane in &probe_senders {
+                            let _ = lane.send(Job::Probe);
+                        }
+                    }
+                }
+            })
+        };
+        Router {
+            core: Arc::new(RouterCore {
+                cfg: cfg.clone(),
+                registry,
+                backends,
+                order: Mutex::new(()),
+                retries,
+                unavailable,
+                divergence,
+                jitter: Mutex::new(Rng::seeded(0x9070_5e5f)),
+                stop,
+                probe: Mutex::new(Some(probe)),
+                lanes: Mutex::new(lane_threads),
+            }),
+        }
+    }
+
+    /// The registry the `router.*` metrics (and the front end's
+    /// `server.*` counters) land in.
+    pub fn registry(&self) -> &Registry {
+        &self.core.registry
+    }
+
+    /// Fleet width (one column band per backend).
+    pub fn backend_count(&self) -> usize {
+        self.core.backends.len()
+    }
+
+    /// Is backend `i` currently considered healthy?
+    pub fn backend_up(&self, i: usize) -> bool {
+        self.core.backends[i].up.load(Ordering::SeqCst)
+    }
+}
+
+impl Dispatch for Router {
+    fn handle(&self, req: &Request) -> Response {
+        self.core.handle(req)
+    }
+
+    fn metrics(&self) -> Registry {
+        self.core.registry.clone()
+    }
+
+    fn subscribe(&self, _sink: PushSink) -> Option<u64> {
+        // The router has no publish stream of its own to tap; the
+        // connection layer answers the typed SUBSCRIBE usage error.
+        None
+    }
+}
+
+impl RouterCore {
+    /// Which backend owns column `col` (clamping ids beyond the
+    /// configured extent into the last band).
+    fn owner(&self, col: usize) -> usize {
+        let d = self.backends.len();
+        band_of(col.min(self.cfg.cols.saturating_sub(1)), self.cfg.cols, d).min(d - 1)
+    }
+
+    /// Request-level validation mirrors [`dispatch`]
+    /// (`super::server::dispatch`) exactly — caps and usage errors must
+    /// not depend on which tier answers. The router parity test drives
+    /// the same scripts through both and catches drift.
+    fn handle(&self, req: &Request) -> Response {
+        match req {
+            Request::Predict { row: _, col } => self.read_at(self.owner(*col), req),
+            Request::MPredict { row, cols } => {
+                if cols.is_empty() {
+                    return Response::Error(ErrorKind::Usage(MPREDICT_USAGE.into()));
+                }
+                if cols.len() > MAX_MPREDICT_COLS {
+                    return Response::Error(ErrorKind::TooManyCols);
+                }
+                self.mpredict(*row, cols)
+            }
+            Request::TopN { row: _, n } => {
+                if *n == 0 {
+                    return Response::Error(ErrorKind::Usage(TOPN_USAGE.into()));
+                }
+                if *n > MAX_TOPN_ITEMS {
+                    return Response::Error(ErrorKind::TooManyItems);
+                }
+                self.topn_scatter(req, *n)
+            }
+            Request::Rate { col, .. } => self.write_all(req, Some(self.owner(*col as usize))),
+            Request::MRate { ratings } => {
+                if ratings.is_empty() {
+                    return Response::Error(ErrorKind::Usage(MRATE_USAGE.into()));
+                }
+                if ratings.len() > MAX_MRATE_EVENTS {
+                    return Response::Error(ErrorKind::TooManyEvents);
+                }
+                let owner = self.owner(ratings[0].1 as usize);
+                self.write_all(req, Some(owner))
+            }
+            Request::Flush => self.write_all(req, None),
+            Request::Stats => self.stats(),
+            Request::Subscribe => Response::Error(ErrorKind::Usage(SUBSCRIBE_USAGE.into())),
+            Request::Shutdown => Response::Bye,
+        }
+    }
+
+    /// One read against backend `b`: pool checkout, IO unlocked, retry
+    /// with capped jittered backoff, typed `Unavailable` when the
+    /// backend is (or becomes) down.
+    fn read_at(&self, b: usize, req: &Request) -> Response {
+        let backend = &self.backends[b];
+        if !backend.up.load(Ordering::SeqCst) {
+            self.unavailable.inc();
+            return Response::Error(ErrorKind::Unavailable);
+        }
+        let attempts = self.cfg.retry_attempts.max(1);
+        for attempt in 0..attempts as u32 {
+            if attempt > 0 {
+                self.retries.inc();
+                std::thread::sleep(self.read_backoff(attempt));
+            }
+            let pooled = backend.pool.lock().unwrap_or_else(|e| e.into_inner()).pop();
+            let mut client = match pooled {
+                Some(c) => c,
+                None => match connect_backend(&backend.addr, self.cfg.io_timeout_ms) {
+                    Ok(c) => c,
+                    Err(_) => continue,
+                },
+            };
+            match client.request(req) {
+                Ok(resp) => {
+                    let mut pool = backend.pool.lock().unwrap_or_else(|e| e.into_inner());
+                    if pool.len() < READ_POOL_CAP {
+                        pool.push(client);
+                    }
+                    return resp;
+                }
+                Err(_) => continue, // poisoned connection: drop, retry fresh
+            }
+        }
+        set_health(&backend.up, &backend.transitions, false);
+        self.unavailable.inc();
+        Response::Error(ErrorKind::Unavailable)
+    }
+
+    fn read_backoff(&self, attempt: u32) -> Duration {
+        let base = self.cfg.retry_backoff_ms.max(1);
+        let exp = base.saturating_mul(1u64 << attempt.saturating_sub(1).min(6));
+        let capped = exp.min(self.cfg.retry_backoff_max_ms.max(base));
+        let jitter = {
+            let mut rng = self.jitter.lock().unwrap_or_else(|e| e.into_inner());
+            rng.below((base / 2 + 1) as usize) as u64
+        };
+        Duration::from_millis(capped + jitter)
+    }
+
+    /// `MPREDICT`: split the columns by owner (positions remembered),
+    /// sub-request each owner, reassemble in request order. Any
+    /// sub-error is the whole reply's error — replicas agree on
+    /// row-level errors, so this matches the monolith.
+    fn mpredict(&self, row: usize, cols: &[u32]) -> Response {
+        let d = self.backends.len();
+        let mut per: Vec<Vec<u32>> = vec![Vec::new(); d];
+        let mut pos: Vec<Vec<usize>> = vec![Vec::new(); d];
+        for (i, &c) in cols.iter().enumerate() {
+            let b = self.owner(c as usize);
+            per[b].push(c);
+            pos[b].push(i);
+        }
+        let mut out: Vec<Option<f32>> = vec![None; cols.len()];
+        for b in 0..d {
+            if per[b].is_empty() {
+                continue;
+            }
+            let sub = Request::MPredict { row, cols: per[b].clone() };
+            match self.read_at(b, &sub) {
+                Response::Preds(preds) if preds.len() == pos[b].len() => {
+                    for (slot, p) in pos[b].iter().zip(preds) {
+                        out[*slot] = p;
+                    }
+                }
+                Response::Error(kind) => return Response::Error(kind),
+                _ => return Response::Error(ErrorKind::Unavailable),
+            }
+        }
+        Response::Preds(out)
+    }
+
+    /// `TOPN`: scatter the full request, keep from each reply only the
+    /// columns that backend owns, merge under `rank_cmp`, truncate.
+    /// Each replica's reply is the *global* top-n, so the owned
+    /// fragments cover the monolith's list and the merge reproduces it
+    /// bit for bit (see module invariants).
+    fn topn_scatter(&self, req: &Request, n_items: usize) -> Response {
+        let mut merged: Vec<(u32, f32)> = Vec::new();
+        for b in 0..self.backends.len() {
+            match self.read_at(b, req) {
+                Response::TopN(items) => {
+                    merged.extend(
+                        items
+                            .into_iter()
+                            .filter(|(c, _)| self.owner(*c as usize) == b),
+                    );
+                }
+                Response::Error(kind) => return Response::Error(kind),
+                _ => return Response::Error(ErrorKind::Unavailable),
+            }
+        }
+        merged.sort_by(rank_cmp);
+        merged.truncate(n_items);
+        Response::TopN(merged)
+    }
+
+    /// Replicated write: enqueue into every lane under the order lock,
+    /// then wait for every reply (the lock-step barrier). The owner's
+    /// reply is authoritative; `FLUSH` (no owner) answers with the
+    /// lowest-indexed live reply. Replicas answering differently is a
+    /// replication bug — counted into `router.divergence`.
+    fn write_all(&self, req: &Request, owner: Option<usize>) -> Response {
+        if let Some(o) = owner {
+            if !self.backends[o].up.load(Ordering::SeqCst) {
+                // Reject up front, enqueuing nowhere: the replicas stay
+                // mutually identical (none of them sees this write).
+                self.unavailable.inc();
+                return Response::Error(ErrorKind::Unavailable);
+            }
+        }
+        let mut waits: Vec<Option<Receiver<Response>>> =
+            Vec::with_capacity(self.backends.len());
+        {
+            let _order = self.order.lock().unwrap_or_else(|e| e.into_inner());
+            for backend in &self.backends {
+                let (tx, rx) = channel();
+                let sent = backend
+                    .lane
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .as_ref()
+                    .map(|lane| {
+                        lane.send(Job::Write(WriteJob { req: req.clone(), reply: tx }))
+                            .is_ok()
+                    })
+                    .unwrap_or(false);
+                waits.push(if sent { Some(rx) } else { None });
+            }
+        }
+        let replies: Vec<Response> = waits
+            .into_iter()
+            .map(|rx| match rx {
+                // A lane always fulfils its slot; a dropped sender
+                // (shutdown race) degrades to the typed error.
+                Some(rx) => rx
+                    .recv()
+                    .unwrap_or(Response::Error(ErrorKind::Unavailable)),
+                None => Response::Error(ErrorKind::Unavailable),
+            })
+            .collect();
+        let mut canon: Option<&Response> = None;
+        for r in &replies {
+            if matches!(r, Response::Error(ErrorKind::Unavailable)) {
+                continue;
+            }
+            match canon {
+                None => canon = Some(r),
+                Some(c) if c != r => self.divergence.inc(),
+                _ => {}
+            }
+        }
+        let reply = match owner {
+            Some(o) => replies[o].clone(),
+            None => replies
+                .iter()
+                .find(|r| !matches!(r, Response::Error(ErrorKind::Unavailable)))
+                .cloned()
+                .unwrap_or(Response::Error(ErrorKind::Unavailable)),
+        };
+        if matches!(reply, Response::Error(ErrorKind::Unavailable)) {
+            self.unavailable.inc();
+        }
+        reply
+    }
+
+    /// `STATS`: the router's own registry snapshot plus every
+    /// reachable backend's stats body, each line prefixed
+    /// `backend{i}.`; down backends report `backend{i} down`.
+    fn stats(&self) -> Response {
+        let d = self.backends.len();
+        let mut up_count = 0usize;
+        let mut lines: Vec<String> = Vec::new();
+        for i in 0..d {
+            match self.read_at(i, &Request::Stats) {
+                Response::Stats(body) => {
+                    up_count += 1;
+                    lines.push(format!("backend{i} up"));
+                    for l in body.lines() {
+                        lines.push(format!("backend{i}.{l}"));
+                    }
+                }
+                _ => lines.push(format!("backend{i} down")),
+            }
+        }
+        let mut body = format!("router backends {d}\nrouter up {up_count}\n");
+        body.push_str(self.registry.snapshot().trim_end());
+        body.push('\n');
+        for l in lines {
+            body.push_str(&l);
+            body.push('\n');
+        }
+        while body.ends_with('\n') {
+            body.pop();
+        }
+        Response::Stats(body)
+    }
+}
+
+impl Drop for RouterCore {
+    fn drop(&mut self) {
+        // Stop the probe first — it holds lane-sender clones, so the
+        // lanes cannot drain until it exits.
+        self.stop.store(true, Ordering::SeqCst);
+        // Take the handle in its own statement so the lock temporary
+        // dies before the join — a guard never spans a blocking join.
+        let probe = self.probe.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(probe) = probe {
+            let _ = probe.join();
+        }
+        for backend in &self.backends {
+            *backend.lane.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        }
+        let lanes =
+            std::mem::take(&mut *self.lanes.lock().unwrap_or_else(|e| e.into_inner()));
+        for lane in lanes {
+            let _ = lane.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RouteBackend;
+
+    fn cfg(addrs: &[&str], cols: usize) -> RouteConfig {
+        RouteConfig {
+            cols,
+            probe_interval_ms: 25,
+            retry_backoff_ms: 2,
+            retry_backoff_max_ms: 20,
+            retry_attempts: 2,
+            io_timeout_ms: 500,
+            backends: addrs.iter().map(|a| RouteBackend { addr: a.to_string() }).collect(),
+        }
+    }
+
+    #[test]
+    fn owner_map_covers_and_clamps() {
+        let router = Router::new(&cfg(&["127.0.0.1:1", "127.0.0.1:2", "127.0.0.1:3"], 30),
+                                 Registry::new());
+        let core = &router.core;
+        for col in 0..30 {
+            let b = core.owner(col);
+            assert!(b < 3, "col {col} -> band {b}");
+            assert_eq!(b, crate::sparse::band_of(col, 30, 3));
+        }
+        // beyond the extent clamps into the last band
+        assert_eq!(core.owner(30), 2);
+        assert_eq!(core.owner(1_000_000), 2);
+    }
+
+    #[test]
+    fn dead_fleet_answers_typed_unavailable_not_hangs() {
+        // Nothing listens on these ports: every verb must come back as
+        // a typed error (reads via connect failure, writes via the
+        // lane's journal path), and shutdown must join cleanly.
+        let router = Router::new(&cfg(&["127.0.0.1:9", "127.0.0.1:9"], 10), Registry::new());
+        let unavailable = Response::Error(ErrorKind::Unavailable);
+        assert_eq!(router.handle(&Request::Predict { row: 0, col: 1 }), unavailable);
+        assert_eq!(
+            router.handle(&Request::Rate { row: 0, col: 1, value: 1.0 }),
+            unavailable
+        );
+        assert_eq!(router.handle(&Request::Flush), unavailable);
+        assert_eq!(router.handle(&Request::TopN { row: 0, n: 3 }), unavailable);
+        // validation still answers locally, exactly like dispatch
+        assert!(matches!(
+            router.handle(&Request::TopN { row: 0, n: 0 }),
+            Response::Error(ErrorKind::Usage(_))
+        ));
+        assert!(matches!(
+            router.handle(&Request::MRate { ratings: vec![] }),
+            Response::Error(ErrorKind::Usage(_))
+        ));
+        assert_eq!(router.handle(&Request::Shutdown), Response::Bye);
+        // STATS aggregates even with the whole fleet down
+        match router.handle(&Request::Stats) {
+            Response::Stats(body) => {
+                assert!(body.contains("router backends 2"), "{body}");
+                assert!(body.contains("router up 0"), "{body}");
+                assert!(body.contains("backend0 down"), "{body}");
+            }
+            other => panic!("STATS answered {other:?}"),
+        }
+        assert!(router.registry().counter("router.unavailable").get() > 0);
+    }
+}

@@ -8,7 +8,11 @@
 //! formatting lives in the protocol layer, not per serving flavour, so
 //! a new verb is added in exactly one place. See the protocol module
 //! for the verb table; the text codec is wire-compatible with the
-//! legacy line protocol byte for byte.
+//! legacy line protocol byte for byte. The connection machinery itself
+//! is generic over the request-level [`Dispatch`] trait (blanket-implied
+//! by `Serving`), so the route tier's [`Router`](super::router::Router)
+//! rides the same pool, codecs, and admission by implementing `Dispatch`
+//! directly — see [`serve_route`].
 //!
 //! Three serving flavours implement the same [`Serving`] surface:
 //!
@@ -284,6 +288,40 @@ impl Serving for SharedEngine {
     }
 }
 
+/// The request-level surface the connection machinery drives: one typed
+/// [`Request`] in, one typed [`Response`] out. Every [`Serving`] flavour
+/// gets it for free through the blanket impl below (whose `handle` is
+/// [`dispatch`]); the route tier's [`Router`](super::router::Router)
+/// implements it directly, because a router answers at the protocol
+/// level — it must surface [`ErrorKind::Unavailable`] for a dead
+/// partition, which the `Serving` method signatures (e.g. `predict ->
+/// Option<f32>`) cannot express.
+pub trait Dispatch {
+    /// Answer one request.
+    fn handle(&self, req: &Request) -> Response;
+    /// The registry protocol-event counters (`server.unknown_verb`,
+    /// `server.malformed_frames`) land in.
+    fn metrics(&self) -> Registry;
+    /// Register a `SUBSCRIBE` push sink; `None` when this endpoint has
+    /// no publish stream to tap (the router), answered as the same
+    /// typed usage error the text codec gives.
+    fn subscribe(&self, sink: PushSink) -> Option<u64>;
+}
+
+impl<S: Serving + ?Sized> Dispatch for S {
+    fn handle(&self, req: &Request) -> Response {
+        dispatch(self, req)
+    }
+
+    fn metrics(&self) -> Registry {
+        self.registry()
+    }
+
+    fn subscribe(&self, sink: PushSink) -> Option<u64> {
+        Some(self.subscribe_push(sink))
+    }
+}
+
 /// The single request dispatcher: every verb of every codec against
 /// every serving flavour funnels through here, so reply semantics are
 /// defined exactly once. Request-level validation that the text parser
@@ -344,7 +382,7 @@ pub fn dispatch<S: Serving + ?Sized>(engine: &S, req: &Request) -> Response {
 /// all answer identically; `None` means "close the connection" (`QUIT`).
 /// Thin composition over the typed layer: parse once, [`dispatch`]
 /// once, encode once.
-pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String> {
+pub fn handle_line<S: Dispatch + ?Sized>(engine: &S, line: &str) -> Option<String> {
     handle_line_admitted(engine, line, None)
 }
 
@@ -352,7 +390,7 @@ pub fn handle_line<S: Serving + ?Sized>(engine: &S, line: &str) -> Option<String
 /// connection loop passes its per-connection [`ConnAdmission`] so a
 /// rate-limited line answers the typed `ERR overloaded` without ever
 /// dispatching.
-fn handle_line_admitted<S: Serving + ?Sized>(
+fn handle_line_admitted<S: Dispatch + ?Sized>(
     engine: &S,
     line: &str,
     admission: Option<&ConnAdmission>,
@@ -360,12 +398,12 @@ fn handle_line_admitted<S: Serving + ?Sized>(
     let response = match Request::parse_text(line) {
         Ok(Request::Shutdown) => return None,
         Ok(req) => match admission.map_or(Ok(()), |a| a.admit(&req)) {
-            Ok(()) => dispatch(engine, &req),
+            Ok(()) => engine.handle(&req),
             Err(kind) => Response::Error(kind),
         },
         Err(kind) => {
             if matches!(kind, ErrorKind::UnknownVerb(_)) {
-                engine.registry().counter("server.unknown_verb").inc();
+                engine.metrics().counter("server.unknown_verb").inc();
             }
             Response::Error(kind)
         }
@@ -505,6 +543,45 @@ pub fn serve_with(
     Ok(engine)
 }
 
+/// The config-driven entry point `route --config` lands on: the same
+/// connection pool, codec auto-detection, `[limits]` admission, and
+/// `[metrics]` exporter as [`serve_with`], but fronting a
+/// [`Router`](super::router::Router) instead of a local engine — the
+/// router implements [`Dispatch`] directly, scattering each request
+/// over its backend fleet. On shutdown the router drains: write lanes
+/// finish their queued work before the backends' connections close.
+pub fn serve_route(
+    router: super::router::Router,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    cfg: &ServeConfig,
+) -> std::io::Result<()> {
+    let exporter = if cfg.metrics.enabled {
+        let scrape = TcpListener::bind(("127.0.0.1", cfg.metrics.port))?;
+        Some(crate::metrics::prometheus::spawn_exporter(
+            scrape,
+            router.registry().clone(),
+            Arc::clone(&stop),
+        )?)
+    } else {
+        None
+    };
+    run_pool(
+        router.clone(),
+        listener,
+        Arc::clone(&stop),
+        cfg.server.threads,
+        ConnOptions::from_cfg(cfg),
+    )?;
+    // Last clone: dropping it drains the write lanes and joins the
+    // router's threads.
+    drop(router);
+    if let Some(handle) = exporter {
+        let _ = handle.join();
+    }
+    Ok(())
+}
+
 /// The per-connection slice of a [`ServeConfig`]: what [`run_pool`]
 /// hands each accepted socket.
 #[derive(Clone)]
@@ -545,7 +622,7 @@ fn run_pool<S>(
     opts: ConnOptions,
 ) -> std::io::Result<()>
 where
-    S: Serving + Clone + Send + Sync + 'static,
+    S: Dispatch + Clone + Send + Sync + 'static,
 {
     let threads = threads.max(1);
     let (conn_tx, conn_rx) = std::sync::mpsc::channel::<TcpStream>();
@@ -606,7 +683,7 @@ where
 /// deadline, the writer is wrapped in the poisoning [`EvictingWriter`],
 /// and a fresh [`ConnAdmission`] carries this connection's token
 /// bucket and read-depth state into whichever codec loop runs.
-fn handle_conn<S: Serving + ?Sized + Sync>(
+fn handle_conn<S: Dispatch + ?Sized + Sync>(
     engine: &S,
     stream: TcpStream,
     opts: &ConnOptions,
@@ -614,7 +691,7 @@ fn handle_conn<S: Serving + ?Sized + Sync>(
     if opts.limits.write_deadline_ms > 0 {
         stream.set_write_timeout(Some(Duration::from_millis(opts.limits.write_deadline_ms)))?;
     }
-    let registry = engine.registry();
+    let registry = engine.metrics();
     let admission = Arc::new(ConnAdmission::new(&opts.limits, registry.clone()));
     let writer = EvictingWriter::new(stream.try_clone()?, registry);
     let mut reader = BufReader::new(stream);
@@ -704,7 +781,7 @@ fn read_text_line(reader: &mut impl BufRead, buf: &mut Vec<u8>) -> std::io::Resu
 /// or EOF. An oversized line (no newline within the cap) is counted
 /// into `server.malformed_frames`, answered with one typed error, and
 /// closes the connection.
-fn text_conn<S: Serving + ?Sized>(
+fn text_conn<S: Dispatch + ?Sized>(
     engine: &S,
     mut reader: impl BufRead,
     mut writer: impl Write,
@@ -715,7 +792,7 @@ fn text_conn<S: Serving + ?Sized>(
         match read_text_line(&mut reader, &mut buf)? {
             TextRead::Eof => return Ok(()),
             TextRead::Oversized => {
-                engine.registry().counter("server.malformed_frames").inc();
+                engine.metrics().counter("server.malformed_frames").inc();
                 let resp = Response::Error(ErrorKind::MalformedFrame(format!(
                     "text line exceeds {MAX_TEXT_LINE_BYTES} bytes"
                 )));
@@ -778,14 +855,14 @@ fn write_reply<W: Write>(writer: &Mutex<W>, resp: &Response, seq: u32) -> std::i
 /// `SHUTDOWN` request stops the reader, drains the read workers, then
 /// acks with [`Response::Bye`] through the ordered write path, so
 /// `BYE` is the last non-push frame on the wire.
-fn binary_conn<S: Serving + ?Sized + Sync>(
+fn binary_conn<S: Dispatch + ?Sized + Sync>(
     engine: &S,
     mut reader: impl BufRead,
     writer: impl Write + Send + 'static,
     read_worker_count: usize,
     admission: Arc<ConnAdmission>,
 ) -> std::io::Result<()> {
-    let registry = engine.registry();
+    let registry = engine.metrics();
     let writer = Arc::new(Mutex::new(writer));
     std::thread::scope(|scope| {
         let (read_tx, read_rx) = std::sync::mpsc::channel::<(u32, Request, DepthGuard)>();
@@ -800,7 +877,7 @@ fn binary_conn<S: Serving + ?Sized + Sync>(
                     // reply run unlocked so the workers overlap.
                     let next = read_rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
                     let Ok((seq, req, depth)) = next else { break };
-                    let resp = dispatch(engine, &req);
+                    let resp = engine.handle(&req);
                     let io = write_reply(&writer, &resp, seq);
                     // The read counts as in flight until its reply is on
                     // the wire — shedding keys off completed work, not
@@ -816,7 +893,7 @@ fn binary_conn<S: Serving + ?Sized + Sync>(
             let writer = Arc::clone(&writer);
             scope.spawn(move || {
                 for (seq, req) in write_rx {
-                    let resp = dispatch(engine, &req);
+                    let resp = engine.handle(&req);
                     let bye = matches!(resp, Response::Bye);
                     if write_reply(&writer, &resp, seq).is_err() || bye {
                         break;
@@ -856,11 +933,15 @@ fn binary_conn<S: Serving + ?Sized + Sync>(
                     }
                     Ok(Request::Subscribe) => {
                         let sink_writer = Arc::clone(&writer);
-                        let version = engine.subscribe_push(Box::new(move |v, dirty| {
+                        let ack = match engine.subscribe(Box::new(move |v, dirty| {
                             let push = Response::Push { version: v, dirty: dirty.to_vec() };
                             write_reply(&sink_writer, &push, PUSH_SEQ).is_ok()
-                        }));
-                        let ack = Response::Subscribed { version };
+                        })) {
+                            Some(version) => Response::Subscribed { version },
+                            // No publish stream to tap (the route tier):
+                            // same typed error as SUBSCRIBE on text.
+                            None => Response::Error(ErrorKind::Usage(SUBSCRIBE_USAGE.into())),
+                        };
                         if let Err(e) = write_reply(&writer, &ack, frame.seq) {
                             break Err(e);
                         }

@@ -56,7 +56,7 @@ pub mod wal;
 
 use crate::coordinator::engine::Engine;
 use crate::lsh::OnlineHashState;
-use crate::metrics::{Counter, Registry};
+use crate::metrics::{Counter, Gauge, Registry};
 use crate::mf::neighbourhood::CulshModel;
 use crate::rng::Rng;
 use crate::sparse::Triples;
@@ -64,6 +64,7 @@ use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 pub use recover::{recover, RecoverInfo};
 
@@ -170,6 +171,9 @@ struct CkptState {
     prev_watermark: u64,
     /// Applied flushes since the last checkpoint.
     flushes_since: usize,
+    /// When the newest checkpoint was written (feeds the
+    /// `checkpoint.age_seconds` staleness gauge).
+    last_ckpt: Instant,
 }
 
 /// Live-side durability coordinator: per-band WAL writers, the global
@@ -193,6 +197,19 @@ pub struct Persister {
     appended_bytes: Arc<Counter>,
     fsyncs: Arc<Counter>,
     ckpt_bytes: Arc<Counter>,
+    /// When this persister attached (recovery or fresh start).
+    born: Instant,
+    /// Seconds this serving incarnation has been live since it attached
+    /// durability — i.e. the age of the recovered/attach state the
+    /// directory would fall back to if every later artifact were lost.
+    /// Updated at flush boundaries so scrapes see fresh values without
+    /// a clock read on the hot path.
+    recover_age: Arc<Gauge>,
+    /// Seconds since the newest checkpoint was written (updated at
+    /// flush boundaries; reset to 0 by every checkpoint). Alerting on
+    /// this catches a wedged checkpoint cadence — recovery replay cost
+    /// grows with it.
+    ckpt_age: Arc<Gauge>,
 }
 
 impl Persister {
@@ -230,11 +247,17 @@ impl Persister {
                 watermark: prior_watermark,
                 prev_watermark: prior_watermark,
                 flushes_since: 0,
+                last_ckpt: Instant::now(),
             }),
             appended_bytes: metrics.counter("wal.appended_bytes"),
             fsyncs: metrics.counter("wal.fsyncs"),
             ckpt_bytes: metrics.counter("checkpoint.bytes"),
+            born: Instant::now(),
+            recover_age: metrics.gauge("recover.age_seconds"),
+            ckpt_age: metrics.gauge("checkpoint.age_seconds"),
         };
+        persister.recover_age.set(0.0);
+        persister.ckpt_age.set(0.0);
         persister.write_checkpoint(&CheckpointSource::from_engine(engine), base_seq)?;
         Ok(Arc::new(persister))
     }
@@ -345,6 +368,10 @@ impl Persister {
         let due = {
             let mut st = self.inner.lock().unwrap_or_else(|e| e.into_inner());
             st.flushes_since += 1;
+            // Staleness gauges ride the flush boundary (no IO here, the
+            // lock covers only the in-memory bookkeeping).
+            self.recover_age.set(self.born.elapsed().as_secs_f64());
+            self.ckpt_age.set(st.last_ckpt.elapsed().as_secs_f64());
             st.flushes_since >= self.cadence
         };
         if due {
@@ -376,6 +403,8 @@ impl Persister {
         st.watermark = watermark;
         st.gen = gen;
         st.flushes_since = 0;
+        st.last_ckpt = Instant::now();
+        self.ckpt_age.set(0.0);
         drop(st);
         self.gc(gen, fallback_watermark);
         Ok(())

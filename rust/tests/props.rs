@@ -476,7 +476,7 @@ fn gen_request(g: &mut Gen) -> Request {
 
 fn gen_error_kind(g: &mut Gen) -> ErrorKind {
     let words = ["flood", "verb", "frame", "cap", "probe"];
-    match g.usize(0..=11) {
+    match g.usize(0..=12) {
         0 => ErrorKind::OutOfRange,
         1 => ErrorKind::TooManyCols,
         2 => ErrorKind::TooManyItems,
@@ -486,8 +486,9 @@ fn gen_error_kind(g: &mut Gen) -> ErrorKind {
         6 => ErrorKind::OutOfBounds,
         7 => ErrorKind::Empty,
         8 => ErrorKind::Overloaded,
-        9 => ErrorKind::UnknownVerb(g.choose(&words).to_string()),
-        10 => {
+        9 => ErrorKind::Unavailable,
+        10 => ErrorKind::UnknownVerb(g.choose(&words).to_string()),
+        11 => {
             let usages = [PREDICT_USAGE, MPREDICT_USAGE, TOPN_USAGE, RATE_USAGE, MRATE_USAGE];
             ErrorKind::Usage(g.choose(&usages).to_string())
         }

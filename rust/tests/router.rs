@@ -1,0 +1,535 @@
+//! Route-tier proof obligations: a [`Router`] over 2 and 3 live
+//! backend `serve` processes answers **bit-identically** to one
+//! monolithic engine across randomized rate/flush/growth/read scripts,
+//! and a backend killed mid-conversation degrades to typed
+//! `ERR unavailable` — never a hang — then recovers to full parity
+//! after a restart (journaled writes replayed).
+//!
+//! The fault harness is a `FaultProxy` fronting the victim backend:
+//! "kill" stops forwarding and severs every relayed connection (the
+//! backend itself stays alive, exactly like a network partition), so
+//! the router's failure detection — IO errors, read deadlines, capped
+//! retries — is what the test exercises, not process teardown.
+
+use lshmf::config::{RouteBackend, RouteConfig};
+use lshmf::coordinator::protocol::{ErrorKind, Request, Response};
+use lshmf::coordinator::server::{self, handle_line, Dispatch};
+use lshmf::coordinator::stream::{StreamConfig, StreamOrchestrator};
+use lshmf::coordinator::{Engine, Router};
+use lshmf::lsh::{OnlineHashState, SimLsh};
+use lshmf::metrics::Registry;
+use lshmf::mf::neighbourhood::{train_culsh_logged, CulshConfig};
+use lshmf::rng::Rng;
+use lshmf::sparse::{Csc, Csr, Triples};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// The props.rs serving fixture: 30x15, 180 nnz, deterministic per
+/// seed — identical-seed engines are bit-identical replicas.
+fn serving_engine(seed: u64, stream_cfg: StreamConfig) -> Engine {
+    let mut rng = Rng::seeded(seed);
+    let (m, n) = (30, 15);
+    let mut t = Triples::new(m, n);
+    let mut seen = std::collections::HashSet::new();
+    while t.nnz() < 180 {
+        let (i, j) = (rng.below(m), rng.below(n));
+        if seen.insert((i, j)) {
+            t.push(i, j, 1.0 + rng.f32() * 4.0);
+        }
+    }
+    let csr = Csr::from_triples(&t);
+    let csc = Csc::from_triples(&t);
+    let lsh = SimLsh::new(1, 5, 8, 2);
+    let hash_state = OnlineHashState::build(lsh, &csc);
+    let (topk, _) = hash_state.topk(4, &mut rng);
+    let cfg = CulshConfig { f: 4, k: 4, epochs: 4, ..Default::default() };
+    let (model, _) = train_culsh_logged(&csr, topk, &cfg, &mut rng);
+    let metrics = Registry::new();
+    let orch = StreamOrchestrator::new(
+        model,
+        hash_state,
+        t,
+        stream_cfg,
+        cfg,
+        rng.split(1),
+        metrics.clone(),
+    );
+    Engine::new(orch, (1.0, 5.0), metrics)
+}
+
+struct BackendProc {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: thread::JoinHandle<Engine>,
+}
+
+fn spawn_backend(seed: u64, stream_cfg: StreamConfig) -> BackendProc {
+    let engine = serving_engine(seed, stream_cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = thread::spawn(move || server::serve(engine, listener, stop2, 2).unwrap());
+    BackendProc { addr, stop, handle }
+}
+
+fn stop_backend(b: BackendProc) -> Engine {
+    b.stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(b.addr);
+    b.handle.join().unwrap()
+}
+
+/// Bit-exact reply comparison: float payloads by `to_bits`, everything
+/// else structurally.
+fn bits_eq(a: &Response, b: &Response) -> bool {
+    match (a, b) {
+        (Response::Pred(x), Response::Pred(y)) => x.to_bits() == y.to_bits(),
+        (Response::Preds(xs), Response::Preds(ys)) => {
+            xs.len() == ys.len()
+                && xs.iter().zip(ys).all(|(x, y)| match (x, y) {
+                    (Some(x), Some(y)) => x.to_bits() == y.to_bits(),
+                    (None, None) => true,
+                    _ => false,
+                })
+        }
+        (Response::TopN(xs), Response::TopN(ys)) => {
+            xs.len() == ys.len()
+                && xs
+                    .iter()
+                    .zip(ys)
+                    .all(|((ci, si), (cj, sj))| ci == cj && si.to_bits() == sj.to_bits())
+        }
+        _ => a == b,
+    }
+}
+
+/// Randomized request mix mirroring the props.rs parity scripts:
+/// reads across the (possibly grown) id range, rates with NaN/inf and
+/// out-of-bounds poison, growth ids, MRATE batches, flushes. `STATS`
+/// is exercised separately (its body differs by design: the router
+/// aggregates).
+fn gen_request(rng: &mut Rng) -> Request {
+    match rng.below(12) {
+        0 | 1 => Request::Predict { row: rng.below(36), col: rng.below(41) },
+        2 | 3 => Request::TopN { row: rng.below(36), n: 1 + rng.below(8) },
+        4 => Request::MPredict {
+            row: rng.below(36),
+            cols: (0..1 + rng.below(4)).map(|_| rng.below(41) as u32).collect(),
+        },
+        5 | 6 | 7 => {
+            let value = match rng.below(9) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                _ => 1.0 + rng.below(9) as f32 * 0.5,
+            };
+            let row = if rng.below(10) == 0 { 4_000_000_000 } else { rng.below(34) as u32 };
+            Request::Rate { row, col: rng.below(19) as u32, value }
+        }
+        8 | 9 => Request::MRate {
+            ratings: (0..1 + rng.below(4))
+                .map(|_| {
+                    let value = if rng.below(12) == 0 {
+                        f32::NAN
+                    } else {
+                        1.0 + rng.below(9) as f32 * 0.5
+                    };
+                    (rng.below(34) as u32, rng.below(19) as u32, value)
+                })
+                .collect(),
+        },
+        _ => Request::Flush,
+    }
+}
+
+fn route_cfg(addrs: Vec<String>, cols: usize) -> RouteConfig {
+    RouteConfig {
+        cols,
+        probe_interval_ms: 40,
+        retry_backoff_ms: 2,
+        retry_backoff_max_ms: 25,
+        retry_attempts: 2,
+        io_timeout_ms: 2_000,
+        backends: addrs.into_iter().map(|addr| RouteBackend { addr }).collect(),
+    }
+}
+
+/// Drive one randomized script through a router over `n_backends`
+/// identical-seed backends and a monolithic `Mutex<Engine>` reference;
+/// every reply must be bit-identical, and `STATS` must cohere.
+fn router_parity(n_backends: usize, seed: u64) {
+    let stream_cfg = StreamConfig {
+        batch_size: 5,
+        max_rows: 200,
+        max_cols: 200,
+        ..Default::default()
+    };
+    let mono = Mutex::new(serving_engine(seed, stream_cfg.clone()));
+    let backends: Vec<BackendProc> =
+        (0..n_backends).map(|_| spawn_backend(seed, stream_cfg.clone())).collect();
+    let cfg = route_cfg(backends.iter().map(|b| b.addr.to_string()).collect(), 200);
+    let router = Router::new(&cfg, Registry::new());
+
+    let mut rng = Rng::seeded(seed ^ 0x51AB);
+    for step in 0..140 {
+        let req = gen_request(&mut rng);
+        let want = mono.handle(&req);
+        let got = router.handle(&req);
+        assert!(
+            bits_eq(&got, &want),
+            "step {step}: {req:?} answered {got:?}, monolith said {want:?}"
+        );
+    }
+    // validation parity without any backend round-trip
+    for req in [
+        Request::TopN { row: 0, n: 0 },
+        Request::MPredict { row: 0, cols: Vec::new() },
+        Request::MRate { ratings: Vec::new() },
+        Request::Subscribe,
+    ] {
+        assert!(bits_eq(&router.handle(&req), &mono.handle(&req)), "{req:?}");
+    }
+    // STATS coherence: the router aggregates; every backend must report
+    // the monolith's (post-growth) dims under its own prefix.
+    let dims = match mono.handle(&Request::Stats) {
+        Response::Stats(body) => body
+            .lines()
+            .find(|l| l.starts_with("dims "))
+            .expect("monolith stats carry dims")
+            .to_string(),
+        other => panic!("monolith STATS answered {other:?}"),
+    };
+    match router.handle(&Request::Stats) {
+        Response::Stats(body) => {
+            assert!(body.contains(&format!("router backends {n_backends}")), "{body}");
+            assert!(body.contains(&format!("router up {n_backends}")), "{body}");
+            for i in 0..n_backends {
+                assert!(body.contains(&format!("backend{i}.{dims}")), "{body}");
+            }
+        }
+        other => panic!("router STATS answered {other:?}"),
+    }
+    drop(router); // drains lanes, closes connections
+    for b in backends {
+        stop_backend(b);
+    }
+}
+
+#[test]
+fn router_parity_two_backends() {
+    router_parity(2, 9001);
+}
+
+#[test]
+fn router_parity_three_backends() {
+    router_parity(3, 9002);
+}
+
+/// The router rides the same Dispatch-generic text path as an engine:
+/// `handle_line` answers (and accounts) identically, down to
+/// unknown-verb handling.
+#[test]
+fn router_shares_the_text_line_handler() {
+    let stream_cfg = StreamConfig { batch_size: 8, max_rows: 64, max_cols: 64, ..Default::default() };
+    let mono = Mutex::new(serving_engine(9003, stream_cfg.clone()));
+    let backends: Vec<BackendProc> =
+        (0..2).map(|_| spawn_backend(9003, stream_cfg.clone())).collect();
+    let cfg = route_cfg(backends.iter().map(|b| b.addr.to_string()).collect(), 64);
+    let registry = Registry::new();
+    let router = Router::new(&cfg, registry.clone());
+    for line in [
+        "PREDICT 0 3",
+        "TOPN 1 4",
+        "RATE 2 3 4.5",
+        "FLUSH",
+        "BOGUS 1 2",
+        "PREDICT not-a-number 3",
+    ] {
+        assert_eq!(handle_line(&router, line), handle_line(&mono, line), "{line}");
+    }
+    assert_eq!(
+        registry.counter("server.unknown_verb").get(),
+        1,
+        "the router's registry carries the line-layer accounting"
+    );
+    drop(router);
+    for b in backends {
+        stop_backend(b);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------
+
+/// A TCP proxy fronting one backend, with a kill switch. `kill()`
+/// bumps the epoch (severing every relayed connection from the
+/// router's side *and* the backend's side) and makes new connections
+/// accept-then-drop — the router experiences a partitioned peer while
+/// the backend itself stays healthy. `restart()` resumes forwarding on
+/// the SAME front address, so the router's reconnect machinery (not a
+/// new config) performs the recovery.
+struct FaultProxy {
+    front: SocketAddr,
+    stop: Arc<AtomicBool>,
+    forwarding: Arc<AtomicBool>,
+    epoch: Arc<AtomicU64>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+fn relay(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    my_epoch: u64,
+    epoch: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+) -> thread::JoinHandle<()> {
+    from.set_read_timeout(Some(Duration::from_millis(10))).unwrap();
+    thread::spawn(move || {
+        let mut buf = [0u8; 4096];
+        loop {
+            if stop.load(Ordering::SeqCst) || epoch.load(Ordering::SeqCst) != my_epoch {
+                break;
+            }
+            match from.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    if to.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => break,
+            }
+        }
+        // Sever both directions so neither peer is left blocked on a
+        // half-open socket.
+        let _ = to.shutdown(std::net::Shutdown::Both);
+        let _ = from.shutdown(std::net::Shutdown::Both);
+    })
+}
+
+impl FaultProxy {
+    fn spawn(backend: SocketAddr) -> FaultProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let front = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let forwarding = Arc::new(AtomicBool::new(true));
+        let epoch = Arc::new(AtomicU64::new(0));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let forwarding = Arc::clone(&forwarding);
+            let epoch = Arc::clone(&epoch);
+            thread::spawn(move || {
+                let mut relays: Vec<thread::JoinHandle<()>> = Vec::new();
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((sock, _)) => {
+                            if !forwarding.load(Ordering::SeqCst) {
+                                drop(sock); // killed: instant disconnect
+                                continue;
+                            }
+                            let Ok(upstream) = TcpStream::connect(backend) else {
+                                drop(sock);
+                                continue;
+                            };
+                            let e = epoch.load(Ordering::SeqCst);
+                            relays.push(relay(
+                                sock.try_clone().unwrap(),
+                                upstream.try_clone().unwrap(),
+                                e,
+                                Arc::clone(&epoch),
+                                Arc::clone(&stop),
+                            ));
+                            relays.push(relay(
+                                upstream,
+                                sock,
+                                e,
+                                Arc::clone(&epoch),
+                                Arc::clone(&stop),
+                            ));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for r in relays {
+                    let _ = r.join();
+                }
+            })
+        };
+        FaultProxy { front, stop, forwarding, epoch, accept: Some(accept) }
+    }
+
+    fn kill(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.forwarding.store(false, Ordering::SeqCst);
+    }
+
+    fn restart(&self) {
+        self.forwarding.store(true, Ordering::SeqCst);
+    }
+
+    fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            h.join().unwrap();
+        }
+    }
+}
+
+fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < deadline {
+        if cond() {
+            return true;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    false
+}
+
+/// Kill the middle backend of a 3-node fleet mid-conversation: its
+/// partition must answer typed `Unavailable` in bounded time (never a
+/// hang), the surviving partitions must keep serving reads AND
+/// acknowledged writes, retries must be counted — and after a restart
+/// the journaled writes replay, the backend rejoins, and the whole
+/// fleet is bit-identical to a monolith fed exactly the acknowledged
+/// writes.
+#[test]
+fn killed_backend_degrades_typed_and_recovers_to_parity() {
+    let seed = 7100;
+    // batch_size > script length: flushes happen only on explicit FLUSH
+    let stream_cfg = StreamConfig { batch_size: 64, max_rows: 64, max_cols: 64, ..Default::default() };
+    let mono = Mutex::new(serving_engine(seed, stream_cfg.clone()));
+    let b0 = spawn_backend(seed, stream_cfg.clone());
+    let b1 = spawn_backend(seed, stream_cfg.clone());
+    let b2 = spawn_backend(seed, stream_cfg.clone());
+    let proxy = FaultProxy::spawn(b1.addr);
+    // cols = 15 (the fixture's real extent): backend1 — behind the
+    // proxy — owns the middle band, columns [5, 10).
+    let cfg = RouteConfig {
+        cols: 15,
+        probe_interval_ms: 40,
+        retry_backoff_ms: 2,
+        retry_backoff_max_ms: 20,
+        retry_attempts: 2,
+        io_timeout_ms: 400,
+        backends: vec![
+            RouteBackend { addr: b0.addr.to_string() },
+            RouteBackend { addr: proxy.front.to_string() },
+            RouteBackend { addr: b2.addr.to_string() },
+        ],
+    };
+    let registry = Registry::new();
+    let router = Router::new(&cfg, registry.clone());
+    let unavailable = Response::Error(ErrorKind::Unavailable);
+
+    // Healthy phase: writes land on every replica, reads are
+    // bit-identical to the monolith.
+    for (row, col, value) in [(0u32, 6u32, 4.5f32), (1, 2, 3.0), (2, 12, 2.5)] {
+        let req = Request::Rate { row, col, value };
+        assert!(bits_eq(&router.handle(&req), &mono.handle(&req)), "{req:?}");
+    }
+    for req in [
+        Request::Flush,
+        Request::TopN { row: 0, n: 5 },
+        Request::Predict { row: 0, col: 7 },
+    ] {
+        assert!(bits_eq(&router.handle(&req), &mono.handle(&req)), "{req:?}");
+    }
+
+    // Kill. The victim's partition must degrade to a typed error in
+    // bounded time — the read path burns its capped retries and gives
+    // up; nothing hangs, nothing panics.
+    proxy.kill();
+    let start = Instant::now();
+    assert_eq!(router.handle(&Request::Predict { row: 0, col: 7 }), unavailable);
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "detection took {:?} — not bounded",
+        start.elapsed()
+    );
+    assert!(
+        wait_until(Duration::from_secs(5), || !router.backend_up(1)),
+        "victim never marked down"
+    );
+
+    // Down owner: rejected up front, applied on NO replica (lock-step
+    // preserved).
+    assert_eq!(router.handle(&Request::Rate { row: 3, col: 7, value: 2.0 }), unavailable);
+    // Surviving partitions keep serving reads...
+    let req = Request::Predict { row: 0, col: 2 };
+    assert!(bits_eq(&router.handle(&req), &mono.handle(&req)));
+    // ...and writes they own: acknowledged now, journaled for the
+    // victim's catch-up. The monolith sees exactly the acknowledged
+    // writes.
+    let w = Request::Rate { row: 4, col: 1, value: 3.5 };
+    let got = router.handle(&w);
+    assert!(!matches!(got, Response::Error(_)), "{got:?}");
+    assert!(bits_eq(&got, &mono.handle(&w)));
+    // Scatter reads need every band: typed, not hanging.
+    assert_eq!(router.handle(&Request::TopN { row: 0, n: 5 }), unavailable);
+    assert!(registry.counter("router.retries").get() > 0, "retries uncounted");
+    assert!(registry.counter("router.unavailable").get() > 0);
+    match router.handle(&Request::Stats) {
+        Response::Stats(body) => {
+            assert!(body.contains("router up 2"), "{body}");
+            assert!(body.contains("backend1 down"), "{body}");
+        }
+        other => panic!("STATS during outage answered {other:?}"),
+    }
+
+    // Restart on the same address: the probe loop reconnects, the lane
+    // replays the journaled write, and only then does the victim count
+    // as up again.
+    proxy.restart();
+    assert!(
+        wait_until(Duration::from_secs(15), || router.backend_up(1)),
+        "victim never recovered"
+    );
+    assert!(
+        registry.counter("router.backend1.replayed").get() > 0,
+        "catch-up replay not performed"
+    );
+    assert!(registry.counter("router.backend1.health_transitions").get() >= 2);
+
+    // Post-recovery parity: every partition, every verb, bit-identical
+    // to the monolith that saw only the acknowledged writes.
+    for req in [Request::Flush, Request::TopN { row: 4, n: 8 }] {
+        assert!(bits_eq(&router.handle(&req), &mono.handle(&req)), "{req:?}");
+    }
+    for col in 0..15usize {
+        let req = Request::Predict { row: 4, col };
+        assert!(bits_eq(&router.handle(&req), &mono.handle(&req)), "col {col}");
+    }
+    let req = Request::MPredict { row: 0, cols: (0..15).collect() };
+    assert!(bits_eq(&router.handle(&req), &mono.handle(&req)));
+    match router.handle(&Request::Stats) {
+        Response::Stats(body) => assert!(body.contains("router up 3"), "{body}"),
+        other => panic!("STATS after recovery answered {other:?}"),
+    }
+
+    // Teardown order matters: router first (its lanes hold the
+    // connections), then the proxy (severs the victim's sockets), then
+    // the backends.
+    drop(router);
+    proxy.shutdown();
+    stop_backend(b0);
+    stop_backend(b1);
+    stop_backend(b2);
+}
